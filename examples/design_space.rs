@@ -1,0 +1,89 @@
+//! Design-space exploration: the framework's raison d'être (paper Sec. 4 —
+//! "customize flexible pipeline accelerator for given NN model and FPGA
+//! board"). Sweeps boards × models × precisions and prints the frontier,
+//! plus a DSP-budget sweep showing where each architecture's allocation
+//! quality crosses over.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use flexipipe::alloc::{allocator_for, ArchKind};
+use flexipipe::board::{vc707, zc706, zcu102, zedboard};
+use flexipipe::model::zoo;
+use flexipipe::power::PowerModel;
+use flexipipe::quant::QuantMode;
+
+fn main() -> flexipipe::Result<()> {
+    // 1. Board × model matrix at both precisions.
+    println!("== board x model frontier (flex allocator) ==");
+    println!(
+        "{:<10} {:<9} {:>5} {:>9} {:>8} {:>8} {:>7}",
+        "board", "model", "bits", "fps", "GOPS", "DSPeff%", "W"
+    );
+    for board in [zedboard(), zc706(), zcu102(), vc707()] {
+        for net in zoo::paper_nets() {
+            for mode in [QuantMode::W16A16, QuantMode::W8A8] {
+                let alloc =
+                    allocator_for(ArchKind::FlexPipeline).allocate(&net, &board, mode)?;
+                let r = alloc.evaluate();
+                let w = PowerModel::default().estimate(&alloc, &r).total();
+                println!(
+                    "{:<10} {:<9} {:>5} {:>9.1} {:>8.0} {:>8.1} {:>7.2}",
+                    board.name,
+                    net.name,
+                    mode.bits(),
+                    r.fps,
+                    r.gops,
+                    r.dsp_efficiency * 100.0,
+                    w
+                );
+            }
+        }
+    }
+
+    // 2. DSP-budget sweep on VGG16: where flexibility pays.
+    println!("\n== DSP sweep, vgg16 @16b: flex vs dnnbuilder GOPS ==");
+    println!("{:>6} {:>10} {:>12} {:>7}", "DSPs", "flex", "dnnbuilder", "ratio");
+    let net = zoo::vgg16();
+    for dsps in [128, 192, 256, 384, 512, 680, 768, 900, 1100, 1400] {
+        let mut b = zc706();
+        b.dsps = dsps;
+        let f = allocator_for(ArchKind::FlexPipeline)
+            .allocate(&net, &b, QuantMode::W16A16)?
+            .evaluate();
+        let d = allocator_for(ArchKind::DnnBuilder)
+            .allocate(&net, &b, QuantMode::W16A16)?
+            .evaluate();
+        println!(
+            "{:>6} {:>10.0} {:>12.0} {:>7.2}",
+            dsps,
+            f.gops,
+            d.gops,
+            f.gops / d.gops
+        );
+    }
+
+    // 3. Bandwidth sweep: Algorithm 2 trading BRAM for bandwidth.
+    println!("\n== DDR bandwidth sweep, vgg16 @16b (flex) ==");
+    println!(
+        "{:>9} {:>9} {:>8} {:>9} {:>7}",
+        "GB/s", "fps", "BRAM18", "B (GB/s)", "max K"
+    );
+    for gbps in [2.0, 3.0, 4.0, 6.0, 8.0, 12.8] {
+        let mut b = zc706();
+        b.ddr_bytes_per_sec = gbps * 1e9;
+        let alloc = allocator_for(ArchKind::FlexPipeline).allocate(&net, &b, QuantMode::W16A16)?;
+        let r = alloc.evaluate();
+        let max_k = alloc.stages.iter().map(|s| s.cfg.k).max().unwrap_or(1);
+        println!(
+            "{:>9.1} {:>9.1} {:>8} {:>9.2} {:>7}",
+            gbps,
+            r.fps,
+            r.bram18,
+            r.ddr_bytes_per_sec / 1e9,
+            max_k
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+fn main() {
+    use flexipipe::*;
+    let net = model::zoo::alexnet();
+    let board = board::zc706();
+    let a = alloc::allocator_for(alloc::ArchKind::FlexPipeline).allocate(&net, &board, quant::QuantMode::W16A16).unwrap();
+    let r = a.evaluate();
+    println!("t_frame={} fps={:.1} demand={:.2}GB/s", r.t_frame_cycles, r.fps, r.ddr_demand_bytes_per_sec/1e9);
+    for (s, c) in a.stages.iter().zip(&r.stage_cycles) {
+        if net.layers[s.layer_idx].uses_dsps() {
+            println!("  {:14} k={:3} cycles={:9} wbytes/frame={:.2}MB", net.layers[s.layer_idx].label(), s.cfg.k, c, s.figures.weight_bytes_per_frame() as f64/1e6);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Quickstart: allocate the paper's flagship design point (VGG16 on ZC706)
+//! and inspect what the framework produced.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use flexipipe::alloc::{allocator_for, ArchKind};
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::power::PowerModel;
+use flexipipe::quant::QuantMode;
+use flexipipe::sim;
+
+fn main() -> flexipipe::Result<()> {
+    // 1. Pick a network and a board from the zoo.
+    let net = zoo::vgg16();
+    let board = zc706();
+    println!(
+        "network: {} ({:.2} GOP, {} layers)  board: {} ({} DSPs, {} BRAM36)",
+        net.name,
+        net.gops(),
+        net.layers.len(),
+        board.name,
+        board.dsps,
+        board.bram36
+    );
+
+    // 2. Run the paper's allocator (Algorithm 1 + Algorithm 2).
+    let alloc =
+        allocator_for(ArchKind::FlexPipeline).allocate(&net, &board, QuantMode::W16A16)?;
+    let r = alloc.evaluate();
+    println!("\nper-layer engine parameters (the paper's C', M', K):");
+    for (s, c) in alloc.stages.iter().zip(&r.stage_cycles) {
+        if alloc.net.layers[s.layer_idx].uses_dsps() {
+            println!(
+                "  {:<14} C'={:<3} M'={:<3} K={:<2} mults={:<4} cycles/frame={}",
+                alloc.net.layers[s.layer_idx].label(),
+                s.cfg.cp,
+                s.cfg.mp,
+                s.cfg.k,
+                s.figures.mults,
+                c
+            );
+        }
+    }
+
+    // 3. Closed-form performance (Eq. 2–4 of the paper).
+    println!(
+        "\nclosed-form: {:.1} fps, {:.0} GOPS, {} DSPs, {:.1}% DSP efficiency",
+        r.fps,
+        r.gops,
+        r.dsps,
+        r.dsp_efficiency * 100.0
+    );
+
+    // 4. Confirm with the stall-accurate cycle simulator.
+    let s = sim::simulate(&alloc, 3);
+    println!(
+        "simulated:   {:.1} fps, {:.0} GOPS, {:.1}% DSP efficiency, {:.0}% DDR utilization",
+        s.fps,
+        s.gops,
+        s.dsp_efficiency * 100.0,
+        s.ddr_utilization * 100.0
+    );
+
+    // 5. Power estimate (the paper uses Vivado's estimate; ours is a
+    //    calibrated analytical model).
+    let p = PowerModel::default().estimate(&alloc, &r);
+    println!(
+        "power: {:.2} W (static {:.2} + DSP {:.2} + BRAM {:.2} + logic {:.2} + DDR {:.2}) → {:.1} GOPS/W",
+        p.total(),
+        p.static_w,
+        p.dsp_w,
+        p.bram_w,
+        p.logic_w,
+        p.ddr_w,
+        r.gops / p.total()
+    );
+    println!("\npaper Table I (This Work, VGG16): 11.3 fps, 353 GOPS, 900 DSPs, 98.0%, 7.2 W");
+    Ok(())
+}

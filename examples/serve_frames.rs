@@ -1,0 +1,103 @@
+//! End-to-end driver (DESIGN.md §6): serve batched inference requests
+//! through the full stack — Pallas-kernel HLO artifacts, PJRT runtime,
+//! dynamic batcher — on a real small model, verify every response against
+//! the Python oracle's golden outputs, and report latency/throughput.
+//!
+//! This is the "demo system" of paper Fig. 4 with the FPGA replaced by the
+//! AOT-compiled functional datapath. Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example serve_frames [-- <frames> <net>]
+//! ```
+
+use flexipipe::coordinator::{BatchPolicy, Coordinator};
+use flexipipe::runtime::{read_i8, Manifest};
+use std::time::{Duration, Instant};
+
+fn main() -> flexipipe::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let frames: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let net = args.get(1).map(|s| s.as_str()).unwrap_or("tinycnn").to_string();
+    let dir = flexipipe::runtime::default_artifact_dir();
+
+    // Golden data (host side — no PJRT needed here).
+    let manifest = Manifest::load(dir.join("manifest.json"))?;
+    let variants = manifest.variants(&net, 8);
+    anyhow::ensure!(!variants.is_empty(), "no artifacts — run `make artifacts`");
+    let art = variants[0];
+    let elems = art.golden.frame_elems;
+    let out_elems = art.golden.out_elems;
+    let golden_in = read_i8(dir.join(&art.golden.input))?;
+    let golden_out = read_i8(dir.join(&art.golden.output))?;
+    let n_golden = art.golden.frames;
+
+    println!(
+        "serving {net} ({} artifact variants, batch sizes {:?})",
+        variants.len(),
+        variants.iter().map(|a| a.batch).collect::<Vec<_>>()
+    );
+    let coord = Coordinator::start(
+        &dir,
+        &net,
+        8,
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            link_latency: Duration::ZERO,
+        },
+    )?;
+
+    // Offered load: all frames up-front (throughput mode), golden frames
+    // round-robin so every response is verifiable.
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(frames);
+    for i in 0..frames {
+        let g = i % n_golden;
+        pending.push((g, coord.submit(golden_in[g * elems..(g + 1) * elems].to_vec())?));
+    }
+    let mut verified = 0usize;
+    for (g, rx) in pending {
+        let out = rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+        anyhow::ensure!(
+            out == golden_out[g * out_elems..(g + 1) * out_elems],
+            "response for golden frame {g} mismatched the Python oracle"
+        );
+        verified += 1;
+    }
+    let dt = t0.elapsed();
+    let stats = coord.shutdown();
+
+    println!(
+        "\n{verified}/{frames} responses verified bit-exact against the Python oracle"
+    );
+    println!(
+        "throughput: {:.1} frames/s  ({} batches, mix {:?}, {} padded slots)",
+        frames as f64 / dt.as_secs_f64(),
+        stats.batches,
+        stats.batch_sizes,
+        stats.padded_frames
+    );
+    println!(
+        "latency: p50 {} µs  p95 {} µs  p99 {} µs",
+        stats.latency_us(50.0),
+        stats.latency_us(95.0),
+        stats.latency_us(99.0)
+    );
+
+    // Interactive mode: one-at-a-time requests (latency-bound, batch 1).
+    let coord = Coordinator::start(&dir, &net, 8, BatchPolicy::default())?;
+    let t0 = Instant::now();
+    let solo = 64.min(frames);
+    for i in 0..solo {
+        let g = i % n_golden;
+        let out = coord.infer(golden_in[g * elems..(g + 1) * elems].to_vec())?;
+        anyhow::ensure!(out == golden_out[g * out_elems..(g + 1) * out_elems]);
+    }
+    let dt = t0.elapsed();
+    let st = coord.shutdown();
+    println!(
+        "interactive (batch=1): {:.2} ms/frame median, {:.1} fps",
+        st.latency_us(50.0) as f64 / 1000.0,
+        solo as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}

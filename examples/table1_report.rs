@@ -1,0 +1,31 @@
+//! Regenerate the paper's Table I (utilization + performance, four nets ×
+//! four architectures on ZC706) with the published values interleaved, and
+//! print the Sec. 5.2 headline speedups.
+//!
+//! ```bash
+//! cargo run --release --example table1_report
+//! ```
+
+use flexipipe::report;
+
+fn main() -> flexipipe::Result<()> {
+    let rows = report::table1()?;
+    println!("{}", report::render(&rows, true));
+    if let Some((r1, r2, r3)) = report::vgg16_speedups(&rows) {
+        println!("VGG16 speedups vs baselines (paper: 2.58x / 1.53x / 1.35x):");
+        println!("  vs [1] recurrent:  {r1:.2}x");
+        println!("  vs [2] fusion:     {r2:.2}x");
+        println!("  vs [3] DNNBuilder: {r3:.2}x");
+    }
+    // Simulator cross-check column.
+    println!("\nclosed-form vs simulated DSP efficiency (flex rows):");
+    for r in rows.iter().filter(|r| r.arch == flexipipe::alloc::ArchKind::FlexPipeline) {
+        println!(
+            "  {:<8} closed-form {:>5.1}%  simulated {:>5.1}%",
+            r.net,
+            r.dsp_efficiency * 100.0,
+            r.sim_dsp_efficiency * 100.0
+        );
+    }
+    Ok(())
+}

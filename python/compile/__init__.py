@@ -1,0 +1,11 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX graphs, AOT lowering.
+
+Python in this package runs exactly once per build (``make artifacts``) and
+never on the Rust request path.
+"""
+
+import jax
+
+# 16-bit mode accumulates in int64 and the oracle computes in float64; both
+# require x64 support, which jax disables by default.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,165 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest + goldens.
+
+This is the only Python entry point in the build (``make artifacts``); the
+Rust runtime (rust/src/runtime) loads the emitted files and Python never
+runs again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per artifact:
+  artifacts/<name>.hlo.txt          HLO text (weights baked as constants —
+                                    the paper keeps weights in DDR; for the
+                                    functional path constants are the
+                                    equivalent "already loaded" state)
+  artifacts/<name>.golden.in.bin    little-endian int8/int16 frames
+  artifacts/<name>.golden.out.bin   oracle outputs for those frames
+  artifacts/manifest.json           shapes/dtypes/batch/paths for Rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with ``to_tuple1``).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the Rust side's HLO
+    parser silently fills with garbage — the baked weights would vanish.
+    (Found the hard way; regression-tested in test_aot.py.)"""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+@dataclasses.dataclass
+class ArtifactSpec:
+    """One compiled executable variant: a net at a fixed batch size."""
+
+    net: str
+    batch: int
+    bits: int = 8
+    K: int = 2          # row parallelism baked into the schedule (numerics-neutral)
+    golden_frames: int = 8
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"{self.net}_b{self.batch}_{self.bits}b"
+
+
+# The artifact set the Rust coordinator serves. Batch variants let the
+# dynamic batcher pick the largest compiled batch <= queue depth.
+ARTIFACTS: List[ArtifactSpec] = [
+    ArtifactSpec("tinycnn", 1),
+    ArtifactSpec("tinycnn", 4),
+    ArtifactSpec("tinycnn", 8),
+    ArtifactSpec("lenet", 1),
+    ArtifactSpec("lenet", 4),
+    ArtifactSpec("vgg_micro", 1),
+    ArtifactSpec("vgg_micro", 4),
+]
+
+
+def _dtype(bits: int):
+    return np.int8 if bits == 8 else np.int16
+
+
+def build_artifact(spec: ArtifactSpec, out_dir: str) -> dict:
+    """Lower one artifact, write HLO + goldens, return its manifest entry."""
+    net = M.NETS[spec.net]
+    assert net.bits == spec.bits, "zoo nets are built per-bit-width"
+    params = M.build_params(net, seed=spec.seed)
+    fn = M.batched_forward(net, params, spec.batch, K=spec.K)
+
+    in_shape = (spec.batch, *net.in_shape)
+    in_spec = jax.ShapeDtypeStruct(in_shape, _dtype(spec.bits))
+    lowered = jax.jit(fn).lower(in_spec)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    # Golden frames: deterministic inputs, oracle (ref-path) outputs.
+    rng = np.random.default_rng(spec.seed + 1234)
+    lim = (1 << (spec.bits - 1)) // 2
+    n = spec.golden_frames
+    frames = rng.integers(-lim, lim, (n, *net.in_shape)).astype(_dtype(spec.bits))
+    outs = np.stack([
+        np.asarray(M.forward_ref(net, params, jnp.asarray(f))) for f in frames
+    ])
+    in_path = os.path.join(out_dir, f"{spec.name}.golden.in.bin")
+    out_path = os.path.join(out_dir, f"{spec.name}.golden.out.bin")
+    frames.tofile(in_path)
+    outs.tofile(out_path)
+
+    return {
+        "name": spec.name,
+        "net": spec.net,
+        "batch": spec.batch,
+        "bits": spec.bits,
+        "row_parallelism": spec.K,
+        "hlo": os.path.basename(hlo_path),
+        "input_shape": list(in_shape),
+        "output_shape": [spec.batch, int(outs.shape[1])],
+        "dtype": f"s{spec.bits}",
+        "golden": {
+            "frames": n,
+            "input": os.path.basename(in_path),
+            "output": os.path.basename(out_path),
+            "frame_elems": int(np.prod(net.in_shape)),
+            "out_elems": int(outs.shape[1]),
+        },
+        "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to rebuild")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for spec in ARTIFACTS:
+        if only and spec.name not in only and spec.net not in only:
+            continue
+        print(f"[aot] lowering {spec.name} ...", flush=True)
+        entries.append(build_artifact(spec, args.out_dir))
+        print(f"[aot]   wrote {entries[-1]['hlo']} "
+              f"({entries[-1]['hlo_sha256'][:12]})", flush=True)
+
+    manifest = {
+        "version": 1,
+        "generator": "python/compile/aot.py",
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Layer-1 kernels: Pallas weight-stationary conv/pool/fc + pure-jnp oracle."""

@@ -1,0 +1,294 @@
+"""Layer-1 Pallas kernel: weight-stationary fixed-point convolution.
+
+This is the software model of the paper's convolution layer engine
+(Yi/Sun/Fujita 2021, Fig. 3): an ``M' x C' x R x S`` multiplier array fed by
+an activation line buffer, computing ``K`` output rows per weight load
+(weight-stationary dataflow), with the channel-wise fixed-point alignment
+datapath of paper Sec. 3.3:
+
+    psum  = sum_{c,r,s} (x[c] << lshift[c]) * w[m,c,r,s]      (32/64-bit)
+    out_m = saturate( (psum + bias[m]) >> rshift[m] )         (8/16-bit)
+
+Hardware adaptation (FPGA -> TPU, DESIGN.md Sec. 3): the PE array's
+``(C*R*S) -> M'`` reduction is expressed as a single MXU-shaped matmul whose
+contraction dimension is ``C*R*S``; the paper's ``K x W`` activation atomic
+group becomes the Pallas grid's row-group axis, and the output-channel group
+``M'`` becomes the second grid axis, exactly mirroring the paper's controller
+schedule (rows outer, output-channel groups inner).
+
+The kernel is lowered with ``interpret=True``: real-TPU Pallas emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerics are bit-exact
+against the pure-jnp oracle in ``ref.py`` (pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Integer dtypes of the paper's two quantization modes. One DSP48E1 does one
+# 16-bit or two 8-bit multiplies per cycle; here the mode only selects the
+# storage dtype and the accumulator width.
+_ACT_DTYPE = {8: jnp.int8, 16: jnp.int16}
+_ACC_DTYPE = {8: jnp.int32, 16: jnp.int64}
+
+
+def _out_dim(size: int, k: int, stride: int, pad: int) -> int:
+    """Output spatial size of a convolution/pool window sweep."""
+    return (size + 2 * pad - k) // stride + 1
+
+
+def saturate(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Clamp an accumulator to the signed ``bits``-wide range (paper's
+    truncate-with-saturation on the psum -> activation conversion)."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.clip(v, lo, hi).astype(_ACT_DTYPE[bits])
+
+
+def _conv_ws_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    ls_ref,
+    rs_ref,
+    o_ref,
+    *,
+    R: int,
+    S: int,
+    stride: int,
+    K: int,
+    W_out: int,
+    bits: int,
+):
+    """One pipeline beat: compute a ``K``-row x ``M'``-channel output group.
+
+    Refs (shapes after BlockSpec blocking):
+      x_ref  : [C, H_in_padded, W_in_padded]   full padded input (line buffer)
+      w_ref  : [Mp, C, R, S]                   weight-stationary block
+      b_ref  : [Mp]                            int32 bias
+      ls_ref : [C]                             per-input-channel left shift
+      rs_ref : [Mp]                            per-output-channel right shift
+      o_ref  : [Mp, K, W_out]                  output activation group
+    """
+    g = pl.program_id(0)  # row-group index (paper: which K-row group)
+    acc_t = _ACC_DTYPE[bits]
+
+    C = x_ref.shape[0]
+    W_in = x_ref.shape[2]
+    K_in = (K - 1) * stride + R  # input rows feeding K output rows
+
+    x = x_ref[...]
+    # The line buffer presents R + (K-1)*stride input rows for this group
+    # (paper Sec. 3.3: R + K - 1 read rows when stride == 1).
+    row0 = g * K * stride
+    zero = row0 * 0  # same dtype as program_id (x64 mode mixes int widths)
+    xs = jax.lax.dynamic_slice(x, (zero, row0, zero), (C, K_in, W_in))
+
+    # Channel-wise fixed-point alignment: left-shift each input channel into
+    # the common accumulator format *before* the MACs (paper Fig. 3(c)).
+    ls = ls_ref[...].astype(acc_t)
+    xs = xs.astype(acc_t) << ls[:, None, None]
+
+    # im2col-free patch extraction with static strided slices: for each (r, s)
+    # kernel tap, the [C, K, W_out] activation plane it multiplies.
+    taps = []
+    for r in range(R):
+        for s in range(S):
+            taps.append(
+                jax.lax.slice(
+                    xs,
+                    (0, r, s),
+                    (C, r + (K - 1) * stride + 1, s + (W_out - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+            )
+    # [R*S, C, K, W_out] -> contraction layout [C*R*S, K*W_out]
+    patches = jnp.stack(taps, axis=0).reshape(R * S, C, K * W_out)
+    patches = patches.transpose(1, 0, 2).reshape(C * R * S, K * W_out)
+
+    # Weight-stationary MXU matmul: [Mp, C*R*S] @ [C*R*S, K*W_out].
+    w = w_ref[...].astype(acc_t).reshape(w_ref.shape[0], C * R * S)
+    psum = jax.lax.dot(w, patches, preferred_element_type=acc_t)
+
+    # Bias add, per-output-channel right shift (arithmetic = truncation
+    # toward -inf, as the RTL barrel shifter does), saturate to 8/16-bit.
+    psum = psum + b_ref[...].astype(acc_t)[:, None]
+    psum = psum >> rs_ref[...].astype(acc_t)[:, None]
+    o_ref[...] = saturate(psum, bits).reshape(w_ref.shape[0], K, W_out)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "pad", "K", "Mp", "bits", "relu", "interpret"),
+)
+def conv_ws(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    lshift: jnp.ndarray,
+    rshift: jnp.ndarray,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    K: int = 2,
+    Mp: int = 0,
+    bits: int = 8,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fixed-point convolution with the paper's weight-stationary dataflow.
+
+    Args:
+      x:      [C, H, W] int8/int16 input activations.
+      w:      [M, C, R, S] int8/int16 weights.
+      bias:   [M] int32 bias (already in accumulator format).
+      lshift: [C] per-input-channel alignment left shifts.
+      rshift: [M] per-output-channel scaling right shifts.
+      stride: convolution stride G.
+      pad:    symmetric zero padding (controller's zeroMac handling).
+      K:      row parallelism — output rows computed per weight load.
+      Mp:     output-channel parallelism M' (grid tile on M). 0 = all of M.
+      bits:   8 or 16 (quantization mode).
+      relu:   apply ReLU before writeback (all paper nets use ReLU convs).
+
+    Returns: [M, H_out, W_out] int8/int16 output activations.
+    """
+    C, H, W = x.shape
+    M, Cw, R, S = w.shape
+    assert Cw == C, f"channel mismatch {Cw} != {C}"
+    H_out = _out_dim(H, R, stride, pad)
+    W_out = _out_dim(W, S, stride, pad)
+    Mp = Mp or M
+    assert M % Mp == 0, f"M'={Mp} must divide M={M}"
+
+    # Row groups: pad H_out up to a multiple of K; the controller simply
+    # runs the last group with garbage rows that are sliced off below.
+    n_groups = -(-H_out // K)
+    H_out_p = n_groups * K
+    # Input rows the last group may touch.
+    H_need = (H_out_p - 1) * stride + R
+    x_p = jnp.pad(x, ((0, 0), (pad, max(0, H_need - H - pad)), (pad, pad)))
+
+    kern = functools.partial(
+        _conv_ws_kernel, R=R, S=S, stride=stride, K=K, W_out=W_out, bits=bits
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(n_groups, M // Mp),
+        in_specs=[
+            # Full padded input: the activation line buffer is modelled by
+            # the dynamic row slice inside the kernel (overlapping windows
+            # are not block-granular).
+            pl.BlockSpec(x_p.shape, lambda g, mi: (0, 0, 0)),
+            pl.BlockSpec((Mp, C, R, S), lambda g, mi: (mi, 0, 0, 0)),
+            pl.BlockSpec((Mp,), lambda g, mi: (mi,)),
+            pl.BlockSpec((C,), lambda g, mi: (0,)),
+            pl.BlockSpec((Mp,), lambda g, mi: (mi,)),
+        ],
+        out_specs=pl.BlockSpec((Mp, K, W_out), lambda g, mi: (mi, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, H_out_p, W_out), _ACT_DTYPE[bits]),
+        interpret=interpret,
+    )(x_p, w, bias, lshift, rshift)
+
+    out = out[:, :H_out, :]
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def _maxpool_kernel(x_ref, o_ref, *, R: int, stride: int, K: int, W_out: int):
+    """Max-pool one K-row output group (paper: pooling layers are their own
+    pipeline stages fed by the same line-buffer scheme)."""
+    g = pl.program_id(0)
+    C = x_ref.shape[0]
+    W_in = x_ref.shape[2]
+    K_in = (K - 1) * stride + R
+    row0 = g * K * stride
+    zero = row0 * 0
+    xs = jax.lax.dynamic_slice(x_ref[...], (zero, row0, zero), (C, K_in, W_in))
+    taps = []
+    for r in range(R):
+        for s in range(R):
+            taps.append(
+                jax.lax.slice(
+                    xs,
+                    (0, r, s),
+                    (C, r + (K - 1) * stride + 1, s + (W_out - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+            )
+    o_ref[...] = jnp.max(jnp.stack(taps, axis=0), axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("R", "stride", "K", "interpret")
+)
+def maxpool(
+    x: jnp.ndarray,
+    *,
+    R: int = 2,
+    stride: int = 2,
+    K: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fixed-point max pooling over ``R x R`` windows. [C,H,W] -> [C,H',W']."""
+    C, H, W = x.shape
+    H_out = _out_dim(H, R, stride, 0)
+    W_out = _out_dim(W, R, stride, 0)
+    n_groups = -(-H_out // K)
+    H_out_p = n_groups * K
+    H_need = (H_out_p - 1) * stride + R
+    lo = int(jnp.iinfo(x.dtype).min)
+    x_p = jnp.pad(x, ((0, 0), (0, max(0, H_need - H)), (0, 0)), constant_values=lo)
+
+    kern = functools.partial(
+        _maxpool_kernel, R=R, stride=stride, K=K, W_out=W_out
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(n_groups,),
+        in_specs=[pl.BlockSpec(x_p.shape, lambda g: (0, 0, 0))],
+        out_specs=pl.BlockSpec((C, K, W_out), lambda g: (0, g, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, H_out_p, W_out), x.dtype),
+        interpret=interpret,
+    )(x_p)
+    return out[:, :H_out, :]
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, rs_ref, o_ref, *, bits: int):
+    """Fully-connected stage: 1x1xN 'convolution' (paper treats FC layers as
+    pipeline stages with R=S=1, H=W=1)."""
+    acc_t = _ACC_DTYPE[bits]
+    x = x_ref[...].astype(acc_t)
+    w = w_ref[...].astype(acc_t)
+    psum = jax.lax.dot(w, x, preferred_element_type=acc_t)
+    psum = psum + b_ref[...].astype(acc_t)
+    psum = psum >> rs_ref[...].astype(acc_t)
+    o_ref[...] = saturate(psum, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "relu", "interpret"))
+def fc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    rshift: jnp.ndarray,
+    *,
+    bits: int = 8,
+    relu: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fixed-point fully-connected layer. x: [N_in], w: [N_out, N_in]."""
+    kern = functools.partial(_fc_kernel, bits=bits)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((w.shape[0],), _ACT_DTYPE[bits]),
+        interpret=interpret,
+    )(x, w, bias, rshift)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out

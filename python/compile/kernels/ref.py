@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the fixed-point kernels in ``conv_ws.py``.
+
+Deliberately takes an *independent* compute path (XLA's own integer
+convolution / reduce_window / dot — no Pallas, no strided-slice patch
+extraction) so a bug in the kernel's dataflow cannot cancel out in the test.
+
+For 8-bit mode the accumulator is int32 and XLA's native integer convolution
+is exact. For 16-bit mode products reach 2^30 and reductions can overflow
+int32, so the oracle computes in float64, which is exact for |v| < 2^53 —
+the worst case here is C*R*S * 2^30 ≈ 2^43 (C=512, 3x3 kernel), with margin.
+Arithmetic right shift of a negative int equals floor division by 2^s, which
+is ``jnp.floor_divide`` in both domains.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .conv_ws import _ACT_DTYPE
+
+
+def _shift_sat(psum: jnp.ndarray, rdiv: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Floor-divide by 2^rshift (== arithmetic right shift), saturate, cast."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.clip(jnp.floor_divide(psum, rdiv), lo, hi).astype(_ACT_DTYPE[bits])
+
+
+def conv_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    lshift: jnp.ndarray,
+    rshift: jnp.ndarray,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    bits: int = 8,
+    relu: bool = True,
+) -> jnp.ndarray:
+    """Reference fixed-point conv. Same semantics as ``conv_ws.conv_ws``."""
+    acc = jnp.int32 if bits == 8 else jnp.float64
+    xs = x.astype(acc) * (2 ** lshift.astype(acc))[:, None, None]
+    y = jax.lax.conv_general_dilated(
+        xs[None],
+        w.astype(acc),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    y = y + bias.astype(acc)[:, None, None]
+    out = _shift_sat(y, (2 ** rshift.astype(acc))[:, None, None], bits)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def maxpool_ref(x: jnp.ndarray, *, R: int = 2, stride: int = 2) -> jnp.ndarray:
+    """Reference max pooling via XLA reduce_window."""
+    lo = int(jnp.iinfo(x.dtype).min)
+    return jax.lax.reduce_window(
+        x,
+        jnp.array(lo, x.dtype),
+        jax.lax.max,
+        window_dimensions=(1, R, R),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )
+
+
+def fc_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    rshift: jnp.ndarray,
+    *,
+    bits: int = 8,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Reference fixed-point fully-connected layer. x: [N_in], w: [N_out,N_in]."""
+    acc = jnp.int32 if bits == 8 else jnp.float64
+    y = w.astype(acc) @ x.astype(acc) + bias.astype(acc)
+    out = _shift_sat(y, 2 ** rshift.astype(acc), bits)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out

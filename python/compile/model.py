@@ -1,0 +1,289 @@
+"""Layer-2: quantized CNN graphs built from the Layer-1 Pallas kernels.
+
+Mirrors the Rust model zoo (``rust/src/model/zoo.rs``): every network is a
+list of Conv / Pool / Fc stages — exactly the pipeline-stage granularity of
+the paper's architecture (Sec. 3.2: "Major layers, including convolution
+layers, pooling layers and full-connected layers, are implemented as
+individual pipeline stages").
+
+The *artifact* nets compiled by ``aot.py`` are the small ones (TinyCNN,
+LeNet, VGG-micro): the full paper nets (VGG16 @224², YOLO @448²) exist in
+the Rust zoo for the allocator/simulator, while the functional PJRT path
+runs scaled-down nets — same code path, laptop-scale shapes (DESIGN.md §2).
+
+Weights are deterministic in the seed; per-layer right shifts are calibrated
+on a sample batch (see ``quantize.py``) so activations neither vanish nor
+saturate systematically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv_ws as kn
+from .kernels import ref
+from . import quantize as q
+
+
+# --------------------------------------------------------------------------
+# Net specification (mirror of rust/src/model/mod.rs)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    m: int
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    pad: int = 1
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    r: int = 2
+    stride: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    n_out: int
+    relu: bool = False
+
+
+Layer = Union[Conv, Pool, Fc]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    name: str
+    in_shape: Tuple[int, int, int]  # (C, H, W)
+    layers: Tuple[Layer, ...]
+    bits: int = 8
+
+
+def tinycnn(bits: int = 8) -> NetSpec:
+    """3-conv CIFAR-scale net — the e2e serving artifact."""
+    return NetSpec(
+        "tinycnn",
+        (3, 32, 32),
+        (
+            Conv(16), Pool(),
+            Conv(32), Pool(),
+            Conv(32), Pool(),
+            Fc(10),
+        ),
+        bits,
+    )
+
+
+def lenet(bits: int = 8) -> NetSpec:
+    """LeNet-5-shaped net on 28x28 single-channel input."""
+    return NetSpec(
+        "lenet",
+        (1, 28, 28),
+        (
+            Conv(6, r=5, s=5, pad=2), Pool(),
+            Conv(16, r=5, s=5, pad=0), Pool(),
+            Fc(120, relu=True),
+            Fc(84, relu=True),
+            Fc(10),
+        ),
+        bits,
+    )
+
+
+def vgg_micro(bits: int = 8) -> NetSpec:
+    """VGG-shaped 6-conv net on 32x32 — the deep-pipeline artifact.
+
+    Same 3x3/stride-1/pad-1 + 2x2-pool rhythm as VGG16, scaled so the
+    interpret-mode Pallas path stays laptop-fast."""
+    return NetSpec(
+        "vgg_micro",
+        (3, 32, 32),
+        (
+            Conv(16), Conv(16), Pool(),
+            Conv(32), Conv(32), Pool(),
+            Conv(48), Conv(48), Pool(),
+            Fc(10),
+        ),
+        bits,
+    )
+
+
+NETS = {n.name: n for n in (tinycnn(), lenet(), vgg_micro())}
+
+
+# --------------------------------------------------------------------------
+# Parameter generation + calibration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ConvParams:
+    w: np.ndarray
+    bias: np.ndarray
+    lshift: np.ndarray
+    rshift: np.ndarray
+
+
+@dataclasses.dataclass
+class FcParams:
+    w: np.ndarray
+    bias: np.ndarray
+    rshift: np.ndarray
+
+
+def _sample_inputs(spec: NetSpec, n: int, seed: int) -> np.ndarray:
+    key = jax.random.PRNGKey(seed ^ 0xA5A5)
+    lim = 1 << (spec.bits - 1)
+    x = jax.random.randint(
+        key, (n, *spec.in_shape), -lim // 2, lim // 2, dtype=jnp.int32
+    )
+    return np.asarray(x, dtype=np.int8 if spec.bits == 8 else np.int16)
+
+
+def build_params(spec: NetSpec, seed: int = 0, calib_frames: int = 4):
+    """Generate deterministic weights and calibrate shifts layer by layer.
+
+    Runs the *reference* ops on a calibration batch to size each layer's
+    right shift; the returned params are consumed by both the kernel path
+    and the oracle path (they must agree bit-exactly — tested).
+    """
+    key = jax.random.PRNGKey(seed)
+    xs = _sample_inputs(spec, calib_frames, seed)  # [B, C, H, W]
+    params: List[Union[ConvParams, FcParams, None]] = []
+    c_in = spec.in_shape[0]
+
+    for li, layer in enumerate(spec.layers):
+        key, kw, kb = jax.random.split(key, 3)
+        if isinstance(layer, Conv):
+            w = q.rand_weights(kw, (layer.m, c_in, layer.r, layer.s), spec.bits)
+            lshift = q.default_lshift(c_in, channel_spread=1, seed=seed + li)
+            # Raw psums on the calibration batch (float64 is exact here).
+            xs64 = xs.astype(np.float64) * (2.0 ** lshift)[None, :, None, None]
+            raw = jax.lax.conv_general_dilated(
+                jnp.asarray(xs64), jnp.asarray(w, jnp.float64),
+                window_strides=(layer.stride, layer.stride),
+                padding=[(layer.pad, layer.pad), (layer.pad, layer.pad)],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+            raw = np.asarray(raw)
+            rshift = q.calibrate_rshift(raw.transpose(1, 0, 2, 3), spec.bits)
+            bmag = np.maximum(
+                1, np.percentile(np.abs(raw), 90, axis=(0, 2, 3)) / 8
+            ).astype(np.int32)
+            bias = np.asarray(
+                jax.random.randint(kb, (layer.m,), -1, 2, dtype=jnp.int32)
+            ) * bmag
+            p = ConvParams(w, bias, lshift, rshift)
+            params.append(p)
+            # Quantized outputs feed the next layer's calibration.
+            xs = np.stack([
+                np.asarray(ref.conv_ref(
+                    jnp.asarray(f), jnp.asarray(w), jnp.asarray(bias),
+                    jnp.asarray(lshift), jnp.asarray(rshift),
+                    stride=layer.stride, pad=layer.pad, bits=spec.bits,
+                    relu=layer.relu,
+                )) for f in xs
+            ])
+            c_in = layer.m
+        elif isinstance(layer, Pool):
+            params.append(None)
+            xs = np.stack([
+                np.asarray(ref.maxpool_ref(jnp.asarray(f), R=layer.r,
+                                           stride=layer.stride))
+                for f in xs
+            ])
+        elif isinstance(layer, Fc):
+            n_in = int(np.prod(xs.shape[1:]))
+            w = q.rand_weights(kw, (layer.n_out, n_in), spec.bits)
+            xf = xs.reshape(xs.shape[0], -1)
+            raw = xf.astype(np.float64) @ np.asarray(w, np.float64).T
+            rshift = q.calibrate_rshift(raw.T, spec.bits)
+            bias = np.zeros(layer.n_out, dtype=np.int32)
+            p = FcParams(w, bias, rshift)
+            params.append(p)
+            xs = np.stack([
+                np.asarray(ref.fc_ref(
+                    jnp.asarray(f), jnp.asarray(w), jnp.asarray(bias),
+                    jnp.asarray(rshift), bits=spec.bits, relu=layer.relu,
+                )) for f in xf
+            ])
+        else:  # pragma: no cover
+            raise TypeError(layer)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward graphs
+# --------------------------------------------------------------------------
+
+
+def forward_kernel(spec: NetSpec, params, frame: jnp.ndarray, *, K: int = 2,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Single-frame forward through the Pallas kernel path.
+
+    ``K`` is the paper's row parallelism; it changes the schedule, never the
+    numerics (property-tested in test_model.py)."""
+    x = frame
+    for layer, p in zip(spec.layers, params):
+        if isinstance(layer, Conv):
+            x = kn.conv_ws(
+                x, jnp.asarray(p.w), jnp.asarray(p.bias),
+                jnp.asarray(p.lshift), jnp.asarray(p.rshift),
+                stride=layer.stride, pad=layer.pad, K=K,
+                bits=spec.bits, relu=layer.relu, interpret=interpret,
+            )
+        elif isinstance(layer, Pool):
+            x = kn.maxpool(x, R=layer.r, stride=layer.stride, K=1,
+                           interpret=interpret)
+        elif isinstance(layer, Fc):
+            x = kn.fc(x.reshape(-1), jnp.asarray(p.w), jnp.asarray(p.bias),
+                      jnp.asarray(p.rshift), bits=spec.bits, relu=layer.relu,
+                      interpret=interpret)
+    return x
+
+
+def forward_ref(spec: NetSpec, params, frame: jnp.ndarray) -> jnp.ndarray:
+    """Single-frame forward through the oracle path."""
+    x = frame
+    for layer, p in zip(spec.layers, params):
+        if isinstance(layer, Conv):
+            x = ref.conv_ref(
+                x, jnp.asarray(p.w), jnp.asarray(p.bias),
+                jnp.asarray(p.lshift), jnp.asarray(p.rshift),
+                stride=layer.stride, pad=layer.pad, bits=spec.bits,
+                relu=layer.relu,
+            )
+        elif isinstance(layer, Pool):
+            x = ref.maxpool_ref(x, R=layer.r, stride=layer.stride)
+        elif isinstance(layer, Fc):
+            x = ref.fc_ref(x.reshape(-1), jnp.asarray(p.w),
+                           jnp.asarray(p.bias), jnp.asarray(p.rshift),
+                           bits=spec.bits, relu=layer.relu)
+    return x
+
+
+def batched_forward(spec: NetSpec, params, batch: int, *, K: int = 2,
+                    interpret: bool = True):
+    """Build the batched inference function that gets AOT-lowered.
+
+    The batch loop is unrolled at trace time (batch sizes are small, fixed
+    per artifact) — vmap over interpret-mode pallas_call is avoided on
+    purpose. Returns fn: int[batch,C,H,W] -> (int[batch,n_out],)."""
+
+    def fn(frames):
+        outs = [
+            forward_kernel(spec, params, frames[i], K=K, interpret=interpret)
+            for i in range(batch)
+        ]
+        return (jnp.stack(outs),)
+
+    return fn

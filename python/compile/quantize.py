@@ -1,0 +1,90 @@
+"""Fixed-point calibration for the paper's channel-wise quantization scheme.
+
+The paper (Sec. 3.3) stores weights and activations as 8/16-bit fixed point
+with *channel-wise different formats*: products of different input channels
+are aligned by left shifts before accumulation, and the 32-bit partial sum is
+right-shifted and truncated back to the activation width.
+
+This module picks those shifts. Given integer weights and a sample of input
+activations, it chooses per-output-channel right shifts so the post-shift
+activations use the full 8/16-bit range without systematic saturation —
+the software analogue of the bit-width allocation a hardware flow would do
+offline. Determinism matters: the same seed must give the same artifact and
+golden files on every run (`make artifacts` idempotency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Per-layer fixed-point parameters fed to the kernels."""
+
+    lshift: np.ndarray  # [C]  per-input-channel alignment shifts
+    rshift: np.ndarray  # [M]  per-output-channel scaling shifts
+    bias: np.ndarray    # [M]  int32 bias in accumulator format
+
+
+def weight_range(bits: int) -> int:
+    """Symmetric weight magnitude for ``bits``-wide storage."""
+    return (1 << (bits - 1)) - 1
+
+
+def rand_weights(key, shape: Sequence[int], bits: int, spread: int = 4) -> np.ndarray:
+    """Deterministic small-magnitude integer weights.
+
+    Magnitudes are kept well under the storage range so accumulated psums
+    exercise the shift/saturate epilogue without being pure saturation noise.
+    """
+    lim = max(1, weight_range(bits) // spread)
+    w = jax.random.randint(key, shape, -lim, lim + 1, dtype=jnp.int32)
+    return np.asarray(w, dtype=np.int8 if bits == 8 else np.int16)
+
+
+def calibrate_rshift(
+    psum_sample: np.ndarray, bits: int, percentile: float = 99.9
+) -> np.ndarray:
+    """Per-output-channel right shift from a sample of raw partial sums.
+
+    Picks the smallest shift such that the chosen percentile of |psum| maps
+    inside the signed ``bits`` range — i.e. rare outliers saturate (the
+    hardware clips them too), the bulk does not.
+    """
+    m = psum_sample.shape[0]
+    flat = np.abs(psum_sample.reshape(m, -1)).astype(np.float64)
+    hi = np.percentile(flat, percentile, axis=1)
+    limit = float((1 << (bits - 1)) - 1)
+    rs = np.ceil(np.log2(np.maximum(hi, 1.0) / limit))
+    return np.clip(rs, 0, 31).astype(np.int32)
+
+
+def default_lshift(c: int, channel_spread: int = 0, seed: int = 0) -> np.ndarray:
+    """Per-input-channel alignment shifts.
+
+    ``channel_spread`` > 0 emulates genuinely heterogeneous channel formats
+    (the paper's motivating case); 0 gives a uniform format. Deterministic in
+    the seed.
+    """
+    if channel_spread == 0:
+        return np.zeros(c, dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, channel_spread + 1, size=c, dtype=np.int32)
+
+
+def fold_lshift_into_psum_bound(
+    c: int, r: int, s: int, bits: int, lshift: np.ndarray
+) -> int:
+    """Worst-case |psum| bound for overflow analysis (mirrors the Rust
+    ``quant::psum_bound`` used by the engine model's width checks)."""
+    amax = 1 << (bits - 1)
+    wmax = weight_range(bits)
+    per_tap = int(amax) * int(wmax)
+    return int(np.sum((2.0 ** lshift.astype(np.float64))) * r * s * per_tap)

@@ -1,0 +1,100 @@
+"""L2 correctness: whole-net kernel path vs oracle path; schedule invariance."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def nets():
+    """Params are expensive to calibrate; build once per module."""
+    return {
+        name: (spec, M.build_params(spec, seed=0))
+        for name, spec in M.NETS.items()
+    }
+
+
+def _frames(spec, n, seed=99):
+    rng = np.random.default_rng(seed)
+    lim = (1 << (spec.bits - 1)) // 2
+    dt = np.int8 if spec.bits == 8 else np.int16
+    return rng.integers(-lim, lim, (n, *spec.in_shape)).astype(dt)
+
+
+@pytest.mark.parametrize("name", list(M.NETS))
+def test_kernel_path_matches_oracle(nets, name):
+    spec, params = nets[name]
+    for f in _frames(spec, 3):
+        out_k = M.forward_kernel(spec, params, jnp.asarray(f))
+        out_r = M.forward_ref(spec, params, jnp.asarray(f))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("K", [1, 2, 3, 5])
+def test_row_parallelism_is_numerics_neutral(nets, K):
+    """Paper Alg. 2 raises K for weight reuse; it must never change the
+    output — only the schedule."""
+    spec, params = nets["tinycnn"]
+    f = jnp.asarray(_frames(spec, 1)[0])
+    base = M.forward_kernel(spec, params, f, K=1)
+    out = M.forward_kernel(spec, params, f, K=K)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+def test_params_deterministic():
+    """`make artifacts` must be reproducible: same seed, same params."""
+    spec = M.NETS["tinycnn"]
+    a = M.build_params(spec, seed=0)
+    b = M.build_params(spec, seed=0)
+    for pa, pb in zip(a, b):
+        if pa is None:
+            assert pb is None
+            continue
+        np.testing.assert_array_equal(pa.w, pb.w)
+        np.testing.assert_array_equal(pa.rshift, pb.rshift)
+
+
+def test_different_seeds_differ():
+    spec = M.NETS["tinycnn"]
+    a = M.build_params(spec, seed=0)
+    b = M.build_params(spec, seed=1)
+    assert any(
+        pa is not None and not np.array_equal(pa.w, pb.w)
+        for pa, pb in zip(a, b)
+    )
+
+
+def test_outputs_not_degenerate(nets):
+    """Calibration must leave the net with informative outputs (not all
+    saturated, not all zero) — otherwise the golden files prove nothing."""
+    spec, params = nets["tinycnn"]
+    outs = np.stack([
+        np.asarray(M.forward_ref(spec, params, jnp.asarray(f)))
+        for f in _frames(spec, 8)
+    ])
+    assert np.ptp(outs.astype(np.int32)) > 0, "all outputs identical"
+    frac_sat = np.mean(np.abs(outs.astype(np.int32)) == 127)
+    assert frac_sat < 0.9, f"outputs are saturation noise ({frac_sat:.0%})"
+
+
+def test_batched_forward_stacks_frames(nets):
+    spec, params = nets["lenet"]
+    frames = _frames(spec, 4)
+    fn = M.batched_forward(spec, params, 4)
+    (out,) = fn(jnp.asarray(frames))
+    for i, f in enumerate(frames):
+        np.testing.assert_array_equal(
+            np.asarray(out)[i],
+            np.asarray(M.forward_kernel(spec, params, jnp.asarray(f))),
+        )
+
+
+def test_zoo_shapes():
+    """Spot-check the zoo's declared geometry."""
+    t = M.NETS["tinycnn"]
+    assert t.in_shape == (3, 32, 32)
+    assert sum(isinstance(l, M.Conv) for l in t.layers) == 3
+    v = M.NETS["vgg_micro"]
+    assert sum(isinstance(l, M.Conv) for l in v.layers) == 6

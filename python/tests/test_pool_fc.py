@@ -1,0 +1,75 @@
+"""L1 correctness: pooling and fully-connected kernels vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_ws as kn
+from compile.kernels import ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    C=st.integers(1, 8),
+    H=st.integers(4, 20),
+    W=st.integers(4, 20),
+    R=st.integers(2, 3),
+    K=st.integers(1, 3),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_maxpool_matches_oracle(C, H, W, R, K, bits, seed):
+    rng = np.random.default_rng(seed)
+    dt = np.int8 if bits == 8 else np.int16
+    info = np.iinfo(dt)
+    x = rng.integers(info.min, info.max + 1, (C, H, W)).astype(dt)
+    out_k = kn.maxpool(jnp.asarray(x), R=R, stride=R, K=K)
+    out_r = ref.maxpool_ref(jnp.asarray(x), R=R, stride=R)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_maxpool_negative_only_input():
+    """Pool padding value must be dtype-min, not zero, or all-negative
+    windows come out wrong."""
+    x = np.full((1, 4, 4), -5, np.int8)
+    out = kn.maxpool(jnp.asarray(x), R=2, stride=2)
+    assert np.all(np.asarray(out) == -5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_in=st.integers(1, 128),
+    n_out=st.integers(1, 32),
+    bits=st.sampled_from([8, 16]),
+    relu=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_fc_matches_oracle(n_in, n_out, bits, relu, seed):
+    rng = np.random.default_rng(seed)
+    dt = np.int8 if bits == 8 else np.int16
+    lim = (1 << (bits - 1)) // 4
+    x = rng.integers(-lim, lim, (n_in,)).astype(dt)
+    w = rng.integers(-lim, lim, (n_out, n_in)).astype(dt)
+    b = rng.integers(-500, 500, (n_out,)).astype(np.int32)
+    rs = rng.integers(0, 8, (n_out,)).astype(np.int32)
+    out_k = kn.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                  jnp.asarray(rs), bits=bits, relu=relu)
+    out_r = ref.fc_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                       jnp.asarray(rs), bits=bits, relu=relu)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_fc_16bit_accumulator_width():
+    """16-bit mode must accumulate beyond int32: 2048 * (2^14)^2 products
+    overflow 32 bits but not the int64 accumulator."""
+    n = 2048
+    x = np.full((n,), 1 << 14, np.int32).astype(np.int16)  # int16 max-ish
+    x = np.full((n,), 16384 - 1, np.int16)
+    w = np.full((1, n), 16384 - 1, np.int16)
+    b = np.zeros(1, np.int32)
+    rs = np.full(1, 30, np.int32)  # bring it back into range
+    out = kn.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                jnp.asarray(rs), bits=16, relu=False)
+    ref_v = (n * (16384 - 1) ** 2) >> 30
+    assert int(np.asarray(out)[0]) == min(ref_v, (1 << 15) - 1)

@@ -1,0 +1,68 @@
+"""Calibration properties (quantize.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(10, 500),
+    scale=st.floats(1.0, 1e7),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_calibrated_shift_maps_bulk_in_range(m, n, scale, bits, seed):
+    rng = np.random.default_rng(seed)
+    psum = (rng.normal(0, scale, (m, n))).astype(np.float64)
+    rs = q.calibrate_rshift(psum, bits)
+    assert rs.shape == (m,)
+    assert np.all(rs >= 0) and np.all(rs <= 31)
+    limit = (1 << (bits - 1)) - 1
+    # The calibration contract: the 99.9th-percentile |psum| of each output
+    # channel maps inside the representable range after its shift.
+    hi = np.percentile(np.abs(psum), 99.9, axis=1)
+    assert np.all(hi / (2.0 ** rs) <= limit + 1e-9)
+
+
+def test_shift_is_minimal():
+    """One less shift would overflow the declared percentile."""
+    psum = np.full((1, 1000), 1000.0)
+    rs = q.calibrate_rshift(psum, 8)
+    assert 1000 / 2 ** rs[0] <= 127
+    assert rs[0] == 0 or 1000 / 2 ** (rs[0] - 1) > 127
+
+
+def test_small_psums_need_no_shift():
+    psum = np.full((3, 100), 5.0)
+    assert np.all(q.calibrate_rshift(psum, 8) == 0)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_rand_weights_range_and_determinism(bits):
+    import jax
+    k = jax.random.PRNGKey(0)
+    a = q.rand_weights(k, (4, 4), bits)
+    b = q.rand_weights(k, (4, 4), bits)
+    np.testing.assert_array_equal(a, b)
+    lim = q.weight_range(bits) // 4
+    assert np.all(np.abs(a.astype(np.int64)) <= lim)
+    assert a.dtype == (np.int8 if bits == 8 else np.int16)
+
+
+def test_default_lshift_deterministic():
+    a = q.default_lshift(16, channel_spread=2, seed=3)
+    b = q.default_lshift(16, channel_spread=2, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(a >= 0) and np.all(a <= 2)
+    assert np.all(q.default_lshift(8) == 0)
+
+
+def test_psum_bound_monotone_in_shifts():
+    lo = q.fold_lshift_into_psum_bound(4, 3, 3, 8, np.zeros(4, np.int32))
+    hi = q.fold_lshift_into_psum_bound(4, 3, 3, 8, np.full(4, 2, np.int32))
+    assert hi == 4 * lo
+    assert lo == 4 * 3 * 3 * 128 * 127

@@ -1,0 +1,72 @@
+//! Ablation bench (DESIGN.md §6): which of DNNBuilder's two constraints
+//! costs how much? The paper argues its flexible activation buffer removes
+//! (a) the power-of-2 restriction and (b) the matched-interface restriction
+//! `C'_i = M'_{i−1}`. This bench isolates them:
+//!
+//! - `flex` — neither constraint (this work)
+//! - `pow2` — the flex allocation with parallelisms rounded down to powers
+//!   of 2 (what coarse BRAM banking would force)
+//! - `dnnb` — both constraints ([3])
+
+use flexipipe::alloc::baselines::DnnBuilderAllocator;
+use flexipipe::alloc::flex::{refresh_figures, FlexAllocator};
+use flexipipe::alloc::{Allocation, Allocator};
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::util::bench::Bench;
+
+fn pow2_floor(n: usize) -> usize {
+    if n == 0 {
+        1
+    } else {
+        1 << (usize::BITS - 1 - n.leading_zeros())
+    }
+}
+
+/// Constrain an existing flexible allocation to power-of-2 parallelisms.
+fn pow2_constrain(mut a: Allocation) -> Allocation {
+    let net = a.net.clone();
+    for s in a.stages.iter_mut() {
+        s.cfg.cp = pow2_floor(s.cfg.cp);
+        s.cfg.mp = pow2_floor(s.cfg.mp);
+    }
+    refresh_figures(&net, a.mode, &mut a);
+    a
+}
+
+fn main() {
+    let mut b = Bench::with_budget_secs(0.5);
+    let board = zc706();
+    let mode = QuantMode::W16A16;
+
+    println!(
+        "{:<9} {:>8} {:>8} {:>8} {:>12} {:>12}",
+        "model", "flex", "pow2", "dnnb", "pow2 cost", "dnnb cost"
+    );
+    for net in zoo::paper_nets() {
+        let flex = FlexAllocator::default().allocate(&net, &board, mode).unwrap();
+        let f = flex.evaluate();
+        let p = pow2_constrain(flex.clone()).evaluate();
+        let d = DnnBuilderAllocator
+            .allocate(&net, &board, mode)
+            .unwrap()
+            .evaluate();
+        println!(
+            "{:<9} {:>8.0} {:>8.0} {:>8.0} {:>11.1}% {:>11.1}%",
+            net.name,
+            f.gops,
+            p.gops,
+            d.gops,
+            100.0 * (1.0 - p.gops / f.gops),
+            100.0 * (1.0 - d.gops / f.gops),
+        );
+        b.bench(&format!("ablate/{}/flex", net.name), || {
+            FlexAllocator::default().allocate(&net, &board, mode).unwrap()
+        });
+        b.bench(&format!("ablate/{}/dnnb", net.name), || {
+            DnnBuilderAllocator.allocate(&net, &board, mode).unwrap()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,55 @@
+//! Bench: pipeline balance (paper Fig. 1(b)'s argument — idle cycles come
+//! from unbalanced `T_row`). Reports the per-stage cycles/frame spread of
+//! the full allocator per net, and times the allocator itself.
+
+use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::Allocator;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::util::bench::Bench;
+
+fn spread(cycles: &[u64]) -> f64 {
+    let max = *cycles.iter().max().unwrap() as f64;
+    let busy: f64 = cycles.iter().map(|&c| c as f64).sum();
+    busy / (cycles.len() as f64 * max)
+}
+
+fn main() {
+    let mut b = Bench::with_budget_secs(1.0);
+    let board = zc706();
+    for net in zoo::paper_nets() {
+        b.bench(&format!("allocate/{}", net.name), || {
+            FlexAllocator::default()
+                .allocate(&net, &board, QuantMode::W16A16)
+                .unwrap()
+        });
+    }
+    b.finish();
+
+    println!("\n== per-stage balance (compute stages, 16b) ==");
+    println!(
+        "{:<9} {:>14} {:>14} {:>10}",
+        "model", "max cycles", "min cycles", "balance"
+    );
+    for net in zoo::paper_nets() {
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let cycles: Vec<u64> = alloc
+            .stages
+            .iter()
+            .zip(alloc.stage_cycles())
+            .filter(|(s, _)| alloc.net.layers[s.layer_idx].uses_dsps())
+            .map(|(_, c)| c)
+            .collect();
+        println!(
+            "{:<9} {:>14} {:>14} {:>9.1}%",
+            net.name,
+            cycles.iter().max().unwrap(),
+            cycles.iter().min().unwrap(),
+            spread(&cycles) * 100.0
+        );
+    }
+    println!("(balance = mean busy fraction at the pipeline beat; 100% = perfectly balanced)");
+}

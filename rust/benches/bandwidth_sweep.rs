@@ -1,0 +1,59 @@
+//! Bench: Algorithm 2 behavior under a DDR bandwidth sweep (the paper's
+//! Sec. 4.2 trade: raise row parallelism K → fewer weight reloads → less
+//! bandwidth, more BRAM). Prints the K/BRAM/fps trajectory and verifies
+//! each point with the cycle simulator.
+
+use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::Allocator;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::sim;
+use flexipipe::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::with_budget_secs(0.5);
+    let net = zoo::vgg16();
+
+    println!(
+        "{:>7} {:>9} {:>9} {:>8} {:>7} {:>10} {:>10}",
+        "GB/s", "cf fps", "sim fps", "BRAM18", "max K", "B (GB/s)", "wstalls"
+    );
+    for gbps in [2.0, 3.0, 4.0, 5.0, 6.4, 8.0, 10.0, 12.8] {
+        let mut board = zc706();
+        board.ddr_bytes_per_sec = gbps * 1e9;
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let r = alloc.evaluate();
+        let s = sim::simulate(&alloc, 2);
+        let max_k = alloc.stages.iter().map(|st| st.cfg.k).max().unwrap_or(1);
+        let wstalls: u64 = s.stages.iter().map(|st| st.stall_weights).sum();
+        println!(
+            "{:>7.1} {:>9.2} {:>9.2} {:>8} {:>7} {:>10.2} {:>10}",
+            gbps,
+            r.fps,
+            s.fps,
+            r.bram18,
+            max_k,
+            r.ddr_bytes_per_sec / 1e9,
+            wstalls
+        );
+    }
+
+    b.bench("alg2/vgg16/starved-4GBps", || {
+        let mut board = zc706();
+        board.ddr_bytes_per_sec = 4.0e9;
+        FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap()
+    });
+    b.bench("sim/vgg16/2frames", || {
+        let board = zc706();
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        sim::simulate(&alloc, 2)
+    });
+    b.finish();
+}

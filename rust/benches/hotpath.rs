@@ -1,0 +1,72 @@
+//! Bench: hot paths of the L3 coordinator stack, for the §Perf pass.
+//!
+//! - allocator end-to-end,
+//! - the DES simulator's event throughput (simulated cycles per wall-second),
+//! - JSON manifest parse,
+//! - PJRT execute latency per artifact batch (needs `make artifacts`;
+//!   skipped gracefully when absent).
+
+use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::Allocator;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::runtime::{default_artifact_dir, Runtime};
+use flexipipe::sim;
+use flexipipe::util::bench::Bench;
+use flexipipe::util::json;
+
+fn main() {
+    let mut b = Bench::with_budget_secs(1.5);
+    let board = zc706();
+
+    // Allocator.
+    for net in [zoo::vgg16(), zoo::yolo()] {
+        b.bench(&format!("alloc/{}", net.name), || {
+            FlexAllocator::default()
+                .allocate(&net, &board, QuantMode::W16A16)
+                .unwrap()
+        });
+    }
+
+    // Simulator event throughput.
+    let alloc = FlexAllocator::default()
+        .allocate(&zoo::vgg16(), &board, QuantMode::W16A16)
+        .unwrap();
+    let s = b.bench("sim/vgg16/3frames", || sim::simulate(&alloc, 3)).clone();
+    let sim_result = sim::simulate(&alloc, 3);
+    println!(
+        "  -> simulator speed: {:.1} M simulated cycles / wall-second",
+        sim_result.makespan as f64 / s.mean.as_secs_f64() / 1e6
+    );
+
+    // JSON parse.
+    let manifest_path = default_artifact_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        b.bench("json/parse-manifest", || json::parse(&text).unwrap());
+    }
+
+    // PJRT execute.
+    match Runtime::load(default_artifact_dir()) {
+        Ok(rt) => {
+            for name in ["tinycnn_b1_8b", "tinycnn_b8_8b", "vgg_micro_b4_8b"] {
+                if let Ok(a) = rt.manifest().get(name) {
+                    let input = vec![1i8; a.input_elems()];
+                    let batch = a.batch;
+                    let _ = rt.execute_i8(name, &input).unwrap(); // warm
+                    let s = b
+                        .bench(&format!("pjrt/{name}"), || {
+                            rt.execute_i8(name, &input).unwrap()
+                        })
+                        .clone();
+                    println!(
+                        "  -> {:.1} frames/s through PJRT",
+                        batch as f64 / s.mean.as_secs_f64()
+                    );
+                }
+            }
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+    b.finish();
+}

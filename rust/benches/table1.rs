@@ -1,0 +1,38 @@
+//! Bench: regenerate Table I end-to-end (per-design-point allocation +
+//! closed form + 3-frame simulation + power), timing each design point and
+//! printing the regenerated rows — the paper's whole evaluation in one
+//! `cargo bench` target.
+
+use flexipipe::alloc::ArchKind;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::report;
+use flexipipe::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::with_budget_secs(1.0);
+    let board = zc706();
+    for net in zoo::paper_nets() {
+        for arch in [
+            ArchKind::Recurrent,
+            ArchKind::Fusion,
+            ArchKind::DnnBuilder,
+            ArchKind::FlexPipeline,
+        ] {
+            b.bench(&format!("table1/{}/{}", net.name, arch.label()), || {
+                report::design_point(&net, &board, arch).unwrap()
+            });
+        }
+    }
+    b.finish();
+
+    println!("\n== regenerated Table I ==");
+    let rows = report::table1().unwrap();
+    println!("{}", report::render(&rows, true));
+    if let Some((r1, r2, r3)) = report::vgg16_speedups(&rows) {
+        println!(
+            "VGG16 speedups: {r1:.2}x vs [1] (paper 2.58x), {r2:.2}x vs [2] (paper 1.53x), \
+             {r3:.2}x vs [3] (paper 1.35x)"
+        );
+    }
+}

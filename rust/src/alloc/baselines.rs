@@ -1,0 +1,532 @@
+//! The three comparison architectures of Table I, rebuilt on the same
+//! substrate so the comparison isolates *allocation flexibility* — the
+//! paper's actual claim.
+//!
+//! - [`DnnBuilderAllocator`] — [3]: layer-wise pipeline like this work, but
+//!   with DNNBuilder's constraints: every channel parallelism is a power of
+//!   two and the input parallelism of layer *i* must equal the output
+//!   parallelism of layer *i−1* (its activation buffer can't re-shape).
+//!   Those constraints are exactly what the paper's Sec. 2.2 blames for
+//!   [3]'s lower DSP utilization.
+//! - [`FusionAllocator`] — [2]: heterogeneous fusion pipeline: consecutive
+//!   conv layers fuse into groups that execute *sequentially* (only one
+//!   group's engines exist at a time conceptually; here: one group active),
+//!   3×3/stride-1 convs use Winograd (4× multiplication reduction), and the
+//!   design closes timing at 100 MHz (Table I).
+//! - [`RecurrentAllocator`] — [1]: one fixed `Tn×Tm` PE array processes
+//!   layers one-by-one; intermediate activations spill to DDR. Runs at
+//!   150 MHz (Table I).
+
+use super::{Allocation, Allocator, ArchKind, StageAlloc};
+use crate::board::Board;
+use crate::engine::{self, div_ceil, EngineConfig, EngineFigures};
+use crate::model::{Layer, Network};
+use crate::quant::QuantMode;
+
+/// Largest power of two `<= n` (min 1).
+fn pow2_floor(n: usize) -> usize {
+    if n == 0 {
+        1
+    } else {
+        1 << (usize::BITS - 1 - n.leading_zeros())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DNNBuilder-style constrained pipeline [3]
+// ---------------------------------------------------------------------------
+
+/// Pipeline allocator under DNNBuilder's buffer constraints.
+pub struct DnnBuilderAllocator;
+
+impl DnnBuilderAllocator {
+    /// Interface parallelisms `p[0..=n]` (p[j] = M' of compute stage j−1 =
+    /// C' of compute stage j), all powers of two, greedily doubled at the
+    /// interface that most relieves the bottleneck stage.
+    fn solve_interfaces(net: &Network, theta: usize, compute: &[usize]) -> Vec<usize> {
+        let n = compute.len();
+        let dims: Vec<(usize, usize, usize)> = compute
+            .iter()
+            .map(|&i| match &net.layers[i] {
+                Layer::Conv(c) => (c.c / c.groups, c.m, c.r * c.s),
+                Layer::Fc(f) => (f.n_in, f.n_out, 1),
+                Layer::Pool(_) => unreachable!("compute layers only"),
+            })
+            .collect();
+        // caps: p[j] ≤ pow2_floor(min(M_{j-1}, C_j))
+        let caps: Vec<usize> = (0..=n)
+            .map(|j| {
+                let up = if j == 0 { usize::MAX } else { dims[j - 1].1 };
+                let down = if j == n { usize::MAX } else { dims[j].0 };
+                pow2_floor(up.min(down))
+            })
+            .collect();
+        let mut p = vec![1usize; n + 1];
+
+        let mults = |p: &[usize]| -> usize {
+            (0..n).map(|j| p[j] * p[j + 1] * dims[j].2).sum()
+        };
+        let cycles = |p: &[usize], j: usize| -> u64 {
+            let (c, m, _) = dims[j];
+            let li = &net.layers[compute[j]];
+            let (h, w) = match li {
+                Layer::Conv(cv) => (cv.h as u64, cv.w as u64),
+                Layer::Fc(_) => (1, 1),
+                Layer::Pool(_) => unreachable!(),
+            };
+            h * w * div_ceil(c, p[j]) as u64 * div_ceil(m, p[j + 1]) as u64
+        };
+        let worst = |p: &[usize]| -> u64 { (0..n).map(|j| cycles(p, j)).max().unwrap_or(1) };
+
+        // Greedy doubling under a lexicographic (bottleneck, total) metric:
+        // with many stages tied at the maximum, no single doubling reduces
+        // the global worst, so the secondary sum objective keeps growth
+        // balanced instead of front-loading the budget on early layers.
+        let total = |p: &[usize]| -> u64 { (0..n).map(|j| cycles(p, j)).sum() };
+        loop {
+            let base = (worst(&p), total(&p));
+            let mut best: Option<(usize, (u64, u64))> = None;
+            for j in 0..=n {
+                if p[j] * 2 > caps[j] {
+                    continue;
+                }
+                let mut q = p.clone();
+                q[j] *= 2;
+                if mults(&q) > theta {
+                    continue;
+                }
+                let m = (worst(&q), total(&q));
+                if m < base && best.map_or(true, |(_, bm)| m < bm) {
+                    best = Some((j, m));
+                }
+            }
+            match best {
+                Some((j, _)) => p[j] *= 2,
+                None => break,
+            }
+        }
+        p
+    }
+}
+
+impl Allocator for DnnBuilderAllocator {
+    fn arch(&self) -> ArchKind {
+        ArchKind::DnnBuilder
+    }
+
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+        net.validate()?;
+        let theta = board.dsps * mode.mults_per_dsp();
+        let compute = net.compute_layers();
+        let p = Self::solve_interfaces(net, theta, &compute);
+
+        let mut cfgs = vec![EngineConfig::minimal(); net.layers.len()];
+        for (j, &i) in compute.iter().enumerate() {
+            cfgs[i] = EngineConfig {
+                cp: p[j],
+                mp: p[j + 1],
+                k: 1,
+            };
+        }
+        let stages = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| StageAlloc {
+                layer_idx: i,
+                cfg: *cfg,
+                figures: engine::figures(&net.layers[i], cfg, mode),
+                mac_gain: 1.0,
+            })
+            .collect();
+        let mut alloc = Allocation {
+            arch: ArchKind::DnnBuilder,
+            net: net.clone(),
+            board: board.clone(),
+            mode,
+            stages,
+            freq_hz: board.freq_hz,
+            arch_derate: 1.0,
+            groups: None,
+            extra_cycles: 0,
+            shared_array: false,
+        };
+        // DNNBuilder also pipelines rows and buffers weights; give it the
+        // same Algorithm-2 bandwidth relief so the comparison isolates the
+        // channel-parallelism constraints.
+        super::flex::FlexAllocator::default().raise_k(net, board, mode, &mut alloc);
+        Ok(alloc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fusion / Winograd pipeline [2]
+// ---------------------------------------------------------------------------
+
+/// Fusion-pipeline allocator (Winograd + sequential fused groups).
+pub struct FusionAllocator;
+
+/// Conv layers per fused group ([2] fuses a few layers at a time).
+const FUSION_GROUP: usize = 3;
+/// Winograd multiplication reduction for 3×3 stride-1 convs. F(2×2,3×3)
+/// gives 2.25× (16 multiplies per 4 outputs vs 36 MACs); F(4×4,3×3) gives
+/// 4× ("one quarter", the paper's quote for [2]'s best case) but needs
+/// bigger transform buffers. [2] mixes both ("heterogeneous algorithms"),
+/// so the effective gain sits between: 3.0 reproduces [2]'s reported
+/// 230 GOPS @ 824 DSPs/100 MHz within the fidelity this comparison needs.
+const WINOGRAD_GAIN: f64 = 3.0;
+/// [2]'s clock (Table I).
+const FUSION_FREQ: f64 = 100e6;
+
+impl Allocator for FusionAllocator {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Fusion
+    }
+
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+        net.validate()?;
+        let theta = board.dsps * mode.mults_per_dsp();
+        let compute = net.compute_layers();
+
+        // Fused groups of consecutive compute layers. The *hardware* is one
+        // set of FUSION_GROUP engines sized for the heaviest group; every
+        // other group time-multiplexes onto those fixed engines (that is
+        // the fusion architecture's core constraint — and why its average
+        // DSP efficiency trails a fully layer-wise pipeline).
+        let groups: Vec<Vec<usize>> = compute.chunks(FUSION_GROUP).map(|c| c.to_vec()).collect();
+        let eff_macs = |i: usize| net.layers[i].macs() as f64 / winograd_gain(&net.layers[i]);
+        let heavy = groups
+            .iter()
+            .max_by(|a, b| {
+                let sa: f64 = a.iter().map(|&i| eff_macs(i)).sum();
+                let sb: f64 = b.iter().map(|&i| eff_macs(i)).sum();
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .expect("at least one group")
+            .clone();
+
+        // Size the engines on the heaviest group, power-of-2 parallelisms
+        // (the Winograd transform banks require it).
+        let total_heavy: f64 = heavy.iter().map(|&i| eff_macs(i)).sum();
+        let mut engines: Vec<EngineConfig> = Vec::new();
+        for &i in &heavy {
+            let l = &net.layers[i];
+            let share = ((theta as f64) * eff_macs(i) / total_heavy.max(1.0)) as usize;
+            let (c_eff, m, rs) = match l {
+                Layer::Conv(c) => (c.c / c.groups, c.m, c.r * c.s),
+                Layer::Fc(f) => (f.n_in, f.n_out, 1),
+                Layer::Pool(_) => unreachable!(),
+            };
+            let pairs = (share / rs).max(1);
+            let cp = pow2_floor(c_eff.min(pairs));
+            let mp = pow2_floor(m.min((pairs / cp).max(1)));
+            engines.push(EngineConfig { cp, mp, k: 1 });
+        }
+
+        // Map every compute layer onto its position's engine; pools ride
+        // along (no DSPs). Hardware is counted once: stages outside the
+        // heavy group carry zero mults/dsps (they reuse the engines).
+        let mut cfgs = vec![EngineConfig::minimal(); net.layers.len()];
+        let mut gains = vec![1.0f64; net.layers.len()];
+        let mut counted = vec![false; net.layers.len()];
+        for g in &groups {
+            for (j, &i) in g.iter().enumerate() {
+                cfgs[i] = engines[j.min(engines.len() - 1)];
+                gains[i] = winograd_gain(&net.layers[i]);
+            }
+        }
+        for &i in &heavy {
+            counted[i] = true;
+        }
+
+        let stages: Vec<StageAlloc> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut figures = engine::figures(l, &cfgs[i], mode);
+                if l.uses_dsps() && !counted[i] {
+                    // shared hardware: resources already counted in the
+                    // heavy group's stages
+                    figures.mults = 0;
+                    figures.dsps = 0;
+                }
+                StageAlloc {
+                    layer_idx: i,
+                    cfg: cfgs[i],
+                    figures,
+                    mac_gain: gains[i],
+                }
+            })
+            .collect();
+
+        // Inter-group activation spills over DDR: each group boundary
+        // writes + reads the intermediate map.
+        let bpc = board.ddr_bytes_per_sec / FUSION_FREQ;
+        let mut spill_bytes = 0u64;
+        for g in groups.iter().take(groups.len().saturating_sub(1)) {
+            let &last = g.last().unwrap();
+            spill_bytes += 2 * out_bytes(&net.layers[last], mode);
+        }
+        let extra_cycles = (spill_bytes as f64 / bpc) as u64;
+
+        // Stage-index groups for sequential evaluation: attach pools to
+        // the group of the preceding compute layer.
+        let mut stage_groups: Vec<Vec<usize>> = groups.clone();
+        for (i, l) in net.layers.iter().enumerate() {
+            if !l.uses_dsps() {
+                let host = stage_groups
+                    .iter_mut()
+                    .find(|g| g.iter().any(|&j| j + 1 == i));
+                match host {
+                    Some(g) => g.push(i),
+                    None => stage_groups[0].push(i),
+                }
+            }
+        }
+
+        Ok(Allocation {
+            arch: ArchKind::Fusion,
+            net: net.clone(),
+            board: board.clone(),
+            mode,
+            stages,
+            freq_hz: FUSION_FREQ,
+            arch_derate: 1.0,
+            groups: Some(stage_groups),
+            extra_cycles,
+            shared_array: false,
+        })
+    }
+}
+
+/// Winograd applies to 3×3 stride-1 convolutions.
+fn winograd_gain(layer: &Layer) -> f64 {
+    match layer {
+        Layer::Conv(c) if c.r == 3 && c.s == 3 && c.stride == 1 && c.groups == 1 => WINOGRAD_GAIN,
+        _ => 1.0,
+    }
+}
+
+/// Output activation bytes of a stage.
+fn out_bytes(layer: &Layer, mode: QuantMode) -> u64 {
+    let elems = match layer {
+        Layer::Conv(c) => c.m * c.h * c.w,
+        Layer::Pool(p) => p.c * p.h * p.w,
+        Layer::Fc(f) => f.n_out,
+    };
+    (elems * mode.act_bytes()) as u64
+}
+
+// ---------------------------------------------------------------------------
+// Recurrent single-array design [1]
+// ---------------------------------------------------------------------------
+
+/// Recurrent allocator: one `Tn×Tm` array, layers sequential, activations
+/// spilled to DDR between layers.
+pub struct RecurrentAllocator;
+
+/// [1]'s clock (Table I).
+const RECURRENT_FREQ: f64 = 150e6;
+
+impl Allocator for RecurrentAllocator {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Recurrent
+    }
+
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+        net.validate()?;
+        let theta = board.dsps * mode.mults_per_dsp();
+        let compute = net.compute_layers();
+
+        // Search the fixed array shape (power-of-2 Tn/Tm — the mapping
+        // granularity [1]'s compiler supports) minimizing total cycles.
+        let mut best: Option<(usize, usize, u64)> = None;
+        let mut tn = 1;
+        while tn <= 512 {
+            let mut tm = 1;
+            while tm <= 512 {
+                if tn * tm <= theta {
+                    let total: u64 = compute
+                        .iter()
+                        .map(|&i| recurrent_cycles(&net.layers[i], tn, tm))
+                        .sum();
+                    if best.map_or(true, |(_, _, b)| total < b) {
+                        best = Some((tn, tm, total));
+                    }
+                }
+                tm *= 2;
+            }
+            tn *= 2;
+        }
+        let (tn, tm, _) = best.expect("array search");
+
+        let stages: Vec<StageAlloc> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let cycles = if l.uses_dsps() {
+                    recurrent_cycles(l, tn, tm)
+                } else {
+                    // pooling rides along with the producing layer's pass
+                    0
+                };
+                let mults = if l.uses_dsps() { tn * tm } else { 0 };
+                StageAlloc {
+                    layer_idx: i,
+                    cfg: EngineConfig { cp: tn, mp: tm, k: 1 },
+                    figures: EngineFigures {
+                        mults,
+                        dsps: div_ceil(mults, mode.mults_per_dsp()),
+                        t_row: cycles,
+                        groups_per_frame: 1,
+                        macs_per_group: l.macs(),
+                        weight_bytes_per_group: l.weights() * mode.act_bytes() as u64,
+                    },
+                    mac_gain: 1.0,
+                }
+            })
+            .collect();
+
+        // Every intermediate activation writes to and reads back from DDR.
+        let bpc = board.ddr_bytes_per_sec / RECURRENT_FREQ;
+        let spill: u64 = net
+            .layers
+            .iter()
+            .take(net.layers.len().saturating_sub(1))
+            .map(|l| 2 * out_bytes(l, mode))
+            .sum();
+        let extra_cycles = (spill as f64 / bpc) as u64;
+
+        let groups = Some((0..net.layers.len()).map(|i| vec![i]).collect());
+        Ok(Allocation {
+            arch: ArchKind::Recurrent,
+            net: net.clone(),
+            board: board.clone(),
+            mode,
+            stages,
+            freq_hz: RECURRENT_FREQ,
+            arch_derate: 1.0,
+            groups,
+            extra_cycles,
+            shared_array: true,
+        })
+    }
+}
+
+/// Cycles for one layer on a `Tn×Tm` array with the kernel taps processed
+/// sequentially ([1]'s loop order).
+fn recurrent_cycles(layer: &Layer, tn: usize, tm: usize) -> u64 {
+    match layer {
+        Layer::Conv(c) => {
+            let c_eff = c.c / c.groups;
+            (c.h * c.w) as u64
+                * (c.r * c.s) as u64
+                * div_ceil(c_eff, tn) as u64
+                * div_ceil(c.m, tm) as u64
+        }
+        Layer::Fc(f) => div_ceil(f.n_in, tn) as u64 * div_ceil(f.n_out, tm) as u64,
+        Layer::Pool(_) => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::flex::FlexAllocator;
+    use crate::alloc::Allocator;
+    use crate::board::zc706;
+    use crate::model::zoo;
+
+    #[test]
+    fn pow2_floor_basics() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(512), 512);
+        assert_eq!(pow2_floor(513), 512);
+    }
+
+    #[test]
+    fn dnnbuilder_respects_constraints() {
+        let net = zoo::vgg16();
+        let alloc = DnnBuilderAllocator
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap();
+        let compute = net.compute_layers();
+        // matched interfaces + powers of two
+        for w in compute.windows(2) {
+            let a = &alloc.stages[w[0]].cfg;
+            let b = &alloc.stages[w[1]].cfg;
+            assert_eq!(a.mp, b.cp, "interface must match");
+        }
+        for &i in &compute {
+            let c = &alloc.stages[i].cfg;
+            assert!(c.cp.is_power_of_two() && c.mp.is_power_of_two());
+        }
+        assert!(alloc.evaluate().dsps <= 900);
+    }
+
+    #[test]
+    fn flex_beats_dnnbuilder_on_all_paper_nets() {
+        // The paper's headline: flexibility buys 23–50% over [3].
+        for net in zoo::paper_nets() {
+            let f = FlexAllocator::default()
+                .allocate(&net, &zc706(), QuantMode::W16A16)
+                .unwrap()
+                .evaluate();
+            let d = DnnBuilderAllocator
+                .allocate(&net, &zc706(), QuantMode::W16A16)
+                .unwrap()
+                .evaluate();
+            assert!(
+                f.gops > d.gops,
+                "{}: flex {:.0} GOPS should beat dnnbuilder {:.0}",
+                net.name,
+                f.gops,
+                d.gops
+            );
+        }
+    }
+
+    #[test]
+    fn recurrent_lags_pipelines() {
+        let net = zoo::vgg16();
+        let f = FlexAllocator::default()
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        let r = RecurrentAllocator
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        assert!(
+            f.gops / r.gops > 1.8,
+            "flex {:.0} GOPS vs recurrent {:.0}: expected ≥1.8x gap (paper: 2.58x)",
+            f.gops,
+            r.gops
+        );
+    }
+
+    #[test]
+    fn fusion_marks_winograd_stages() {
+        let net = zoo::vgg16();
+        let alloc = FusionAllocator
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap();
+        // all 13 VGG convs are 3×3/s1 → Winograd
+        let wino = alloc.stages.iter().filter(|s| s.mac_gain > 1.0).count();
+        assert_eq!(wino, 13);
+        assert!((alloc.freq_hz - 100e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn recurrent_counts_shared_array_once() {
+        let net = zoo::alexnet();
+        let alloc = RecurrentAllocator
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap();
+        let r = alloc.evaluate();
+        assert!(r.dsps <= 900, "shared array must not be double counted");
+    }
+}

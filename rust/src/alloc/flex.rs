@@ -1,0 +1,513 @@
+//! The paper's allocation algorithms.
+//!
+//! **Algorithm 1 — computation resources** (Sec. 4.1): pre-allocate
+//! multipliers to layers proportionally to their MAC workload `π_i`,
+//! rounded to `R_i·S_i` blocks, then greedily feed the slowest layer;
+//! finally decompose each `θ_i` into `C'_i × M'_i`.
+//!
+//! **Algorithm 2 — BRAM and bandwidth** (Sec. 4.2): while the DDR
+//! bandwidth demanded by weight reloading exceeds the board's `β`, raise
+//! the row parallelism `K` of the heaviest-traffic layer (each increment
+//! reuses weights across one more activation row) — as long as the extra
+//! activation-buffer rows still fit the BRAM budget `α`.
+//!
+//! The flexible activation buffer (engine::linebuf) is what frees Algorithm
+//! 1 from DNNBuilder's constraints: `C'_i` needn't equal `M'_{i−1}` and
+//! nothing needs to be a power of two, so the decomposition can chase exact
+//! divisors of `C`/`M` and the greedy loop can hand out single `R·S` blocks.
+
+use super::{Allocation, Allocator, ArchKind, StageAlloc, TOP_BRAM18};
+use crate::board::Board;
+use crate::engine::{self, buffer_geometry, div_ceil, EngineConfig};
+use crate::model::{Layer, Network};
+use crate::quant::QuantMode;
+
+/// The paper's allocator ("This Work" in Table I).
+#[derive(Debug, Clone)]
+pub struct FlexAllocator {
+    /// Cap on Algorithm 2 iterations (defensive; the loop is monotone).
+    pub max_k_steps: usize,
+    /// Reserve a fraction of DSPs for the top-level interconnect? The paper
+    /// uses all 900 on VGG16/ZC706; default 0.
+    pub dsp_reserve: usize,
+    /// Algorithm 2 targets `B ≤ bw_margin·β`: DDR never sustains its peak
+    /// (refresh, bank turnaround, request interleaving), so allocating to
+    /// 100% of β produces a design the cycle simulator shows stalling.
+    pub bw_margin: f64,
+}
+
+impl Default for FlexAllocator {
+    fn default() -> Self {
+        FlexAllocator {
+            max_k_steps: 4096,
+            dsp_reserve: 0,
+            bw_margin: 0.75,
+        }
+    }
+}
+
+/// Decompose a multiplier budget into `(C', M')` for one layer.
+///
+/// Minimizes the phase count `ceil(C/C')·ceil(M/M')` subject to
+/// `C'·M'·R·S ≤ budget`; ties prefer fewer multipliers (return the spare to
+/// the pool), then larger `C'` (wider accumulation = shallower psum tree).
+pub fn decompose(c_eff: usize, m: usize, rs: usize, budget_mults: usize) -> (usize, usize) {
+    let pairs = (budget_mults / rs).max(1);
+    let mut best = (1usize, 1usize);
+    let mut best_phases = u64::MAX;
+    let mut best_mults = usize::MAX;
+    for cp in 1..=c_eff.min(pairs) {
+        let mp = (pairs / cp).min(m);
+        if mp == 0 {
+            continue;
+        }
+        // Shrink to the smallest mp with the same phase count (saves mults).
+        let phases_m = div_ceil(m, mp);
+        let mp = div_ceil(m, phases_m);
+        let phases = (div_ceil(c_eff, cp) as u64) * (phases_m as u64);
+        let mults = cp * mp * rs;
+        if phases < best_phases || (phases == best_phases && mults < best_mults) {
+            best_phases = phases;
+            best_mults = mults;
+            best = (cp, mp);
+        }
+    }
+    best
+}
+
+/// π_i for a compute layer (Alg. 1 line 1).
+fn workload(layer: &Layer) -> u64 {
+    layer.macs()
+}
+
+/// `R·S` rounding granule (Alg. 1 line 3); FCs use 1.
+fn granule(layer: &Layer) -> usize {
+    match layer {
+        Layer::Conv(c) => c.r * c.s,
+        Layer::Fc(_) => 1,
+        Layer::Pool(_) => 0,
+    }
+}
+
+/// (C_eff, M) seen by the PE array.
+fn dims(layer: &Layer) -> (usize, usize) {
+    match layer {
+        Layer::Conv(c) => (c.c / c.groups, c.m),
+        Layer::Fc(f) => (f.n_in, f.n_out),
+        Layer::Pool(_) => (0, 0),
+    }
+}
+
+impl FlexAllocator {
+    /// Algorithm 1: returns per-layer `(C', M')` using up to Θ multipliers.
+    fn algorithm1(&self, net: &Network, theta_total: usize) -> Vec<EngineConfig> {
+        let compute: Vec<usize> = net.compute_layers();
+        let pis: Vec<u64> = compute.iter().map(|&i| workload(&net.layers[i])).collect();
+        let pi_sum: u64 = pis.iter().sum();
+
+        // Lines 2–3: proportional pre-allocation rounded to R·S granules.
+        let mut theta: Vec<usize> = compute
+            .iter()
+            .zip(&pis)
+            .map(|(&i, &pi)| {
+                let l = &net.layers[i];
+                let g = granule(l);
+                let ideal = (pi as f64 * theta_total as f64 / pi_sum as f64) as usize;
+                ((ideal / g).max(1)) * g
+            })
+            .collect();
+
+        // Pre-allocation may overshoot after rounding-up: trim the most
+        // over-served layers (smallest π/θ) back one granule at a time.
+        loop {
+            let used: usize = theta.iter().sum();
+            if used <= theta_total {
+                break;
+            }
+            let j = (0..theta.len())
+                .filter(|&j| theta[j] > granule(&net.layers[compute[j]]))
+                .min_by(|&a, &b| {
+                    let ra = pis[a] as f64 / theta[a] as f64;
+                    let rb = pis[b] as f64 / theta[b] as f64;
+                    ra.partial_cmp(&rb).unwrap()
+                });
+            match j {
+                Some(j) => theta[j] -= granule(&net.layers[compute[j]]),
+                None => break,
+            }
+        }
+
+        // Lines 4–8: greedy — keep feeding the slowest layer. The paper
+        // adds one R·S granule at a time; we strengthen this to "grow the
+        // bottleneck's θ to the next value that strictly shortens it",
+        // because the decomposition only improves at divisor steps (adding
+        // 9 multipliers to a 64-channel layer at C'=1,M'=11 changes
+        // nothing until the phase count drops). Same fixpoint as the
+        // paper's loop, fewer wasted DSPs.
+        let cycles_of = |j: usize, theta_j: usize| -> u64 {
+            let l = &net.layers[compute[j]];
+            let (c_eff, m) = dims(l);
+            let (cp, mp) = decompose(c_eff, m, granule(l), theta_j);
+            let phases = div_ceil(c_eff, cp) as u64 * div_ceil(m, mp) as u64;
+            let spatial = match l {
+                Layer::Conv(c) => (c.h * c.w) as u64,
+                Layer::Fc(_) => 1,
+                Layer::Pool(_) => unreachable!(),
+            };
+            spatial * phases
+        };
+        loop {
+            let used: usize = theta.iter().sum();
+            let avail = theta_total.saturating_sub(used);
+            if avail == 0 {
+                break;
+            }
+            // Bottleneck layer under the current assignment.
+            let (b, cur) = (0..theta.len())
+                .map(|j| (j, cycles_of(j, theta[j])))
+                .max_by_key(|&(_, c)| c)
+                .unwrap();
+            let g = granule(&net.layers[compute[b]]);
+            let (c_eff, m) = dims(&net.layers[compute[b]]);
+            let cap = c_eff * m * g;
+            // Smallest affordable growth that strictly reduces the
+            // bottleneck's cycles.
+            let mut grown = None;
+            let mut t = theta[b] + g;
+            while t <= cap.min(theta[b] + avail) {
+                if cycles_of(b, t) < cur {
+                    grown = Some(t);
+                    break;
+                }
+                t += g;
+            }
+            match grown {
+                Some(t) => theta[b] = t,
+                // The bottleneck can't improve within budget: t_frame is
+                // final; spare DSPs would only dilute efficiency.
+                None => break,
+            }
+        }
+
+        // Rebalance pass: the grow loop can strand budget on non-bottleneck
+        // layers (their θ was rounded up past what their cycle target
+        // needs). Shrink every layer to the smallest θ that keeps it under
+        // the bottleneck, then re-grow the bottleneck with the freed
+        // multipliers. Two rounds reach a fixpoint in practice.
+        for _ in 0..2 {
+            let t_frame = (0..theta.len())
+                .map(|j| cycles_of(j, theta[j]))
+                .max()
+                .unwrap_or(1);
+            for j in 0..theta.len() {
+                let g = granule(&net.layers[compute[j]]);
+                while theta[j] > g && cycles_of(j, theta[j] - g) <= t_frame {
+                    theta[j] -= g;
+                }
+            }
+            // Re-grow the bottleneck with whatever was freed.
+            loop {
+                let used: usize = theta.iter().sum();
+                let avail = theta_total.saturating_sub(used);
+                if avail == 0 {
+                    break;
+                }
+                let (b, cur) = (0..theta.len())
+                    .map(|j| (j, cycles_of(j, theta[j])))
+                    .max_by_key(|&(_, c)| c)
+                    .unwrap();
+                let g = granule(&net.layers[compute[b]]);
+                let (c_eff, m) = dims(&net.layers[compute[b]]);
+                let cap = c_eff * m * g;
+                let mut grown = None;
+                let mut t = theta[b] + g;
+                while t <= cap.min(theta[b] + avail) {
+                    if cycles_of(b, t) < cur {
+                        grown = Some(t);
+                        break;
+                    }
+                    t += g;
+                }
+                match grown {
+                    Some(t) => theta[b] = t,
+                    None => break,
+                }
+            }
+        }
+
+        // Line 9: decompose θ_i into C'_i × M'_i.
+        let mut cfgs = vec![EngineConfig::minimal(); net.layers.len()];
+        for (j, &i) in compute.iter().enumerate() {
+            let l = &net.layers[i];
+            let (c_eff, m) = dims(l);
+            let (cp, mp) = decompose(c_eff, m, granule(l), theta[j]);
+            cfgs[i] = EngineConfig { cp, mp, k: 1 };
+        }
+        cfgs
+    }
+
+    /// Algorithm 2: raise `K` of the heaviest weight-traffic layer until
+    /// the bandwidth fits (or BRAM runs out). Public so the DNNBuilder
+    /// baseline gets the same bandwidth relief (isolating the channel
+    /// constraints as the only difference).
+    pub fn raise_k(&self, net: &Network, board: &Board, mode: QuantMode, alloc: &mut Allocation) {
+        let beta = board.ddr_bytes_per_sec * self.bw_margin;
+        let alpha = board.bram18();
+        for _ in 0..self.max_k_steps {
+            let report = alloc.evaluate();
+            // Compare the *demand* (at compute rate) against the budget —
+            // the achieved-rate traffic is throttled to fit by definition.
+            if report.ddr_demand_bytes_per_sec <= beta {
+                break;
+            }
+            // Line 7: among conv layers (FC traffic is batch-amortized and
+            // K-independent; pools carry no weights), try the highest-ω
+            // layer first — but only K *jumps that reduce the group count*
+            // (intermediate K adds ragged-tail cycles without saving a
+            // fetch). A jump may stretch the bottleneck slightly; accept
+            // it when the *overall* fps (compute rate capped by the DDR
+            // ceiling) improves — the trade Sec. 4.2 describes.
+            let cur_fps = report.fps;
+            let mut cands: Vec<(usize, usize, u64)> = alloc
+                .stages
+                .iter()
+                .enumerate()
+                .filter_map(|(idx, s)| {
+                    let Layer::Conv(ref c) = net.layers[s.layer_idx] else {
+                        return None;
+                    };
+                    let groups = c.h.div_ceil(s.cfg.k);
+                    if groups <= 1 {
+                        return None;
+                    }
+                    let new_k = c.h.div_ceil(groups - 1);
+                    Some((idx, new_k, s.figures.weight_bytes_per_frame()))
+                })
+                .collect();
+            cands.sort_by_key(|&(_, _, omega)| std::cmp::Reverse(omega));
+            let mut accepted = false;
+            for (idx, new_k, _) in cands {
+                let mut trial = alloc.clone();
+                trial.stages[idx].cfg.k = new_k;
+                refresh_figures(net, mode, &mut trial);
+                if bram_total(net, mode, &trial) > alpha {
+                    continue;
+                }
+                if trial.evaluate().fps > cur_fps * (1.0 + 1e-9) {
+                    *alloc = trial;
+                    accepted = true;
+                    break;
+                }
+            }
+            if !accepted {
+                break;
+            }
+        }
+    }
+}
+
+/// Recompute every stage's figures after a config change.
+pub fn refresh_figures(net: &Network, mode: QuantMode, alloc: &mut Allocation) {
+    for s in alloc.stages.iter_mut() {
+        s.figures = engine::figures(&net.layers[s.layer_idx], &s.cfg, mode);
+    }
+}
+
+/// Total BRAM18 of an allocation (per-stage buffers + top).
+pub fn bram_total(net: &Network, mode: QuantMode, alloc: &Allocation) -> usize {
+    let mut total = TOP_BRAM18;
+    for (i, s) in alloc.stages.iter().enumerate() {
+        let (pk, pm) = alloc.producer(i);
+        let geo = buffer_geometry(&net.layers[s.layer_idx], &s.cfg, pk, pm);
+        total += engine::bram18_cost(&net.layers[s.layer_idx], &s.cfg, &geo, mode);
+    }
+    total
+}
+
+impl Allocator for FlexAllocator {
+    fn arch(&self) -> ArchKind {
+        ArchKind::FlexPipeline
+    }
+
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+        net.validate()?;
+        anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
+        // Multiplier budget, packing-aware: at 8-bit each DSP packs two
+        // multiplies, but a DSP cannot be shared across engines — a stage
+        // with an odd multiplier count strands half a slice. Reserving
+        // (mults_per_dsp − 1) per compute stage guarantees
+        // Σ ceil(mults_i / pack) ≤ DSPs for any split Algorithm 1 picks.
+        let pack = mode.mults_per_dsp();
+        let slack = (pack - 1) * net.compute_layers().len();
+        let theta_total = ((board.dsps - self.dsp_reserve) * pack).saturating_sub(slack);
+        let cfgs = self.algorithm1(net, theta_total);
+
+        let stages = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| StageAlloc {
+                layer_idx: i,
+                cfg: *cfg,
+                figures: engine::figures(&net.layers[i], cfg, mode),
+                mac_gain: 1.0,
+            })
+            .collect();
+
+        let mut alloc = Allocation {
+            arch: ArchKind::FlexPipeline,
+            net: net.clone(),
+            board: board.clone(),
+            mode,
+            stages,
+            freq_hz: board.freq_hz,
+            arch_derate: 1.0,
+            groups: None,
+            extra_cycles: 0,
+            shared_array: false,
+        };
+        self.raise_k(net, board, mode, &mut alloc);
+        Ok(alloc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zc706;
+    use crate::model::zoo;
+
+    #[test]
+    fn decompose_prefers_exact_divisors() {
+        // 128 channels, budget 64 pairs: (8,8) gives 16·16 = 256 phases;
+        // any non-divisor wastes slots.
+        let (cp, mp) = decompose(128, 128, 9, 64 * 9);
+        assert_eq!(128 % cp, 0);
+        assert_eq!(128 % mp, 0);
+        assert_eq!(cp * mp, 64);
+    }
+
+    #[test]
+    fn decompose_respects_layer_dims() {
+        let (cp, mp) = decompose(3, 64, 9, 10_000 * 9);
+        assert!(cp <= 3 && mp <= 64);
+    }
+
+    #[test]
+    fn algorithm1_stays_within_budget() {
+        let net = zoo::vgg16();
+        let board = zc706();
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let r = alloc.evaluate();
+        assert!(r.dsps <= board.dsps, "{} > {}", r.dsps, board.dsps);
+        // Paper Table I: 900/900 DSPs for VGG16 — we should be close.
+        assert!(
+            r.dsps as f64 >= 0.9 * board.dsps as f64,
+            "only {} of {} DSPs used",
+            r.dsps,
+            board.dsps
+        );
+    }
+
+    #[test]
+    fn vgg16_efficiency_matches_paper_band() {
+        // Table I: DSP efficiency 98.0% for VGG16, >90% for all four.
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::vgg16(), &zc706(), QuantMode::W16A16)
+            .unwrap();
+        let r = alloc.evaluate();
+        assert!(
+            r.dsp_efficiency > 0.90,
+            "DSP efficiency {:.3} below the paper's band",
+            r.dsp_efficiency
+        );
+    }
+
+    #[test]
+    fn more_dsps_never_slower() {
+        let net = zoo::alexnet();
+        let mut small = zc706();
+        small.dsps = 300;
+        let a_small = FlexAllocator::default()
+            .allocate(&net, &small, QuantMode::W16A16)
+            .unwrap();
+        let a_big = FlexAllocator::default()
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap();
+        assert!(a_big.evaluate().fps >= a_small.evaluate().fps);
+    }
+
+    #[test]
+    fn algorithm2_reduces_bandwidth_within_bram() {
+        // On a bandwidth-starved board, Algorithm 2 must trade BRAM for
+        // weight reuse by raising K somewhere.
+        let net = zoo::vgg16();
+        let mut board = zc706();
+        board.ddr_bytes_per_sec = 4.0e9;
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let bram = bram_total(&net, QuantMode::W16A16, &alloc);
+        assert!(bram <= board.bram18(), "BRAM {bram} > {}", board.bram18());
+        assert!(alloc.stages.iter().any(|s| s.cfg.k > 1));
+        // And the relief must actually reduce traffic vs the K=1 baseline.
+        let k1 = FlexAllocator { max_k_steps: 0, ..Default::default() }
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        assert!(
+            alloc.evaluate().ddr_bytes_per_sec < k1.evaluate().ddr_bytes_per_sec
+        );
+    }
+
+    #[test]
+    fn eight_bit_doubles_multiplier_pool() {
+        let net = zoo::zf();
+        let board = zc706();
+        let a16 = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let a8 = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W8A8)
+            .unwrap();
+        let (r16, r8) = (a16.evaluate(), a8.evaluate());
+        assert!(
+            r8.gops > 1.6 * r16.gops,
+            "8-bit {} GOPS should be near 2x 16-bit {}",
+            r8.gops,
+            r16.gops
+        );
+    }
+}
+
+#[cfg(test)]
+mod bw_tests {
+    use super::*;
+    use crate::alloc::Allocator;
+    use crate::board::zc706;
+    use crate::model::zoo;
+
+    #[test]
+    fn bandwidth_starved_board_throttles_fps() {
+        // When BRAM can't buy enough weight reuse, fps must fall to the
+        // DDR-sustainable rate instead of pretending to hit the compute
+        // rate (paper Sec. 4.2's whole point).
+        let net = zoo::vgg16();
+        let rich = FlexAllocator::default()
+            .allocate(&net, &zc706(), QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        let mut starved_board = zc706();
+        starved_board.ddr_bytes_per_sec = 1.5e9;
+        let starved = FlexAllocator::default()
+            .allocate(&net, &starved_board, QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        assert!(
+            starved.fps < rich.fps * 0.7,
+            "starved {} vs rich {}",
+            starved.fps,
+            rich.fps
+        );
+    }
+}

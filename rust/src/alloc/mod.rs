@@ -1,0 +1,331 @@
+//! Resource allocation: the paper's Sec. 4 framework.
+//!
+//! [`flex`] implements the paper's Algorithm 1 (computation resources) and
+//! Algorithm 2 (BRAM vs DDR bandwidth). [`baselines`] implements the three
+//! comparison architectures of Table I: the DNNBuilder-style constrained
+//! pipeline [3], the fusion/Winograd pipeline [2], and the recurrent
+//! single-array design [1].
+//!
+//! An [`Allocation`] is the common artifact all of them produce; its
+//! closed-form [`Allocation::evaluate`] applies Eq. 2–4 (the simulator in
+//! [`crate::sim`] then confirms those numbers stall-accurately).
+
+pub mod baselines;
+pub mod flex;
+
+use crate::board::Board;
+use crate::engine::{self, buffer_geometry, cost, EngineConfig, EngineFigures};
+use crate::model::{Layer, Network};
+use crate::quant::QuantMode;
+
+/// Which architecture produced an allocation (controls simulation style
+/// and the Table I row it maps to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchKind {
+    /// This work: flexible layer-wise pipeline.
+    FlexPipeline,
+    /// DNNBuilder-style pipeline [3]: power-of-2, matched interfaces.
+    DnnBuilder,
+    /// Fusion pipeline with Winograd convs [2].
+    Fusion,
+    /// Recurrent single PE array [1].
+    Recurrent,
+}
+
+impl ArchKind {
+    /// CLI/report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArchKind::FlexPipeline => "flex",
+            ArchKind::DnnBuilder => "dnnbuilder",
+            ArchKind::Fusion => "fusion",
+            ArchKind::Recurrent => "recurrent",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "flex" | "this-work" => Ok(ArchKind::FlexPipeline),
+            "dnnbuilder" | "dnnb" => Ok(ArchKind::DnnBuilder),
+            "fusion" | "winograd" => Ok(ArchKind::Fusion),
+            "recurrent" => Ok(ArchKind::Recurrent),
+            other => anyhow::bail!("unknown arch '{other}' (flex dnnbuilder fusion recurrent)"),
+        }
+    }
+}
+
+/// One pipeline stage's chosen parameters + derived figures.
+#[derive(Debug, Clone)]
+pub struct StageAlloc {
+    /// Index into `net.layers`.
+    pub layer_idx: usize,
+    /// Chosen `(C', M', K)`.
+    pub cfg: EngineConfig,
+    /// Derived static figures.
+    pub figures: EngineFigures,
+    /// Effective MAC gain for this stage (1 normally; 4 for Winograd
+    /// stages in the fusion baseline — Sec. 5.2 "reduce number of
+    /// multiplications into one quarter").
+    pub mac_gain: f64,
+}
+
+/// A complete allocation for one network on one board.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub arch: ArchKind,
+    pub net: Network,
+    pub board: Board,
+    pub mode: QuantMode,
+    /// One entry per layer of `net`.
+    pub stages: Vec<StageAlloc>,
+    /// Clock the architecture runs at (fusion baseline runs at 100 MHz).
+    pub freq_hz: f64,
+    /// Architecture-level efficiency derate applied on top of the pipeline
+    /// model (1.0 for pipelines; <1 models the recurrent/fusion overheads
+    /// that are not captured by stage figures — documented per baseline).
+    pub arch_derate: f64,
+    /// `None` = all stages pipeline concurrently (this work, DNNBuilder).
+    /// `Some(groups)` = the groups execute *sequentially*, stages inside a
+    /// group pipeline (fusion baseline: fused layer groups; recurrent
+    /// baseline: every layer its own group).
+    pub groups: Option<Vec<Vec<usize>>>,
+    /// Cycles per frame not attributable to stage compute: inter-group DDR
+    /// activation transfers, array reconfiguration (baselines only).
+    pub extra_cycles: u64,
+    /// The recurrent baseline shares one PE array across all layers —
+    /// resources are counted once, not summed per stage.
+    pub shared_array: bool,
+}
+
+/// Closed-form performance/resource summary (Eq. 2–4 + cost models).
+#[derive(Debug, Clone)]
+pub struct AllocReport {
+    /// Pipeline beat: slowest stage's cycles per frame.
+    pub t_frame_cycles: u64,
+    /// Index of the bottleneck stage.
+    pub bottleneck: usize,
+    /// Frames per second at `freq_hz`.
+    pub fps: f64,
+    /// Conventional GOPS (2 ops/MAC, paper's metric).
+    pub gops: f64,
+    /// Multipliers instantiated.
+    pub mults: usize,
+    /// DSP slices used.
+    pub dsps: usize,
+    /// Achieved / peak of used DSPs (paper's "DSP Efficiency").
+    pub dsp_efficiency: f64,
+    /// BRAM18 blocks used.
+    pub bram18: usize,
+    /// LUTs used.
+    pub luts: usize,
+    /// FFs used.
+    pub ffs: usize,
+    /// DDR bytes/second moved at the achieved (possibly throttled) rate.
+    pub ddr_bytes_per_sec: f64,
+    /// DDR bytes/second the *compute* rate would demand (Algorithm 2's B:
+    /// un-throttled — when this exceeds the board's β the design is
+    /// bandwidth-bound and fps is capped).
+    pub ddr_demand_bytes_per_sec: f64,
+    /// Per-stage cycles/frame (for balance plots).
+    pub stage_cycles: Vec<u64>,
+}
+
+/// BRAM18 blocks for the pipeline top (actIn/actOut packers, weight
+/// streamer FIFOs) — fixed overhead beside per-stage buffers.
+pub const TOP_BRAM18: usize = 24;
+
+impl Allocation {
+    /// Per-stage cycles/frame, with the fusion baseline's Winograd gain
+    /// folded in (a Winograd stage finishes its rows `mac_gain`× faster).
+    pub fn stage_cycles(&self) -> Vec<u64> {
+        self.stages
+            .iter()
+            .map(|s| ((s.figures.cycles_per_frame() as f64) / s.mac_gain).ceil() as u64)
+            .collect()
+    }
+
+    /// Closed-form evaluation: Eq. 3/4 plus the engine cost models.
+    pub fn evaluate(&self) -> AllocReport {
+        let stage_cycles = self.stage_cycles();
+        let (bottleneck, _) = stage_cycles
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .expect("allocation has stages");
+        // Pipeline: beat = slowest stage. Sequential groups: the groups run
+        // one after another, stages inside each group pipeline.
+        let t_frame = match &self.groups {
+            None => stage_cycles.iter().copied().max().unwrap_or(1),
+            Some(groups) => groups
+                .iter()
+                .map(|g| g.iter().map(|&i| stage_cycles[i]).max().unwrap_or(0))
+                .sum(),
+        }
+        .saturating_add(self.extra_cycles)
+        .max(1);
+        let fps_compute = self.freq_hz / t_frame as f64 * self.arch_derate;
+        // DDR ceiling: when Algorithm 2 runs out of BRAM before reaching
+        // the bandwidth budget, the pipeline throttles to what the port
+        // sustains (weights + frame I/O per frame).
+        let bytes_per_frame: f64 = self
+            .stages
+            .iter()
+            .map(|s| s.figures.weight_bytes_per_frame() as f64)
+            .sum::<f64>()
+            + (self.net.input.0 * self.net.input.1 * self.net.input.2) as f64
+                * self.mode.act_bytes() as f64;
+        let fps_bw = self.board.ddr_bytes_per_sec / bytes_per_frame.max(1.0);
+        let fps = fps_compute.min(fps_bw);
+        let macs = self.net.macs();
+        let gops = 2.0 * macs as f64 * fps / 1e9;
+
+        let (mults, dsps): (usize, usize) = if self.shared_array {
+            (
+                self.stages.iter().map(|s| s.figures.mults).max().unwrap_or(0),
+                self.stages.iter().map(|s| s.figures.dsps).max().unwrap_or(0),
+            )
+        } else {
+            (
+                self.stages.iter().map(|s| s.figures.mults).sum(),
+                self.stages.iter().map(|s| s.figures.dsps).sum(),
+            )
+        };
+        // Peak of the *used* DSPs at this mode's packing; Winograd stages
+        // count their effective (conventional-equivalent) MACs.
+        let peak_macs_per_cycle: f64 = if self.shared_array {
+            mults as f64
+        } else {
+            self.stages
+                .iter()
+                .map(|s| s.figures.mults as f64 * s.mac_gain)
+                .sum()
+        };
+        let dsp_efficiency = if peak_macs_per_cycle > 0.0 {
+            (macs as f64 * fps) / (peak_macs_per_cycle * self.freq_hz)
+        } else {
+            0.0
+        };
+
+        let mut bram = TOP_BRAM18;
+        let mut logic = vec![];
+        if self.shared_array {
+            // One physical engine reused by every layer: cost it once at
+            // its worst-case geometry, plus the tile double-buffers the
+            // recurrent dataflow needs for off-chip activation staging.
+            let (worst, s) = self
+                .stages
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, s)| s.figures.mults)
+                .expect("stages");
+            let layer = &self.net.layers[s.layer_idx];
+            let geo = buffer_geometry(layer, &s.cfg, 1, 1);
+            bram += engine::bram18_cost(layer, &s.cfg, &geo, self.mode);
+            bram += 200; // input/output tile double-buffers ([1]'s design)
+            logic.push(cost::stage_logic(
+                layer,
+                &s.cfg,
+                s.figures.mults,
+                &geo,
+                self.mode,
+            ));
+            let _ = worst;
+        } else {
+            for (i, s) in self.stages.iter().enumerate() {
+                let layer = &self.net.layers[s.layer_idx];
+                let (pk, pm) = self.producer(i);
+                let geo = buffer_geometry(layer, &s.cfg, pk, pm);
+                bram += engine::bram18_cost(layer, &s.cfg, &geo, self.mode);
+                logic.push(cost::stage_logic(
+                    layer,
+                    &s.cfg,
+                    s.figures.mults,
+                    &geo,
+                    self.mode,
+                ));
+            }
+        }
+        let total_logic = cost::total_logic(logic);
+
+        // DDR traffic: weights per frame + input frames in + outputs back.
+        let weight_bytes: u64 = self
+            .stages
+            .iter()
+            .map(|s| s.figures.weight_bytes_per_frame())
+            .sum();
+        let (c0, h0, w0) = self.net.input;
+        let in_bytes = (c0 * h0 * w0 * self.mode.act_bytes()) as u64;
+        let out_bytes = 4 * 1024; // final activations: negligible, bounded
+        let ddr = (weight_bytes + in_bytes + out_bytes) as f64 * fps;
+        let ddr_demand = (weight_bytes + in_bytes + out_bytes) as f64 * fps_compute;
+
+        AllocReport {
+            t_frame_cycles: t_frame,
+            bottleneck,
+            fps,
+            gops,
+            mults,
+            dsps,
+            dsp_efficiency,
+            bram18: bram,
+            luts: total_logic.luts,
+            ffs: total_logic.ffs,
+            ddr_bytes_per_sec: ddr,
+            ddr_demand_bytes_per_sec: ddr_demand,
+            stage_cycles,
+        }
+    }
+
+    /// Producer `(K, M')` seen by stage `i` (the DDR unpacker writes one
+    /// row at a time at the line rate for stage 0).
+    pub fn producer(&self, i: usize) -> (usize, usize) {
+        if i == 0 {
+            (1, 1)
+        } else {
+            let p = &self.stages[i - 1];
+            let pm = match &self.net.layers[p.layer_idx] {
+                Layer::Conv(_) | Layer::Fc(_) => p.cfg.mp,
+                // Pools pass through the upstream write parallelism.
+                Layer::Pool(_) => p.cfg.mp.max(1),
+            };
+            (p.cfg.k, pm)
+        }
+    }
+
+    /// Does the allocation fit the board? Returns the violated resource.
+    pub fn check_fit(&self) -> Result<(), String> {
+        let r = self.evaluate();
+        if r.dsps > self.board.dsps {
+            return Err(format!("DSPs: {} > {}", r.dsps, self.board.dsps));
+        }
+        if r.bram18 > self.board.bram18() {
+            return Err(format!("BRAM18: {} > {}", r.bram18, self.board.bram18()));
+        }
+        if r.luts > self.board.luts {
+            return Err(format!("LUTs: {} > {}", r.luts, self.board.luts));
+        }
+        if r.ffs > self.board.ffs {
+            return Err(format!("FFs: {} > {}", r.ffs, self.board.ffs));
+        }
+        Ok(())
+    }
+}
+
+/// Common interface over the four architectures.
+pub trait Allocator {
+    /// Which Table I row this produces.
+    fn arch(&self) -> ArchKind;
+    /// Produce an allocation for `net` on `board` in `mode`.
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation>;
+}
+
+/// Allocator instance for an [`ArchKind`].
+pub fn allocator_for(arch: ArchKind) -> Box<dyn Allocator> {
+    match arch {
+        ArchKind::FlexPipeline => Box::new(flex::FlexAllocator::default()),
+        ArchKind::DnnBuilder => Box::new(baselines::DnnBuilderAllocator),
+        ArchKind::Fusion => Box::new(baselines::FusionAllocator),
+        ArchKind::Recurrent => Box::new(baselines::RecurrentAllocator),
+    }
+}

@@ -1,0 +1,129 @@
+//! FPGA board resource models.
+//!
+//! The allocator consumes a [`Board`] exactly the way the paper's framework
+//! consumes "available hardware resources on FPGA" (Sec. 4): total DSP
+//! slices Θ-source, BRAM budget α, and DDR bandwidth β, plus LUT/FF caps
+//! used by the engine cost model for feasibility checks.
+
+
+/// An FPGA board: the paper's (Θ, α, β) plus logic resources.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Board {
+    /// Board name (`zc706`, …).
+    pub name: String,
+    /// DSP48 slices (paper Θ-source; ZC706: 900).
+    pub dsps: usize,
+    /// LUTs (ZC706: 218 600).
+    pub luts: usize,
+    /// Flip-flops (ZC706: 437 200).
+    pub ffs: usize,
+    /// BRAM36 blocks (paper α; ZC706: 545).
+    pub bram36: usize,
+    /// Peak DDR bandwidth in bytes/second (paper β; ZC706 DDR3-1066 x64).
+    pub ddr_bytes_per_sec: f64,
+    /// Accelerator clock in Hz (paper f; Table I: 200 MHz).
+    pub freq_hz: f64,
+}
+
+impl Board {
+    /// DDR bytes available per accelerator cycle (β in the simulator's units).
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr_bytes_per_sec / self.freq_hz
+    }
+
+    /// BRAM18 half-blocks (the engine cost model sizes in 18 Kb units).
+    pub fn bram18(&self) -> usize {
+        self.bram36 * 2
+    }
+}
+
+/// Xilinx ZC706 (Zynq XC7Z045) — the paper's evaluation board.
+pub fn zc706() -> Board {
+    Board {
+        name: "zc706".into(),
+        dsps: 900,
+        luts: 218_600,
+        ffs: 437_200,
+        bram36: 545,
+        // PL-side DDR3-1600 64-bit SODIMM: 8 B x 1600 MT/s = 12.8 GB/s peak
+        // (the PS DDR is separate; the accelerator owns the PL SODIMM).
+        ddr_bytes_per_sec: 12.8e9,
+        freq_hz: 200e6,
+    }
+}
+
+/// Xilinx ZCU102 (Zynq UltraScale+ XCZU9EG) — larger design-space point.
+pub fn zcu102() -> Board {
+    Board {
+        name: "zcu102".into(),
+        dsps: 2520,
+        luts: 274_080,
+        ffs: 548_160,
+        bram36: 912,
+        ddr_bytes_per_sec: 19.2e9,
+        freq_hz: 300e6,
+    }
+}
+
+/// Xilinx VC707 (Virtex-7 XC7VX485T).
+pub fn vc707() -> Board {
+    Board {
+        name: "vc707".into(),
+        dsps: 2800,
+        luts: 303_600,
+        ffs: 607_200,
+        bram36: 1030,
+        ddr_bytes_per_sec: 12.8e9,
+        freq_hz: 200e6,
+    }
+}
+
+/// Small Zynq (ZedBoard, XC7Z020) — resource-starved point for sweeps.
+pub fn zedboard() -> Board {
+    Board {
+        name: "zedboard".into(),
+        dsps: 220,
+        luts: 53_200,
+        ffs: 106_400,
+        bram36: 140,
+        ddr_bytes_per_sec: 4.2e9,
+        freq_hz: 150e6,
+    }
+}
+
+/// Look a board up by name.
+pub fn by_name(name: &str) -> crate::Result<Board> {
+    match name {
+        "zc706" => Ok(zc706()),
+        "zcu102" => Ok(zcu102()),
+        "vc707" => Ok(vc707()),
+        "zedboard" => Ok(zedboard()),
+        other => anyhow::bail!("unknown board '{other}' (zc706 zcu102 vc707 zedboard)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zc706_matches_table1_denominators() {
+        // Table I prints utilization against these exact totals.
+        let b = zc706();
+        assert_eq!(b.dsps, 900);
+        assert_eq!(b.luts, 218_600);
+        assert_eq!(b.ffs, 437_200);
+        assert_eq!(b.bram36, 545);
+    }
+
+    #[test]
+    fn bytes_per_cycle_consistent() {
+        let b = zc706();
+        assert!((b.ddr_bytes_per_cycle() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("de10").is_err());
+    }
+}

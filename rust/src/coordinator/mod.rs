@@ -1,0 +1,324 @@
+//! Frame-serving coordinator: the Fig. 4 demo system (host ↔ accelerator)
+//! as a multithreaded server.
+//!
+//! The paper's host PC streams input frames over PCIe into DDR, kicks the
+//! accelerator, and drains output activations ("sends more input frames
+//! continuously", Sec. 5.1). Here the accelerator is the PJRT-compiled
+//! artifact; the coordinator owns:
+//!
+//! - an ingest queue ([`Coordinator::submit`] is the host-side API),
+//! - a **dynamic batcher**: artifacts are compiled at several batch sizes
+//!   (`tinycnn_b1/b4/b8`); the worker picks the largest compiled batch
+//!   ≤ the queue depth, padding only when a timeout forces a partial batch,
+//! - the execute worker (one thread — PJRT CPU executions are already
+//!   internally parallel),
+//! - latency/throughput metrics ([`ServeStats`]).
+//!
+//! No tokio in the offline vendor set: std threads + channels. The queue
+//! and stats are the same shape a tokio implementation would have.
+
+use crate::runtime::{Manifest, Runtime};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max time the batcher waits to fill a larger batch before running a
+    /// padded partial one.
+    pub max_wait: Duration,
+    /// Simulated host-link (PCIe) latency added per request (the demo
+    /// system's transfer cost; 0 disables).
+    pub link_latency: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_wait: Duration::from_millis(2),
+            link_latency: Duration::ZERO,
+        }
+    }
+}
+
+/// One in-flight request.
+struct Request {
+    frame: Vec<i8>,
+    enqueued: Instant,
+    resp: Sender<crate::Result<Vec<i8>>>,
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Histogram source: per-request latencies (µs).
+    pub latencies_us: Vec<u64>,
+    /// Frames executed per batch size (batch → count).
+    pub batch_sizes: Vec<(usize, u64)>,
+    /// Padded (wasted) frame slots.
+    pub padded_frames: u64,
+}
+
+impl ServeStats {
+    fn record_batch(&mut self, batch: usize, used: usize) {
+        self.batches += 1;
+        self.padded_frames += (batch - used) as u64;
+        match self.batch_sizes.iter_mut().find(|(b, _)| *b == batch) {
+            Some((_, c)) => *c += used as u64,
+            None => self.batch_sizes.push((batch, used as u64)),
+        }
+    }
+
+    /// Latency percentile in µs (p in [0,100]).
+    pub fn latency_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * p / 100.0).floor() as usize;
+        v[idx]
+    }
+}
+
+/// The frame server.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+    frame_elems: usize,
+    running: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start serving `net` at `bits` from an artifact directory.
+    ///
+    /// The PJRT client is `!Send` (Rc internals in the xla crate), so the
+    /// worker thread constructs and exclusively owns the [`Runtime`]; the
+    /// caller-side handle only touches channels. Startup errors inside the
+    /// worker (bad artifacts) surface through a ready-handshake.
+    pub fn start(
+        artifact_dir: impl Into<PathBuf>,
+        net: &str,
+        bits: usize,
+        policy: BatchPolicy,
+    ) -> crate::Result<Coordinator> {
+        let dir = artifact_dir.into();
+        // Validate the manifest host-side first (cheap, better errors).
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let variants: Vec<(String, usize)> = manifest
+            .variants(net, bits)
+            .iter()
+            .map(|a| (a.name.clone(), a.batch))
+            .collect();
+        anyhow::ensure!(
+            !variants.is_empty(),
+            "no artifacts for net '{net}' at {bits}-bit — run `make artifacts`"
+        );
+        let frame_elems = manifest.get(&variants[0].0)?.golden.frame_elems;
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let running = Arc::new(AtomicBool::new(true));
+        let worker = {
+            let stats = stats.clone();
+            let running = running.clone();
+            std::thread::spawn(move || {
+                // Build + warm the runtime inside the worker.
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for (name, _) in &variants {
+                    let elems = rt.manifest().get(name).map(|a| a.input_elems());
+                    let warm = elems.and_then(|n| rt.execute_i8(name, &vec![0i8; n]));
+                    if let Err(e) = warm {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(rt, variants, frame_elems, policy, rx, stats, running)
+            })
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker died during startup"))??;
+        Ok(Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            stats,
+            frame_elems,
+            running,
+        })
+    }
+
+    /// Submit one frame; returns a receiver for the result.
+    pub fn submit(&self, frame: Vec<i8>) -> crate::Result<Receiver<crate::Result<Vec<i8>>>> {
+        anyhow::ensure!(
+            frame.len() == self.frame_elems,
+            "frame must have {} elements, got {}",
+            self.frame_elems,
+            frame.len()
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Request {
+                frame,
+                enqueued: Instant::now(),
+                resp: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, frame: Vec<i8>) -> crate::Result<Vec<i8>> {
+        self.submit(frame)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+    }
+
+    /// Snapshot the stats.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Stop the worker and return final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.running.store(false, Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let s = self.stats.lock().unwrap().clone();
+        s
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.running.store(false, Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rt: Runtime,
+    variants: Vec<(String, usize)>, // sorted by batch ascending
+    frame_elems: usize,
+    policy: BatchPolicy,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<ServeStats>>,
+    running: Arc<AtomicBool>,
+) {
+    let max_batch = variants.last().map(|v| v.1).unwrap_or(1);
+    let mut queue: Vec<Request> = Vec::new();
+    'serve: loop {
+        // Fill the queue up to max_batch or until max_wait expires.
+        let deadline = Instant::now() + policy.max_wait;
+        while queue.len() < max_batch {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(r) => queue.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if queue.is_empty() {
+                        break 'serve;
+                    }
+                    break;
+                }
+            }
+        }
+        if queue.is_empty() {
+            if !running.load(Ordering::SeqCst) {
+                break;
+            }
+            continue;
+        }
+
+        // Dynamic batching: largest compiled batch ≤ queue depth; if even
+        // the smallest is larger than the queue, pad the smallest.
+        let (name, batch) = variants
+            .iter()
+            .rev()
+            .find(|(_, b)| *b <= queue.len())
+            .unwrap_or(&variants[0])
+            .clone();
+        let used = batch.min(queue.len());
+        let take: Vec<Request> = queue.drain(..used).collect();
+
+        // Assemble (and pad) the input buffer.
+        let mut input = vec![0i8; batch * frame_elems];
+        for (i, r) in take.iter().enumerate() {
+            input[i * frame_elems..(i + 1) * frame_elems].copy_from_slice(&r.frame);
+        }
+        if !policy.link_latency.is_zero() {
+            std::thread::sleep(policy.link_latency); // PCIe transfer model
+        }
+        let result = rt.execute_i8(&name, &input);
+
+        let now = Instant::now();
+        match result {
+            Ok(out) => {
+                let out_elems = out.len() / batch;
+                let mut st = stats.lock().unwrap();
+                st.record_batch(batch, used);
+                for (i, r) in take.into_iter().enumerate() {
+                    st.requests += 1;
+                    st.latencies_us
+                        .push(now.duration_since(r.enqueued).as_micros() as u64);
+                    let _ = r
+                        .resp
+                        .send(Ok(out[i * out_elems..(i + 1) * out_elems].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in take {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = ServeStats::default();
+        s.latencies_us = vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(s.latency_us(0.0), 10);
+        assert_eq!(s.latency_us(50.0), 50);
+        assert_eq!(s.latency_us(100.0), 100);
+        assert_eq!(ServeStats::default().latency_us(50.0), 0);
+    }
+
+    #[test]
+    fn record_batch_tracks_padding() {
+        let mut s = ServeStats::default();
+        s.record_batch(8, 5);
+        s.record_batch(8, 8);
+        assert_eq!(s.padded_frames, 3);
+        assert_eq!(s.batch_sizes, vec![(8, 13)]);
+    }
+}

@@ -1,0 +1,349 @@
+//! Convolution layer engine micro-model (paper Sec. 3.3, Fig. 3).
+//!
+//! One engine = PE array (`M'×C'×R×S` multipliers) + weight buffer +
+//! activation line buffer + psum scratchpad + controller. This module
+//! models everything the allocator and simulator need:
+//!
+//! - cycle counts (`T_row`, Eq. 2 — generalized to non-divisor `C'`,`M'`
+//!   with ceilings: that waste is exactly the intra-group inefficiency the
+//!   flexible allocator minimizes),
+//! - multiplier/DSP counts under the 8/16-bit packing rule,
+//! - buffer geometry and BRAM cost (the flexible activation buffer is the
+//!   paper's enabling trick: `R + G(K−1) + K_prev` rowBuffers of
+//!   `max(C'_i, M'_{i−1})` channelBuffers),
+//! - LUT/FF cost ([`cost`]),
+//! - a functional line-buffer/address-generator model ([`linebuf`]).
+
+pub mod cost;
+pub mod linebuf;
+
+use crate::model::{ConvShape, FcShape, Layer};
+use crate::quant::QuantMode;
+
+/// Frames per FC weight load. FC layers have zero intra-frame weight reuse
+/// (each weight touches one MAC), so at batch 1 they would dominate DDR
+/// traffic (VGG16: 247 MB/frame). The demo system streams several frames at
+/// once (paper Sec. 5.1: the host "sends more input frames continuously"),
+/// letting the FC engine hold a batch of flattened maps and reuse each
+/// loaded weight tile across the batch — the standard fix, and the only way
+/// the paper's AlexNet 230 FPS fits in ZC706 bandwidth.
+pub const FC_BATCH: usize = 16;
+
+/// Per-layer engine parameters chosen by the allocator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Input-channel parallelism `C'`.
+    pub cp: usize,
+    /// Output-channel parallelism `M'`.
+    pub mp: usize,
+    /// Row parallelism `K` (rows computed per weight load).
+    pub k: usize,
+}
+
+impl EngineConfig {
+    /// Minimal engine: 1×1 parallelism, single row.
+    pub fn minimal() -> Self {
+        EngineConfig { cp: 1, mp: 1, k: 1 }
+    }
+}
+
+/// Static per-stage figures derived from (layer, config, mode).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineFigures {
+    /// Multipliers instantiated: `C'·M'·R·S`.
+    pub mults: usize,
+    /// DSP slices consumed (packing rule applied).
+    pub dsps: usize,
+    /// Cycles to compute one `K`-row output group (Eq. 2, ceil form).
+    pub t_row: u64,
+    /// Output row groups per frame: `ceil(H/K)` (1 for FC).
+    pub groups_per_frame: u64,
+    /// Useful MACs per group (numerator of intra-group efficiency).
+    pub macs_per_group: u64,
+    /// Weight bytes loaded from DDR per group (weights reloaded per group;
+    /// raising `K` is Alg. 2's reuse lever).
+    pub weight_bytes_per_group: u64,
+}
+
+impl EngineFigures {
+    /// Cycles per frame for this stage in isolation.
+    pub fn cycles_per_frame(&self) -> u64 {
+        self.t_row * self.groups_per_frame
+    }
+
+    /// Intra-group multiplier efficiency: fraction of MAC slots doing
+    /// useful work within a busy group (1.0 when `C' | C` and `M' | M`).
+    pub fn intra_efficiency(&self) -> f64 {
+        let slots = self.mults as u64 * self.t_row;
+        if slots == 0 {
+            return 0.0;
+        }
+        self.macs_per_group as f64 / slots as f64
+    }
+
+    /// Weight bytes per frame.
+    pub fn weight_bytes_per_frame(&self) -> u64 {
+        self.weight_bytes_per_group * self.groups_per_frame
+    }
+}
+
+/// Compute the static figures for a conv stage.
+pub fn conv_figures(c: &ConvShape, cfg: &EngineConfig, mode: QuantMode) -> EngineFigures {
+    let c_eff = c.c / c.groups;
+    let cp = cfg.cp.min(c_eff);
+    let mp = cfg.mp.min(c.m);
+    let mults = cp * mp * c.r * c.s;
+    let phases = div_ceil(c_eff, cp) as u64 * div_ceil(c.m, mp) as u64;
+    // Eq. 2: T_row = K · W · (C/C') · (M/M'), with ceilings for the general
+    // (non-divisor) case the flexible buffer supports.
+    let t_row = cfg.k as u64 * c.w as u64 * phases;
+    let groups = div_ceil(c.h, cfg.k) as u64;
+    let macs_group = (cfg.k as u64 * c.w as u64)
+        .min(c.h as u64 * c.w as u64)
+        * c.r as u64
+        * c.s as u64
+        * c_eff as u64
+        * c.m as u64;
+    EngineFigures {
+        mults,
+        dsps: div_ceil(mults, mode.mults_per_dsp()),
+        t_row,
+        groups_per_frame: groups,
+        macs_per_group: macs_group,
+        weight_bytes_per_group: c.weights() * mode.act_bytes() as u64,
+    }
+}
+
+/// Compute the static figures for an FC stage (a `1×1` conv on a `1×1`
+/// map: `C=n_in`, `M=n_out`, one group per frame).
+pub fn fc_figures(f: &FcShape, cfg: &EngineConfig, mode: QuantMode) -> EngineFigures {
+    let cp = cfg.cp.min(f.n_in);
+    let mp = cfg.mp.min(f.n_out);
+    let mults = cp * mp;
+    let t_row = div_ceil(f.n_in, cp) as u64 * div_ceil(f.n_out, mp) as u64;
+    EngineFigures {
+        mults,
+        dsps: div_ceil(mults, mode.mults_per_dsp()),
+        t_row,
+        groups_per_frame: 1,
+        macs_per_group: f.macs(),
+        // Amortized per frame over the FC batch (see FC_BATCH).
+        weight_bytes_per_group: f.macs() * mode.act_bytes() as u64 / FC_BATCH as u64,
+    }
+}
+
+/// Static figures for any stage. Pooling consumes no DSPs and tracks the
+/// producer rate (its `t_row` models the comparator pipeline: `K·W` cycles
+/// per group of `K` output rows).
+pub fn figures(layer: &Layer, cfg: &EngineConfig, mode: QuantMode) -> EngineFigures {
+    match layer {
+        Layer::Conv(c) => conv_figures(c, cfg, mode),
+        Layer::Fc(f) => fc_figures(f, cfg, mode),
+        Layer::Pool(p) => EngineFigures {
+            mults: 0,
+            dsps: 0,
+            t_row: cfg.k as u64 * p.w as u64,
+            groups_per_frame: div_ceil(p.h, cfg.k) as u64,
+            macs_per_group: 0,
+            weight_bytes_per_group: 0,
+        },
+    }
+}
+
+/// Activation-buffer geometry between stage `i−1` (producer, parallelism
+/// `M'_{i−1}`) and stage `i` (consumer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufferGeometry {
+    /// Row buffers: `R + G·(K_i − 1) + K_{i−1}` (paper Alg. 2 line 5; for
+    /// `G=1, K_{i−1}=K_i=K` this is the Sec. 3.3 `R + 2K − 1`).
+    pub row_buffers: usize,
+    /// Channel buffers per row: `max(C'_i, M'_{i−1})`.
+    pub channel_buffers: usize,
+    /// Pixels per row buffer (input width × channels).
+    pub pixels_per_row: usize,
+}
+
+impl BufferGeometry {
+    /// Total pixels buffered.
+    pub fn pixels(&self) -> usize {
+        self.row_buffers * self.pixels_per_row
+    }
+}
+
+/// Geometry of the buffer feeding a stage. `prod_k`/`prod_mp` describe the
+/// producing stage (the DDR unpacker for the first stage).
+pub fn buffer_geometry(
+    layer: &Layer,
+    cfg: &EngineConfig,
+    prod_k: usize,
+    prod_mp: usize,
+) -> BufferGeometry {
+    match layer {
+        // Write margin is max(K_prev, G·K), not the paper's K_prev — see
+        // linebuf::required_slots for the deviation note.
+        Layer::Conv(c) => BufferGeometry {
+            row_buffers: c.r + c.stride * (cfg.k - 1) + prod_k.max(c.stride * cfg.k),
+            channel_buffers: cfg.cp.min(c.c).max(prod_mp),
+            pixels_per_row: c.in_w() * c.c,
+        },
+        // Pooling reads each input row exactly once (single comparator
+        // pass, no per-(C,M)-phase re-reads), so rows retire as the window
+        // slides; the margin only needs to absorb the producer's burst.
+        Layer::Pool(p) => BufferGeometry {
+            row_buffers: p.r + p.stride * (cfg.k - 1) + prod_k.max(1),
+            channel_buffers: prod_mp.max(1),
+            pixels_per_row: ((p.w - 1) * p.stride + p.r) * p.c,
+        },
+        Layer::Fc(f) => BufferGeometry {
+            // FC input is fully buffered (it needs the whole flattened map).
+            row_buffers: 1,
+            channel_buffers: cfg.cp.min(f.n_in).max(prod_mp),
+            pixels_per_row: f.n_in,
+        },
+    }
+}
+
+/// BRAM18 blocks for one stage: activation buffer + double-buffered weight
+/// buffer + psum scratchpad.
+pub fn bram18_cost(
+    layer: &Layer,
+    cfg: &EngineConfig,
+    geo: &BufferGeometry,
+    mode: QuantMode,
+) -> usize {
+    const BRAM18_BITS: usize = 18 * 1024;
+    let act_bits = mode.bits();
+    // Each channelBuffer is an independently addressed memory, but BRAM18
+    // blocks are dual-ported: two small channelBuffers share one block
+    // (one port each), so the count is max(capacity bound, port bound).
+    let pixels_per_chb = div_ceil(geo.pixels_per_row, geo.channel_buffers) * geo.row_buffers;
+    let capacity_bound =
+        div_ceil(geo.channel_buffers * pixels_per_chb * act_bits, BRAM18_BITS);
+    let port_bound = div_ceil(geo.channel_buffers, 2);
+    let act = capacity_bound.max(port_bound).max(1);
+    let (weight, psum) = match layer {
+        Layer::Conv(c) => {
+            let c_eff = c.c / c.groups;
+            let wbits = 2 * cfg.cp.min(c_eff) * cfg.mp.min(c.m) * c.r * c.s * act_bits;
+            let pbits = cfg.mp.min(c.m) * cfg.k * c.w * 32;
+            (
+                div_ceil(wbits, BRAM18_BITS).max(2),
+                div_ceil(pbits, BRAM18_BITS).max(1),
+            )
+        }
+        Layer::Fc(f) => {
+            let wbits = 2 * cfg.cp.min(f.n_in) * cfg.mp.min(f.n_out) * act_bits;
+            (div_ceil(wbits, BRAM18_BITS).max(2), 1)
+        }
+        Layer::Pool(_) => (0, 0),
+    };
+    act + weight + psum
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::conv;
+
+    fn vgg_conv2_2() -> ConvShape {
+        let Layer::Conv(c) = conv(128, 128, 112, 112, 3, 1, 1) else {
+            unreachable!()
+        };
+        c
+    }
+
+    #[test]
+    fn t_row_matches_eq2_on_exact_divisors() {
+        // Eq. 2: T_row = K·W·(C/C')·(M/M')
+        let c = vgg_conv2_2();
+        let cfg = EngineConfig { cp: 8, mp: 16, k: 2 };
+        let f = conv_figures(&c, &cfg, QuantMode::W16A16);
+        assert_eq!(f.t_row, 2 * 112 * (128 / 8) * (128 / 16));
+    }
+
+    #[test]
+    fn intra_efficiency_is_one_on_exact_divisors() {
+        let c = vgg_conv2_2();
+        let cfg = EngineConfig { cp: 8, mp: 16, k: 2 };
+        let f = conv_figures(&c, &cfg, QuantMode::W16A16);
+        assert!((f.intra_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intra_efficiency_degrades_on_non_divisors() {
+        let c = vgg_conv2_2();
+        // C'=7 does not divide 128: ceil(128/7)=19 phases, 7·19=133 slots
+        let cfg = EngineConfig { cp: 7, mp: 16, k: 2 };
+        let f = conv_figures(&c, &cfg, QuantMode::W16A16);
+        let expect = 128.0 / (7.0 * 19.0);
+        assert!((f.intra_efficiency() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dsp_packing_halves_at_8bit() {
+        let c = vgg_conv2_2();
+        let cfg = EngineConfig { cp: 4, mp: 4, k: 1 };
+        let f16 = conv_figures(&c, &cfg, QuantMode::W16A16);
+        let f8 = conv_figures(&c, &cfg, QuantMode::W8A8);
+        assert_eq!(f16.mults, f8.mults);
+        assert_eq!(f16.dsps, 2 * f8.dsps);
+    }
+
+    #[test]
+    fn raising_k_cuts_weight_traffic() {
+        // Alg. 2's lever: ω_i = H·R·S·C·M/K
+        let c = vgg_conv2_2();
+        let f1 = conv_figures(&c, &EngineConfig { cp: 8, mp: 8, k: 1 }, QuantMode::W16A16);
+        let f4 = conv_figures(&c, &EngineConfig { cp: 8, mp: 8, k: 4 }, QuantMode::W16A16);
+        assert_eq!(
+            f1.weight_bytes_per_frame(),
+            4 * f4.weight_bytes_per_frame()
+        );
+    }
+
+    #[test]
+    fn buffer_rows_match_sec33_for_stride1_equal_k() {
+        // stride 1, K_prev = K = 3, R = 3 → R + 2K − 1 = 8
+        let l = conv(64, 64, 112, 112, 3, 1, 1);
+        let cfg = EngineConfig { cp: 8, mp: 8, k: 3 };
+        let geo = buffer_geometry(&l, &cfg, 3, 8);
+        assert_eq!(geo.row_buffers, 3 + 1 * 2 + 3);
+        assert_eq!(geo.row_buffers, 8); // R + 2K − 1
+    }
+
+    #[test]
+    fn channel_buffers_take_max_of_interface_parallelisms() {
+        // The flexible buffer's whole point: C'_i ≠ M'_{i−1} is fine.
+        let l = conv(64, 64, 56, 56, 3, 1, 1);
+        let cfg = EngineConfig { cp: 3, mp: 8, k: 1 };
+        let geo = buffer_geometry(&l, &cfg, 1, 20);
+        assert_eq!(geo.channel_buffers, 20);
+        let geo2 = buffer_geometry(&l, &cfg, 1, 2);
+        assert_eq!(geo2.channel_buffers, 3);
+    }
+
+    #[test]
+    fn fc_figures_single_group() {
+        let f = FcShape { n_in: 400, n_out: 120 };
+        let cfg = EngineConfig { cp: 8, mp: 4, k: 1 };
+        let fig = fc_figures(&f, &cfg, QuantMode::W16A16);
+        assert_eq!(fig.groups_per_frame, 1);
+        assert_eq!(fig.t_row, (400 / 8) * (120 / 4));
+        assert!((fig.intra_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bram_cost_grows_with_k() {
+        let l = conv(128, 128, 56, 56, 3, 1, 1);
+        let g1 = buffer_geometry(&l, &EngineConfig { cp: 8, mp: 8, k: 1 }, 1, 8);
+        let g4 = buffer_geometry(&l, &EngineConfig { cp: 8, mp: 8, k: 4 }, 1, 8);
+        let b1 = bram18_cost(&l, &EngineConfig { cp: 8, mp: 8, k: 1 }, &g1, QuantMode::W16A16);
+        let b4 = bram18_cost(&l, &EngineConfig { cp: 8, mp: 8, k: 4 }, &g4, QuantMode::W16A16);
+        assert!(b4 > b1, "more rows buffered must cost more BRAM");
+    }
+}

@@ -1,0 +1,50 @@
+//! # FlexiPipe
+//!
+//! Reproduction of *"FPGA Based Accelerator for Neural Networks Computation
+//! with Flexible Pipelining"* (Yi, Sun, Fujita — 2021) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper's contribution is a **layer-wise pipeline** CNN accelerator
+//! whose per-layer compute engines are freely parameterized (input-channel
+//! parallelism `C'`, output-channel parallelism `M'`, row parallelism `K`)
+//! plus a **resource allocation framework** (Algorithms 1 and 2) that picks
+//! those parameters to balance all pipeline stages for a given CNN model and
+//! FPGA board. The FPGA itself is hardware we do not have, so this crate
+//! substitutes a calibrated board model + cycle-level simulator for the
+//! silicon (see DESIGN.md §2), while the *functional* datapath (fixed-point
+//! conv with channel-wise shift alignment) runs for real: AOT-compiled JAX/
+//! Pallas HLO executed through PJRT from the [`runtime`] module.
+//!
+//! Module map (one module per subsystem, DESIGN.md §5):
+//!
+//! - [`model`] — CNN layer/network descriptions + the paper's model zoo
+//!   (VGG16, AlexNet, ZF, YOLO) and small functional nets.
+//! - [`board`] — FPGA resource models (ZC706 et al.).
+//! - [`quant`] — fixed-point arithmetic: the engine's datapath in Rust.
+//! - [`alloc`] — Algorithm 1 / Algorithm 2 + baseline allocators
+//!   (recurrent [1], fusion/Winograd [2], DNNBuilder-constrained [3]).
+//! - [`engine`] — convolution-layer-engine micro-model: cycle counts,
+//!   line-buffer geometry, BRAM/LUT/FF cost, address generation.
+//! - [`sim`] — event-driven pipeline simulator (stall-accurate) and the
+//!   recurrent-architecture simulator.
+//! - [`power`] — calibrated power estimation (the paper uses Vivado's
+//!   estimate; we use an activity-based analytical model).
+//! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! - [`coordinator`] — tokio frame server: the Fig. 4 host↔accelerator loop.
+//! - [`report`] — Table I regeneration and paper-vs-measured comparison.
+
+pub mod alloc;
+pub mod board;
+pub mod coordinator;
+pub mod engine;
+pub mod model;
+pub mod power;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,307 @@
+//! `flexipipe` CLI — the framework's front door.
+//!
+//! ```text
+//! flexipipe allocate --model vgg16 --board zc706 --bits 16 [--arch flex]
+//! flexipipe simulate --model vgg16 --board zc706 --frames 4
+//! flexipipe report   [--no-paper]          # regenerate Table I
+//! flexipipe serve    --net tinycnn --frames 256 [--artifacts DIR]
+//! flexipipe e2e      [--artifacts DIR]     # golden-frame check + throughput
+//! flexipipe sweep    --model vgg16 --param dsps --from 128 --to 1024
+//! ```
+
+use flexipipe::alloc::{allocator_for, ArchKind};
+use flexipipe::coordinator::{BatchPolicy, Coordinator};
+use flexipipe::model::config;
+use flexipipe::power::PowerModel;
+use flexipipe::quant::QuantMode;
+use flexipipe::runtime::{default_artifact_dir, Runtime};
+use flexipipe::util::cli::{flag, opt, usage, Args, Spec};
+use flexipipe::{board, report, sim};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn specs() -> Vec<Spec> {
+    vec![
+        opt("model", "zoo name or path to a network JSON", Some("vgg16")),
+        opt("board", "board name (zc706 zcu102 vc707 zedboard)", Some("zc706")),
+        opt("bits", "quantization width: 8 or 16", Some("16")),
+        opt("arch", "flex | dnnbuilder | fusion | recurrent", Some("flex")),
+        opt("frames", "frames to simulate/serve", Some("4")),
+        opt("net", "artifact net to serve (tinycnn lenet vgg_micro)", Some("tinycnn")),
+        opt("artifacts", "artifact directory", Some("artifacts")),
+        opt("param", "sweep parameter: dsps | bandwidth | bram", Some("dsps")),
+        opt("from", "sweep start", Some("128")),
+        opt("to", "sweep end", Some("1024")),
+        opt("steps", "sweep steps", Some("8")),
+        opt("trace", "write per-stage CSV trace to this path (simulate)", None),
+        flag("no-paper", "omit paper reference rows from the report"),
+        flag("verbose", "per-stage detail"),
+    ]
+}
+
+fn run(argv: &[String]) -> flexipipe::Result<()> {
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..], &specs())?;
+    match cmd {
+        "allocate" => cmd_allocate(&args),
+        "simulate" => cmd_simulate(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "e2e" => cmd_e2e(&args),
+        "sweep" => cmd_sweep(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{}", usage(&specs())),
+    }
+}
+
+fn print_help() {
+    println!(
+        "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
+         (reproduction of Yi/Sun/Fujita 2021)\n\n\
+         commands: allocate simulate report serve e2e sweep help\n\n{}",
+        usage(&specs())
+    );
+}
+
+type Common = (flexipipe::model::Network, board::Board, QuantMode, ArchKind);
+
+fn parse_common(args: &Args) -> flexipipe::Result<Common> {
+    let net = config::resolve(args.get_or("model", "vgg16"))?;
+    let brd = board::by_name(args.get_or("board", "zc706"))?;
+    let mode = QuantMode::from_bits(args.get_parse("bits", 16)?)?;
+    let arch = ArchKind::parse(args.get_or("arch", "flex"))?;
+    Ok((net, brd, mode, arch))
+}
+
+fn cmd_allocate(args: &Args) -> flexipipe::Result<()> {
+    let (net, brd, mode, arch) = parse_common(args)?;
+    let alloc = allocator_for(arch).allocate(&net, &brd, mode)?;
+    let r = alloc.evaluate();
+    let power = PowerModel::default().estimate(&alloc, &r);
+    println!(
+        "{} on {} ({mode}, {} arch): {:.1} fps, {:.0} GOPS, DSP {}/{} ({:.1}% efficient)",
+        net.name,
+        brd.name,
+        arch.label(),
+        r.fps,
+        r.gops,
+        r.dsps,
+        brd.dsps,
+        r.dsp_efficiency * 100.0
+    );
+    println!(
+        "  LUT {:.1}%  FF {:.1}%  BRAM {:.1}%  DDR {:.2} GB/s  power {:.2} W ({:.1} GOPS/W)",
+        100.0 * r.luts as f64 / brd.luts as f64,
+        100.0 * r.ffs as f64 / brd.ffs as f64,
+        100.0 * r.bram18 as f64 / brd.bram18() as f64,
+        r.ddr_bytes_per_sec / 1e9,
+        power.total(),
+        r.gops / power.total()
+    );
+    if args.has("verbose") {
+        println!("  per-stage (C', M', K, mults, cycles/frame):");
+        for (s, c) in alloc.stages.iter().zip(&r.stage_cycles) {
+            println!(
+                "    {:>2} {:<14} C'={:<4} M'={:<4} K={:<3} mults={:<5} cycles={}",
+                s.layer_idx,
+                net.layers[s.layer_idx].label(),
+                s.cfg.cp,
+                s.cfg.mp,
+                s.cfg.k,
+                s.figures.mults,
+                c
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> flexipipe::Result<()> {
+    let (net, brd, mode, arch) = parse_common(args)?;
+    let frames = args.get_parse("frames", 4usize)?;
+    let alloc = allocator_for(arch).allocate(&net, &brd, mode)?;
+    let cf = alloc.evaluate();
+    let s = sim::simulate(&alloc, frames);
+    println!(
+        "{} on {} ({mode}, {}): simulated {frames} frames",
+        net.name,
+        brd.name,
+        arch.label()
+    );
+    println!(
+        "  closed-form: {:>10.0} cycles/frame  {:.2} fps  eff {:.1}%",
+        cf.t_frame_cycles as f64,
+        cf.fps,
+        cf.dsp_efficiency * 100.0
+    );
+    println!(
+        "  simulated:   {:>10.0} cycles/frame  {:.2} fps  eff {:.1}%  DDR util {:.0}%",
+        s.cycles_per_frame,
+        s.fps,
+        s.dsp_efficiency * 100.0,
+        s.ddr_utilization * 100.0
+    );
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, flexipipe::trace::stage_csv(&alloc, &s))?;
+        println!("  trace written to {path}");
+    }
+    if args.has("verbose") {
+        for (i, st) in s.stages.iter().enumerate() {
+            println!(
+                "    stage {i:2} {:<14} busy={:<10} wstall={:<8} groups={}",
+                net.layers[alloc.stages[i].layer_idx].label(),
+                st.busy_cycles,
+                st.stall_weights,
+                st.groups_done
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> flexipipe::Result<()> {
+    let rows = report::table1()?;
+    println!("{}", report::render(&rows, !args.has("no-paper")));
+    if let Some((r1, r2, r3)) = report::vgg16_speedups(&rows) {
+        println!(
+            "VGG16 speedups (this work vs baselines): {r1:.2}x vs [1] recurrent (paper 2.58x), \
+             {r2:.2}x vs [2] fusion (paper 1.53x), {r3:.2}x vs [3] DNNBuilder (paper 1.35x)"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let frames: usize = args.get_parse("frames", 256)?;
+    let net = args.get_or("net", "tinycnn");
+    println!("serving '{net}' from {dir}");
+    let coord = Coordinator::start(&dir, net, 8, BatchPolicy::default())?;
+
+    // Input frames come from the golden files (no PJRT needed host-side).
+    let manifest = flexipipe::runtime::Manifest::load(format!("{dir}/manifest.json"))?;
+    let art = manifest.variants(net, 8);
+    let elems = art[0].golden.frame_elems;
+    let golden_in =
+        flexipipe::runtime::read_i8(format!("{dir}/{}", art[0].golden.input))?;
+    let n_golden = golden_in.len() / elems;
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..frames {
+        let f = &golden_in[(i % n_golden) * elems..((i % n_golden) + 1) * elems];
+        pending.push(coord.submit(f.to_vec())?);
+    }
+    for p in pending {
+        p.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+    }
+    let dt = t0.elapsed();
+    let stats = coord.shutdown();
+    println!(
+        "served {} frames in {:.2?}: {:.1} fps, latency p50 {} µs / p99 {} µs, \
+         {} batches ({} padded slots)",
+        stats.requests,
+        dt,
+        stats.requests as f64 / dt.as_secs_f64(),
+        stats.latency_us(50.0),
+        stats.latency_us(99.0),
+        stats.batches,
+        stats.padded_frames
+    );
+    println!("batch mix (batch, frames): {:?}", stats.batch_sizes);
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> flexipipe::Result<()> {
+    let dir = match args.get("artifacts") {
+        Some(d) => d.into(),
+        None => default_artifact_dir(),
+    };
+    let rt = Runtime::load(&dir)?;
+    println!("e2e golden check: platform={}", rt.platform());
+    let mut checked = 0;
+    let artifacts = rt.manifest().artifacts.clone();
+    for a in &artifacts {
+        if a.bits != 8 {
+            continue;
+        }
+        let input = rt.golden_inputs(&a.name)?;
+        let golden = rt.golden_outputs(&a.name)?;
+        let elems = a.golden.frame_elems;
+        let out_elems = a.golden.out_elems;
+        let mut ok = true;
+        let mut frame = 0;
+        while frame + a.batch <= a.golden.frames {
+            let chunk = &input[frame * elems..(frame + a.batch) * elems];
+            let out = rt.execute_i8(&a.name, chunk)?;
+            let want = &golden[frame * out_elems..(frame + a.batch) * out_elems];
+            if out != want {
+                ok = false;
+                eprintln!(
+                    "  {}: MISMATCH at frames {}..{}",
+                    a.name,
+                    frame,
+                    frame + a.batch
+                );
+            }
+            frame += a.batch;
+        }
+        println!(
+            "  {:<20} {} ({} frames, bit-exact vs Python oracle)",
+            a.name,
+            if ok { "OK" } else { "FAIL" },
+            frame
+        );
+        anyhow::ensure!(ok, "{} failed golden check", a.name);
+        checked += 1;
+    }
+    anyhow::ensure!(checked > 0, "no 8-bit artifacts found in {}", dir.display());
+    println!("all {checked} artifacts bit-exact");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> flexipipe::Result<()> {
+    let (net, brd, mode, arch) = parse_common(args)?;
+    let param = args.get_or("param", "dsps");
+    let from: f64 = args.get_parse("from", 128.0)?;
+    let to: f64 = args.get_parse("to", 1024.0)?;
+    let steps: usize = args.get_parse("steps", 8)?;
+    println!("{param},fps,gops,dsp_eff,bram18,ddr_gbps");
+    for i in 0..steps {
+        let v = from + (to - from) * i as f64 / (steps - 1).max(1) as f64;
+        let mut b = brd.clone();
+        match param {
+            "dsps" => b.dsps = v as usize,
+            "bandwidth" => b.ddr_bytes_per_sec = v * 1e9,
+            "bram" => b.bram36 = v as usize,
+            other => anyhow::bail!("unknown sweep param '{other}'"),
+        }
+        let alloc = allocator_for(arch).allocate(&net, &b, mode)?;
+        let r = alloc.evaluate();
+        println!(
+            "{v:.0},{:.2},{:.1},{:.4},{},{:.2}",
+            r.fps,
+            r.gops,
+            r.dsp_efficiency,
+            r.bram18,
+            r.ddr_bytes_per_sec / 1e9
+        );
+    }
+    Ok(())
+}

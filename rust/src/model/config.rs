@@ -1,0 +1,192 @@
+//! Network config files: load/save [`Network`] descriptions as JSON so
+//! users can run the framework on models outside the built-in zoo
+//! (`flexipipe allocate --model mynet.json`).
+//!
+//! Hand-rolled (de)serialization over [`crate::util::json`] — the offline
+//! vendor set has no serde.
+
+use super::{ConvShape, FcShape, Layer, Network, PoolShape};
+use crate::util::json::{self, num, obj, Value};
+use std::path::Path;
+
+/// Serialize a network to a JSON value.
+pub fn to_json(net: &Network) -> Value {
+    let layers: Vec<Value> = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv(c) => obj(vec![
+                ("kind", Value::Str("conv".into())),
+                ("c", num(c.c)),
+                ("m", num(c.m)),
+                ("h", num(c.h)),
+                ("w", num(c.w)),
+                ("r", num(c.r)),
+                ("s", num(c.s)),
+                ("stride", num(c.stride)),
+                ("pad", num(c.pad)),
+                ("groups", num(c.groups)),
+            ]),
+            Layer::Pool(p) => obj(vec![
+                ("kind", Value::Str("pool".into())),
+                ("c", num(p.c)),
+                ("h", num(p.h)),
+                ("w", num(p.w)),
+                ("r", num(p.r)),
+                ("stride", num(p.stride)),
+            ]),
+            Layer::Fc(f) => obj(vec![
+                ("kind", Value::Str("fc".into())),
+                ("n_in", num(f.n_in)),
+                ("n_out", num(f.n_out)),
+            ]),
+        })
+        .collect();
+    obj(vec![
+        ("name", Value::Str(net.name.clone())),
+        (
+            "input",
+            Value::Arr(vec![num(net.input.0), num(net.input.1), num(net.input.2)]),
+        ),
+        ("layers", Value::Arr(layers)),
+    ])
+}
+
+/// Deserialize a network from a JSON value.
+pub fn from_json(v: &Value) -> crate::Result<Network> {
+    let name = v.str_field("name")?.to_string();
+    let input = v.req("input")?.as_arr().ok_or_else(|| {
+        anyhow::anyhow!("'input' must be an array [c, h, w]")
+    })?;
+    anyhow::ensure!(input.len() == 3, "'input' must have 3 entries");
+    let dim = |i: usize| -> crate::Result<usize> {
+        input[i]
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("input[{i}] must be a non-negative integer"))
+    };
+    let layers = v
+        .req("layers")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'layers' must be an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, lv)| -> crate::Result<Layer> {
+            let kind = lv
+                .str_field("kind")
+                .map_err(|e| anyhow::anyhow!("layer {i}: {e}"))?;
+            let l = match kind {
+                "conv" => Layer::Conv(ConvShape {
+                    c: lv.usize_field("c")?,
+                    m: lv.usize_field("m")?,
+                    h: lv.usize_field("h")?,
+                    w: lv.usize_field("w")?,
+                    r: lv.usize_field("r")?,
+                    s: lv.usize_field("s")?,
+                    stride: lv.usize_field("stride")?,
+                    pad: lv.usize_field("pad")?,
+                    groups: lv.get("groups").and_then(Value::as_usize).unwrap_or(1),
+                }),
+                "pool" => Layer::Pool(PoolShape {
+                    c: lv.usize_field("c")?,
+                    h: lv.usize_field("h")?,
+                    w: lv.usize_field("w")?,
+                    r: lv.usize_field("r")?,
+                    stride: lv.usize_field("stride")?,
+                }),
+                "fc" => Layer::Fc(FcShape {
+                    n_in: lv.usize_field("n_in")?,
+                    n_out: lv.usize_field("n_out")?,
+                }),
+                other => anyhow::bail!("layer {i}: unknown kind '{other}'"),
+            };
+            Ok(l)
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(Network {
+        name,
+        input: (dim(0)?, dim(1)?, dim(2)?),
+        layers,
+    })
+}
+
+/// Load and validate a network from a JSON file.
+pub fn load(path: impl AsRef<Path>) -> crate::Result<Network> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+    let net = from_json(&json::parse(&text)?)?;
+    net.validate()?;
+    Ok(net)
+}
+
+/// Save a network to JSON (pretty-printed, stable field order).
+pub fn save(net: &Network, path: impl AsRef<Path>) -> crate::Result<()> {
+    std::fs::write(path.as_ref(), to_json(net).to_pretty())?;
+    Ok(())
+}
+
+/// Resolve `--model`: a zoo name, or a path to a JSON file.
+pub fn resolve(spec: &str) -> crate::Result<Network> {
+    if spec.ends_with(".json") || spec.contains('/') {
+        load(spec)
+    } else {
+        super::zoo::by_name(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn round_trip_preserves_network() {
+        let dir = std::env::temp_dir().join("flexipipe_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("vgg16.json");
+        let net = zoo::vgg16();
+        save(&net, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(net, back);
+    }
+
+    #[test]
+    fn all_zoo_nets_round_trip_via_value() {
+        for net in zoo::paper_nets() {
+            let back = from_json(&to_json(&net)).unwrap();
+            assert_eq!(net, back);
+        }
+    }
+
+    #[test]
+    fn load_rejects_invalid_geometry() {
+        let dir = std::env::temp_dir().join("flexipipe_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        let mut net = zoo::tinycnn();
+        if let Layer::Conv(ref mut c) = net.layers[0] {
+            c.m = 64; // downstream layers now mismatch
+        }
+        std::fs::write(&p, to_json(&net).to_string()).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn groups_default_to_one() {
+        let v = json::parse(
+            r#"{"name":"t","input":[1,3,3],
+                "layers":[{"kind":"conv","c":1,"m":1,"h":3,"w":3,"r":1,"s":1,"stride":1,"pad":0}]}"#,
+        )
+        .unwrap();
+        let net = from_json(&v).unwrap();
+        let Layer::Conv(c) = &net.layers[0] else {
+            panic!()
+        };
+        assert_eq!(c.groups, 1);
+    }
+
+    #[test]
+    fn resolve_prefers_zoo_names() {
+        assert_eq!(resolve("alexnet").unwrap().name, "alexnet");
+        assert!(resolve("nonexistent").is_err());
+    }
+}

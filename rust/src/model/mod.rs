@@ -1,0 +1,360 @@
+//! CNN model descriptions.
+//!
+//! A [`Network`] is an ordered list of pipeline stages ([`Layer`]), exactly
+//! the granularity the paper instantiates on chip (Sec. 3.2: convolution,
+//! pooling and fully-connected layers are individual pipeline stages).
+//!
+//! Dimension names follow the paper's Eq. 1:
+//! `O[M×H×W] = f(W[M×C×R×S] ⊗ I[C×(H+R−1)×(W+S−1)] + B[M])` — `H`/`W` are
+//! *output* feature-map sizes, so a layer's MAC count is
+//! `π = H·W·R·S·C·M` (Algorithm 1, line 1).
+
+pub mod config;
+pub mod zoo;
+
+
+/// A convolution stage (paper Eq. 1). `h`/`w` are output sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels `C`.
+    pub c: usize,
+    /// Output channels `M`.
+    pub m: usize,
+    /// Output feature-map height `H`.
+    pub h: usize,
+    /// Output feature-map width `W`.
+    pub w: usize,
+    /// Kernel height `R`.
+    pub r: usize,
+    /// Kernel width `S`.
+    pub s: usize,
+    /// Stride `G` (paper's stride of conv/pool layer).
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+    /// Grouped convolution factor (AlexNet's split layers). MACs divide by
+    /// this; `1` everywhere else.
+    pub groups: usize,
+}
+
+impl ConvShape {
+    /// MAC operations for this layer: `π = H·W·R·S·(C/g)·M` (Alg. 1 line 1).
+    pub fn macs(&self) -> u64 {
+        (self.h as u64)
+            * (self.w as u64)
+            * (self.r as u64)
+            * (self.s as u64)
+            * (self.c as u64 / self.groups as u64)
+            * (self.m as u64)
+    }
+
+    /// Weight parameter count `M·(C/g)·R·S`.
+    pub fn weights(&self) -> u64 {
+        (self.m as u64) * (self.c as u64 / self.groups as u64) * (self.r as u64) * (self.s as u64)
+    }
+
+    /// Input feature-map height consumed (`H·G` pre-stride rows, ignoring pad).
+    pub fn in_h(&self) -> usize {
+        (self.h - 1) * self.stride + self.r - 2 * self.pad
+    }
+
+    /// Input feature-map width.
+    pub fn in_w(&self) -> usize {
+        (self.w - 1) * self.stride + self.s - 2 * self.pad
+    }
+}
+
+/// A max-pooling stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolShape {
+    /// Channels (pass-through).
+    pub c: usize,
+    /// Output height.
+    pub h: usize,
+    /// Output width.
+    pub w: usize,
+    /// Window size.
+    pub r: usize,
+    /// Stride `G`.
+    pub stride: usize,
+}
+
+/// A fully-connected stage — allocated like a `1×1` conv on a `1×1` map
+/// (the paper pipelines FC layers as stages too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FcShape {
+    /// Input features.
+    pub n_in: usize,
+    /// Output features.
+    pub n_out: usize,
+}
+
+impl FcShape {
+    /// MACs = `n_in · n_out`.
+    pub fn macs(&self) -> u64 {
+        self.n_in as u64 * self.n_out as u64
+    }
+}
+
+/// One pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    Conv(ConvShape),
+    Pool(PoolShape),
+    Fc(FcShape),
+}
+
+impl Layer {
+    /// MAC count (pooling contributes none — comparators, not DSPs).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Conv(c) => c.macs(),
+            Layer::Pool(_) => 0,
+            Layer::Fc(f) => f.macs(),
+        }
+    }
+
+    /// Weight parameters held in DDR for this stage.
+    pub fn weights(&self) -> u64 {
+        match self {
+            Layer::Conv(c) => c.weights(),
+            Layer::Pool(_) => 0,
+            Layer::Fc(f) => f.macs(),
+        }
+    }
+
+    /// Stage stride `G` (Eq. 3's `G_j`): rows consumed per row produced.
+    pub fn stride(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.stride,
+            Layer::Pool(p) => p.stride,
+            Layer::Fc(_) => 1,
+        }
+    }
+
+    /// Output rows per frame (`H` for spatial stages, 1 for FC).
+    pub fn out_rows(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.h,
+            Layer::Pool(p) => p.h,
+            Layer::Fc(_) => 1,
+        }
+    }
+
+    /// Does this stage consume DSP multipliers?
+    pub fn uses_dsps(&self) -> bool {
+        self.macs() > 0
+    }
+
+    /// Short human label (`conv3x3/512`, `pool2`, `fc4096`).
+    pub fn label(&self) -> String {
+        match self {
+            Layer::Conv(c) => format!("conv{}x{}/{}", c.r, c.s, c.m),
+            Layer::Pool(p) => format!("pool{}", p.r),
+            Layer::Fc(f) => format!("fc{}", f.n_out),
+        }
+    }
+}
+
+/// A full network: the unit the allocator + simulator operate on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    /// Zoo name (`vgg16`, `alexnet`, `zf`, `yolo`, …).
+    pub name: String,
+    /// Input `(C, H, W)`.
+    pub input: (usize, usize, usize),
+    /// Pipeline stages in order.
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total MAC count.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Complexity in GOP (paper counts 2 ops per MAC: multiply + add).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.macs() as f64 / 1e9
+    }
+
+    /// Total weight parameters.
+    pub fn weights(&self) -> u64 {
+        self.layers.iter().map(Layer::weights).sum()
+    }
+
+    /// Input rows `H_0` (Eq. 4 denominator).
+    pub fn h0(&self) -> usize {
+        self.input.1
+    }
+
+    /// Indices of DSP-consuming stages.
+    pub fn compute_layers(&self) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].uses_dsps())
+            .collect()
+    }
+
+    /// Structural validation: channel/spatial continuity between stages.
+    pub fn validate(&self) -> crate::Result<()> {
+        let (mut c, mut h, mut w) = self.input;
+        let mut flat: Option<usize> = None;
+        for (i, l) in self.layers.iter().enumerate() {
+            match l {
+                Layer::Conv(cv) => {
+                    anyhow::ensure!(flat.is_none(), "layer {i}: conv after fc");
+                    anyhow::ensure!(
+                        cv.c == c,
+                        "layer {i} ({}): expects C={} but previous stage produces {c}",
+                        l.label(),
+                        cv.c
+                    );
+                    anyhow::ensure!(cv.c % cv.groups == 0, "layer {i}: groups must divide C");
+                    anyhow::ensure!(cv.m % cv.groups == 0, "layer {i}: groups must divide M");
+                    let eh = (h + 2 * cv.pad - cv.r) / cv.stride + 1;
+                    let ew = (w + 2 * cv.pad - cv.s) / cv.stride + 1;
+                    anyhow::ensure!(
+                        cv.h == eh && cv.w == ew,
+                        "layer {i} ({}): declared {}x{}, geometry gives {eh}x{ew}",
+                        l.label(),
+                        cv.h,
+                        cv.w
+                    );
+                    c = cv.m;
+                    h = cv.h;
+                    w = cv.w;
+                }
+                Layer::Pool(p) => {
+                    anyhow::ensure!(flat.is_none(), "layer {i}: pool after fc");
+                    anyhow::ensure!(p.c == c, "layer {i}: pool channels {} != {c}", p.c);
+                    let eh = (h - p.r) / p.stride + 1;
+                    let ew = (w - p.r) / p.stride + 1;
+                    anyhow::ensure!(
+                        p.h == eh && p.w == ew,
+                        "layer {i} (pool): declared {}x{}, geometry gives {eh}x{ew}",
+                        p.h,
+                        p.w
+                    );
+                    h = p.h;
+                    w = p.w;
+                }
+                Layer::Fc(f) => {
+                    let n = flat.unwrap_or(c * h * w);
+                    anyhow::ensure!(
+                        f.n_in == n,
+                        "layer {i} (fc): expects n_in={} but gets {n}",
+                        f.n_in
+                    );
+                    flat = Some(f.n_out);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convenience conv builder used by the zoo tables.
+#[allow(clippy::too_many_arguments)]
+pub fn conv(c: usize, m: usize, h: usize, w: usize, r: usize, stride: usize, pad: usize) -> Layer {
+    Layer::Conv(ConvShape {
+        c,
+        m,
+        h,
+        w,
+        r,
+        s: r,
+        stride,
+        pad,
+        groups: 1,
+    })
+}
+
+/// Grouped conv builder (AlexNet).
+#[allow(clippy::too_many_arguments)]
+pub fn gconv(
+    c: usize,
+    m: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Layer {
+    Layer::Conv(ConvShape {
+        c,
+        m,
+        h,
+        w,
+        r,
+        s: r,
+        stride,
+        pad,
+        groups,
+    })
+}
+
+/// Pool builder.
+pub fn pool(c: usize, h: usize, w: usize, r: usize, stride: usize) -> Layer {
+    Layer::Pool(PoolShape { c, h, w, r, stride })
+}
+
+/// FC builder.
+pub fn fc(n_in: usize, n_out: usize) -> Layer {
+    Layer::Fc(FcShape { n_in, n_out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_match_hand_count() {
+        // VGG16 conv1_1: 224·224·3·3·3·64 = 86.7M MACs
+        let l = conv(3, 64, 224, 224, 3, 1, 1);
+        assert_eq!(l.macs(), 224 * 224 * 9 * 3 * 64);
+    }
+
+    #[test]
+    fn grouped_conv_halves_macs() {
+        let g1 = gconv(96, 256, 27, 27, 5, 1, 2, 1);
+        let g2 = gconv(96, 256, 27, 27, 5, 1, 2, 2);
+        assert_eq!(g1.macs(), 2 * g2.macs());
+    }
+
+    #[test]
+    fn validate_catches_channel_mismatch() {
+        let net = Network {
+            name: "bad".into(),
+            input: (3, 8, 8),
+            layers: vec![conv(4, 8, 8, 8, 3, 1, 1)],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_geometry() {
+        let net = Network {
+            name: "bad".into(),
+            input: (3, 8, 8),
+            layers: vec![conv(3, 8, 9, 8, 3, 1, 1)],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn in_dims_invert_out_dims() {
+        let Layer::Conv(c) = conv(3, 8, 112, 112, 3, 2, 1) else {
+            unreachable!()
+        };
+        // floor() in the forward direction makes inversion minimal, not
+        // unique: a 112-row stride-2 output needs at least 223 input rows.
+        assert_eq!(c.in_h(), 223);
+    }
+
+    #[test]
+    fn fc_treated_as_compute_layer() {
+        assert!(fc(100, 10).uses_dsps());
+        assert!(!pool(8, 4, 4, 2, 2).uses_dsps());
+    }
+}

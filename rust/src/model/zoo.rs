@@ -1,0 +1,266 @@
+//! The model zoo: the paper's four evaluation networks (Table I) plus the
+//! small functional nets that mirror `python/compile/model.py`.
+//!
+//! Complexity cross-check (unit-tested): VGG16 ≈ 30.94 GOP, AlexNet ≈ 1.45,
+//! ZF ≈ 2.34, YOLO ≈ 40.14 — the paper's "Complexity(GOP)" row.
+
+use super::{conv, fc, gconv, pool, Network};
+
+/// VGG16 @ 224×224 — 13 convs + 3 FC, 30.94 GOP (paper Table I).
+pub fn vgg16() -> Network {
+    Network {
+        name: "vgg16".into(),
+        input: (3, 224, 224),
+        layers: vec![
+            conv(3, 64, 224, 224, 3, 1, 1),
+            conv(64, 64, 224, 224, 3, 1, 1),
+            pool(64, 112, 112, 2, 2),
+            conv(64, 128, 112, 112, 3, 1, 1),
+            conv(128, 128, 112, 112, 3, 1, 1),
+            pool(128, 56, 56, 2, 2),
+            conv(128, 256, 56, 56, 3, 1, 1),
+            conv(256, 256, 56, 56, 3, 1, 1),
+            conv(256, 256, 56, 56, 3, 1, 1),
+            pool(256, 28, 28, 2, 2),
+            conv(256, 512, 28, 28, 3, 1, 1),
+            conv(512, 512, 28, 28, 3, 1, 1),
+            conv(512, 512, 28, 28, 3, 1, 1),
+            pool(512, 14, 14, 2, 2),
+            conv(512, 512, 14, 14, 3, 1, 1),
+            conv(512, 512, 14, 14, 3, 1, 1),
+            conv(512, 512, 14, 14, 3, 1, 1),
+            pool(512, 7, 7, 2, 2),
+            fc(25088, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+/// AlexNet @ 227×227 — grouped convs as in the original, 1.45 GOP.
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        input: (3, 227, 227),
+        layers: vec![
+            conv(3, 96, 55, 55, 11, 4, 0),
+            pool(96, 27, 27, 3, 2),
+            gconv(96, 256, 27, 27, 5, 1, 2, 2),
+            pool(256, 13, 13, 3, 2),
+            conv(256, 384, 13, 13, 3, 1, 1),
+            gconv(384, 384, 13, 13, 3, 1, 1, 2),
+            gconv(384, 256, 13, 13, 3, 1, 1, 2),
+            pool(256, 6, 6, 3, 2),
+            fc(9216, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+/// ZFNet @ 224×224 — 2.34 GOP.
+pub fn zf() -> Network {
+    Network {
+        name: "zf".into(),
+        input: (3, 224, 224),
+        layers: vec![
+            conv(3, 96, 110, 110, 7, 2, 1),
+            pool(96, 55, 55, 2, 2),
+            conv(96, 256, 26, 26, 5, 2, 0),
+            pool(256, 13, 13, 2, 2),
+            conv(256, 384, 13, 13, 3, 1, 1),
+            conv(384, 384, 13, 13, 3, 1, 1),
+            conv(384, 256, 13, 13, 3, 1, 1),
+            pool(256, 6, 6, 3, 2),
+            fc(9216, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+/// YOLOv1 @ 448×448 — 24 convs + 2 FC, 40.14 GOP.
+pub fn yolo() -> Network {
+    let mut layers = vec![
+        conv(3, 64, 224, 224, 7, 2, 3),
+        pool(64, 112, 112, 2, 2),
+        conv(64, 192, 112, 112, 3, 1, 1),
+        pool(192, 56, 56, 2, 2),
+        conv(192, 128, 56, 56, 1, 1, 0),
+        conv(128, 256, 56, 56, 3, 1, 1),
+        conv(256, 256, 56, 56, 1, 1, 0),
+        conv(256, 512, 56, 56, 3, 1, 1),
+        pool(512, 28, 28, 2, 2),
+    ];
+    for _ in 0..4 {
+        layers.push(conv(512, 256, 28, 28, 1, 1, 0));
+        layers.push(conv(256, 512, 28, 28, 3, 1, 1));
+    }
+    layers.push(conv(512, 512, 28, 28, 1, 1, 0));
+    layers.push(conv(512, 1024, 28, 28, 3, 1, 1));
+    layers.push(pool(1024, 14, 14, 2, 2));
+    for _ in 0..2 {
+        layers.push(conv(1024, 512, 14, 14, 1, 1, 0));
+        layers.push(conv(512, 1024, 14, 14, 3, 1, 1));
+    }
+    layers.push(conv(1024, 1024, 14, 14, 3, 1, 1));
+    layers.push(conv(1024, 1024, 7, 7, 3, 2, 1));
+    layers.push(conv(1024, 1024, 7, 7, 3, 1, 1));
+    layers.push(conv(1024, 1024, 7, 7, 3, 1, 1));
+    layers.push(fc(50176, 4096));
+    layers.push(fc(4096, 1470));
+    Network {
+        name: "yolo".into(),
+        input: (3, 448, 448),
+        layers,
+    }
+}
+
+/// TinyCNN @ 32×32 — mirrors `python/compile/model.py::tinycnn` (the e2e
+/// serving artifact). Shapes must match the AOT manifest (integration-tested).
+pub fn tinycnn() -> Network {
+    Network {
+        name: "tinycnn".into(),
+        input: (3, 32, 32),
+        layers: vec![
+            conv(3, 16, 32, 32, 3, 1, 1),
+            pool(16, 16, 16, 2, 2),
+            conv(16, 32, 16, 16, 3, 1, 1),
+            pool(32, 8, 8, 2, 2),
+            conv(32, 32, 8, 8, 3, 1, 1),
+            pool(32, 4, 4, 2, 2),
+            fc(512, 10),
+        ],
+    }
+}
+
+/// LeNet-5 @ 28×28 — mirrors the Python zoo.
+pub fn lenet() -> Network {
+    Network {
+        name: "lenet".into(),
+        input: (1, 28, 28),
+        layers: vec![
+            conv(1, 6, 28, 28, 5, 1, 2),
+            pool(6, 14, 14, 2, 2),
+            conv(6, 16, 10, 10, 5, 1, 0),
+            pool(16, 5, 5, 2, 2),
+            fc(400, 120),
+            fc(120, 84),
+            fc(84, 10),
+        ],
+    }
+}
+
+/// VGG-micro @ 32×32 — mirrors the Python zoo (deep-pipeline artifact).
+pub fn vgg_micro() -> Network {
+    Network {
+        name: "vgg_micro".into(),
+        input: (3, 32, 32),
+        layers: vec![
+            conv(3, 16, 32, 32, 3, 1, 1),
+            conv(16, 16, 32, 32, 3, 1, 1),
+            pool(16, 16, 16, 2, 2),
+            conv(16, 32, 16, 16, 3, 1, 1),
+            conv(32, 32, 16, 16, 3, 1, 1),
+            pool(32, 8, 8, 2, 2),
+            conv(32, 48, 8, 8, 3, 1, 1),
+            conv(48, 48, 8, 8, 3, 1, 1),
+            pool(48, 4, 4, 2, 2),
+            fc(768, 10),
+        ],
+    }
+}
+
+/// Look a network up by zoo name.
+pub fn by_name(name: &str) -> crate::Result<Network> {
+    let net = match name {
+        "vgg16" => vgg16(),
+        "alexnet" => alexnet(),
+        "zf" => zf(),
+        "yolo" => yolo(),
+        "tinycnn" => tinycnn(),
+        "lenet" => lenet(),
+        "vgg_micro" => vgg_micro(),
+        other => anyhow::bail!(
+            "unknown network '{other}' (zoo: vgg16 alexnet zf yolo tinycnn lenet vgg_micro)"
+        ),
+    };
+    Ok(net)
+}
+
+/// The four Table I evaluation networks.
+pub fn paper_nets() -> Vec<Network> {
+    vec![vgg16(), alexnet(), zf(), yolo()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_gop(net: &Network, paper: f64, tol: f64) {
+        let got = net.gops();
+        assert!(
+            (got - paper).abs() / paper < tol,
+            "{}: {got:.2} GOP vs paper {paper:.2}",
+            net.name
+        );
+    }
+
+    #[test]
+    fn all_zoo_nets_validate() {
+        for n in [
+            vgg16(),
+            alexnet(),
+            zf(),
+            yolo(),
+            tinycnn(),
+            lenet(),
+            vgg_micro(),
+        ] {
+            n.validate().unwrap_or_else(|e| panic!("{}: {e}", n.name));
+        }
+    }
+
+    #[test]
+    fn complexity_matches_table1() {
+        assert_gop(&vgg16(), 30.94, 0.02);
+        assert_gop(&alexnet(), 1.45, 0.02);
+        assert_gop(&zf(), 2.34, 0.02);
+        assert_gop(&yolo(), 40.14, 0.02);
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_3_fcs() {
+        let n = vgg16();
+        let convs = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l, super::super::Layer::Conv(_)))
+            .count();
+        let fcs = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l, super::super::Layer::Fc(_)))
+            .count();
+        assert_eq!((convs, fcs), (13, 3));
+    }
+
+    #[test]
+    fn yolo_has_24_convs() {
+        let n = yolo();
+        let convs = n
+            .layers
+            .iter()
+            .filter(|l| matches!(l, super::super::Layer::Conv(_)))
+            .count();
+        assert_eq!(convs, 24);
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for name in ["vgg16", "alexnet", "zf", "yolo", "tinycnn", "lenet", "vgg_micro"] {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
+        assert!(by_name("resnet50").is_err());
+    }
+}

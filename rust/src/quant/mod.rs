@@ -1,0 +1,118 @@
+//! Fixed-point arithmetic: the paper's Sec. 3.3 datapath in Rust.
+//!
+//! Two roles:
+//!
+//! 1. **Mode bookkeeping** — [`QuantMode`] encodes the DSP48E1 packing rule
+//!    the whole framework hangs off: one DSP does *one* 16-bit or *two*
+//!    8-bit multiplies per cycle, so the multiplier budget is
+//!    `Θ = DSPs × mults_per_dsp` (paper Sec. 4.1).
+//! 2. **Golden datapath** — [`conv_fixed`]/[`fc_fixed`] are a from-scratch
+//!    Rust implementation of the channel-wise-aligned fixed-point MAC
+//!    pipeline. The integration tests run the same golden frames through
+//!    (a) this code, (b) the AOT-compiled Pallas HLO via PJRT, and (c) the
+//!    Python oracle's files — three independent implementations that must
+//!    agree bit-exactly.
+
+pub mod ops;
+
+
+/// Quantization mode: storage width of weights and activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    /// 8-bit weights/activations, 32-bit partial sums.
+    W8A8,
+    /// 16-bit weights/activations, wide partial sums.
+    W16A16,
+}
+
+impl QuantMode {
+    /// Multiplications one DSP48E1 performs per cycle (paper Sec. 4.1:
+    /// 25×18 slice → 1 multiply at 16-bit, 2 at 8-bit).
+    pub fn mults_per_dsp(&self) -> usize {
+        match self {
+            QuantMode::W8A8 => 2,
+            QuantMode::W16A16 => 1,
+        }
+    }
+
+    /// Activation/weight storage bytes.
+    pub fn act_bytes(&self) -> usize {
+        match self {
+            QuantMode::W8A8 => 1,
+            QuantMode::W16A16 => 2,
+        }
+    }
+
+    /// Storage bits.
+    pub fn bits(&self) -> usize {
+        self.act_bytes() * 8
+    }
+
+    /// Parse `8`/`16`.
+    pub fn from_bits(bits: usize) -> crate::Result<Self> {
+        match bits {
+            8 => Ok(QuantMode::W8A8),
+            16 => Ok(QuantMode::W16A16),
+            other => anyhow::bail!("unsupported quantization width: {other} (8 or 16)"),
+        }
+    }
+}
+
+impl std::fmt::Display for QuantMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}b", self.bits())
+    }
+}
+
+/// Saturate a wide accumulator to the signed `bits` range — the RTL
+/// truncate-with-saturation on the psum → activation conversion.
+pub fn saturate(v: i64, bits: usize) -> i64 {
+    let hi = (1i64 << (bits - 1)) - 1;
+    let lo = -(1i64 << (bits - 1));
+    v.clamp(lo, hi)
+}
+
+/// Arithmetic right shift: the RTL barrel shifter (floor semantics — tested
+/// against the Pallas kernel's `>>`).
+pub fn arshift(v: i64, shift: u32) -> i64 {
+    v >> shift
+}
+
+/// Scale a psum to activation width: shift then saturate (paper Sec. 3.3
+/// "partial sums should be right shifted and truncated for scaling down").
+pub fn shift_sat(psum: i64, rshift: u32, bits: usize) -> i64 {
+    saturate(arshift(psum, rshift), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_rule_matches_dsp48e1() {
+        assert_eq!(QuantMode::W8A8.mults_per_dsp(), 2);
+        assert_eq!(QuantMode::W16A16.mults_per_dsp(), 1);
+    }
+
+    #[test]
+    fn arshift_is_floor_not_trunc() {
+        assert_eq!(arshift(-1, 1), -1); // floor(-0.5) = -1
+        assert_eq!(arshift(-3, 1), -2);
+        assert_eq!(arshift(3, 1), 1);
+    }
+
+    #[test]
+    fn saturate_clamps_both_rails() {
+        assert_eq!(saturate(1000, 8), 127);
+        assert_eq!(saturate(-1000, 8), -128);
+        assert_eq!(saturate(100, 8), 100);
+        assert_eq!(saturate(40_000, 16), 32_767);
+    }
+
+    #[test]
+    fn from_bits_round_trips() {
+        assert_eq!(QuantMode::from_bits(8).unwrap(), QuantMode::W8A8);
+        assert_eq!(QuantMode::from_bits(16).unwrap(), QuantMode::W16A16);
+        assert!(QuantMode::from_bits(4).is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Golden fixed-point operators: the engine datapath, from scratch in Rust.
+//!
+//! These are intentionally *naive* nested loops — clarity over speed — so
+//! they can serve as the third independent implementation of the paper's
+//! Sec. 3.3 arithmetic (alongside the Pallas kernel and the jnp oracle).
+//! The integration test `rust/tests/runtime_golden.rs` checks all three
+//! agree on the AOT golden frames.
+
+use super::{shift_sat, QuantMode};
+
+/// A tensor of activations in CHW layout, stored as `i64` regardless of the
+/// declared mode (values always fit the mode's range).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chw {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i64>,
+}
+
+impl Chw {
+    /// Zero-initialized tensor.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Chw {
+            c,
+            h,
+            w,
+            data: vec![0; c * h * w],
+        }
+    }
+
+    /// Build from raw i8 bytes (the AOT golden file layout).
+    pub fn from_i8(c: usize, h: usize, w: usize, bytes: &[i8]) -> Self {
+        assert_eq!(bytes.len(), c * h * w);
+        Chw {
+            c,
+            h,
+            w,
+            data: bytes.iter().map(|&b| b as i64).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> i64 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: i64) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Padded read: outside the map returns 0 (the controller's zeroMac).
+    #[inline]
+    pub fn get_padded(&self, c: usize, y: isize, x: isize) -> i64 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.get(c, y as usize, x as usize)
+        }
+    }
+}
+
+/// Per-layer fixed-point parameters (mirror of Python `ConvParams`).
+#[derive(Debug, Clone)]
+pub struct ConvParams {
+    /// Weights `[M][C][R][S]` flattened.
+    pub w: Vec<i64>,
+    pub m: usize,
+    pub c: usize,
+    pub r: usize,
+    pub s: usize,
+    /// `[M]` int32 bias in accumulator format.
+    pub bias: Vec<i64>,
+    /// `[C]` per-input-channel alignment left shifts.
+    pub lshift: Vec<u32>,
+    /// `[M]` per-output-channel scaling right shifts.
+    pub rshift: Vec<u32>,
+}
+
+impl ConvParams {
+    #[inline]
+    fn weight(&self, m: usize, c: usize, r: usize, s: usize) -> i64 {
+        self.w[((m * self.c + c) * self.r + r) * self.s + s]
+    }
+}
+
+/// Fixed-point convolution: `out = sat((Σ (x<<ls)·w + bias) >> rs)`, ReLU
+/// optional. The paper's engine, loop-by-loop.
+pub fn conv_fixed(
+    x: &Chw,
+    p: &ConvParams,
+    stride: usize,
+    pad: usize,
+    mode: QuantMode,
+    relu: bool,
+) -> Chw {
+    assert_eq!(x.c, p.c, "channel mismatch");
+    let h_out = (x.h + 2 * pad - p.r) / stride + 1;
+    let w_out = (x.w + 2 * pad - p.s) / stride + 1;
+    let mut out = Chw::zeros(p.m, h_out, w_out);
+    let bits = mode.bits();
+    for m in 0..p.m {
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut psum: i64 = p.bias[m];
+                for c in 0..p.c {
+                    let xs = p.lshift[c];
+                    for r in 0..p.r {
+                        for s in 0..p.s {
+                            let iy = (oy * stride + r) as isize - pad as isize;
+                            let ix = (ox * stride + s) as isize - pad as isize;
+                            let xv = x.get_padded(c, iy, ix) << xs;
+                            psum += xv * p.weight(m, c, r, s);
+                        }
+                    }
+                }
+                let mut v = shift_sat(psum, p.rshift[m], bits);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out.set(m, oy, ox, v);
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point max pooling.
+pub fn maxpool_fixed(x: &Chw, r: usize, stride: usize) -> Chw {
+    let h_out = (x.h - r) / stride + 1;
+    let w_out = (x.w - r) / stride + 1;
+    let mut out = Chw::zeros(x.c, h_out, w_out);
+    for c in 0..x.c {
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut best = i64::MIN;
+                for dy in 0..r {
+                    for dx in 0..r {
+                        best = best.max(x.get(c, oy * stride + dy, ox * stride + dx));
+                    }
+                }
+                out.set(c, oy, ox, best);
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point fully-connected layer. `w` is `[n_out][n_in]` flattened.
+pub fn fc_fixed(
+    x: &[i64],
+    w: &[i64],
+    bias: &[i64],
+    rshift: &[u32],
+    mode: QuantMode,
+    relu: bool,
+) -> Vec<i64> {
+    let n_in = x.len();
+    let n_out = bias.len();
+    assert_eq!(w.len(), n_in * n_out);
+    let bits = mode.bits();
+    (0..n_out)
+        .map(|o| {
+            let mut psum = bias[o];
+            for (i, &xi) in x.iter().enumerate() {
+                psum += xi * w[o * n_in + i];
+            }
+            let mut v = shift_sat(psum, rshift[o], bits);
+            if relu && v < 0 {
+                v = 0;
+            }
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity_params(c: usize) -> ConvParams {
+        // 1x1 identity kernel on channel 0
+        ConvParams {
+            w: (0..c).map(|i| if i == 0 { 1 } else { 0 }).collect(),
+            m: 1,
+            c,
+            r: 1,
+            s: 1,
+            bias: vec![0],
+            lshift: vec![0; c],
+            rshift: vec![0],
+        }
+    }
+
+    #[test]
+    fn identity_conv_passes_through() {
+        let mut x = Chw::zeros(2, 3, 3);
+        for i in 0..9 {
+            x.set(0, i / 3, i % 3, i as i64 - 4);
+        }
+        let y = conv_fixed(&x, &identity_params(2), 1, 0, QuantMode::W8A8, false);
+        assert_eq!(y.data, x.data[..9]);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = Chw::zeros(1, 1, 1);
+        x.set(0, 0, 0, -5);
+        let y = conv_fixed(&x, &identity_params(1), 1, 0, QuantMode::W8A8, true);
+        assert_eq!(y.data, vec![0]);
+    }
+
+    #[test]
+    fn lshift_aligns_channels() {
+        // two channels, both weight 1; channel 1 shifted left by 2
+        let p = ConvParams {
+            w: vec![1, 1],
+            m: 1,
+            c: 2,
+            r: 1,
+            s: 1,
+            bias: vec![0],
+            lshift: vec![0, 2],
+            rshift: vec![0],
+        };
+        let mut x = Chw::zeros(2, 1, 1);
+        x.set(0, 0, 0, 3);
+        x.set(1, 0, 0, 5);
+        let y = conv_fixed(&x, &p, 1, 0, QuantMode::W8A8, false);
+        assert_eq!(y.data, vec![3 + (5 << 2)]);
+    }
+
+    #[test]
+    fn padding_reads_zero() {
+        let p = ConvParams {
+            w: vec![1; 9],
+            m: 1,
+            c: 1,
+            r: 3,
+            s: 3,
+            bias: vec![0],
+            lshift: vec![0],
+            rshift: vec![0],
+        };
+        let mut x = Chw::zeros(1, 1, 1);
+        x.set(0, 0, 0, 7);
+        let y = conv_fixed(&x, &p, 1, 1, QuantMode::W8A8, false);
+        assert_eq!(y.data, vec![7]); // only the centre tap lands on data
+    }
+
+    #[test]
+    fn maxpool_takes_window_max() {
+        let mut x = Chw::zeros(1, 2, 2);
+        for (i, v) in [-3, 9, 2, 5].iter().enumerate() {
+            x.set(0, i / 2, i % 2, *v);
+        }
+        let y = maxpool_fixed(&x, 2, 2);
+        assert_eq!(y.data, vec![9]);
+    }
+
+    #[test]
+    fn fc_shift_saturates() {
+        let y = fc_fixed(
+            &[100, 100],
+            &[100, 100, 1, 0],
+            &[0, 0],
+            &[0, 0],
+            QuantMode::W8A8,
+            false,
+        );
+        assert_eq!(y, vec![127, 100]); // 20000 saturates, 100 passes
+    }
+}

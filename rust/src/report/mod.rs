@@ -1,0 +1,239 @@
+//! Table I regeneration: utilization + performance for the four paper
+//! networks across the four architectures, with the paper's published
+//! numbers printed alongside for comparison (EXPERIMENTS.md records both).
+
+use crate::alloc::{allocator_for, ArchKind};
+use crate::board::{zc706, Board};
+use crate::model::{zoo, Network};
+use crate::power::PowerModel;
+use crate::quant::QuantMode;
+use crate::sim;
+
+/// One regenerated Table I column (a net × arch design point).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub net: String,
+    pub arch: ArchKind,
+    pub freq_mhz: f64,
+    pub dsps: usize,
+    pub lut_pct: f64,
+    pub ff_pct: f64,
+    pub bram_pct: f64,
+    pub dsp_efficiency: f64,
+    pub gops_16b: f64,
+    pub fps_16b: f64,
+    pub gops_8b: f64,
+    pub fps_8b: f64,
+    pub power_w: f64,
+    pub gops_per_w_16b: f64,
+    /// Simulator cross-check: measured DSP efficiency.
+    pub sim_dsp_efficiency: f64,
+}
+
+/// Paper Table I reference values: (net, reference label, dsp_eff %, GOPS
+/// 16b, FPS 16b, GOPS 8b, power W). `None` = not reported ("/" in Table I).
+pub struct PaperRef {
+    pub net: &'static str,
+    pub label: &'static str,
+    pub dsps: usize,
+    pub dsp_eff: f64,
+    pub gops_16b: f64,
+    pub fps_16b: f64,
+    pub gops_8b: Option<f64>,
+    pub power_w: Option<f64>,
+}
+
+/// The published Table I (all on ZC706-class parts).
+pub const PAPER_TABLE1: &[PaperRef] = &[
+    PaperRef { net: "vgg16", label: "[1] recurrent", dsps: 780, dsp_eff: 0.585, gops_16b: 137.0, fps_16b: 4.4, gops_8b: Some(274.0), power_w: Some(9.63) },
+    PaperRef { net: "vgg16", label: "[2] fusion", dsps: 824, dsp_eff: 0.696, gops_16b: 230.0, fps_16b: 7.4, gops_8b: None, power_w: Some(9.4) },
+    PaperRef { net: "vgg16", label: "[3] DNNBuilder", dsps: 680, dsp_eff: 0.962, gops_16b: 262.0, fps_16b: 8.5, gops_8b: Some(524.0), power_w: Some(7.2) },
+    PaperRef { net: "vgg16", label: "This Work", dsps: 900, dsp_eff: 0.980, gops_16b: 353.0, fps_16b: 11.3, gops_8b: Some(706.0), power_w: Some(7.2) },
+    PaperRef { net: "alexnet", label: "[3] DNNBuilder", dsps: 808, dsp_eff: 0.763, gops_16b: 247.0, fps_16b: 170.0, gops_8b: Some(494.0), power_w: Some(7.2) },
+    PaperRef { net: "alexnet", label: "This Work", dsps: 864, dsp_eff: 0.904, gops_16b: 312.0, fps_16b: 230.0, gops_8b: Some(624.0), power_w: Some(6.9) },
+    PaperRef { net: "zf", label: "[3] DNNBuilder", dsps: 824, dsp_eff: 0.797, gops_16b: 263.0, fps_16b: 112.2, gops_8b: Some(526.0), power_w: None },
+    PaperRef { net: "zf", label: "This Work", dsps: 892, dsp_eff: 0.908, gops_16b: 324.0, fps_16b: 138.4, gops_8b: Some(648.0), power_w: Some(7.1) },
+    PaperRef { net: "yolo", label: "[3] DNNBuilder", dsps: 680, dsp_eff: 0.962, gops_16b: 234.0, fps_16b: 5.8, gops_8b: Some(468.0), power_w: None },
+    PaperRef { net: "yolo", label: "This Work", dsps: 892, dsp_eff: 0.984, gops_16b: 351.0, fps_16b: 8.8, gops_8b: Some(702.0), power_w: Some(7.3) },
+];
+
+/// Build one design point (allocating, simulating, estimating power).
+pub fn design_point(net: &Network, board: &Board, arch: ArchKind) -> crate::Result<Row> {
+    let a16 = allocator_for(arch).allocate(net, board, QuantMode::W16A16)?;
+    let r16 = a16.evaluate();
+    let a8 = allocator_for(arch).allocate(net, board, QuantMode::W8A8)?;
+    let r8 = a8.evaluate();
+    let s16 = sim::simulate(&a16, 3);
+    let power = PowerModel::default().estimate(&a16, &r16).total();
+    Ok(Row {
+        net: net.name.clone(),
+        arch,
+        freq_mhz: a16.freq_hz / 1e6,
+        dsps: r16.dsps,
+        lut_pct: 100.0 * r16.luts as f64 / board.luts as f64,
+        ff_pct: 100.0 * r16.ffs as f64 / board.ffs as f64,
+        bram_pct: 100.0 * r16.bram18 as f64 / board.bram18() as f64,
+        dsp_efficiency: r16.dsp_efficiency,
+        gops_16b: r16.gops,
+        fps_16b: r16.fps,
+        gops_8b: r8.gops,
+        fps_8b: r8.fps,
+        power_w: power,
+        gops_per_w_16b: r16.gops / power,
+        sim_dsp_efficiency: s16.dsp_efficiency,
+    })
+}
+
+/// Regenerate the full Table I (4 nets × 4 architectures on ZC706).
+pub fn table1() -> crate::Result<Vec<Row>> {
+    let board = zc706();
+    let mut rows = Vec::new();
+    for net in zoo::paper_nets() {
+        for arch in [
+            ArchKind::Recurrent,
+            ArchKind::Fusion,
+            ArchKind::DnnBuilder,
+            ArchKind::FlexPipeline,
+        ] {
+            rows.push(design_point(&net, &board, arch)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Render rows as an aligned text table, paper references interleaved.
+pub fn render(rows: &[Row], with_paper: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:<16} {:>5} {:>5} {:>6} {:>6} {:>6} {:>8} {:>8} {:>7} {:>8} {:>7} {:>7} {:>8}\n",
+        "model", "arch", "MHz", "DSP", "LUT%", "FF%", "BRAM%", "DSPeff%", "GOPS16", "FPS16",
+        "GOPS8", "FPS8", "W", "GOPS/W"
+    ));
+    out.push_str(&"-".repeat(126));
+    out.push('\n');
+    let mut last_net = String::new();
+    for r in rows {
+        if with_paper && r.net != last_net {
+            for p in PAPER_TABLE1.iter().filter(|p| p.net == r.net) {
+                out.push_str(&format!(
+                    "{:<10} {:<16} {:>5} {:>5} {:>6} {:>6} {:>6} {:>8.1} {:>8.0} {:>7.1} {:>8} {:>7} {:>7} {:>8}\n",
+                    r.net,
+                    format!("paper:{}", p.label),
+                    "",
+                    p.dsps,
+                    "",
+                    "",
+                    "",
+                    p.dsp_eff * 100.0,
+                    p.gops_16b,
+                    p.fps_16b,
+                    p.gops_8b.map_or("/".into(), |g| format!("{g:.0}")),
+                    "",
+                    p.power_w.map_or("/".into(), |w| format!("{w:.1}")),
+                    ""
+                ));
+            }
+            last_net = r.net.clone();
+        }
+        out.push_str(&format!(
+            "{:<10} {:<16} {:>5.0} {:>5} {:>6.1} {:>6.1} {:>6.1} {:>8.1} {:>8.0} {:>7.1} {:>8.0} {:>7.1} {:>7.2} {:>8.1}\n",
+            r.net,
+            r.arch.label(),
+            r.freq_mhz,
+            r.dsps,
+            r.lut_pct,
+            r.ff_pct,
+            r.bram_pct,
+            r.dsp_efficiency * 100.0,
+            r.gops_16b,
+            r.fps_16b,
+            r.gops_8b,
+            r.fps_8b,
+            r.power_w,
+            r.gops_per_w_16b
+        ));
+    }
+    out
+}
+
+/// The paper's Sec. 5.2 headline ratios for VGG16 (this work vs [1],[2],[3]).
+pub fn vgg16_speedups(rows: &[Row]) -> Option<(f64, f64, f64)> {
+    let get = |a: ArchKind| {
+        rows.iter()
+            .find(|r| r.net == "vgg16" && r.arch == a)
+            .map(|r| r.gops_16b)
+    };
+    let ours = get(ArchKind::FlexPipeline)?;
+    Some((
+        ours / get(ArchKind::Recurrent)?,
+        ours / get(ArchKind::Fusion)?,
+        ours / get(ArchKind::DnnBuilder)?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn this_work_beats_every_baseline_on_every_net() {
+        let rows = table1().unwrap();
+        for net in ["vgg16", "alexnet", "zf", "yolo"] {
+            let ours = rows
+                .iter()
+                .find(|r| r.net == net && r.arch == ArchKind::FlexPipeline)
+                .unwrap();
+            for r in rows.iter().filter(|r| r.net == net) {
+                if r.arch != ArchKind::FlexPipeline {
+                    assert!(
+                        ours.gops_16b > r.gops_16b,
+                        "{net}: flex {:.0} GOPS must beat {} {:.0}",
+                        ours.gops_16b,
+                        r.arch.label(),
+                        r.gops_16b
+                    );
+                }
+            }
+            // Paper's band: >90% DSP efficiency for all four nets. Our
+            // exact-cycle model lands 82–96%: YOLO sits on an integer
+            // phase-count plateau (every stage tied at the same cycle
+            // count, intra-efficiency 1.0, too few spare DSPs to buy the
+            // next divisor step) and pays a bandwidth-ceiling penalty the
+            // closed form now models — see EXPERIMENTS.md §Deviations.
+            assert!(
+                ours.dsp_efficiency > 0.80,
+                "{net}: efficiency {:.2}",
+                ours.dsp_efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn vgg16_ratio_shape_matches_paper() {
+        // Paper: 2.58x vs [1], 1.53x vs [2], 1.35x vs [3]. Substrates
+        // differ, so check ordering + rough bands, not exact values.
+        let rows = table1().unwrap();
+        let (r1, r2, r3) = vgg16_speedups(&rows).unwrap();
+        assert!(r1 > r2 && r2 > r3 && r3 > 1.0, "ordering: {r1:.2} {r2:.2} {r3:.2}");
+        assert!((1.5..5.0).contains(&r1), "vs [1]: {r1:.2} (paper 2.58)");
+        assert!((1.05..2.6).contains(&r2), "vs [2]: {r2:.2} (paper 1.53)");
+        assert!((1.05..2.0).contains(&r3), "vs [3]: {r3:.2} (paper 1.35)");
+    }
+
+    #[test]
+    fn render_contains_paper_rows() {
+        let rows = table1().unwrap();
+        let text = render(&rows, true);
+        assert!(text.contains("paper:This Work"));
+        assert!(text.contains("flex"));
+    }
+
+    #[test]
+    fn utilization_within_board() {
+        let rows = table1().unwrap();
+        for r in rows.iter().filter(|r| r.arch == ArchKind::FlexPipeline) {
+            assert!(r.lut_pct < 100.0 && r.bram_pct < 100.0 && r.ff_pct < 100.0,
+                "{}: {:?}", r.net, (r.lut_pct, r.ff_pct, r.bram_pct));
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json` emitted
+//! by `python/compile/aot.py` (the Python↔Rust interchange contract).
+
+use crate::util::json::{self, Value};
+use std::path::Path;
+
+/// Golden-file description for an artifact.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub frames: usize,
+    pub input: String,
+    pub output: String,
+    pub frame_elems: usize,
+    pub out_elems: usize,
+}
+
+/// One compiled executable variant (a net at a fixed batch size).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub net: String,
+    pub batch: usize,
+    pub bits: usize,
+    pub row_parallelism: usize,
+    pub hlo: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub golden: Golden,
+    pub hlo_sha256: String,
+}
+
+impl Artifact {
+    /// Total input elements per execution (batch × frame).
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Total output elements per execution.
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Parse from a JSON value.
+    pub fn from_json(v: &Value) -> crate::Result<Manifest> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'artifacts' must be an array"))?
+            .iter()
+            .map(parse_artifact)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Manifest { version, artifacts })
+    }
+
+    /// Load from disk.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    /// Find an artifact by exact name.
+    pub fn get(&self, name: &str) -> crate::Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact '{name}' (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Artifacts for a net, sorted by batch size ascending — the batcher
+    /// picks the largest compiled batch ≤ queue depth.
+    pub fn variants(&self, net: &str, bits: usize) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.net == net && a.bits == bits)
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+}
+
+fn parse_artifact(v: &Value) -> crate::Result<Artifact> {
+    let shape = |key: &str| -> crate::Result<Vec<usize>> {
+        v.req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be an array"))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' entries must be integers"))
+            })
+            .collect()
+    };
+    let g = v.req("golden")?;
+    let bits = match v.str_field("dtype")? {
+        "s8" => 8,
+        "s16" => 16,
+        other => anyhow::bail!("unsupported dtype '{other}'"),
+    };
+    anyhow::ensure!(v.usize_field("bits")? == bits, "bits/dtype mismatch");
+    Ok(Artifact {
+        name: v.str_field("name")?.to_string(),
+        net: v.str_field("net")?.to_string(),
+        batch: v.usize_field("batch")?,
+        bits,
+        row_parallelism: v.usize_field("row_parallelism")?,
+        hlo: v.str_field("hlo")?.to_string(),
+        input_shape: shape("input_shape")?,
+        output_shape: shape("output_shape")?,
+        golden: Golden {
+            frames: g.usize_field("frames")?,
+            input: g.str_field("input")?.to_string(),
+            output: g.str_field("output")?.to_string(),
+            frame_elems: g.usize_field("frame_elems")?,
+            out_elems: g.usize_field("out_elems")?,
+        },
+        hlo_sha256: v.str_field("hlo_sha256")?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{"version":1,"artifacts":[{
+            "name":"tinycnn_b2_8b","net":"tinycnn","batch":2,"bits":8,
+            "row_parallelism":2,"hlo":"tinycnn_b2_8b.hlo.txt",
+            "input_shape":[2,3,32,32],"output_shape":[2,10],"dtype":"s8",
+            "golden":{"frames":3,"input":"i.bin","output":"o.bin",
+                      "frame_elems":3072,"out_elems":10},
+            "hlo_sha256":"abc"}]}"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&json::parse(sample()).unwrap()).unwrap();
+        let a = m.get("tinycnn_b2_8b").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.input_elems(), 2 * 3072);
+        assert_eq!(a.output_elems(), 20);
+    }
+
+    #[test]
+    fn get_unknown_lists_available() {
+        let m = Manifest::from_json(&json::parse(sample()).unwrap()).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("tinycnn_b2_8b"));
+    }
+
+    #[test]
+    fn variants_sorted_by_batch() {
+        let mut m = Manifest::from_json(&json::parse(sample()).unwrap()).unwrap();
+        let mut a1 = m.artifacts[0].clone();
+        a1.name = "tinycnn_b8_8b".into();
+        a1.batch = 8;
+        m.artifacts.insert(0, a1);
+        let v = m.variants("tinycnn", 8);
+        assert_eq!(v.len(), 2);
+        assert!(v[0].batch < v[1].batch);
+        assert!(m.variants("tinycnn", 16).is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = sample().replace("\"version\":1", "\"version\":9");
+        assert!(Manifest::from_json(&json::parse(&bad).unwrap()).is_err());
+    }
+}

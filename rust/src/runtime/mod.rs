@@ -1,0 +1,176 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The interchange contract with `python/compile/aot.py` (see that file's
+//! docs): HLO **text** + `manifest.json`. Text is mandatory — jax ≥ 0.5
+//! serializes HloModuleProto with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Python never runs here: `Runtime::load` compiles every artifact once at
+//! startup (or lazily), and [`Runtime::execute_i8`] is the only thing on
+//! the request path.
+
+pub mod manifest;
+
+pub use manifest::{Artifact, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A loaded PJRT runtime serving one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    /// Compiled executables, keyed by artifact name (lazy, interior-mutable
+    /// so `execute` can take `&self` from the coordinator's worker thread).
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(
+        &self,
+        name: &str,
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.get(name)?;
+        let path = self.dir.join(&art.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-UTF-8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (startup warm-up so the serving path
+    /// never pays compilation latency).
+    pub fn warm_up(&self) -> crate::Result<()> {
+        for a in &self.manifest.artifacts {
+            self.executable(&a.name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an int8 artifact on a full batch of frames.
+    ///
+    /// `frames` must contain exactly `batch × frame_elems` values in CHW
+    /// layout (the golden-file layout). Returns `batch × out_elems` values.
+    pub fn execute_i8(&self, name: &str, frames: &[i8]) -> crate::Result<Vec<i8>> {
+        let art = self.manifest.get(name)?;
+        anyhow::ensure!(art.bits == 8, "{name} is not an 8-bit artifact");
+        let want = art.input_elems();
+        anyhow::ensure!(
+            frames.len() == want,
+            "{name}: expected {want} input elements, got {}",
+            frames.len()
+        );
+        let exe = self.executable(name)?;
+        // i8 has no NativeType impl in the crate (no vec1); build the
+        // literal from raw bytes instead (i8 and u8 share representation).
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(frames.as_ptr() as *const u8, frames.len()) };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            &art.input_shape,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("literal: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i8>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Read golden input frames for an artifact (testing/e2e).
+    pub fn golden_inputs(&self, name: &str) -> crate::Result<Vec<i8>> {
+        let art = self.manifest.get(name)?;
+        read_i8(self.dir.join(&art.golden.input))
+    }
+
+    /// Read golden outputs for an artifact (testing/e2e).
+    pub fn golden_outputs(&self, name: &str) -> crate::Result<Vec<i8>> {
+        let art = self.manifest.get(name)?;
+        read_i8(self.dir.join(&art.golden.output))
+    }
+}
+
+/// Read a little-endian i8 binary file.
+pub fn read_i8(path: impl AsRef<Path>) -> crate::Result<Vec<i8>> {
+    let bytes = std::fs::read(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+    Ok(bytes.into_iter().map(|b| b as i8).collect())
+}
+
+/// Default artifact directory: `$FLEXIPIPE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FLEXIPIPE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration-grade tests that need built artifacts live in
+    /// rust/tests/runtime_golden.rs; here only pure helpers.
+    #[test]
+    fn read_i8_round_trips_sign() {
+        let dir = std::env::temp_dir().join("flexipipe_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        std::fs::write(&p, [0u8, 127, 128, 255]).unwrap();
+        assert_eq!(read_i8(&p).unwrap(), vec![0, 127, -128, -1]);
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // (can't set env safely in parallel tests; just check the default)
+        assert!(default_artifact_dir().ends_with("artifacts") || std::env::var("FLEXIPIPE_ARTIFACTS").is_ok());
+    }
+}

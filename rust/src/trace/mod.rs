@@ -1,0 +1,98 @@
+//! Simulation traces: per-stage occupancy/stall series in CSV, the raw
+//! material for the paper's Fig. 1(b)-style timing diagrams and for
+//! debugging allocations (`flexipipe simulate --trace out.csv`).
+
+use crate::alloc::Allocation;
+use crate::sim::SimReport;
+use std::fmt::Write as _;
+
+/// One CSV row per stage with identity, configuration and measured cycles.
+pub fn stage_csv(alloc: &Allocation, sim: &SimReport) -> String {
+    let mut out = String::from(
+        "stage,layer,kind,cp,mp,k,mults,busy_cycles,weight_stall_cycles,groups,busy_frac\n",
+    );
+    for (i, (s, st)) in alloc.stages.iter().zip(&sim.stages).enumerate() {
+        let layer = &alloc.net.layers[s.layer_idx];
+        let busy_frac = st.busy_cycles as f64 / sim.makespan.max(1) as f64;
+        let _ = writeln!(
+            out,
+            "{i},{},{},{},{},{},{},{},{},{},{:.4}",
+            layer.label(),
+            match layer {
+                crate::model::Layer::Conv(_) => "conv",
+                crate::model::Layer::Pool(_) => "pool",
+                crate::model::Layer::Fc(_) => "fc",
+            },
+            s.cfg.cp,
+            s.cfg.mp,
+            s.cfg.k,
+            s.figures.mults,
+            st.busy_cycles,
+            st.stall_weights,
+            st.groups_done,
+            busy_frac
+        );
+    }
+    out
+}
+
+/// Aggregate allocation summary as a CSV row (for sweep scripts).
+pub fn summary_csv_header() -> &'static str {
+    "net,board,arch,bits,fps,gops,dsps,dsp_eff,bram18,luts,ffs,ddr_gbps\n"
+}
+
+/// One summary row.
+pub fn summary_csv_row(alloc: &Allocation) -> String {
+    let r = alloc.evaluate();
+    format!(
+        "{},{},{},{},{:.3},{:.1},{},{:.4},{},{},{},{:.3}\n",
+        alloc.net.name,
+        alloc.board.name,
+        alloc.arch.label(),
+        alloc.mode.bits(),
+        r.fps,
+        r.gops,
+        r.dsps,
+        r.dsp_efficiency,
+        r.bram18,
+        r.luts,
+        r.ffs,
+        r.ddr_bytes_per_sec / 1e9
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{allocator_for, ArchKind};
+    use crate::board::zc706;
+    use crate::model::zoo;
+    use crate::quant::QuantMode;
+    use crate::sim;
+
+    #[test]
+    fn stage_csv_has_row_per_stage() {
+        let alloc = allocator_for(ArchKind::FlexPipeline)
+            .allocate(&zoo::tinycnn(), &zc706(), QuantMode::W16A16)
+            .unwrap();
+        let s = sim::simulate(&alloc, 2);
+        let csv = stage_csv(&alloc, &s);
+        assert_eq!(csv.lines().count(), 1 + alloc.stages.len());
+        assert!(csv.lines().nth(1).unwrap().contains("conv"));
+    }
+
+    #[test]
+    fn summary_row_parses_back() {
+        let alloc = allocator_for(ArchKind::FlexPipeline)
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let row = summary_csv_row(&alloc);
+        let fields: Vec<&str> = row.trim().split(',').collect();
+        assert_eq!(
+            fields.len(),
+            summary_csv_header().trim().split(',').count()
+        );
+        assert_eq!(fields[0], "lenet");
+        assert!(fields[4].parse::<f64>().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal criterion-style bench harness (substrate — no criterion in the
+//! offline vendor set). Used by the `harness = false` targets under
+//! `rust/benches/`.
+//!
+//! Measures wall time with warmup, adaptive iteration count, and reports
+//! mean / p50 / p95 per iteration plus a user-supplied throughput unit.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Summary {
+    fn fmt_dur(d: Duration) -> String {
+        let ns = d.as_nanos();
+        if ns < 10_000 {
+            format!("{ns} ns")
+        } else if ns < 10_000_000 {
+            format!("{:.2} µs", ns as f64 / 1e3)
+        } else if ns < 10_000_000_000 {
+            format!("{:.2} ms", ns as f64 / 1e6)
+        } else {
+            format!("{:.2} s", ns as f64 / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            Self::fmt_dur(self.mean),
+            Self::fmt_dur(self.p50),
+            Self::fmt_dur(self.p95),
+            self.iters
+        )
+    }
+}
+
+/// Bench runner with a fixed time budget per benchmark.
+pub struct Bench {
+    /// Target measurement time per benchmark.
+    pub budget: Duration,
+    /// Collected summaries (for a final table).
+    pub results: Vec<Summary>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    /// Construct with a per-benchmark time budget (seconds).
+    pub fn with_budget_secs(s: f64) -> Self {
+        Bench {
+            budget: Duration::from_secs_f64(s),
+            ..Default::default()
+        }
+    }
+
+    /// Run one benchmark; `f` must do one full unit of work per call and
+    /// return something (guards against dead-code elimination).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Summary {
+        // Warmup: one call to estimate per-iter cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let est = t0.elapsed().max(Duration::from_nanos(50));
+
+        let target_iters = (self.budget.as_secs_f64() / est.as_secs_f64()).clamp(1.0, 1e6) as usize;
+        let mut times = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let s = Summary {
+            name: name.to_string(),
+            iters: times.len(),
+            mean: total / times.len() as u32,
+            p50: times[times.len() / 2],
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+        };
+        println!("{s}");
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    /// Print a closing rule (cosmetic parity with criterion's output).
+    pub fn finish(&self) {
+        println!("{} benchmarks, done", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::with_budget_secs(0.05);
+        let s = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 1);
+        assert!(s.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(Summary::fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(Summary::fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(Summary::fmt_dur(Duration::from_millis(50)).contains("ms"));
+    }
+}

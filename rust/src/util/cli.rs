@@ -1,0 +1,175 @@
+//! Tiny CLI argument parser (substrate — no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! collects unknown-option errors and auto-generates usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option/flag declaration for validation + usage text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    /// `--name`.
+    pub name: &'static str,
+    /// Takes a value?
+    pub takes_value: bool,
+    /// Usage line help.
+    pub help: &'static str,
+    /// Default shown in help (informational).
+    pub default: Option<&'static str>,
+}
+
+/// Declare an option that takes a value.
+pub const fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> Spec {
+    Spec {
+        name,
+        takes_value: true,
+        help,
+        default,
+    }
+}
+
+/// Declare a boolean flag.
+pub const fn flag(name: &'static str, help: &'static str) -> Spec {
+    Spec {
+        name,
+        takes_value: false,
+        help,
+        default: None,
+    }
+}
+
+impl Args {
+    /// Parse `argv` (no program name) against the declared specs.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", usage(specs)))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    anyhow::ensure!(inline.is_none(), "--{name} takes no value");
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Option value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Option value or default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parsed numeric option.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{name}: '{v}'")),
+        }
+    }
+
+    /// Was the flag passed?
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a spec set.
+pub fn usage(specs: &[Spec]) -> String {
+    let mut s = String::from("options:\n");
+    for spec in specs {
+        let val = if spec.takes_value { " <value>" } else { "" };
+        let def = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\t{}{def}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            opt("model", "network name", Some("vgg16")),
+            opt("bits", "quantization", Some("16")),
+            flag("verbose", "more output"),
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(&sv(&["--model", "zf", "--bits=8", "--verbose", "extra"]), &specs())
+            .unwrap();
+        assert_eq!(a.get("model"), Some("zf"));
+        assert_eq!(a.get_parse::<usize>("bits", 16).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_options() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--model"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_or("model", "vgg16"), "vgg16");
+        assert_eq!(a.get_parse::<usize>("bits", 16).unwrap(), 16);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates replacing crates unavailable in the offline vendor
+//! set (DESIGN.md §5): JSON, CLI parsing, property testing, benchmarking.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,110 @@
+//! Tiny deterministic property-testing harness (substrate — no proptest in
+//! the offline vendor set).
+//!
+//! A [`Rng`] (xorshift64*, seeded per test) feeds generator closures; the
+//! [`check`] runner executes N cases and reports the failing case's inputs
+//! via the panic message of the property closure itself (generators should
+//! format inputs into assertions). Deterministic by construction: the same
+//! test sees the same cases on every run — no flakes, easy reproduction.
+
+/// xorshift64* PRNG — tiny, seedable, good enough for case generation.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded RNG (seed 0 is remapped — xorshift fixpoint).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed })
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn urange(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as i64, hi as i64) as usize
+    }
+
+    /// Pick one element.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.urange(0, items.len() - 1)]
+    }
+
+    /// Coin flip.
+    pub fn flip(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` deterministic property cases. The property closure receives
+/// a per-case RNG; it should `panic!`/`assert!` with enough context to
+/// reproduce (the case index is echoed by this runner on failure).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xF1E2_D3C4_B5A6_9788 ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut r = Rng::new(7);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(-2, 2);
+            assert!((-2..=2).contains(&v));
+            saw_lo |= v == -2;
+            saw_hi |= v == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn check_reports_failing_case() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+}

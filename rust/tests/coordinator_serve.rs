@@ -1,0 +1,125 @@
+//! Integration: the serving coordinator under concurrent load.
+
+use flexipipe::coordinator::{BatchPolicy, Coordinator};
+use flexipipe::runtime::{default_artifact_dir, read_i8, Manifest};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup() -> Option<(Manifest, Vec<i8>, Vec<i8>, usize, usize, usize)> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIPPED: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(dir.join("manifest.json")).unwrap();
+    let v = manifest.variants("tinycnn", 8);
+    let a = v[0];
+    let golden_in = read_i8(dir.join(&a.golden.input)).unwrap();
+    let golden_out = read_i8(dir.join(&a.golden.output)).unwrap();
+    let (e, o, n) = (a.golden.frame_elems, a.golden.out_elems, a.golden.frames);
+    Some((manifest, golden_in, golden_out, e, o, n))
+}
+
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let Some((_, golden_in, golden_out, elems, oe, n)) = setup() else {
+        return;
+    };
+    let coord = Arc::new(
+        Coordinator::start(
+            default_artifact_dir(),
+            "tinycnn",
+            8,
+            BatchPolicy {
+                max_wait: Duration::from_millis(2),
+                link_latency: Duration::ZERO,
+            },
+        )
+        .unwrap(),
+    );
+    let golden_in = Arc::new(golden_in);
+    let golden_out = Arc::new(golden_out);
+
+    let mut clients = Vec::new();
+    for t in 0..4 {
+        let coord = coord.clone();
+        let gin = golden_in.clone();
+        let gout = golden_out.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..24 {
+                let g = (t * 7 + i) % n;
+                let out = coord.infer(gin[g * elems..(g + 1) * elems].to_vec()).unwrap();
+                assert_eq!(
+                    out,
+                    &gout[g * oe..(g + 1) * oe],
+                    "client {t}, request {i} (golden frame {g})"
+                );
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.requests, 96);
+    // With 4 concurrent clients and a 2 ms window, at least some requests
+    // should have been coalesced into batches > 1.
+    assert!(
+        stats.batches <= stats.requests,
+        "batches {} > requests {}",
+        stats.batches,
+        stats.requests
+    );
+}
+
+#[test]
+fn submit_rejects_malformed_frames() {
+    let Some(_) = setup() else { return };
+    let coord = Coordinator::start(
+        default_artifact_dir(),
+        "tinycnn",
+        8,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    assert!(coord.submit(vec![0i8; 5]).is_err());
+}
+
+#[test]
+fn start_rejects_unknown_net() {
+    let Some(_) = setup() else { return };
+    let err = match Coordinator::start(
+        default_artifact_dir(),
+        "resnet152",
+        8,
+        BatchPolicy::default(),
+    ) {
+        Ok(_) => panic!("unknown net must not start"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("no artifacts"));
+}
+
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let Some((_, golden_in, _, elems, _, _)) = setup() else {
+        return;
+    };
+    let coord = Coordinator::start(
+        default_artifact_dir(),
+        "tinycnn",
+        8,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        rxs.push(coord.submit(golden_in[..elems].to_vec()).unwrap());
+    }
+    let stats = coord.shutdown();
+    // every submitted request got an answer before shutdown completed
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    assert_eq!(stats.requests, 8);
+}

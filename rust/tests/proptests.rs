@@ -1,0 +1,272 @@
+//! Property tests over the allocator/engine/simulator invariants
+//! (DESIGN.md §7), using the in-tree deterministic harness
+//! (`flexipipe::util::prop` — the offline vendor set has no proptest).
+
+use flexipipe::alloc::flex::{decompose, FlexAllocator};
+use flexipipe::alloc::Allocator;
+use flexipipe::board::{zc706, Board};
+use flexipipe::engine::linebuf::{frame_fits, LineBuffer};
+use flexipipe::model::{conv, fc, pool, Layer, Network};
+use flexipipe::quant::{self, QuantMode};
+use flexipipe::sim;
+use flexipipe::util::json;
+use flexipipe::util::prop::{check, Rng};
+
+/// Random small-but-valid network: alternating conv/pool with occasional
+/// trailing FC layers — the space Algorithm 1 must handle.
+fn random_net(rng: &mut Rng) -> Network {
+    let mut layers = Vec::new();
+    let mut c = *rng.pick(&[1usize, 3, 4]);
+    let mut h = *rng.pick(&[16usize, 28, 32, 56]);
+    let mut w = h;
+    let n_conv = rng.urange(1, 5);
+    for _ in 0..n_conv {
+        let m = *rng.pick(&[4usize, 8, 16, 24, 32, 64]);
+        let r = *rng.pick(&[1usize, 3, 5]);
+        let stride = if h > 8 && rng.flip() { 2 } else { 1 };
+        let pad = r / 2;
+        let oh = (h + 2 * pad - r) / stride + 1;
+        let ow = (w + 2 * pad - r) / stride + 1;
+        layers.push(conv(c, m, oh, ow, r, stride, pad));
+        c = m;
+        h = oh;
+        w = ow;
+        if h >= 4 && rng.flip() {
+            let ph = h / 2;
+            let pw = w / 2;
+            layers.push(pool(c, ph, pw, 2, 2));
+            h = ph;
+            w = pw;
+        }
+    }
+    if rng.flip() {
+        layers.push(fc(c * h * w, rng.urange(4, 64)));
+    }
+    Network {
+        name: "prop".into(),
+        input: (
+            match &layers[0] {
+                Layer::Conv(cv) => cv.c,
+                _ => c,
+            },
+            match &layers[0] {
+                Layer::Conv(cv) => (cv.h - 1) * cv.stride + cv.r - 2 * cv.pad,
+                _ => h,
+            },
+            match &layers[0] {
+                Layer::Conv(cv) => (cv.w - 1) * cv.stride + cv.s - 2 * cv.pad,
+                _ => w,
+            },
+        ),
+        layers,
+    }
+}
+
+fn random_board(rng: &mut Rng) -> Board {
+    let mut b = zc706();
+    b.dsps = rng.urange(64, 2048);
+    b.bram36 = rng.urange(200, 1200);
+    b.ddr_bytes_per_sec = rng.urange(2, 16) as f64 * 1e9;
+    b
+}
+
+#[test]
+fn prop_allocation_respects_board_budgets() {
+    check("dsp-budget", 60, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return; // generator produced degenerate geometry; skip
+        }
+        let board = random_board(rng);
+        let mode = *rng.pick(&[QuantMode::W8A8, QuantMode::W16A16]);
+        let alloc = FlexAllocator::default().allocate(&net, &board, mode).unwrap();
+        let r = alloc.evaluate();
+        assert!(
+            r.dsps <= board.dsps,
+            "net={net:?} used {} of {} DSPs",
+            r.dsps,
+            board.dsps
+        );
+        assert!(r.fps > 0.0 && r.gops.is_finite());
+    });
+}
+
+#[test]
+fn prop_decompose_within_dims_and_budget() {
+    check("decompose", 300, |rng| {
+        let c = rng.urange(1, 512);
+        let m = rng.urange(1, 512);
+        let rs = *rng.pick(&[1usize, 9, 25, 49, 121]);
+        let budget = rng.urange(rs, 4000);
+        let (cp, mp) = decompose(c, m, rs, budget);
+        assert!(cp >= 1 && cp <= c, "cp={cp} c={c}");
+        assert!(mp >= 1 && mp <= m, "mp={mp} m={m}");
+        assert!(
+            cp * mp * rs <= budget.max(rs),
+            "{cp}x{mp}x{rs} > budget {budget}"
+        );
+    });
+}
+
+#[test]
+fn prop_more_dsps_never_slower() {
+    check("monotone-dsps", 25, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return;
+        }
+        let mut small = zc706();
+        small.dsps = rng.urange(64, 512);
+        let mut big = small.clone();
+        big.dsps = small.dsps * 2;
+        let fs = FlexAllocator::default()
+            .allocate(&net, &small, QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        let fb = FlexAllocator::default()
+            .allocate(&net, &big, QuantMode::W16A16)
+            .unwrap()
+            .evaluate();
+        assert!(
+            fb.fps >= fs.fps * 0.999,
+            "doubling DSPs slowed {}: {} -> {}",
+            net.name,
+            fs.fps,
+            fb.fps
+        );
+    });
+}
+
+#[test]
+fn prop_sim_matches_closed_form_when_unconstrained() {
+    // On a bandwidth-rich board the simulated steady-state beat must agree
+    // with Eq. 2–4 closely (the DES validates the closed form).
+    check("sim-vs-closed-form", 15, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return;
+        }
+        let mut board = zc706();
+        board.dsps = rng.urange(128, 1024);
+        board.ddr_bytes_per_sec = 64e9; // effectively unconstrained
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let cf = alloc.evaluate();
+        let s = sim::simulate(&alloc, 4);
+        let ratio = s.cycles_per_frame / cf.t_frame_cycles as f64;
+        assert!(
+            (0.95..1.6).contains(&ratio),
+            "sim/cf ratio {ratio:.3} (cf={} sim={:.0}) for {:?}",
+            cf.t_frame_cycles,
+            s.cycles_per_frame,
+            net
+        );
+    });
+}
+
+#[test]
+fn prop_line_buffer_sizing_always_suffices() {
+    // The paper's R + G(K−1) + K_prev rowBuffers must survive a whole frame
+    // of concurrent reads/writes for any geometry.
+    check("linebuf", 300, |rng| {
+        let r = rng.urange(1, 7);
+        let g = rng.urange(1, 3);
+        let k = rng.urange(1, 6);
+        let kp = rng.urange(1, 6);
+        let h = rng.urange(r.max(g * k), 64);
+        let slots = LineBuffer::required_slots(r, g, k, kp);
+        frame_fits(slots, h, r, g, k, kp)
+            .unwrap_or_else(|e| panic!("r={r} g={g} k={k} kp={kp} h={h}: {e}"));
+    });
+}
+
+#[test]
+fn prop_shift_sat_matches_i128_reference() {
+    check("shift-sat", 500, |rng| {
+        let v = rng.range(i64::MIN / 4, i64::MAX / 4);
+        let shift = rng.urange(0, 31) as u32;
+        let bits = *rng.pick(&[8usize, 16]);
+        let got = quant::shift_sat(v, shift, bits);
+        // reference in i128
+        let shifted = (v as i128) >> shift;
+        let hi = (1i128 << (bits - 1)) - 1;
+        let lo = -(1i128 << (bits - 1));
+        let want = shifted.clamp(lo, hi) as i64;
+        assert_eq!(got, want, "v={v} shift={shift} bits={bits}");
+    });
+}
+
+#[test]
+fn prop_json_round_trip() {
+    fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match rng.urange(0, if depth > 2 { 3 } else { 5 }) {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.flip()),
+            2 => json::Value::Num(rng.range(-1_000_000, 1_000_000) as f64),
+            3 => json::Value::Str(
+                (0..rng.urange(0, 12))
+                    .map(|_| *rng.pick(&['a', 'Ω', '"', '\\', '\n', '7', '😀', ' ']))
+                    .collect(),
+            ),
+            4 => json::Value::Arr(
+                (0..rng.urange(0, 4))
+                    .map(|_| random_value(rng, depth + 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.urange(0, 4) {
+                    m.insert(format!("k{i}"), random_value(rng, depth + 1));
+                }
+                json::Value::Obj(m)
+            }
+        }
+    }
+    check("json-round-trip", 200, |rng| {
+        let v = random_value(rng, 0);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(v, back, "round trip failed for {text}");
+        // pretty printing must parse to the same value too
+        assert_eq!(json::parse(&v.to_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_quant_conv_identity_composition() {
+    // conv(identity kernel) ∘ conv(identity kernel) == identity (checks the
+    // golden Rust datapath composes without drift).
+    use flexipipe::quant::ops::{conv_fixed, Chw, ConvParams};
+    check("conv-identity", 50, |rng| {
+        let c = rng.urange(1, 4);
+        let h = rng.urange(2, 10);
+        let w = rng.urange(2, 10);
+        let mut x = Chw::zeros(c, h, w);
+        for ci in 0..c {
+            for y in 0..h {
+                for xi in 0..w {
+                    x.set(ci, y, xi, rng.range(-128, 127));
+                }
+            }
+        }
+        // identity: M=C, 1x1 kernel, w[m][c] = 1 iff m==c
+        let mut wv = vec![0i64; c * c];
+        for i in 0..c {
+            wv[i * c + i] = 1;
+        }
+        let p = ConvParams {
+            w: wv,
+            m: c,
+            c,
+            r: 1,
+            s: 1,
+            bias: vec![0; c],
+            lshift: vec![0; c],
+            rshift: vec![0; c],
+        };
+        let y = conv_fixed(&x, &p, 1, 0, QuantMode::W8A8, false);
+        let z = conv_fixed(&y, &p, 1, 0, QuantMode::W8A8, false);
+        assert_eq!(x.data, z.data);
+    });
+}

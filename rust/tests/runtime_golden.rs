@@ -1,0 +1,189 @@
+//! Integration: the Python↔Rust interchange contract, end to end.
+//!
+//! Loads the AOT artifacts (`make artifacts`), executes every 8-bit HLO on
+//! its golden inputs through PJRT, and checks the outputs are *bit-exact*
+//! against the Python oracle's files — the core correctness signal for the
+//! whole three-layer stack. Skips (with a loud message) when artifacts have
+//! not been built, so `cargo test` works in a fresh checkout.
+
+use flexipipe::runtime::{default_artifact_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIPPED: no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn every_artifact_matches_the_python_oracle_bit_exactly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let artifacts = rt.manifest().artifacts.clone();
+    assert!(!artifacts.is_empty());
+    for a in &artifacts {
+        if a.bits != 8 {
+            continue;
+        }
+        let input = rt.golden_inputs(&a.name).unwrap();
+        let golden = rt.golden_outputs(&a.name).unwrap();
+        let elems = a.golden.frame_elems;
+        let oe = a.golden.out_elems;
+        let mut frame = 0;
+        while frame + a.batch <= a.golden.frames {
+            let out = rt
+                .execute_i8(&a.name, &input[frame * elems..(frame + a.batch) * elems])
+                .unwrap();
+            assert_eq!(
+                out,
+                &golden[frame * oe..(frame + a.batch) * oe],
+                "{}: frames {}..{} diverge from the oracle",
+                a.name,
+                frame,
+                frame + a.batch
+            );
+            frame += a.batch;
+        }
+    }
+}
+
+#[test]
+fn batch_variants_agree_with_each_other() {
+    // The same frame through b1 and b8 artifacts must give the same answer
+    // (batching is a serving optimization, never a numerics change).
+    let Some(rt) = runtime_or_skip() else { return };
+    let v = rt.manifest().variants("tinycnn", 8);
+    if v.len() < 2 {
+        return;
+    }
+    let (small, big) = (v[0].clone(), v[v.len() - 1].clone());
+    let input = rt.golden_inputs(&small.name).unwrap();
+    let elems = small.golden.frame_elems;
+    let oe = small.golden.out_elems;
+
+    // big batch: first `batch` golden frames at once
+    let big_out = rt
+        .execute_i8(&big.name, &input[..big.batch * elems])
+        .unwrap();
+    for f in 0..big.batch.min(small.golden.frames) {
+        let small_out = rt
+            .execute_i8(&small.name, &input[f * elems..(f + 1) * elems])
+            .unwrap();
+        assert_eq!(
+            small_out,
+            &big_out[f * oe..(f + 1) * oe],
+            "batch-1 vs batch-{} disagree on frame {f}",
+            big.batch
+        );
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_input_size() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = rt.manifest().artifacts[0].clone();
+    let err = rt.execute_i8(&a.name, &[0i8; 3]).unwrap_err();
+    assert!(err.to_string().contains("elements"));
+}
+
+#[test]
+fn manifest_hashes_match_files() {
+    // The manifest's recorded sha256 must match the artifact actually on
+    // disk (stale-artifact detection).
+    let Some(rt) = runtime_or_skip() else { return };
+    let dir = default_artifact_dir();
+    for a in &rt.manifest().artifacts {
+        let text = std::fs::read_to_string(dir.join(&a.hlo)).unwrap();
+        let digest = sha256_hex(text.as_bytes());
+        assert_eq!(
+            digest, a.hlo_sha256,
+            "{}: artifact on disk does not match manifest (stale build?)",
+            a.name
+        );
+    }
+}
+
+/// Minimal SHA-256 (no crypto crates in the offline vendor set; this is the
+/// standard FIPS 180-4 compression, tested against the manifest itself).
+fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let mut msg = data.to_vec();
+    let bitlen = (data.len() as u64) * 8;
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    for chunk in msg.chunks(64) {
+        let mut w = [0u32; 64];
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes(chunk[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ ((!e) & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[test]
+fn sha256_known_vector() {
+    assert_eq!(
+        sha256_hex(b"abc"),
+        "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+    );
+}
