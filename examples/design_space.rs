@@ -1,88 +1,114 @@
 //! Design-space exploration: the framework's raison d'être (paper Sec. 4 —
 //! "customize flexible pipeline accelerator for given NN model and FPGA
-//! board"). Sweeps boards × models × precisions and prints the frontier,
-//! plus a DSP-budget sweep showing where each architecture's allocation
-//! quality crosses over.
+//! board"). Runs on the [`flexipipe::search`] engine: the board × model ×
+//! precision matrix fans out across worker threads with the per-model
+//! decomposition tables shared, then reduces to a Pareto frontier; the
+//! DSP-budget and bandwidth sweeps reuse the same API with budget
+//! overrides / mutated boards.
 //!
 //! ```bash
 //! cargo run --release --example design_space
 //! ```
 
-use flexipipe::alloc::{allocator_for, ArchKind};
+use flexipipe::alloc::ArchKind;
 use flexipipe::board::{vc707, zc706, zcu102, zedboard};
 use flexipipe::model::zoo;
-use flexipipe::power::PowerModel;
 use flexipipe::quant::QuantMode;
+use flexipipe::search::{frontier_by_workload, DesignSpace};
 
 fn main() -> flexipipe::Result<()> {
-    // 1. Board × model matrix at both precisions.
-    println!("== board x model frontier (flex allocator) ==");
+    // 1. Board × model matrix at both precisions — one parallel sweep.
+    let t0 = std::time::Instant::now();
+    let ds = DesignSpace {
+        boards: vec![zedboard(), zc706(), zcu102(), vc707()],
+        models: zoo::paper_nets(),
+        modes: vec![QuantMode::W16A16, QuantMode::W8A8],
+        ..Default::default()
+    };
+    let points = ds.sweep()?;
+    println!(
+        "== board x model frontier (flex allocator, {} points in {:.2?}) ==",
+        points.len(),
+        t0.elapsed()
+    );
     println!(
         "{:<10} {:<9} {:>5} {:>9} {:>8} {:>8} {:>7}",
         "board", "model", "bits", "fps", "GOPS", "DSPeff%", "W"
     );
-    for board in [zedboard(), zc706(), zcu102(), vc707()] {
-        for net in zoo::paper_nets() {
-            for mode in [QuantMode::W16A16, QuantMode::W8A8] {
-                let alloc =
-                    allocator_for(ArchKind::FlexPipeline).allocate(&net, &board, mode)?;
-                let r = alloc.evaluate();
-                let w = PowerModel::default().estimate(&alloc, &r).total();
-                println!(
-                    "{:<10} {:<9} {:>5} {:>9.1} {:>8.0} {:>8.1} {:>7.2}",
-                    board.name,
-                    net.name,
-                    mode.bits(),
-                    r.fps,
-                    r.gops,
-                    r.dsp_efficiency * 100.0,
-                    w
-                );
-            }
-        }
+    for p in &points {
+        println!(
+            "{:<10} {:<9} {:>5} {:>9.1} {:>8.0} {:>8.1} {:>7.2}",
+            p.board,
+            p.model,
+            p.mode.bits(),
+            p.report.fps,
+            p.report.gops,
+            p.report.dsp_efficiency * 100.0,
+            p.power_w
+        );
+    }
+    // Pareto frontier per workload: which board/precision points are
+    // worth building at all?
+    for ((model, bits), front) in frontier_by_workload(&points) {
+        let names: Vec<&str> = front.iter().map(|&i| points[i].board.as_str()).collect();
+        println!("pareto {model:<9} @{bits:>2}b: {}", names.join(", "));
     }
 
-    // 2. DSP-budget sweep on VGG16: where flexibility pays.
+    // 2. DSP-budget sweep on VGG16: where flexibility pays. Two archs on
+    // the same budget grid in one sweep — the flex jobs share one set of
+    // VGG16 decomposition tables.
     println!("\n== DSP sweep, vgg16 @16b: flex vs dnnbuilder GOPS ==");
     println!("{:>6} {:>10} {:>12} {:>7}", "DSPs", "flex", "dnnbuilder", "ratio");
-    let net = zoo::vgg16();
-    for dsps in [128, 192, 256, 384, 512, 680, 768, 900, 1100, 1400] {
-        let mut b = zc706();
-        b.dsps = dsps;
-        let f = allocator_for(ArchKind::FlexPipeline)
-            .allocate(&net, &b, QuantMode::W16A16)?
-            .evaluate();
-        let d = allocator_for(ArchKind::DnnBuilder)
-            .allocate(&net, &b, QuantMode::W16A16)?
-            .evaluate();
+    let budgets = [128, 192, 256, 384, 512, 680, 768, 900, 1100, 1400];
+    let ds = DesignSpace {
+        boards: vec![zc706()],
+        models: vec![zoo::vgg16()],
+        archs: vec![ArchKind::FlexPipeline, ArchKind::DnnBuilder],
+        dsp_budgets: budgets.iter().map(|&d| Some(d)).collect(),
+        ..Default::default()
+    };
+    let points = ds.sweep()?;
+    // Job order: archs outer-loop before budgets — regroup per budget.
+    for (bi, dsps) in budgets.iter().enumerate() {
+        let f = &points[bi]; // flex comes first in `archs`
+        let d = &points[budgets.len() + bi];
         println!(
             "{:>6} {:>10.0} {:>12.0} {:>7.2}",
             dsps,
-            f.gops,
-            d.gops,
-            f.gops / d.gops
+            f.report.gops,
+            d.report.gops,
+            f.report.gops / d.report.gops
         );
     }
 
-    // 3. Bandwidth sweep: Algorithm 2 trading BRAM for bandwidth.
+    // 3. Bandwidth sweep: Algorithm 2 trading BRAM for bandwidth. Boards
+    // are arbitrary values — mutate the DDR rate per point.
     println!("\n== DDR bandwidth sweep, vgg16 @16b (flex) ==");
     println!(
         "{:>9} {:>9} {:>8} {:>9} {:>7}",
         "GB/s", "fps", "BRAM18", "B (GB/s)", "max K"
     );
-    for gbps in [2.0, 3.0, 4.0, 6.0, 8.0, 12.8] {
-        let mut b = zc706();
-        b.ddr_bytes_per_sec = gbps * 1e9;
-        let alloc = allocator_for(ArchKind::FlexPipeline).allocate(&net, &b, QuantMode::W16A16)?;
-        let r = alloc.evaluate();
-        let max_k = alloc.stages.iter().map(|s| s.cfg.k).max().unwrap_or(1);
+    let gbps = [2.0, 3.0, 4.0, 6.0, 8.0, 12.8];
+    let ds = DesignSpace {
+        boards: gbps
+            .iter()
+            .map(|&g| {
+                let mut b = zc706();
+                b.ddr_bytes_per_sec = g * 1e9;
+                b
+            })
+            .collect(),
+        models: vec![zoo::vgg16()],
+        ..Default::default()
+    };
+    for (p, g) in ds.sweep()?.iter().zip(&gbps) {
         println!(
             "{:>9.1} {:>9.1} {:>8} {:>9.2} {:>7}",
-            gbps,
-            r.fps,
-            r.bram18,
-            r.ddr_bytes_per_sec / 1e9,
-            max_k
+            g,
+            p.report.fps,
+            p.report.bram18,
+            p.report.ddr_bytes_per_sec / 1e9,
+            p.max_k
         );
     }
     Ok(())

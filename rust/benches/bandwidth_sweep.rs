@@ -1,13 +1,15 @@
 //! Bench: Algorithm 2 behavior under a DDR bandwidth sweep (the paper's
 //! Sec. 4.2 trade: raise row parallelism K → fewer weight reloads → less
-//! bandwidth, more BRAM). Prints the K/BRAM/fps trajectory and verifies
-//! each point with the cycle simulator.
+//! bandwidth, more BRAM). Runs on the [`flexipipe::search`] engine — one
+//! parallel sweep over bandwidth-mutated boards, each point confirmed by
+//! the cycle simulator — then times the allocator and simulator hot paths.
 
 use flexipipe::alloc::flex::FlexAllocator;
 use flexipipe::alloc::Allocator;
 use flexipipe::board::zc706;
 use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
+use flexipipe::search::DesignSpace;
 use flexipipe::sim;
 use flexipipe::util::bench::Bench;
 
@@ -15,31 +17,47 @@ fn main() {
     let mut b = Bench::with_budget_secs(0.5);
     let net = zoo::vgg16();
 
+    let gbps = [2.0, 3.0, 4.0, 5.0, 6.4, 8.0, 10.0, 12.8];
+    let ds = DesignSpace {
+        boards: gbps
+            .iter()
+            .map(|&g| {
+                let mut board = zc706();
+                board.ddr_bytes_per_sec = g * 1e9;
+                board.name = format!("zc706@{g}GBps");
+                board
+            })
+            .collect(),
+        models: vec![net.clone()],
+        sim_frames: 2,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let points = ds.sweep().expect("sweep");
+    let sweep_dt = t0.elapsed();
+
     println!(
         "{:>7} {:>9} {:>9} {:>8} {:>7} {:>10} {:>10}",
         "GB/s", "cf fps", "sim fps", "BRAM18", "max K", "B (GB/s)", "wstalls"
     );
-    for gbps in [2.0, 3.0, 4.0, 5.0, 6.4, 8.0, 10.0, 12.8] {
-        let mut board = zc706();
-        board.ddr_bytes_per_sec = gbps * 1e9;
-        let alloc = FlexAllocator::default()
-            .allocate(&net, &board, QuantMode::W16A16)
-            .unwrap();
-        let r = alloc.evaluate();
-        let s = sim::simulate(&alloc, 2);
-        let max_k = alloc.stages.iter().map(|st| st.cfg.k).max().unwrap_or(1);
+    for (p, g) in points.iter().zip(&gbps) {
+        let s = p.sim.as_ref().expect("sim_frames > 0");
         let wstalls: u64 = s.stages.iter().map(|st| st.stall_weights).sum();
         println!(
             "{:>7.1} {:>9.2} {:>9.2} {:>8} {:>7} {:>10.2} {:>10}",
-            gbps,
-            r.fps,
+            g,
+            p.report.fps,
             s.fps,
-            r.bram18,
-            max_k,
-            r.ddr_bytes_per_sec / 1e9,
+            p.report.bram18,
+            p.max_k,
+            p.report.ddr_bytes_per_sec / 1e9,
             wstalls
         );
     }
+    println!(
+        "sweep: {} points (alloc + 2-frame sim each) in {sweep_dt:.2?}",
+        points.len()
+    );
 
     b.bench("alg2/vgg16/starved-4GBps", || {
         let mut board = zc706();

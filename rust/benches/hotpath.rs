@@ -1,44 +1,125 @@
-//! Bench: hot paths of the L3 coordinator stack, for the §Perf pass.
+//! Bench: hot paths of the allocator / simulator / search stack, for the
+//! §Perf pass.
 //!
-//! - allocator end-to-end,
-//! - the DES simulator's event throughput (simulated cycles per wall-second),
+//! - allocator end-to-end, optimized vs the preserved naive reference
+//!   (`alloc::flex::naive`) — the PR-over-PR speedup trajectory,
+//! - the DES simulator's event throughput (simulated cycles per
+//!   wall-second), event-wheel vs naive full-rescan scheduler,
+//! - the full design-space sweep (boards × paper nets × precisions),
+//!   parallel + shared tables vs the serial naive loop,
 //! - JSON manifest parse,
 //! - PJRT execute latency per artifact batch (needs `make artifacts`;
 //!   skipped gracefully when absent).
+//!
+//! Emits machine-readable `BENCH_hotpath.json` at the repository root so
+//! future PRs can track the perf trajectory.
 
-use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::flex::{naive, FlexAllocator};
 use flexipipe::alloc::Allocator;
-use flexipipe::board::zc706;
+use flexipipe::board::{vc707, zc706, zcu102, zedboard};
 use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
+use flexipipe::search::DesignSpace;
 use flexipipe::sim;
 use flexipipe::util::bench::Bench;
-use flexipipe::util::json;
+use flexipipe::util::json::{self, obj, Value};
+use std::path::Path;
 
 fn main() {
     let mut b = Bench::with_budget_secs(1.5);
     let board = zc706();
+    let mut out: Vec<(&str, Value)> = Vec::new();
 
-    // Allocator.
-    for net in [zoo::vgg16(), zoo::yolo()] {
-        b.bench(&format!("alloc/{}", net.name), || {
+    // Allocator: optimized vs naive reference.
+    let vgg = zoo::vgg16();
+    let s = b
+        .bench("alloc/vgg16", || {
             FlexAllocator::default()
-                .allocate(&net, &board, QuantMode::W16A16)
+                .allocate(&vgg, &board, QuantMode::W16A16)
                 .unwrap()
-        });
-    }
+        })
+        .clone();
+    let fast_alloc = s.mean.as_secs_f64();
+    let yolo = zoo::yolo();
+    b.bench("alloc/yolo", || {
+        FlexAllocator::default()
+            .allocate(&yolo, &board, QuantMode::W16A16)
+            .unwrap()
+    });
+    let s = b
+        .bench("alloc/vgg16/naive", || {
+            naive::allocate(&FlexAllocator::default(), &vgg, &board, QuantMode::W16A16).unwrap()
+        })
+        .clone();
+    let naive_alloc = s.mean.as_secs_f64();
+    println!(
+        "  -> alloc/vgg16 speedup vs naive: {:.1}x",
+        naive_alloc / fast_alloc
+    );
+    out.push(("alloc_vgg16_ms", Value::Num(fast_alloc * 1e3)));
+    out.push(("alloc_vgg16_naive_ms", Value::Num(naive_alloc * 1e3)));
+    out.push(("alloc_vgg16_speedup", Value::Num(naive_alloc / fast_alloc)));
 
-    // Simulator event throughput.
+    // Simulator event throughput: event-wheel vs naive rescan scheduler.
     let alloc = FlexAllocator::default()
-        .allocate(&zoo::vgg16(), &board, QuantMode::W16A16)
+        .allocate(&vgg, &board, QuantMode::W16A16)
         .unwrap();
     let s = b.bench("sim/vgg16/3frames", || sim::simulate(&alloc, 3)).clone();
+    let sim_fast = s.mean.as_secs_f64();
     let sim_result = sim::simulate(&alloc, 3);
+    let mcps = sim_result.makespan as f64 / sim_fast / 1e6;
+    println!("  -> simulator speed: {mcps:.1} M simulated cycles / wall-second");
+    let s = b
+        .bench("sim/vgg16/3frames/naive", || {
+            sim::simulate_pipeline_naive(&alloc, 3)
+        })
+        .clone();
+    let sim_naive = s.mean.as_secs_f64();
+    println!("  -> sim speedup vs naive scheduler: {:.1}x", sim_naive / sim_fast);
+    out.push(("sim_vgg16_3f_ms", Value::Num(sim_fast * 1e3)));
+    out.push(("sim_vgg16_3f_naive_ms", Value::Num(sim_naive * 1e3)));
+    out.push(("sim_mcycles_per_sec", Value::Num(mcps)));
+    out.push(("sim_speedup", Value::Num(sim_naive / sim_fast)));
+
+    // Design-space sweep: parallel + shared tables vs serial naive loop.
+    let space = || DesignSpace {
+        boards: vec![zedboard(), zc706(), zcu102(), vc707()],
+        models: zoo::paper_nets(),
+        modes: vec![QuantMode::W16A16, QuantMode::W8A8],
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let points = space().sweep().expect("sweep");
+    let sweep_fast = t0.elapsed().as_secs_f64();
     println!(
-        "  -> simulator speed: {:.1} M simulated cycles / wall-second",
-        sim_result.makespan as f64 / s.mean.as_secs_f64() / 1e6
+        "search/design-space: {} points in {:.1} ms (parallel, shared tables)",
+        points.len(),
+        sweep_fast * 1e3
     );
+    let t0 = std::time::Instant::now();
+    let mut n_serial = 0usize;
+    for brd in [zedboard(), zc706(), zcu102(), vc707()] {
+        for net in zoo::paper_nets() {
+            for mode in [QuantMode::W16A16, QuantMode::W8A8] {
+                let a = naive::allocate(&FlexAllocator::default(), &net, &brd, mode).unwrap();
+                std::hint::black_box(a.evaluate());
+                n_serial += 1;
+            }
+        }
+    }
+    let sweep_naive = t0.elapsed().as_secs_f64();
+    assert_eq!(n_serial, points.len());
+    println!(
+        "search/design-space/serial-naive: {} points in {:.1} ms ({:.1}x speedup)",
+        n_serial,
+        sweep_naive * 1e3,
+        sweep_naive / sweep_fast
+    );
+    out.push(("search_sweep_points", Value::Num(points.len() as f64)));
+    out.push(("search_sweep_ms", Value::Num(sweep_fast * 1e3)));
+    out.push(("search_sweep_naive_ms", Value::Num(sweep_naive * 1e3)));
+    out.push(("search_sweep_speedup", Value::Num(sweep_naive / sweep_fast)));
 
     // JSON parse.
     let manifest_path = default_artifact_dir().join("manifest.json");
@@ -69,4 +150,12 @@ fn main() {
         Err(e) => println!("(skipping PJRT benches: {e})"),
     }
     b.finish();
+
+    // Perf trajectory: machine-readable dump at the repository root.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    let json = obj(out).to_pretty();
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -76,32 +76,69 @@ impl DnnBuilderAllocator {
             };
             h * w * div_ceil(c, p[j]) as u64 * div_ceil(m, p[j + 1]) as u64
         };
-        let worst = |p: &[usize]| -> u64 { (0..n).map(|j| cycles(p, j)).max().unwrap_or(1) };
-
         // Greedy doubling under a lexicographic (bottleneck, total) metric:
         // with many stages tied at the maximum, no single doubling reduces
         // the global worst, so the secondary sum objective keeps growth
         // balanced instead of front-loading the budget on early layers.
-        let total = |p: &[usize]| -> u64 { (0..n).map(|j| cycles(p, j)).sum() };
+        //
+        // Incremental evaluation: doubling interface p[j] only changes the
+        // cycles of stages j−1 (its M') and j (its C') and re-doubles those
+        // two stages' multiplier terms, so each candidate is scored from
+        // the cached per-stage cycles with two substitutions instead of a
+        // cloned vector and four full recomputation passes. Metrics are
+        // exact u64 sums — decisions match the naive loop bit-for-bit.
+        let mut cyc: Vec<u64> = (0..n).map(|j| cycles(&p, j)).collect();
+        let mut mult_sum = mults(&p);
+        // Re-doubled contribution of the stages adjacent to interface j.
+        let mult_delta = |p: &[usize], j: usize| -> usize {
+            (if j >= 1 { p[j - 1] * p[j] * dims[j - 1].2 } else { 0 })
+                + (if j < n { p[j] * p[j + 1] * dims[j].2 } else { 0 })
+        };
         loop {
-            let base = (worst(&p), total(&p));
+            let worst0 = cyc.iter().copied().max().unwrap_or(1);
+            let total0: u64 = cyc.iter().sum();
+            let base = (worst0, total0);
             let mut best: Option<(usize, (u64, u64))> = None;
             for j in 0..=n {
                 if p[j] * 2 > caps[j] {
                     continue;
                 }
-                let mut q = p.clone();
-                q[j] *= 2;
-                if mults(&q) > theta {
+                if mult_sum + mult_delta(&p, j) > theta {
                     continue;
                 }
-                let m = (worst(&q), total(&q));
+                p[j] *= 2;
+                let c_prev = if j >= 1 { cycles(&p, j - 1) } else { 0 };
+                let c_self = if j < n { cycles(&p, j) } else { 0 };
+                p[j] /= 2;
+                let mut worst_new = 0u64;
+                let mut total_new = 0u64;
+                for s in 0..n {
+                    let c = if j >= 1 && s == j - 1 {
+                        c_prev
+                    } else if j < n && s == j {
+                        c_self
+                    } else {
+                        cyc[s]
+                    };
+                    worst_new = worst_new.max(c);
+                    total_new += c;
+                }
+                let m = (worst_new.max(u64::from(n == 0)), total_new);
                 if m < base && best.map_or(true, |(_, bm)| m < bm) {
                     best = Some((j, m));
                 }
             }
             match best {
-                Some((j, _)) => p[j] *= 2,
+                Some((j, _)) => {
+                    mult_sum += mult_delta(&p, j);
+                    p[j] *= 2;
+                    if j >= 1 {
+                        cyc[j - 1] = cycles(&p, j - 1);
+                    }
+                    if j < n {
+                        cyc[j] = cycles(&p, j);
+                    }
+                }
                 None => break,
             }
         }

@@ -15,12 +15,44 @@
 //! 1 from DNNBuilder's constraints: `C'_i` needn't equal `M'_{i−1}` and
 //! nothing needs to be a power of two, so the decomposition can chase exact
 //! divisors of `C`/`M` and the greedy loop can hand out single `R·S` blocks.
+//!
+//! # Hot-path structure (and its invariants)
+//!
+//! Both algorithms are the framework's inner loop — a design-space sweep
+//! calls them thousands of times — so they run on precomputed tables and
+//! incremental deltas instead of full recomputation:
+//!
+//! - [`PhaseStair`] collapses the O(C·M) decomposition search into a sorted
+//!   staircase of `(pairs, phases)` breakpoints: the minimum phase count is
+//!   a step function of the multiplier-pair budget, with at most
+//!   `O(√C·√M)` steps (distinct ceiling quotients). `cycles_of` becomes a
+//!   binary search, and "smallest growth that strictly shortens the
+//!   bottleneck" becomes a single lookup of the next step.
+//! - Algorithm 1's grow/rebalance loops track the bottleneck stage with a
+//!   lazily-invalidated max-heap keyed `(cycles, stage)` — ties resolve to
+//!   the highest index, matching `Iterator::max_by_key`'s last-maximum rule
+//!   so the heap path visits stages in exactly the naive order.
+//! - Algorithm 2 ([`FlexAllocator::raise_k`]) evaluates each candidate
+//!   K-jump *in place*: only the touched stage's figures are recomputed
+//!   ([`refresh_stage_figures`]), BRAM is maintained as per-stage cached
+//!   contributions (a K change invalidates exactly stages `i` and `i+1` —
+//!   see [`crate::alloc::Allocation::stage_bram18`]), and fps comes from
+//!   the geometry-free [`crate::alloc::Allocation::evaluate_perf`]. No
+//!   `Allocation` (or `Network`) clone is ever made.
+//!
+//! **Equivalence invariant**: the optimized paths must produce
+//! *bit-identical* allocations and reports to the seed's naive
+//! implementation, which is preserved verbatim in [`naive`] as the
+//! executable specification. `tests/proptests.rs` and
+//! `tests/golden_equivalence.rs` enforce this on randomized networks and
+//! on the paper's VGG16/ZC706 design point.
 
 use super::{Allocation, Allocator, ArchKind, StageAlloc, TOP_BRAM18};
 use crate::board::Board;
-use crate::engine::{self, buffer_geometry, div_ceil, EngineConfig};
+use crate::engine::{self, div_ceil, EngineConfig};
 use crate::model::{Layer, Network};
 use crate::quant::QuantMode;
+use std::collections::BinaryHeap;
 
 /// The paper's allocator ("This Work" in Table I).
 #[derive(Debug, Clone)]
@@ -50,7 +82,10 @@ impl Default for FlexAllocator {
 ///
 /// Minimizes the phase count `ceil(C/C')·ceil(M/M')` subject to
 /// `C'·M'·R·S ≤ budget`; ties prefer fewer multipliers (return the spare to
-/// the pool), then larger `C'` (wider accumulation = shallower psum tree).
+/// the pool), then the first (smallest) `C'` encountered. This is the
+/// reference implementation — the allocator's loops query [`PhaseStair`]
+/// instead and only call this once per layer for the final tie-broken
+/// `(C', M')`.
 pub fn decompose(c_eff: usize, m: usize, rs: usize, budget_mults: usize) -> (usize, usize) {
     let pairs = (budget_mults / rs).max(1);
     let mut best = (1usize, 1usize);
@@ -98,9 +133,227 @@ fn dims(layer: &Layer) -> (usize, usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Decomposition tables: O(C·M) search → O(log) staircase lookups
+// ---------------------------------------------------------------------------
+
+/// All distinct ceiling quotients of `n`: `(x, ceil(n/x))` with the minimal
+/// `x` achieving each quotient, quotient strictly decreasing. At most
+/// `2·√n` entries (standard divisor-block enumeration).
+fn quotient_breaks(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut x = 1usize;
+    while x <= n {
+        let q = n.div_ceil(x);
+        out.push((x, q));
+        if q == 1 {
+            break;
+        }
+        // Smallest x' whose quotient drops below q.
+        x = n.div_ceil(q - 1);
+    }
+    out
+}
+
+/// The minimum achievable phase count `ceil(C/C')·ceil(M/M')` as a step
+/// function of the multiplier-pair budget `pairs = budget/(R·S)`.
+///
+/// Entries are `(pairs, phases)` with `pairs` strictly increasing and
+/// `phases` strictly decreasing: `pairs` is the *smallest* budget reaching
+/// that phase count. Built once per layer; queried by binary search.
+///
+/// Equivalence with [`decompose`] (property-tested): the phase count of
+/// `decompose(c_eff, m, rs, budget)`'s result equals
+/// `phases_at((budget/rs).max(1))`. Only the phase count is tabulated —
+/// the tie-broken `(C', M')` pair still comes from `decompose`, called
+/// once per layer after the budgets settle.
+#[derive(Debug, Clone)]
+pub struct PhaseStair {
+    stair: Vec<(u64, u64)>,
+}
+
+impl PhaseStair {
+    /// Build the staircase for a layer with `c_eff` input channels and `m`
+    /// output channels.
+    pub fn build(c_eff: usize, m: usize) -> PhaseStair {
+        let cb = quotient_breaks(c_eff.max(1));
+        let mb = quotient_breaks(m.max(1));
+        let mut pts: Vec<(u64, u64)> = Vec::with_capacity(cb.len() * mb.len());
+        for &(cp, qc) in &cb {
+            for &(mp, qm) in &mb {
+                pts.push(((cp * mp) as u64, qc as u64 * qm as u64));
+            }
+        }
+        pts.sort_unstable();
+        let mut stair = Vec::new();
+        let mut best = u64::MAX;
+        for (cost, phases) in pts {
+            if phases < best {
+                best = phases;
+                stair.push((cost, phases));
+            }
+        }
+        PhaseStair { stair }
+    }
+
+    /// Minimum phase count achievable with `pairs` multiplier pairs.
+    pub fn phases_at(&self, pairs: u64) -> u64 {
+        let idx = self.stair.partition_point(|&(c, _)| c <= pairs);
+        // stair[0].0 == 1 and pairs >= 1, so idx >= 1 always.
+        self.stair[idx - 1].1
+    }
+
+    /// Smallest pair budget whose phase count is *strictly below* `phases`
+    /// (the grow loop's "next value that strictly shortens the
+    /// bottleneck"). `None` when `phases` is already the minimum.
+    pub fn first_below(&self, phases: u64) -> Option<u64> {
+        let idx = self.stair.partition_point(|&(_, p)| p >= phases);
+        self.stair.get(idx).map(|&(c, _)| c)
+    }
+
+    /// Smallest pair budget whose phase count is `≤ phases` (the rebalance
+    /// pass's "smallest θ that keeps this stage under the bottleneck").
+    /// `phases` must be reachable (≥ 1); the stair always ends at 1.
+    pub fn first_at_most(&self, phases: u64) -> u64 {
+        let idx = self.stair.partition_point(|&(_, p)| p > phases);
+        self.stair[idx].0
+    }
+}
+
+/// Per-layer precomputation for Algorithm 1: staircase + the constants that
+/// turn phase counts into cycle counts.
+#[derive(Debug, Clone)]
+pub struct LayerTable {
+    /// `R·S` allocation granule (1 for FC).
+    granule: usize,
+    /// Cycles per phase: `H·W` for conv, 1 for FC.
+    spatial: u64,
+    /// Largest useful θ: `C_eff·M·granule` (phases = 1).
+    theta_cap: usize,
+    /// Phase staircase.
+    stair: PhaseStair,
+}
+
+impl LayerTable {
+    /// Build for one compute layer.
+    pub fn for_layer(layer: &Layer) -> LayerTable {
+        let (c_eff, m) = dims(layer);
+        let g = granule(layer);
+        let spatial = match layer {
+            Layer::Conv(c) => (c.h * c.w) as u64,
+            Layer::Fc(_) => 1,
+            Layer::Pool(_) => unreachable!("compute layers only"),
+        };
+        LayerTable {
+            granule: g,
+            spatial,
+            theta_cap: c_eff * m * g,
+            stair: PhaseStair::build(c_eff, m),
+        }
+    }
+
+    /// Pair budget a θ multiplier budget buys (mirrors [`decompose`]'s
+    /// `(budget/rs).max(1)`).
+    fn pairs_of(&self, theta: usize) -> u64 {
+        ((theta / self.granule).max(1)) as u64
+    }
+
+    /// Cycles/frame at multiplier budget θ — equals the naive
+    /// `spatial · phases(decompose(θ))` exactly.
+    pub fn cycles_at(&self, theta: usize) -> u64 {
+        self.spatial * self.stair.phases_at(self.pairs_of(theta))
+    }
+
+    /// Smallest θ (granule multiple) strictly improving on `cur_cycles`,
+    /// or `None` if no improvement exists within the layer's cap.
+    fn next_improving(&self, cur_cycles: u64) -> Option<usize> {
+        let pairs = self.stair.first_below(cur_cycles / self.spatial)?;
+        Some(pairs as usize * self.granule)
+    }
+
+    /// Smallest θ (granule multiple) whose cycles stay `≤ t_frame`.
+    /// Requires `t_frame ≥ spatial` (true whenever some budget meets it).
+    fn min_theta_under(&self, t_frame: u64) -> usize {
+        self.stair.first_at_most(t_frame / self.spatial) as usize * self.granule
+    }
+}
+
+/// Decomposition tables for every compute layer of a network, in
+/// `Network::compute_layers` order. Build once, share across every
+/// `(board, mode, DSP budget)` the design-space search throws at the model
+/// — the staircase depends only on layer dimensions.
+#[derive(Debug, Clone)]
+pub struct NetTables {
+    layers: Vec<LayerTable>,
+}
+
+impl NetTables {
+    /// Precompute for `net`'s compute layers.
+    pub fn build(net: &Network) -> NetTables {
+        NetTables {
+            layers: net
+                .compute_layers()
+                .iter()
+                .map(|&i| LayerTable::for_layer(&net.layers[i]))
+                .collect(),
+        }
+    }
+}
+
+/// Grow the bottleneck stage until the budget is exhausted or it can no
+/// longer improve (Alg. 1 lines 4–8). The bottleneck is tracked with a
+/// lazily-invalidated max-heap keyed `(cycles, stage)`; stale entries are
+/// dropped when popped. Tie-break (highest stage index) matches the naive
+/// scan's `max_by_key` last-maximum rule, so the growth sequence is
+/// identical to the seed implementation's.
+fn grow_bottleneck(tables: &[LayerTable], theta: &mut [usize], cycles: &mut [u64], budget: usize) {
+    let mut used: usize = theta.iter().sum();
+    let mut heap: BinaryHeap<(u64, usize)> = cycles
+        .iter()
+        .copied()
+        .enumerate()
+        .map(|(j, c)| (c, j))
+        .collect();
+    loop {
+        let avail = budget.saturating_sub(used);
+        if avail == 0 {
+            return;
+        }
+        // Current bottleneck. Invariant: exactly one live entry per stage
+        // (the update below pops the old entry before pushing the new
+        // one), so the top is never stale.
+        let Some(&(cur, b)) = heap.peek() else {
+            return;
+        };
+        debug_assert_eq!(cycles[b], cur, "heap entry went stale");
+        let lt = &tables[b];
+        // Smallest affordable growth that strictly reduces the
+        // bottleneck's cycles. If none fits, t_frame is final: spare DSPs
+        // would only dilute efficiency.
+        let Some(t) = lt.next_improving(cur) else {
+            return;
+        };
+        if t > lt.theta_cap.min(theta[b] + avail) {
+            return;
+        }
+        heap.pop(); // b's entry, about to go stale
+        used += t - theta[b];
+        theta[b] = t;
+        cycles[b] = lt.cycles_at(t);
+        heap.push((cycles[b], b));
+    }
+}
+
 impl FlexAllocator {
     /// Algorithm 1: returns per-layer `(C', M')` using up to Θ multipliers.
-    fn algorithm1(&self, net: &Network, theta_total: usize) -> Vec<EngineConfig> {
+    /// Bit-identical to [`naive::algorithm1`] (property-tested); the
+    /// decomposition search and bottleneck scans run on `tables`.
+    fn algorithm1(
+        &self,
+        net: &Network,
+        theta_total: usize,
+        tables: &NetTables,
+    ) -> Vec<EngineConfig> {
         let compute: Vec<usize> = net.compute_layers();
         let pis: Vec<u64> = compute.iter().map(|&i| workload(&net.layers[i])).collect();
         let pi_sum: u64 = pis.iter().sum();
@@ -140,10 +393,267 @@ impl FlexAllocator {
         // Lines 4–8: greedy — keep feeding the slowest layer. The paper
         // adds one R·S granule at a time; we strengthen this to "grow the
         // bottleneck's θ to the next value that strictly shortens it",
-        // because the decomposition only improves at divisor steps (adding
-        // 9 multipliers to a 64-channel layer at C'=1,M'=11 changes
-        // nothing until the phase count drops). Same fixpoint as the
-        // paper's loop, fewer wasted DSPs.
+        // because the decomposition only improves at divisor steps. With
+        // the staircase that next value is a single lookup instead of a
+        // linear scan.
+        let lt = &tables.layers;
+        debug_assert_eq!(lt.len(), compute.len(), "tables built for another network");
+        let mut cycles: Vec<u64> = (0..compute.len()).map(|j| lt[j].cycles_at(theta[j])).collect();
+        grow_bottleneck(lt, &mut theta, &mut cycles, theta_total);
+
+        // Rebalance pass: the grow loop can strand budget on non-bottleneck
+        // layers (their θ was rounded up past what their cycle target
+        // needs). Shrink every layer to the smallest θ that keeps it under
+        // the bottleneck, then re-grow the bottleneck with the freed
+        // multipliers. Two rounds reach a fixpoint in practice.
+        for _ in 0..2 {
+            let t_frame = cycles.iter().copied().max().unwrap_or(1);
+            for j in 0..theta.len() {
+                let shrunk = lt[j].min_theta_under(t_frame);
+                if shrunk < theta[j] {
+                    theta[j] = shrunk;
+                    cycles[j] = lt[j].cycles_at(shrunk);
+                }
+            }
+            grow_bottleneck(lt, &mut theta, &mut cycles, theta_total);
+        }
+
+        // Line 9: decompose θ_i into C'_i × M'_i (reference decompose for
+        // the exact tie-broken pair — once per layer, off the hot path).
+        let mut cfgs = vec![EngineConfig::minimal(); net.layers.len()];
+        for (j, &i) in compute.iter().enumerate() {
+            let l = &net.layers[i];
+            let (c_eff, m) = dims(l);
+            let (cp, mp) = decompose(c_eff, m, granule(l), theta[j]);
+            cfgs[i] = EngineConfig { cp, mp, k: 1 };
+        }
+        cfgs
+    }
+
+    /// Algorithm 2: raise `K` of the heaviest weight-traffic layer until
+    /// the bandwidth fits (or BRAM runs out). Public so the DNNBuilder
+    /// baseline gets the same bandwidth relief (isolating the channel
+    /// constraints as the only difference).
+    ///
+    /// Clone-free: candidates are applied to `alloc` in place and reverted
+    /// on rejection; only the touched stage's figures and the two affected
+    /// stages' BRAM contributions are recomputed per candidate, and fps
+    /// comes from the geometry-free `evaluate_perf`. Decision-for-decision
+    /// identical to [`naive::raise_k`] (golden-tested).
+    pub fn raise_k(&self, net: &Network, board: &Board, mode: QuantMode, alloc: &mut Allocation) {
+        let beta = board.ddr_bytes_per_sec * self.bw_margin;
+        let alpha = board.bram18();
+        let n = alloc.stages.len();
+        // Per-stage BRAM cache: candidate K-jumps patch stages idx/idx+1.
+        let mut stage_bram: Vec<usize> = (0..n).map(|i| alloc.stage_bram18(i)).collect();
+        let mut bram_sum: usize = TOP_BRAM18 + stage_bram.iter().sum::<usize>();
+        for _ in 0..self.max_k_steps {
+            let perf = alloc.evaluate_perf();
+            // Compare the *demand* (at compute rate) against the budget —
+            // the achieved-rate traffic is throttled to fit by definition.
+            if perf.ddr_demand_bytes_per_sec <= beta {
+                break;
+            }
+            // Line 7: among conv layers (FC traffic is batch-amortized and
+            // K-independent; pools carry no weights), try the highest-ω
+            // layer first — but only K *jumps that reduce the group count*
+            // (intermediate K adds ragged-tail cycles without saving a
+            // fetch). A jump may stretch the bottleneck slightly; accept
+            // it when the *overall* fps (compute rate capped by the DDR
+            // ceiling) improves — the trade Sec. 4.2 describes.
+            let cur_fps = perf.fps;
+            let mut cands: Vec<(usize, usize, u64)> = alloc
+                .stages
+                .iter()
+                .enumerate()
+                .filter_map(|(idx, s)| {
+                    let Layer::Conv(ref c) = net.layers[s.layer_idx] else {
+                        return None;
+                    };
+                    let groups = c.h.div_ceil(s.cfg.k);
+                    if groups <= 1 {
+                        return None;
+                    }
+                    let new_k = c.h.div_ceil(groups - 1);
+                    Some((idx, new_k, s.figures.weight_bytes_per_frame()))
+                })
+                .collect();
+            cands.sort_by_key(|&(_, _, omega)| std::cmp::Reverse(omega));
+            let mut accepted = false;
+            for (idx, new_k, _) in cands {
+                let old_k = alloc.stages[idx].cfg.k;
+                let old_fig = alloc.stages[idx].figures;
+                alloc.stages[idx].cfg.k = new_k;
+                refresh_stage_figures(net, mode, alloc, idx);
+                // BRAM delta: own geometry + the downstream stage that sees
+                // this stage as producer.
+                let nb_self = alloc.stage_bram18(idx);
+                let (ob_next, nb_next) = if idx + 1 < n {
+                    (stage_bram[idx + 1], alloc.stage_bram18(idx + 1))
+                } else {
+                    (0, 0)
+                };
+                let new_sum = bram_sum - stage_bram[idx] - ob_next + nb_self + nb_next;
+                if new_sum <= alpha && alloc.evaluate_perf().fps > cur_fps * (1.0 + 1e-9) {
+                    stage_bram[idx] = nb_self;
+                    if idx + 1 < n {
+                        stage_bram[idx + 1] = nb_next;
+                    }
+                    bram_sum = new_sum;
+                    accepted = true;
+                    break;
+                }
+                // Rejected (over BRAM, or fps did not improve): revert.
+                alloc.stages[idx].cfg.k = old_k;
+                alloc.stages[idx].figures = old_fig;
+            }
+            if !accepted {
+                break;
+            }
+        }
+    }
+
+    /// Allocate with caller-provided [`NetTables`] — the design-space
+    /// search builds the tables once per model and shares them across every
+    /// (board, mode, budget) job.
+    pub fn allocate_with(
+        &self,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        tables: &NetTables,
+    ) -> crate::Result<Allocation> {
+        net.validate()?;
+        anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
+        anyhow::ensure!(
+            tables.layers.len() == net.compute_layers().len(),
+            "NetTables were built for a different network ({} compute layers vs {})",
+            tables.layers.len(),
+            net.compute_layers().len()
+        );
+        // Multiplier budget, packing-aware: at 8-bit each DSP packs two
+        // multiplies, but a DSP cannot be shared across engines — a stage
+        // with an odd multiplier count strands half a slice. Reserving
+        // (mults_per_dsp − 1) per compute stage guarantees
+        // Σ ceil(mults_i / pack) ≤ DSPs for any split Algorithm 1 picks.
+        let pack = mode.mults_per_dsp();
+        let slack = (pack - 1) * net.compute_layers().len();
+        let theta_total = ((board.dsps - self.dsp_reserve) * pack).saturating_sub(slack);
+        let cfgs = self.algorithm1(net, theta_total, tables);
+
+        let stages = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| StageAlloc {
+                layer_idx: i,
+                cfg: *cfg,
+                figures: engine::figures(&net.layers[i], cfg, mode),
+                mac_gain: 1.0,
+            })
+            .collect();
+
+        let mut alloc = Allocation {
+            arch: ArchKind::FlexPipeline,
+            net: net.clone(),
+            board: board.clone(),
+            mode,
+            stages,
+            freq_hz: board.freq_hz,
+            arch_derate: 1.0,
+            groups: None,
+            extra_cycles: 0,
+            shared_array: false,
+        };
+        self.raise_k(net, board, mode, &mut alloc);
+        Ok(alloc)
+    }
+}
+
+/// Recompute every stage's figures after a config change. Prefer
+/// [`refresh_stage_figures`] when only one stage's config changed — figures
+/// depend solely on (layer, own config, mode), so nothing else moves.
+pub fn refresh_figures(net: &Network, mode: QuantMode, alloc: &mut Allocation) {
+    for s in alloc.stages.iter_mut() {
+        s.figures = engine::figures(&net.layers[s.layer_idx], &s.cfg, mode);
+    }
+}
+
+/// Recompute one stage's figures after its config changed.
+pub fn refresh_stage_figures(net: &Network, mode: QuantMode, alloc: &mut Allocation, idx: usize) {
+    let s = &mut alloc.stages[idx];
+    s.figures = engine::figures(&net.layers[s.layer_idx], &s.cfg, mode);
+}
+
+/// Total BRAM18 of an allocation (per-stage buffers + top).
+pub fn bram_total(net: &Network, mode: QuantMode, alloc: &Allocation) -> usize {
+    let mut total = TOP_BRAM18;
+    for (i, s) in alloc.stages.iter().enumerate() {
+        let (pk, pm) = alloc.producer(i);
+        total += engine::stage_bram18(&net.layers[s.layer_idx], &s.cfg, pk, pm, mode);
+    }
+    total
+}
+
+impl Allocator for FlexAllocator {
+    fn arch(&self) -> ArchKind {
+        ArchKind::FlexPipeline
+    }
+
+    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+        let tables = NetTables::build(net);
+        self.allocate_with(net, board, mode, &tables)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference: the seed's implementation, kept as the executable spec
+// ---------------------------------------------------------------------------
+
+/// The seed's unoptimized Algorithm 1/2 — preserved verbatim as the
+/// executable specification of the hot paths above. Every greedy decision
+/// is made by full recomputation ([`decompose`] per probe, whole-allocation
+/// clone + full `evaluate()` per Algorithm 2 candidate), which is why these
+/// run orders of magnitude slower; `benches/hotpath.rs` measures the gap
+/// and `tests/` assert the outputs are bit-identical.
+pub mod naive {
+    use super::*;
+
+    /// Naive Algorithm 1 (full `decompose` search per cycle probe, linear
+    /// bottleneck rescans).
+    pub fn algorithm1(net: &Network, theta_total: usize) -> Vec<EngineConfig> {
+        let compute: Vec<usize> = net.compute_layers();
+        let pis: Vec<u64> = compute.iter().map(|&i| workload(&net.layers[i])).collect();
+        let pi_sum: u64 = pis.iter().sum();
+
+        let mut theta: Vec<usize> = compute
+            .iter()
+            .zip(&pis)
+            .map(|(&i, &pi)| {
+                let l = &net.layers[i];
+                let g = granule(l);
+                let ideal = (pi as f64 * theta_total as f64 / pi_sum as f64) as usize;
+                ((ideal / g).max(1)) * g
+            })
+            .collect();
+
+        loop {
+            let used: usize = theta.iter().sum();
+            if used <= theta_total {
+                break;
+            }
+            let j = (0..theta.len())
+                .filter(|&j| theta[j] > granule(&net.layers[compute[j]]))
+                .min_by(|&a, &b| {
+                    let ra = pis[a] as f64 / theta[a] as f64;
+                    let rb = pis[b] as f64 / theta[b] as f64;
+                    ra.partial_cmp(&rb).unwrap()
+                });
+            match j {
+                Some(j) => theta[j] -= granule(&net.layers[compute[j]]),
+                None => break,
+            }
+        }
+
         let cycles_of = |j: usize, theta_j: usize| -> u64 {
             let l = &net.layers[compute[j]];
             let (c_eff, m) = dims(l);
@@ -162,7 +672,6 @@ impl FlexAllocator {
             if avail == 0 {
                 break;
             }
-            // Bottleneck layer under the current assignment.
             let (b, cur) = (0..theta.len())
                 .map(|j| (j, cycles_of(j, theta[j])))
                 .max_by_key(|&(_, c)| c)
@@ -170,8 +679,6 @@ impl FlexAllocator {
             let g = granule(&net.layers[compute[b]]);
             let (c_eff, m) = dims(&net.layers[compute[b]]);
             let cap = c_eff * m * g;
-            // Smallest affordable growth that strictly reduces the
-            // bottleneck's cycles.
             let mut grown = None;
             let mut t = theta[b] + g;
             while t <= cap.min(theta[b] + avail) {
@@ -183,17 +690,10 @@ impl FlexAllocator {
             }
             match grown {
                 Some(t) => theta[b] = t,
-                // The bottleneck can't improve within budget: t_frame is
-                // final; spare DSPs would only dilute efficiency.
                 None => break,
             }
         }
 
-        // Rebalance pass: the grow loop can strand budget on non-bottleneck
-        // layers (their θ was rounded up past what their cycle target
-        // needs). Shrink every layer to the smallest θ that keeps it under
-        // the bottleneck, then re-grow the bottleneck with the freed
-        // multipliers. Two rounds reach a fixpoint in practice.
         for _ in 0..2 {
             let t_frame = (0..theta.len())
                 .map(|j| cycles_of(j, theta[j]))
@@ -205,7 +705,6 @@ impl FlexAllocator {
                     theta[j] -= g;
                 }
             }
-            // Re-grow the bottleneck with whatever was freed.
             loop {
                 let used: usize = theta.iter().sum();
                 let avail = theta_total.saturating_sub(used);
@@ -235,7 +734,6 @@ impl FlexAllocator {
             }
         }
 
-        // Line 9: decompose θ_i into C'_i × M'_i.
         let mut cfgs = vec![EngineConfig::minimal(); net.layers.len()];
         for (j, &i) in compute.iter().enumerate() {
             let l = &net.layers[i];
@@ -246,27 +744,22 @@ impl FlexAllocator {
         cfgs
     }
 
-    /// Algorithm 2: raise `K` of the heaviest weight-traffic layer until
-    /// the bandwidth fits (or BRAM runs out). Public so the DNNBuilder
-    /// baseline gets the same bandwidth relief (isolating the channel
-    /// constraints as the only difference).
-    pub fn raise_k(&self, net: &Network, board: &Board, mode: QuantMode, alloc: &mut Allocation) {
-        let beta = board.ddr_bytes_per_sec * self.bw_margin;
+    /// Naive Algorithm 2 (clones the whole allocation per candidate,
+    /// recomputes every stage's figures and the full report).
+    pub fn raise_k(
+        a: &FlexAllocator,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        alloc: &mut Allocation,
+    ) {
+        let beta = board.ddr_bytes_per_sec * a.bw_margin;
         let alpha = board.bram18();
-        for _ in 0..self.max_k_steps {
+        for _ in 0..a.max_k_steps {
             let report = alloc.evaluate();
-            // Compare the *demand* (at compute rate) against the budget —
-            // the achieved-rate traffic is throttled to fit by definition.
             if report.ddr_demand_bytes_per_sec <= beta {
                 break;
             }
-            // Line 7: among conv layers (FC traffic is batch-amortized and
-            // K-independent; pools carry no weights), try the highest-ω
-            // layer first — but only K *jumps that reduce the group count*
-            // (intermediate K adds ragged-tail cycles without saving a
-            // fetch). A jump may stretch the bottleneck slightly; accept
-            // it when the *overall* fps (compute rate capped by the DDR
-            // ceiling) improves — the trade Sec. 4.2 describes.
             let cur_fps = report.fps;
             let mut cands: Vec<(usize, usize, u64)> = alloc
                 .stages
@@ -304,43 +797,20 @@ impl FlexAllocator {
             }
         }
     }
-}
 
-/// Recompute every stage's figures after a config change.
-pub fn refresh_figures(net: &Network, mode: QuantMode, alloc: &mut Allocation) {
-    for s in alloc.stages.iter_mut() {
-        s.figures = engine::figures(&net.layers[s.layer_idx], &s.cfg, mode);
-    }
-}
-
-/// Total BRAM18 of an allocation (per-stage buffers + top).
-pub fn bram_total(net: &Network, mode: QuantMode, alloc: &Allocation) -> usize {
-    let mut total = TOP_BRAM18;
-    for (i, s) in alloc.stages.iter().enumerate() {
-        let (pk, pm) = alloc.producer(i);
-        let geo = buffer_geometry(&net.layers[s.layer_idx], &s.cfg, pk, pm);
-        total += engine::bram18_cost(&net.layers[s.layer_idx], &s.cfg, &geo, mode);
-    }
-    total
-}
-
-impl Allocator for FlexAllocator {
-    fn arch(&self) -> ArchKind {
-        ArchKind::FlexPipeline
-    }
-
-    fn allocate(&self, net: &Network, board: &Board, mode: QuantMode) -> crate::Result<Allocation> {
+    /// Naive end-to-end allocation (the seed's `FlexAllocator::allocate`).
+    pub fn allocate(
+        a: &FlexAllocator,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+    ) -> crate::Result<Allocation> {
         net.validate()?;
-        anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
-        // Multiplier budget, packing-aware: at 8-bit each DSP packs two
-        // multiplies, but a DSP cannot be shared across engines — a stage
-        // with an odd multiplier count strands half a slice. Reserving
-        // (mults_per_dsp − 1) per compute stage guarantees
-        // Σ ceil(mults_i / pack) ≤ DSPs for any split Algorithm 1 picks.
+        anyhow::ensure!(board.dsps > a.dsp_reserve, "no DSPs available");
         let pack = mode.mults_per_dsp();
         let slack = (pack - 1) * net.compute_layers().len();
-        let theta_total = ((board.dsps - self.dsp_reserve) * pack).saturating_sub(slack);
-        let cfgs = self.algorithm1(net, theta_total);
+        let theta_total = ((board.dsps - a.dsp_reserve) * pack).saturating_sub(slack);
+        let cfgs = algorithm1(net, theta_total);
 
         let stages = cfgs
             .iter()
@@ -365,7 +835,7 @@ impl Allocator for FlexAllocator {
             extra_cycles: 0,
             shared_array: false,
         };
-        self.raise_k(net, board, mode, &mut alloc);
+        raise_k(a, net, board, mode, &mut alloc);
         Ok(alloc)
     }
 }
@@ -390,6 +860,59 @@ mod tests {
     fn decompose_respects_layer_dims() {
         let (cp, mp) = decompose(3, 64, 9, 10_000 * 9);
         assert!(cp <= 3 && mp <= 64);
+    }
+
+    #[test]
+    fn stair_matches_decompose_on_dense_sweep() {
+        // Exhaustive check on a small layer: every pair budget's minimum
+        // phase count must equal the staircase lookup.
+        for (c_eff, m) in [(12usize, 40usize), (3, 64), (17, 17), (1, 9)] {
+            let stair = PhaseStair::build(c_eff, m);
+            for pairs in 1..=(c_eff * m + 3) {
+                let (cp, mp) = decompose(c_eff, m, 1, pairs);
+                let want = div_ceil(c_eff, cp) as u64 * div_ceil(m, mp) as u64;
+                assert_eq!(
+                    stair.phases_at(pairs as u64),
+                    want,
+                    "c={c_eff} m={m} pairs={pairs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stair_first_below_is_next_strict_improvement() {
+        let stair = PhaseStair::build(128, 128);
+        let cur = stair.phases_at(64); // 256 phases at 64 pairs
+        let next = stair.first_below(cur).unwrap();
+        // The naive scan: first pairs budget whose phases beat `cur`.
+        let mut want = None;
+        for pairs in 65..=(128 * 128) {
+            let (cp, mp) = decompose(128, 128, 1, pairs);
+            if (div_ceil(128, cp) * div_ceil(128, mp)) < cur as usize {
+                want = Some(pairs as u64);
+                break;
+            }
+        }
+        assert_eq!(Some(next), want);
+    }
+
+    #[test]
+    fn optimized_allocate_matches_naive_on_small_nets() {
+        for net in [zoo::tinycnn(), zoo::lenet(), zoo::zf()] {
+            for mode in [QuantMode::W16A16, QuantMode::W8A8] {
+                let a = FlexAllocator::default();
+                let fast = a.allocate(&net, &zc706(), mode).unwrap();
+                let slow = naive::allocate(&a, &net, &zc706(), mode).unwrap();
+                for (f, s) in fast.stages.iter().zip(&slow.stages) {
+                    assert_eq!(f.cfg, s.cfg, "{} {mode}", net.name);
+                }
+                let (rf, rs) = (fast.evaluate(), slow.evaluate());
+                assert_eq!(rf.t_frame_cycles, rs.t_frame_cycles);
+                assert_eq!(rf.fps.to_bits(), rs.fps.to_bits(), "{}", net.name);
+                assert_eq!(rf.bram18, rs.bram18);
+            }
+        }
     }
 
     #[test]

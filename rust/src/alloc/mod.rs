@@ -131,6 +131,40 @@ pub struct AllocReport {
     pub stage_cycles: Vec<u64>,
 }
 
+/// Performance-only summary: every [`AllocReport`] field that does *not*
+/// require the per-stage buffer-geometry / logic cost walk. Produced by
+/// [`Allocation::evaluate_perf`] — the allocator's inner loops (Algorithm 2
+/// candidate evaluation, design-space search scoring) call this thousands
+/// of times, so it must stay O(stages) with no geometry work.
+///
+/// Invariant (locked by property + golden tests): every field here is
+/// computed by the *same arithmetic, in the same order*, as the matching
+/// field of [`Allocation::evaluate`] — the two are bit-identical, not
+/// merely close.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    /// Pipeline beat: slowest stage's cycles per frame.
+    pub t_frame_cycles: u64,
+    /// Index of the bottleneck stage.
+    pub bottleneck: usize,
+    /// Frames per second at `freq_hz` (DDR-capped).
+    pub fps: f64,
+    /// Conventional GOPS (2 ops/MAC).
+    pub gops: f64,
+    /// Multipliers instantiated.
+    pub mults: usize,
+    /// DSP slices used.
+    pub dsps: usize,
+    /// Achieved / peak of used DSPs.
+    pub dsp_efficiency: f64,
+    /// DDR bytes/second at the achieved (possibly throttled) rate.
+    pub ddr_bytes_per_sec: f64,
+    /// DDR bytes/second the compute rate would demand (Algorithm 2's B).
+    pub ddr_demand_bytes_per_sec: f64,
+    /// Per-stage cycles/frame.
+    pub stage_cycles: Vec<u64>,
+}
+
 /// BRAM18 blocks for the pipeline top (actIn/actOut packers, weight
 /// streamer FIFOs) — fixed overhead beside per-stage buffers.
 pub const TOP_BRAM18: usize = 24;
@@ -145,8 +179,13 @@ impl Allocation {
             .collect()
     }
 
-    /// Closed-form evaluation: Eq. 3/4 plus the engine cost models.
-    pub fn evaluate(&self) -> AllocReport {
+    /// Cheap closed-form evaluation: Eq. 3/4 performance figures only, no
+    /// buffer-geometry or logic-cost walk. This is the API the hot loops
+    /// use (`FlexAllocator::raise_k` evaluates every candidate K-jump with
+    /// it; the search engine scores thousands of design points). Fields are
+    /// bit-identical to the matching [`Allocation::evaluate`] fields — see
+    /// [`PerfReport`]'s invariant note.
+    pub fn evaluate_perf(&self) -> PerfReport {
         let stage_cycles = self.stage_cycles();
         let (bottleneck, _) = stage_cycles
             .iter()
@@ -207,6 +246,39 @@ impl Allocation {
             0.0
         };
 
+        // DDR traffic: weights per frame + input frames in + outputs back.
+        let weight_bytes: u64 = self
+            .stages
+            .iter()
+            .map(|s| s.figures.weight_bytes_per_frame())
+            .sum();
+        let (c0, h0, w0) = self.net.input;
+        let in_bytes = (c0 * h0 * w0 * self.mode.act_bytes()) as u64;
+        let out_bytes = 4 * 1024; // final activations: negligible, bounded
+        let ddr = (weight_bytes + in_bytes + out_bytes) as f64 * fps;
+        let ddr_demand = (weight_bytes + in_bytes + out_bytes) as f64 * fps_compute;
+
+        PerfReport {
+            t_frame_cycles: t_frame,
+            bottleneck,
+            fps,
+            gops,
+            mults,
+            dsps,
+            dsp_efficiency,
+            ddr_bytes_per_sec: ddr,
+            ddr_demand_bytes_per_sec: ddr_demand,
+            stage_cycles,
+        }
+    }
+
+    /// Full closed-form evaluation: the [`evaluate_perf`] figures plus the
+    /// BRAM/LUT/FF resource walk (buffer geometry + logic cost per stage).
+    ///
+    /// [`evaluate_perf`]: Allocation::evaluate_perf
+    pub fn evaluate(&self) -> AllocReport {
+        let perf = self.evaluate_perf();
+
         let mut bram = TOP_BRAM18;
         let mut logic = vec![];
         if self.shared_array {
@@ -248,33 +320,33 @@ impl Allocation {
         }
         let total_logic = cost::total_logic(logic);
 
-        // DDR traffic: weights per frame + input frames in + outputs back.
-        let weight_bytes: u64 = self
-            .stages
-            .iter()
-            .map(|s| s.figures.weight_bytes_per_frame())
-            .sum();
-        let (c0, h0, w0) = self.net.input;
-        let in_bytes = (c0 * h0 * w0 * self.mode.act_bytes()) as u64;
-        let out_bytes = 4 * 1024; // final activations: negligible, bounded
-        let ddr = (weight_bytes + in_bytes + out_bytes) as f64 * fps;
-        let ddr_demand = (weight_bytes + in_bytes + out_bytes) as f64 * fps_compute;
-
         AllocReport {
-            t_frame_cycles: t_frame,
-            bottleneck,
-            fps,
-            gops,
-            mults,
-            dsps,
-            dsp_efficiency,
+            t_frame_cycles: perf.t_frame_cycles,
+            bottleneck: perf.bottleneck,
+            fps: perf.fps,
+            gops: perf.gops,
+            mults: perf.mults,
+            dsps: perf.dsps,
+            dsp_efficiency: perf.dsp_efficiency,
             bram18: bram,
             luts: total_logic.luts,
             ffs: total_logic.ffs,
-            ddr_bytes_per_sec: ddr,
-            ddr_demand_bytes_per_sec: ddr_demand,
-            stage_cycles,
+            ddr_bytes_per_sec: perf.ddr_bytes_per_sec,
+            ddr_demand_bytes_per_sec: perf.ddr_demand_bytes_per_sec,
+            stage_cycles: perf.stage_cycles,
         }
+    }
+
+    /// BRAM18 blocks one pipeline stage contributes (its activation buffer
+    /// at the geometry induced by its producer, plus weight/psum memories).
+    /// Isolated so incremental callers can recompute just the stages a
+    /// config change touches: changing stage `i`'s `K` invalidates stage
+    /// `i` (own geometry) and stage `i+1` (producer `K` seen downstream) —
+    /// nothing else.
+    pub fn stage_bram18(&self, i: usize) -> usize {
+        let s = &self.stages[i];
+        let (pk, pm) = self.producer(i);
+        engine::stage_bram18(&self.net.layers[s.layer_idx], &s.cfg, pk, pm, self.mode)
     }
 
     /// Producer `(K, M')` seen by stage `i` (the DDR unpacker writes one

@@ -240,6 +240,22 @@ pub fn bram18_cost(
     act + weight + psum
 }
 
+/// BRAM18 blocks for one stage in one call (geometry + cost). The hot
+/// incremental paths (`alloc::flex::FlexAllocator::raise_k`'s per-candidate
+/// delta, `alloc::Allocation::stage_bram18`) use this so a stage's BRAM
+/// contribution can be recomputed in isolation when only that stage (or its
+/// producer) changed.
+pub fn stage_bram18(
+    layer: &Layer,
+    cfg: &EngineConfig,
+    prod_k: usize,
+    prod_mp: usize,
+    mode: QuantMode,
+) -> usize {
+    let geo = buffer_geometry(layer, cfg, prod_k, prod_mp);
+    bram18_cost(layer, cfg, &geo, mode)
+}
+
 /// Integer ceiling division.
 pub fn div_ceil(a: usize, b: usize) -> usize {
     a.div_ceil(b)

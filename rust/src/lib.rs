@@ -27,6 +27,8 @@
 //!   line-buffer geometry, BRAM/LUT/FF cost, address generation.
 //! - [`sim`] — event-driven pipeline simulator (stall-accurate) and the
 //!   recurrent-architecture simulator.
+//! - [`search`] — parallel design-space search: boards × models × modes ×
+//!   DSP budgets fan-out with shared precomputation + Pareto frontier.
 //! - [`power`] — calibrated power estimation (the paper uses Vivado's
 //!   estimate; we use an activity-based analytical model).
 //! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
@@ -42,6 +44,7 @@ pub mod power;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod sim;
 pub mod trace;
 pub mod util;

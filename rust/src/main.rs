@@ -7,6 +7,8 @@
 //! flexipipe serve    --net tinycnn --frames 256 [--artifacts DIR]
 //! flexipipe e2e      [--artifacts DIR]     # golden-frame check + throughput
 //! flexipipe sweep    --model vgg16 --param dsps --from 128 --to 1024
+//! flexipipe search   --models vgg16,alexnet --boards zc706,zcu102 \
+//!                    --bits 8,16 [--dsps 512,900] [--threads 0] [--json F]
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
@@ -15,6 +17,7 @@ use flexipipe::model::config;
 use flexipipe::power::PowerModel;
 use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
+use flexipipe::search::{self, DesignSpace};
 use flexipipe::util::cli::{flag, opt, usage, Args, Spec};
 use flexipipe::{board, report, sim};
 
@@ -44,6 +47,13 @@ fn specs() -> Vec<Spec> {
         opt("to", "sweep end", Some("1024")),
         opt("steps", "sweep steps", Some("8")),
         opt("trace", "write per-stage CSV trace to this path (simulate)", None),
+        opt("models", "comma-separated model list (search)", None),
+        opt("boards", "comma-separated board list (search)", None),
+        opt("archs", "comma-separated arch list (search)", Some("flex")),
+        opt("dsps", "comma-separated DSP budget overrides (search)", None),
+        opt("threads", "search worker threads, 0 = all cores", Some("0")),
+        opt("sim-frames", "confirm each search point with N simulated frames", Some("0")),
+        opt("json", "write search results as JSON to this path", None),
         flag("no-paper", "omit paper reference rows from the report"),
         flag("verbose", "per-stage detail"),
     ]
@@ -62,6 +72,7 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "serve" => cmd_serve(&args),
         "e2e" => cmd_e2e(&args),
         "sweep" => cmd_sweep(&args),
+        "search" => cmd_search(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -74,7 +85,7 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: allocate simulate report serve e2e sweep help\n\n{}",
+         commands: allocate simulate report serve e2e sweep search help\n\n{}",
         usage(&specs())
     );
 }
@@ -273,6 +284,107 @@ fn cmd_e2e(args: &Args) -> flexipipe::Result<()> {
     }
     anyhow::ensure!(checked > 0, "no 8-bit artifacts found in {}", dir.display());
     println!("all {checked} artifacts bit-exact");
+    Ok(())
+}
+
+/// `search`: parallel boards × models × modes × budgets sweep with a
+/// Pareto frontier per (model, bits) workload.
+fn cmd_search(args: &Args) -> flexipipe::Result<()> {
+    let split = |s: &str| -> Vec<String> {
+        s.split(',')
+            .map(|p| p.trim().to_string())
+            .filter(|p| !p.is_empty())
+            .collect()
+    };
+    // Singular --model/--board remain usable as one-element sweeps.
+    let models = split(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
+    let boards = split(args.get("boards").unwrap_or(args.get_or("board", "zc706")));
+    let bits = split(args.get_or("bits", "16"));
+    let archs = split(args.get_or("archs", "flex"));
+
+    let mut ds = DesignSpace {
+        models: models
+            .iter()
+            .map(|m| config::resolve(m))
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        boards: boards
+            .iter()
+            .map(|b| board::by_name(b))
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        modes: bits
+            .iter()
+            .map(|b| {
+                b.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("invalid --bits entry '{b}'"))
+                    .and_then(QuantMode::from_bits)
+            })
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        archs: archs
+            .iter()
+            .map(|a| ArchKind::parse(a))
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        sim_frames: args.get_parse("sim-frames", 0usize)?,
+        threads: args.get_parse("threads", 0usize)?,
+        ..Default::default()
+    };
+    if let Some(d) = args.get("dsps") {
+        ds.dsp_budgets = split(d)
+            .iter()
+            .map(|v| {
+                v.parse::<usize>()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("invalid --dsps entry '{v}'"))
+            })
+            .collect::<flexipipe::Result<Vec<_>>>()?;
+    }
+
+    let t0 = std::time::Instant::now();
+    let points = ds.sweep()?;
+    let dt = t0.elapsed();
+
+    println!(
+        "{:<10} {:<9} {:>4} {:<10} {:>5} {:>9} {:>8} {:>8} {:>7} {:>5}",
+        "board", "model", "bits", "arch", "DSPs", "fps", "GOPS", "DSPeff%", "W", "maxK"
+    );
+    for p in &points {
+        println!(
+            "{:<10} {:<9} {:>4} {:<10} {:>5} {:>9.1} {:>8.0} {:>8.1} {:>7.2} {:>5}",
+            p.board,
+            p.model,
+            p.mode.bits(),
+            p.arch.label(),
+            p.report.dsps,
+            p.report.fps,
+            p.report.gops,
+            p.report.dsp_efficiency * 100.0,
+            p.power_w,
+            p.max_k
+        );
+    }
+    println!("{} points in {:.2?} ({} threads)", points.len(), dt, ds.workers());
+
+    // Frontier per workload (model, bits): cross-model dominance is noise.
+    for ((model, bits), front) in search::frontier_by_workload(&points) {
+        let desc: Vec<String> = front
+            .iter()
+            .map(|&i| {
+                format!(
+                    "{}/{} ({:.1} fps, {:.2} W, {} DSPs)",
+                    points[i].board,
+                    points[i].arch.label(),
+                    points[i].report.fps,
+                    points[i].power_w,
+                    points[i].report.dsps
+                )
+            })
+            .collect();
+        println!("pareto {model}@{bits}b: {}", desc.join(" | "));
+    }
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, search::sweep_to_json(&points).to_pretty())?;
+        println!("results written to {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,383 @@
+//! Design-space search: the framework's outer loop.
+//!
+//! The paper's framework exists to answer "what does the *balanced*
+//! accelerator look like for this (model, board, precision)?" — so the
+//! product-shaped workload is not one allocation but a sweep:
+//! boards × models × precisions × DSP budgets × architectures, scored and
+//! reduced to a Pareto frontier. [`DesignSpace`] is that sweep as an API:
+//!
+//! - **Shared precomputation**: the per-layer decomposition staircases
+//!   ([`NetTables`]) depend only on layer dimensions, so they are built
+//!   once per model and shared (by reference) across every board/mode/
+//!   budget job of the sweep.
+//! - **Parallel fan-out**: jobs are distributed over scoped worker threads
+//!   with an atomic work-stealing cursor. Results land in per-job slots,
+//!   so the output order is deterministic (job enumeration order)
+//!   regardless of thread count or scheduling.
+//! - **Frontier reduction**: [`pareto_frontier`] returns the non-dominated
+//!   points under (maximize fps, minimize power, minimize DSPs). Callers
+//!   normally group points by (model, mode) first — a frontier across
+//!   different models compares apples to oranges.
+//!
+//! Consumed by the `flexipipe search` CLI subcommand, the `design_space`
+//! example, and `benches/{hotpath,bandwidth_sweep}.rs`.
+
+use crate::alloc::flex::{FlexAllocator, NetTables};
+use crate::alloc::{allocator_for, AllocReport, ArchKind};
+use crate::board::Board;
+use crate::model::Network;
+use crate::power::PowerModel;
+use crate::quant::QuantMode;
+use crate::sim::{self, SimReport};
+use crate::util::json::{self, Value};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One evaluated point of the design space.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// Board name.
+    pub board: String,
+    /// Model name.
+    pub model: String,
+    /// Quantization mode.
+    pub mode: QuantMode,
+    /// Architecture that produced the allocation.
+    pub arch: ArchKind,
+    /// DSPs available to the allocator (after any budget override).
+    pub dsps_avail: usize,
+    /// Closed-form report.
+    pub report: AllocReport,
+    /// Estimated power (W).
+    pub power_w: f64,
+    /// Largest row parallelism Algorithm 2 chose.
+    pub max_k: usize,
+    /// Cycle-accurate confirmation, when `sim_frames > 0`.
+    pub sim: Option<SimReport>,
+}
+
+impl DesignPoint {
+    /// JSON encoding (for `--json` dumps and the perf-trajectory bench).
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("board", Value::Str(self.board.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("bits", Value::Num(self.mode.bits() as f64)),
+            ("arch", Value::Str(self.arch.label().to_string())),
+            ("dsps_avail", Value::Num(self.dsps_avail as f64)),
+            ("fps", Value::Num(self.report.fps)),
+            ("gops", Value::Num(self.report.gops)),
+            ("dsp_efficiency", Value::Num(self.report.dsp_efficiency)),
+            ("dsps", Value::Num(self.report.dsps as f64)),
+            ("bram18", Value::Num(self.report.bram18 as f64)),
+            ("ddr_gbps", Value::Num(self.report.ddr_bytes_per_sec / 1e9)),
+            ("power_w", Value::Num(self.power_w)),
+            ("max_k", Value::Num(self.max_k as f64)),
+        ];
+        if let Some(s) = &self.sim {
+            pairs.push(("sim_fps", Value::Num(s.fps)));
+            pairs.push(("sim_cycles_per_frame", Value::Num(s.cycles_per_frame)));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// A boards × models × modes × DSP-budgets × architectures sweep.
+///
+/// All fields are public; [`DesignSpace::default`] gives the common shape
+/// (16-bit, flex architecture, board-default DSP budget, closed-form only,
+/// auto thread count) so callers only fill in boards and models.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    /// Boards to sweep (cloned per job; mutate e.g. `ddr_bytes_per_sec`
+    /// beforehand for bandwidth sweeps).
+    pub boards: Vec<Board>,
+    /// Models to sweep.
+    pub models: Vec<Network>,
+    /// Quantization modes.
+    pub modes: Vec<QuantMode>,
+    /// Architectures to allocate with.
+    pub archs: Vec<ArchKind>,
+    /// DSP budget overrides; `None` keeps the board's own count.
+    pub dsp_budgets: Vec<Option<usize>>,
+    /// Frames to run through the cycle simulator per point (0 = skip).
+    pub sim_frames: usize,
+    /// Worker threads; 0 = `std::thread::available_parallelism()`.
+    pub threads: usize,
+}
+
+impl Default for DesignSpace {
+    fn default() -> Self {
+        DesignSpace {
+            boards: Vec::new(),
+            models: Vec::new(),
+            modes: vec![QuantMode::W16A16],
+            archs: vec![ArchKind::FlexPipeline],
+            dsp_budgets: vec![None],
+            sim_frames: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// One enumerated job (indices into the `DesignSpace` vectors).
+struct Job {
+    board: usize,
+    model: usize,
+    mode: QuantMode,
+    arch: ArchKind,
+    dsps: Option<usize>,
+}
+
+impl DesignSpace {
+    /// Number of design points the sweep will evaluate.
+    pub fn len(&self) -> usize {
+        self.boards.len()
+            * self.models.len()
+            * self.modes.len()
+            * self.archs.len()
+            * self.dsp_budgets.len()
+    }
+
+    /// Is the sweep empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn jobs(&self) -> Vec<Job> {
+        let mut jobs = Vec::with_capacity(self.len());
+        for board in 0..self.boards.len() {
+            for model in 0..self.models.len() {
+                for &mode in &self.modes {
+                    for &arch in &self.archs {
+                        for &dsps in &self.dsp_budgets {
+                            jobs.push(Job {
+                                board,
+                                model,
+                                mode,
+                                arch,
+                                dsps,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        jobs
+    }
+
+    fn run_job(&self, job: &Job, tables: &[NetTables]) -> crate::Result<DesignPoint> {
+        let net = &self.models[job.model];
+        let mut board = self.boards[job.board].clone();
+        if let Some(d) = job.dsps {
+            board.dsps = d;
+        }
+        let alloc = match job.arch {
+            // Flex reuses the model's shared decomposition tables.
+            ArchKind::FlexPipeline => {
+                FlexAllocator::default().allocate_with(net, &board, job.mode, &tables[job.model])?
+            }
+            other => allocator_for(other).allocate(net, &board, job.mode)?,
+        };
+        let report = alloc.evaluate();
+        let power_w = PowerModel::default().estimate(&alloc, &report).total();
+        let max_k = alloc.stages.iter().map(|s| s.cfg.k).max().unwrap_or(1);
+        let sim = (self.sim_frames > 0).then(|| sim::simulate(&alloc, self.sim_frames));
+        Ok(DesignPoint {
+            board: board.name.clone(),
+            model: net.name.clone(),
+            mode: job.mode,
+            arch: job.arch,
+            dsps_avail: board.dsps,
+            report,
+            power_w,
+            max_k,
+            sim,
+        })
+    }
+
+    /// Worker threads [`DesignSpace::sweep`] will actually use: the
+    /// `threads` override (or the core count when 0), clamped to the
+    /// number of jobs.
+    pub fn workers(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
+        .clamp(1, self.len().max(1))
+    }
+
+    /// Evaluate every point of the sweep, fanning jobs out across worker
+    /// threads. Output order is the deterministic job enumeration order
+    /// (boards, then models, then modes, archs, budgets) independent of
+    /// `threads`.
+    pub fn sweep(&self) -> crate::Result<Vec<DesignPoint>> {
+        anyhow::ensure!(!self.is_empty(), "empty design space (no boards or models?)");
+        // Shared precomputation: decomposition staircases once per model.
+        let tables: Vec<NetTables> = self.models.iter().map(NetTables::build).collect();
+        let jobs = self.jobs();
+        let n_jobs = jobs.len();
+        let workers = self.workers();
+
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<crate::Result<DesignPoint>>>> =
+            (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let out = self.run_job(&jobs[i], &tables);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+}
+
+/// Dominance under (maximize fps, minimize power, minimize DSPs used).
+fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
+    a.report.fps >= b.report.fps
+        && a.power_w <= b.power_w
+        && a.report.dsps <= b.report.dsps
+        && (a.report.fps > b.report.fps || a.power_w < b.power_w || a.report.dsps < b.report.dsps)
+}
+
+/// Non-dominated members of `subset` (indices into `points`).
+fn frontier_of(points: &[DesignPoint], subset: &[usize]) -> Vec<usize> {
+    subset
+        .iter()
+        .copied()
+        .filter(|&i| {
+            !subset
+                .iter()
+                .any(|&j| j != i && dominates(&points[j], &points[i]))
+        })
+        .collect()
+}
+
+/// Indices of the non-dominated points under (maximize fps, minimize
+/// power, minimize DSPs used). Use [`frontier_by_workload`] when the
+/// sweep mixes workloads — cross-model dominance is not meaningful.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<usize> {
+    let all: Vec<usize> = (0..points.len()).collect();
+    frontier_of(points, &all)
+}
+
+/// Pareto frontier per `(model, bits)` workload: returns
+/// `((model, bits), frontier indices into points)` pairs in first-seen
+/// order. Shared by the `search` CLI and the `design_space` example so
+/// the two stay consistent (and no points are cloned into subsets).
+pub fn frontier_by_workload(points: &[DesignPoint]) -> Vec<((String, usize), Vec<usize>)> {
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for p in points {
+        let key = (p.model.clone(), p.mode.bits());
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+    keys.into_iter()
+        .map(|key| {
+            let subset: Vec<usize> = (0..points.len())
+                .filter(|&i| points[i].model == key.0 && points[i].mode.bits() == key.1)
+                .collect();
+            let front = frontier_of(points, &subset);
+            (key, front)
+        })
+        .collect()
+}
+
+/// JSON array for a whole sweep.
+pub fn sweep_to_json(points: &[DesignPoint]) -> Value {
+    Value::Arr(points.iter().map(DesignPoint::to_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::{zc706, zedboard};
+    use crate::model::zoo;
+
+    fn small_space(threads: usize) -> DesignSpace {
+        DesignSpace {
+            boards: vec![zedboard(), zc706()],
+            models: vec![zoo::tinycnn(), zoo::lenet()],
+            modes: vec![QuantMode::W8A8, QuantMode::W16A16],
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let serial = small_space(1).sweep().unwrap();
+        let parallel = small_space(4).sweep().unwrap();
+        assert_eq!(serial.len(), 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.board, b.board);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.report.fps.to_bits(), b.report.fps.to_bits());
+            assert_eq!(a.report.dsps, b.report.dsps);
+        }
+    }
+
+    #[test]
+    fn sweep_matches_direct_allocation() {
+        use crate::alloc::Allocator;
+        let points = small_space(0).sweep().unwrap();
+        // First job: zedboard × tinycnn × 8-bit × flex × default budget.
+        let direct = FlexAllocator::default()
+            .allocate(&zoo::tinycnn(), &zedboard(), QuantMode::W8A8)
+            .unwrap()
+            .evaluate();
+        assert_eq!(points[0].report.fps.to_bits(), direct.fps.to_bits());
+        assert_eq!(points[0].report.bram18, direct.bram18);
+    }
+
+    #[test]
+    fn dsp_budget_override_applies() {
+        let ds = DesignSpace {
+            boards: vec![zc706()],
+            models: vec![zoo::tinycnn()],
+            dsp_budgets: vec![Some(128), Some(512)],
+            threads: 1,
+            ..Default::default()
+        };
+        let pts = ds.sweep().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].dsps_avail, 128);
+        assert_eq!(pts[1].dsps_avail, 512);
+        assert!(pts[0].report.dsps <= 128);
+    }
+
+    #[test]
+    fn pareto_keeps_nondominated_only() {
+        let mut pts = small_space(1).sweep().unwrap();
+        // Degrade one point so it is strictly dominated by another with the
+        // same fps: same everything but more power.
+        if pts.len() >= 2 {
+            let clone = pts[0].clone();
+            let mut worse = clone.clone();
+            worse.power_w += 100.0;
+            pts.push(worse);
+            let front = pareto_frontier(&pts);
+            assert!(!front.contains(&(pts.len() - 1)), "dominated point kept");
+        }
+    }
+
+    #[test]
+    fn empty_space_errors() {
+        assert!(DesignSpace::default().sweep().is_err());
+    }
+}

@@ -9,20 +9,38 @@
 //!   resident — and can't write if the downstream buffer is full),
 //! - DDR contention (weight streams from all engines + the actIn frame
 //!   stream share one `β` bytes/cycle DDR port, modelled as a weighted-
-//!   fair fluid server — see the DDR model note in `simulate_pipeline`),
+//!   fair fluid server — see the DDR model note in [`SimSetup`]),
 //! - pipeline fill/drain (the makespan of `F` frames is measured),
 //! - ragged tails (last row group of a frame, non-divisor `C'`,`M'`).
 //!
 //! Sequential-group architectures (fusion, recurrent) don't pipeline across
 //! groups by construction; their makespan is the analytic per-group sum —
 //! the DES applies to the pipelined archs where stalls are emergent.
+//!
+//! # Scheduler structure
+//!
+//! The simulation is a greedy list scheduler: repeatedly fire the startable
+//! stage with the earliest start time. [`simulate_pipeline`] implements it
+//! as a ready-queue DES — a min-heap of `(start, stage)` entries kept
+//! current by recomputing only the stages an event can affect. Firing stage
+//! `i` changes exactly the eligibility inputs of stages `i−1` (space in
+//! `i`'s buffer frees), `i` (engine busy, next group), and `i+1` (new input
+//! rows): per-event work is O(affected stages · log n) instead of the
+//! naive O(all stages). The naive full-rescan loop is preserved as
+//! [`simulate_pipeline_naive`] — the executable spec; both run on the same
+//! [`SimState`] eligibility/firing code, and property + golden tests assert
+//! identical reports. Tie-breaking matches too: the heap orders
+//! `(start, stage)` ascending, which is the naive scan's
+//! first-lowest-index-wins rule.
 
 use crate::alloc::{AllocReport, Allocation};
 use crate::engine::buffer_geometry;
 use crate::model::Layer;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Per-stage simulation statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StageStats {
     /// Cycles the engine spent computing groups.
     pub busy_cycles: u64,
@@ -135,180 +153,297 @@ fn stage_params(alloc: &Allocation) -> Vec<StageParams> {
         .collect()
 }
 
-/// Discrete-event pipeline simulation at row-group granularity.
-pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
-    let params = stage_params(alloc);
-    let n = params.len();
-    let bpc = alloc.board.ddr_bytes_per_sec / alloc.freq_hz; // bytes/cycle
+/// Static setup shared by both scheduler implementations.
+///
+/// DDR model: weighted-fair-queueing fluid server. Each engine's weight
+/// streamer (and the actIn unpacker) receives a bandwidth share
+/// proportional to its steady-state demand — what an AXI interconnect
+/// with QoS weights converges to. A FIFO burst model would let one
+/// 200 MB FC weight burst head-of-line-block every conv engine, which
+/// the real design avoids by interleaving (the weight buffers are
+/// double-buffered and the controller round-robins requestors).
+struct SimState {
+    params: Vec<StageParams>,
+    n: usize,
+    frames: usize,
+    /// Per-stage effective weight service time at its fair DDR share.
+    weight_service: Vec<u64>,
+    /// Global group index (across frames) of each stage's next group.
+    next_group: Vec<u64>,
+    /// `row_ready[i][f]`: arrival time of each of stage i's input rows for
+    /// frame f (rows arrive in order; a group start waits for the arrival
+    /// time of the last row of its window).
+    row_ready: Vec<Vec<Vec<u64>>>,
+    /// Input rows retired, per stage per frame.
+    retired: Vec<Vec<u64>>,
+    engine_free: Vec<u64>,
+    stats: Vec<StageStats>,
+    ddr_bytes: u64,
+    total_groups: u64,
+    done_groups: u64,
+    now_max: u64,
+    /// Completion time of each frame (last stage's last group) — used to
+    /// separate the steady-state beat from the pipeline fill.
+    frame_done: Vec<u64>,
+}
 
-    // Dynamic state. `row_ready[i][f]` holds the arrival time of each of
-    // stage i's input rows for frame f (rows arrive in order; the group
-    // start waits for the arrival time of the last row of its window).
-    let mut next_group = vec![0u64; n]; // global group index (across frames)
-    let mut row_ready: Vec<Vec<Vec<u64>>> = (0..n).map(|_| vec![Vec::new(); frames]).collect();
-    let mut retired = vec![vec![0u64; frames]; n]; // input rows retired, per frame
-    let mut engine_free = vec![0u64; n];
-    let mut stats: Vec<StageStats> = (0..n).map(|_| StageStats::default()).collect();
+impl SimState {
+    fn new(alloc: &Allocation, frames: usize) -> SimState {
+        let params = stage_params(alloc);
+        let n = params.len();
+        let bpc = alloc.board.ddr_bytes_per_sec / alloc.freq_hz; // bytes/cycle
 
-    // DDR model: weighted-fair-queueing fluid server. Each engine's weight
-    // streamer (and the actIn unpacker) receives a bandwidth share
-    // proportional to its steady-state demand — what an AXI interconnect
-    // with QoS weights converges to. A FIFO burst model would let one
-    // 200 MB FC weight burst head-of-line-block every conv engine, which
-    // the real design avoids by interleaving (the weight buffers are
-    // double-buffered and the controller round-robins requestors).
-    let mut ddr_bytes = 0u64;
-    let (c0, h0, w0) = alloc.net.input;
-    let row_bytes = (c0 * w0 * alloc.mode.act_bytes()) as u64;
-    let total_in_rows = h0 * frames;
-    let actin_bpf = (h0 as u64) * row_bytes;
-    let total_bpf: f64 = params
-        .iter()
-        .map(|p| (p.weight_bytes * p.groups) as f64)
-        .sum::<f64>()
-        + actin_bpf as f64;
-    // Bandwidth share per stage (fluid WFQ): own demand / total demand.
-    let share = |bytes_per_frame: f64| -> f64 {
-        (bytes_per_frame / total_bpf).max(1e-6)
-    };
-    // actIn: input rows become resident at the unpacker's fair rate.
-    let actin_rate = bpc * share(actin_bpf as f64); // bytes/cycle
-    for r in 0..total_in_rows {
-        let t = (((r as u64 + 1) * row_bytes) as f64 / actin_rate).ceil() as u64;
-        row_ready[0][r / h0].push(t);
-    }
-    ddr_bytes += actin_bpf * frames as u64;
-    let _ = total_in_rows;
-
-    // Weight streaming: engines consume weights phase-by-phase (weight-
-    // stationary = load M'·C'·R·S per phase), so a group's effective
-    // duration is max(T_row, weight service time at the stage's fair
-    // share) — the stream overlaps compute rather than gating the start.
-    // Only the very first group of each stage pays the fill latency.
-    let weight_service: Vec<u64> = params
-        .iter()
-        .map(|p| {
-            if p.weight_bytes == 0 {
-                0
-            } else {
-                let rate = bpc * share((p.weight_bytes * p.groups) as f64);
-                (p.weight_bytes as f64 / rate).ceil() as u64
-            }
-        })
-        .collect();
-
-    let total_groups: u64 = params.iter().map(|p| p.groups * frames as u64).sum();
-    let mut done_groups = 0u64;
-    let mut now_max = 0u64;
-    // Completion time of each frame (last stage's last group) — used to
-    // separate the steady-state beat from the pipeline fill.
-    let mut frame_done = vec![0u64; frames];
-
-    while done_groups < total_groups {
-        // Find the stage that can start its next group the earliest.
-        let mut best: Option<(u64, usize, u64)> = None; // (start, stage, weight wait)
-        for i in 0..n {
-            let p = &params[i];
-            let g = next_group[i];
-            if g >= p.groups * frames as u64 {
-                continue;
-            }
-            let f = (g / p.groups) as usize;
-            let gi = g % p.groups;
-            let need_rows = (gi as usize * p.advance + p.window).min(p.h_in) as u64;
-
-            // (a) input available (with its arrival time)?
-            if (row_ready[i][f].len() as u64) < need_rows {
-                continue; // producer progress will enable this stage
-            }
-            let t_rows = row_ready[i][f][need_rows as usize - 1];
-            // (d) downstream space.
-            if i + 1 < n {
-                let occupied = row_ready[i + 1][f].len() as u64 - retired[i + 1][f];
-                if (occupied + p.k_out as u64) > params[i + 1].capacity as u64 {
-                    continue; // consumer progress will free space
-                }
-            }
-            let t_eng = engine_free[i];
-            // First group pays the initial weight-buffer fill.
-            let t_w = if p.weight_bytes > 0 && g == 0 {
-                weight_service[i]
-            } else {
-                0
-            };
-            let start = t_rows.max(t_eng).max(t_w);
-            let wwait = weight_service[i].saturating_sub(p.t_row);
-            if best.map_or(true, |(b, _, _)| start < b) {
-                best = Some((start, i, wwait));
-            }
+        let mut ddr_bytes = 0u64;
+        let (c0, h0, w0) = alloc.net.input;
+        let row_bytes = (c0 * w0 * alloc.mode.act_bytes()) as u64;
+        let total_in_rows = h0 * frames;
+        let actin_bpf = (h0 as u64) * row_bytes;
+        let total_bpf: f64 = params
+            .iter()
+            .map(|p| (p.weight_bytes * p.groups) as f64)
+            .sum::<f64>()
+            + actin_bpf as f64;
+        // Bandwidth share per stage (fluid WFQ): own demand / total demand.
+        let share = |bytes_per_frame: f64| -> f64 { (bytes_per_frame / total_bpf).max(1e-6) };
+        // actIn: input rows become resident at the unpacker's fair rate.
+        let mut row_ready: Vec<Vec<Vec<u64>>> = (0..n).map(|_| vec![Vec::new(); frames]).collect();
+        let actin_rate = bpc * share(actin_bpf as f64); // bytes/cycle
+        for r in 0..total_in_rows {
+            let t = (((r as u64 + 1) * row_bytes) as f64 / actin_rate).ceil() as u64;
+            row_ready[0][r / h0].push(t);
         }
+        ddr_bytes += actin_bpf * frames as u64;
 
-        let Some((start, i, wwait)) = best else {
-            debug_assert!(false, "pipeline deadlock at {done_groups}/{total_groups}");
-            break;
-        };
+        // Weight streaming: engines consume weights phase-by-phase (weight-
+        // stationary = load M'·C'·R·S per phase), so a group's effective
+        // duration is max(T_row, weight service time at the stage's fair
+        // share) — the stream overlaps compute rather than gating the
+        // start. Only the very first group of each stage pays the fill
+        // latency.
+        let weight_service: Vec<u64> = params
+            .iter()
+            .map(|p| {
+                if p.weight_bytes == 0 {
+                    0
+                } else {
+                    let rate = bpc * share((p.weight_bytes * p.groups) as f64);
+                    (p.weight_bytes as f64 / rate).ceil() as u64
+                }
+            })
+            .collect();
 
-        let p = &params[i];
-        let g = next_group[i];
+        let total_groups: u64 = params.iter().map(|p| p.groups * frames as u64).sum();
+        SimState {
+            n,
+            frames,
+            weight_service,
+            next_group: vec![0u64; n],
+            row_ready,
+            retired: vec![vec![0u64; frames]; n],
+            engine_free: vec![0u64; n],
+            stats: (0..n).map(|_| StageStats::default()).collect(),
+            ddr_bytes,
+            total_groups,
+            done_groups: 0,
+            now_max: 0,
+            frame_done: vec![0u64; frames],
+            params,
+        }
+    }
+
+    /// Earliest start of stage `i`'s next group under the current state, or
+    /// `None` when the stage is finished / input-starved / back-pressured.
+    fn start_of(&self, i: usize) -> Option<u64> {
+        let p = &self.params[i];
+        let g = self.next_group[i];
+        if g >= p.groups * self.frames as u64 {
+            return None;
+        }
         let f = (g / p.groups) as usize;
         let gi = g % p.groups;
+        let need_rows = (gi as usize * p.advance + p.window).min(p.h_in) as u64;
+
+        // (a) input available (with its arrival time)?
+        if (self.row_ready[i][f].len() as u64) < need_rows {
+            return None; // producer progress will enable this stage
+        }
+        let t_rows = self.row_ready[i][f][need_rows as usize - 1];
+        // (b) downstream space.
+        if i + 1 < self.n {
+            let occupied = self.row_ready[i + 1][f].len() as u64 - self.retired[i + 1][f];
+            if (occupied + p.k_out as u64) > self.params[i + 1].capacity as u64 {
+                return None; // consumer progress will free space
+            }
+        }
+        let t_eng = self.engine_free[i];
+        // First group pays the initial weight-buffer fill.
+        let t_w = if p.weight_bytes > 0 && g == 0 {
+            self.weight_service[i]
+        } else {
+            0
+        };
+        Some(t_rows.max(t_eng).max(t_w))
+    }
+
+    /// Fire stage `i`'s next group at `start` (must come from
+    /// [`SimState::start_of`]).
+    fn fire(&mut self, i: usize, start: u64) {
+        let p = &self.params[i];
+        let (t_row, weight_bytes, advance, h_in, k_out, h_out, groups) = (
+            p.t_row, p.weight_bytes, p.advance, p.h_in, p.k_out, p.h_out, p.groups,
+        );
+        let g = self.next_group[i];
+        let f = (g / groups) as usize;
+        let gi = g % groups;
         // Streaming overlap: the group ends when both compute and its
         // weight stream are done.
-        let finish = start + p.t_row.max(weight_service[i]);
+        let finish = start + t_row.max(self.weight_service[i]);
+        let wwait = self.weight_service[i].saturating_sub(t_row);
 
-        stats[i].stall_weights += wwait;
-        stats[i].busy_cycles += p.t_row;
-        stats[i].groups_done += 1;
-        if p.weight_bytes > 0 {
-            ddr_bytes += p.weight_bytes;
+        self.stats[i].stall_weights += wwait;
+        self.stats[i].busy_cycles += t_row;
+        self.stats[i].groups_done += 1;
+        if weight_bytes > 0 {
+            self.ddr_bytes += weight_bytes;
         }
 
-        engine_free[i] = finish;
-        next_group[i] = g + 1;
-        retired[i][f] = ((gi + 1) * p.advance as u64).min(p.h_in as u64);
+        self.engine_free[i] = finish;
+        self.next_group[i] = g + 1;
+        self.retired[i][f] = ((gi + 1) * advance as u64).min(h_in as u64);
         // Produce output rows for the consumer (tail group may be short).
-        let already = (gi as usize * p.k_out).min(p.h_out);
-        let produced = p.k_out.min(p.h_out - already).max(1) as u64;
-        if i + 1 < n {
+        let already = (gi as usize * k_out).min(h_out);
+        let produced = k_out.min(h_out - already).max(1) as u64;
+        if i + 1 < self.n {
             for _ in 0..produced {
-                row_ready[i + 1][f].push(finish);
+                self.row_ready[i + 1][f].push(finish);
             }
         }
 
-        now_max = now_max.max(finish);
-        if i == n - 1 {
-            frame_done[f] = frame_done[f].max(finish);
+        self.now_max = self.now_max.max(finish);
+        if i == self.n - 1 {
+            self.frame_done[f] = self.frame_done[f].max(finish);
         }
-        done_groups += 1;
+        self.done_groups += 1;
     }
 
-    let makespan = now_max.max(1);
-    // Steady-state beat: inter-frame completion gap once the pipeline is
-    // full (fill latency belongs to the first frame only — Eq. 4 is a
-    // throughput statement). Single-frame runs report the full latency.
-    let cycles_per_frame = if frames > 1 {
-        (frame_done[frames - 1] - frame_done[0]) as f64 / (frames - 1) as f64
-    } else {
-        makespan as f64
-    };
-    let fps = alloc.freq_hz / cycles_per_frame;
-    let macs = alloc.net.macs();
-    let gops = 2.0 * macs as f64 * fps / 1e9;
-    let mults_total: u64 = params.iter().map(|p| p.mults).sum();
-    let dsp_efficiency = macs as f64 / (mults_total as f64 * cycles_per_frame);
-    let ddr_utilization = ddr_bytes as f64 / (bpc * makespan as f64);
+    /// Wrap up into a [`SimReport`] once all groups are done.
+    fn report(self, alloc: &Allocation) -> SimReport {
+        let bpc = alloc.board.ddr_bytes_per_sec / alloc.freq_hz;
+        let makespan = self.now_max.max(1);
+        // Steady-state beat: inter-frame completion gap once the pipeline
+        // is full (fill latency belongs to the first frame only — Eq. 4 is
+        // a throughput statement). Single-frame runs report the full
+        // latency.
+        let cycles_per_frame = if self.frames > 1 {
+            (self.frame_done[self.frames - 1] - self.frame_done[0]) as f64
+                / (self.frames - 1) as f64
+        } else {
+            makespan as f64
+        };
+        let fps = alloc.freq_hz / cycles_per_frame;
+        let macs = alloc.net.macs();
+        let gops = 2.0 * macs as f64 * fps / 1e9;
+        let mults_total: u64 = self.params.iter().map(|p| p.mults).sum();
+        let dsp_efficiency = macs as f64 / (mults_total as f64 * cycles_per_frame);
+        let ddr_utilization = self.ddr_bytes as f64 / (bpc * makespan as f64);
 
-    SimReport {
-        frames,
-        makespan,
-        cycles_per_frame,
-        fps,
-        gops,
-        dsp_efficiency,
-        ddr_bytes,
-        ddr_utilization,
-        stages: stats,
+        SimReport {
+            frames: self.frames,
+            makespan,
+            cycles_per_frame,
+            fps,
+            gops,
+            dsp_efficiency,
+            ddr_bytes: self.ddr_bytes,
+            ddr_utilization,
+            stages: self.stats,
+        }
     }
+}
+
+/// Ready-queue discrete-event pipeline simulation at row-group granularity.
+/// Per event: O(affected stages · log n).
+pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
+    let mut st = SimState::new(alloc, frames);
+    let n = st.n;
+
+    // Min-heap of (start, stage) for currently-startable stages, with lazy
+    // invalidation: `queued[i]` holds the start the heap believes; entries
+    // that no longer match are discarded on pop.
+    let mut queued: Vec<Option<u64>> = vec![None; n];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    for i in 0..n {
+        if let Some(s) = st.start_of(i) {
+            queued[i] = Some(s);
+            heap.push(Reverse((s, i)));
+        }
+    }
+
+    while st.done_groups < st.total_groups {
+        let Some(Reverse((start, i))) = heap.pop() else {
+            debug_assert!(
+                false,
+                "pipeline deadlock at {}/{}",
+                st.done_groups, st.total_groups
+            );
+            break;
+        };
+        if queued[i] != Some(start) {
+            continue; // stale entry
+        }
+        queued[i] = None;
+        st.fire(i, start);
+        // Only i−1 (space freed in i's buffer), i (engine/next group), and
+        // i+1 (new input rows) can change eligibility — recompute those.
+        for j in [i.wrapping_sub(1), i, i + 1] {
+            if j >= n {
+                continue;
+            }
+            let s = st.start_of(j);
+            if queued[j] != s {
+                queued[j] = s;
+                if let Some(v) = s {
+                    heap.push(Reverse((v, j)));
+                }
+            }
+        }
+    }
+
+    st.report(alloc)
+}
+
+/// The seed's full-rescan scheduler — every iteration scans all stages for
+/// the earliest startable one (O(total groups · stages)). Preserved as the
+/// executable specification for [`simulate_pipeline`]; tests assert the
+/// two produce identical reports.
+pub fn simulate_pipeline_naive(alloc: &Allocation, frames: usize) -> SimReport {
+    let mut st = SimState::new(alloc, frames);
+    let n = st.n;
+
+    while st.done_groups < st.total_groups {
+        // Find the stage that can start its next group the earliest
+        // (first-lowest-index wins ties, like the heap's lexicographic
+        // (start, stage) order).
+        let mut best: Option<(u64, usize)> = None;
+        for i in 0..n {
+            if let Some(start) = st.start_of(i) {
+                if best.map_or(true, |(b, _)| start < b) {
+                    best = Some((start, i));
+                }
+            }
+        }
+        let Some((start, i)) = best else {
+            debug_assert!(
+                false,
+                "pipeline deadlock at {}/{}",
+                st.done_groups, st.total_groups
+            );
+            break;
+        };
+        st.fire(i, start);
+    }
+
+    st.report(alloc)
 }
 
 // ---------------------------------------------------------------------------
@@ -384,6 +519,26 @@ mod tests {
             sim.dsp_efficiency,
             cf.dsp_efficiency
         );
+    }
+
+    #[test]
+    fn event_wheel_matches_naive_scheduler() {
+        for (net, frames) in [(zoo::tinycnn(), 5), (zoo::lenet(), 3), (zoo::vgg_micro(), 4)] {
+            let alloc = FlexAllocator::default()
+                .allocate(&net, &zc706(), QuantMode::W8A8)
+                .unwrap();
+            let fast = simulate_pipeline(&alloc, frames);
+            let slow = simulate_pipeline_naive(&alloc, frames);
+            assert_eq!(fast.makespan, slow.makespan, "{}", net.name);
+            assert_eq!(
+                fast.cycles_per_frame.to_bits(),
+                slow.cycles_per_frame.to_bits(),
+                "{}",
+                net.name
+            );
+            assert_eq!(fast.ddr_bytes, slow.ddr_bytes);
+            assert_eq!(fast.stages, slow.stages, "{}", net.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Golden equivalence: the optimized hot paths must reproduce the seed's
+//! naive implementation bit-for-bit on the paper's headline design point
+//! (VGG16 on ZC706, 16-bit) — allocation, closed-form report, and the
+//! 3-frame cycle simulation. This is the acceptance gate for every future
+//! change to `alloc::flex`, `alloc::Allocation::evaluate*`, or `sim`:
+//! optimizations may change *how* the numbers are computed, never *what*
+//! they are.
+
+use flexipipe::alloc::flex::{naive, FlexAllocator};
+use flexipipe::alloc::Allocator;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::sim;
+
+#[test]
+fn vgg16_zc706_allocation_is_bit_identical_to_naive() {
+    let net = zoo::vgg16();
+    let board = zc706();
+    let a = FlexAllocator::default();
+    let fast = a.allocate(&net, &board, QuantMode::W16A16).unwrap();
+    let slow = naive::allocate(&a, &net, &board, QuantMode::W16A16).unwrap();
+
+    assert_eq!(fast.stages.len(), slow.stages.len());
+    for (i, (f, s)) in fast.stages.iter().zip(&slow.stages).enumerate() {
+        assert_eq!(f.cfg, s.cfg, "stage {i} (C',M',K) diverged");
+        assert_eq!(f.figures, s.figures, "stage {i} figures diverged");
+    }
+
+    let (rf, rs) = (fast.evaluate(), slow.evaluate());
+    assert_eq!(rf.t_frame_cycles, rs.t_frame_cycles);
+    assert_eq!(rf.bottleneck, rs.bottleneck);
+    assert_eq!(rf.fps.to_bits(), rs.fps.to_bits());
+    assert_eq!(rf.gops.to_bits(), rs.gops.to_bits());
+    assert_eq!(rf.mults, rs.mults);
+    assert_eq!(rf.dsps, rs.dsps);
+    assert_eq!(rf.dsp_efficiency.to_bits(), rs.dsp_efficiency.to_bits());
+    assert_eq!(rf.bram18, rs.bram18);
+    assert_eq!(rf.luts, rs.luts);
+    assert_eq!(rf.ffs, rs.ffs);
+    assert_eq!(rf.ddr_bytes_per_sec.to_bits(), rs.ddr_bytes_per_sec.to_bits());
+    assert_eq!(
+        rf.ddr_demand_bytes_per_sec.to_bits(),
+        rs.ddr_demand_bytes_per_sec.to_bits()
+    );
+    assert_eq!(rf.stage_cycles, rs.stage_cycles);
+}
+
+#[test]
+fn vgg16_zc706_sim3_is_bit_identical_to_naive() {
+    let alloc = FlexAllocator::default()
+        .allocate(&zoo::vgg16(), &zc706(), QuantMode::W16A16)
+        .unwrap();
+    let fast = sim::simulate_pipeline(&alloc, 3);
+    let slow = sim::simulate_pipeline_naive(&alloc, 3);
+    assert_eq!(fast.frames, slow.frames);
+    assert_eq!(fast.makespan, slow.makespan);
+    assert_eq!(
+        fast.cycles_per_frame.to_bits(),
+        slow.cycles_per_frame.to_bits()
+    );
+    assert_eq!(fast.fps.to_bits(), slow.fps.to_bits());
+    assert_eq!(fast.gops.to_bits(), slow.gops.to_bits());
+    assert_eq!(fast.dsp_efficiency.to_bits(), slow.dsp_efficiency.to_bits());
+    assert_eq!(fast.ddr_bytes, slow.ddr_bytes);
+    assert_eq!(fast.ddr_utilization.to_bits(), slow.ddr_utilization.to_bits());
+    assert_eq!(fast.stages, slow.stages);
+}
+
+#[test]
+fn vgg16_zc706_evaluate_perf_is_bit_identical_to_evaluate() {
+    let alloc = FlexAllocator::default()
+        .allocate(&zoo::vgg16(), &zc706(), QuantMode::W16A16)
+        .unwrap();
+    let (p, r) = (alloc.evaluate_perf(), alloc.evaluate());
+    assert_eq!(p.t_frame_cycles, r.t_frame_cycles);
+    assert_eq!(p.fps.to_bits(), r.fps.to_bits());
+    assert_eq!(p.gops.to_bits(), r.gops.to_bits());
+    assert_eq!(p.dsp_efficiency.to_bits(), r.dsp_efficiency.to_bits());
+    assert_eq!(
+        p.ddr_demand_bytes_per_sec.to_bits(),
+        r.ddr_demand_bytes_per_sec.to_bits()
+    );
+    assert_eq!(p.stage_cycles, r.stage_cycles);
+}
+
+#[test]
+fn all_paper_nets_allocations_match_naive_at_both_precisions() {
+    for net in zoo::paper_nets() {
+        for mode in [QuantMode::W16A16, QuantMode::W8A8] {
+            let a = FlexAllocator::default();
+            let fast = a.allocate(&net, &zc706(), mode).unwrap();
+            let slow = naive::allocate(&a, &net, &zc706(), mode).unwrap();
+            for (f, s) in fast.stages.iter().zip(&slow.stages) {
+                assert_eq!(f.cfg, s.cfg, "{} {mode}", net.name);
+            }
+            assert_eq!(
+                fast.evaluate().fps.to_bits(),
+                slow.evaluate().fps.to_bits(),
+                "{} {mode}",
+                net.name
+            );
+        }
+    }
+}

@@ -2,9 +2,10 @@
 //! (DESIGN.md §7), using the in-tree deterministic harness
 //! (`flexipipe::util::prop` — the offline vendor set has no proptest).
 
-use flexipipe::alloc::flex::{decompose, FlexAllocator};
+use flexipipe::alloc::flex::{decompose, naive, FlexAllocator, PhaseStair};
 use flexipipe::alloc::Allocator;
 use flexipipe::board::{zc706, Board};
+use flexipipe::engine::div_ceil;
 use flexipipe::engine::linebuf::{frame_fits, LineBuffer};
 use flexipipe::model::{conv, fc, pool, Layer, Network};
 use flexipipe::quant::{self, QuantMode};
@@ -134,6 +135,112 @@ fn prop_more_dsps_never_slower() {
             fs.fps,
             fb.fps
         );
+    });
+}
+
+#[test]
+fn prop_phase_stair_matches_decompose() {
+    // The staircase lookup must reproduce the reference decomposition's
+    // phase count for every (dims, granule, budget) — this is the
+    // invariant that lets Algorithm 1 replace the O(C·M) search with a
+    // binary search.
+    check("phase-stair", 300, |rng| {
+        let c = rng.urange(1, 600);
+        let m = rng.urange(1, 600);
+        let rs = *rng.pick(&[1usize, 9, 25, 49]);
+        let budget = rng.urange(rs, 6000);
+        let (cp, mp) = decompose(c, m, rs, budget);
+        let want = div_ceil(c, cp) as u64 * div_ceil(m, mp) as u64;
+        let stair = PhaseStair::build(c, m);
+        let got = stair.phases_at(((budget / rs).max(1)) as u64);
+        assert_eq!(got, want, "c={c} m={m} rs={rs} budget={budget}");
+    });
+}
+
+#[test]
+fn prop_optimized_allocator_matches_naive_exactly() {
+    // The heap/staircase Algorithm 1 and the clone-free Algorithm 2 must
+    // produce bit-identical allocations to the seed's naive reference.
+    check("alloc-equivalence", 40, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return;
+        }
+        let board = random_board(rng);
+        let mode = *rng.pick(&[QuantMode::W8A8, QuantMode::W16A16]);
+        let a = FlexAllocator::default();
+        let fast = a.allocate(&net, &board, mode).unwrap();
+        let slow = naive::allocate(&a, &net, &board, mode).unwrap();
+        for (i, (f, s)) in fast.stages.iter().zip(&slow.stages).enumerate() {
+            assert_eq!(f.cfg, s.cfg, "stage {i} diverged for {net:?} on {board:?}");
+            assert_eq!(f.figures, s.figures, "stage {i} figures diverged");
+        }
+        let (rf, rs) = (fast.evaluate(), slow.evaluate());
+        assert_eq!(rf.t_frame_cycles, rs.t_frame_cycles);
+        assert_eq!(rf.bottleneck, rs.bottleneck);
+        assert_eq!(rf.fps.to_bits(), rs.fps.to_bits());
+        assert_eq!(rf.dsps, rs.dsps);
+        assert_eq!(rf.bram18, rs.bram18);
+        assert_eq!(
+            rf.ddr_demand_bytes_per_sec.to_bits(),
+            rs.ddr_demand_bytes_per_sec.to_bits()
+        );
+    });
+}
+
+#[test]
+fn prop_evaluate_perf_matches_full_evaluate() {
+    // The geometry-free perf report must agree bit-for-bit with the full
+    // evaluation on every shared field (the delta-evaluation invariant
+    // raise_k depends on).
+    check("perf-vs-full", 40, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return;
+        }
+        let board = random_board(rng);
+        let mode = *rng.pick(&[QuantMode::W8A8, QuantMode::W16A16]);
+        let alloc = FlexAllocator::default().allocate(&net, &board, mode).unwrap();
+        let (p, r) = (alloc.evaluate_perf(), alloc.evaluate());
+        assert_eq!(p.t_frame_cycles, r.t_frame_cycles);
+        assert_eq!(p.bottleneck, r.bottleneck);
+        assert_eq!(p.fps.to_bits(), r.fps.to_bits());
+        assert_eq!(p.gops.to_bits(), r.gops.to_bits());
+        assert_eq!(p.mults, r.mults);
+        assert_eq!(p.dsps, r.dsps);
+        assert_eq!(p.dsp_efficiency.to_bits(), r.dsp_efficiency.to_bits());
+        assert_eq!(p.ddr_bytes_per_sec.to_bits(), r.ddr_bytes_per_sec.to_bits());
+        assert_eq!(
+            p.ddr_demand_bytes_per_sec.to_bits(),
+            r.ddr_demand_bytes_per_sec.to_bits()
+        );
+        assert_eq!(p.stage_cycles, r.stage_cycles);
+    });
+}
+
+#[test]
+fn prop_event_wheel_sim_matches_naive_scheduler() {
+    // The ready-queue DES must replay the naive full-rescan scheduler's
+    // event sequence exactly.
+    check("sim-equivalence", 20, |rng| {
+        let net = random_net(rng);
+        if net.validate().is_err() {
+            return;
+        }
+        let board = random_board(rng);
+        let alloc = FlexAllocator::default()
+            .allocate(&net, &board, QuantMode::W16A16)
+            .unwrap();
+        let frames = rng.urange(1, 5);
+        let fast = sim::simulate_pipeline(&alloc, frames);
+        let slow = sim::simulate_pipeline_naive(&alloc, frames);
+        assert_eq!(fast.makespan, slow.makespan, "{net:?}");
+        assert_eq!(
+            fast.cycles_per_frame.to_bits(),
+            slow.cycles_per_frame.to_bits()
+        );
+        assert_eq!(fast.ddr_bytes, slow.ddr_bytes);
+        assert_eq!(fast.stages, slow.stages);
     });
 }
 

@@ -1,0 +1,155 @@
+//! Minimal in-tree substitute for the `anyhow` crate.
+//!
+//! The offline vendor set has no crates.io access, so this package provides
+//! the exact subset of anyhow's API the workspace uses: [`Error`],
+//! [`Result`], and the [`anyhow!`], [`bail!`], [`ensure!`] macros. Like the
+//! real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` so the blanket `From` conversion below stays
+//! coherent. Replacing this with the real `anyhow` is a one-line change in
+//! `Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with a display-oriented surface (anyhow-compatible).
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+/// Ad-hoc message error backing [`Error::msg`].
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Construct from a display-able message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error(Box::new(error))
+    }
+
+    /// Downcast reference (parity with anyhow's API).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.0.downcast_ref::<E>()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow prints the message, then the cause chain.
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error(Box::new(error))
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let name = "x";
+        let e = anyhow!("missing field '{name}'");
+        assert_eq!(e.to_string(), "missing field 'x'");
+        let e = anyhow!("{} of {}", 1, 2);
+        assert_eq!(e.to_string(), "1 of 2");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert!(f(false).is_err());
+    }
+}
