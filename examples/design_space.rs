@@ -111,5 +111,50 @@ fn main() -> flexipipe::Result<()> {
             p.max_k
         );
     }
+
+    // 4. Multi-tenant sharding: one ZC706 serving two co-resident models.
+    // The sharder partitions Θ (DSP/LUT/FF/β) and α (BRAM) on independent
+    // axes, reuses each model's decomposition staircases across all
+    // candidate splits, and reduces to the per-tenant-fps Pareto frontier;
+    // the frontier is confirmed by the shared-DDR multi-pipeline DES.
+    println!("\n== shard zc706 across vgg16 + alexnet (8b) ==");
+    let ds = DesignSpace {
+        boards: vec![zc706()],
+        tenant_groups: vec![vec![zoo::vgg16(), zoo::alexnet()]],
+        modes: vec![QuantMode::W8A8],
+        shard_steps: 8,
+        sim_frames: 2,
+        ..Default::default()
+    };
+    for point in ds.sweep_shards()? {
+        let r = &point.result;
+        println!(
+            "{} on {}: {} feasible splits, {} on the frontier",
+            point.models.join("+"),
+            point.board,
+            r.plans.len(),
+            r.frontier.len()
+        );
+        for &i in &r.frontier {
+            let p = &r.plans[i];
+            let desc: Vec<String> = p
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(ti, t)| {
+                    let sim = p
+                        .sim
+                        .as_ref()
+                        .map(|s| format!(" (sim {:.1})", s[ti].fps))
+                        .unwrap_or_default();
+                    format!(
+                        "{} Θ{}/8 α{}/8 {:.1} fps{}",
+                        t.alloc.net.name, t.dsp_parts, t.bram_parts, p.fps[ti], sim
+                    )
+                })
+                .collect();
+            println!("  {}", desc.join(" | "));
+        }
+    }
     Ok(())
 }

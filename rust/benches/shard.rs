@@ -1,0 +1,108 @@
+//! Bench: the multi-tenant sharder and the shared-DDR multi-pipeline DES,
+//! for the §Perf trajectory.
+//!
+//! - full split-space search (vgg16 + alexnet on a ZC706 at 8-bit): the
+//!   factorized per-tenant table + warm-started staircases are what keep
+//!   this in allocator-call territory instead of compositions × tenants,
+//! - single-tenant sharder overhead vs the plain allocator (should be ≈1×:
+//!   one split exists and it is the whole board),
+//! - the multi-pipeline DES vs two independent single-pipeline runs.
+//!
+//! Emits machine-readable `BENCH_shard.json` at the repository root,
+//! alongside `BENCH_hotpath.json`, so future PRs can track the trajectory.
+
+use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::Allocator;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{Sharder, Tenant};
+use flexipipe::sim;
+use flexipipe::util::bench::Bench;
+use flexipipe::util::json::{obj, Value};
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::with_budget_secs(2.0);
+    let mut out: Vec<(&str, Value)> = Vec::new();
+
+    // Two-tenant split search: the tentpole workload.
+    let two_tenant = || Sharder {
+        steps: 8,
+        ..Sharder::new(
+            zc706(),
+            vec![
+                Tenant::new(zoo::vgg16(), QuantMode::W8A8),
+                Tenant::new(zoo::alexnet(), QuantMode::W8A8),
+            ],
+        )
+    };
+    let s = b
+        .bench("shard/vgg16+alexnet/8steps", || two_tenant().search().unwrap())
+        .clone();
+    let search_ms = s.mean.as_secs_f64() * 1e3;
+    let result = two_tenant().search().unwrap();
+    println!(
+        "  -> {} feasible plans, {} on the frontier",
+        result.plans.len(),
+        result.frontier.len()
+    );
+    out.push(("shard_search_ms", Value::Num(search_ms)));
+    out.push(("shard_plans", Value::Num(result.plans.len() as f64)));
+    out.push(("shard_frontier", Value::Num(result.frontier.len() as f64)));
+
+    // Single-tenant overhead: the sharder collapses to one plan.
+    let s = b
+        .bench("shard/alexnet-solo", || {
+            Sharder::new(zc706(), vec![Tenant::new(zoo::alexnet(), QuantMode::W8A8)])
+                .search()
+                .unwrap()
+        })
+        .clone();
+    let solo_shard = s.mean.as_secs_f64();
+    let s = b
+        .bench("alloc/alexnet (plain)", || {
+            FlexAllocator::default()
+                .allocate(&zoo::alexnet(), &zc706(), QuantMode::W8A8)
+                .unwrap()
+        })
+        .clone();
+    let solo_plain = s.mean.as_secs_f64();
+    println!(
+        "  -> single-tenant sharder overhead: {:.2}x the plain allocator",
+        solo_shard / solo_plain
+    );
+    out.push(("shard_solo_overhead", Value::Num(solo_shard / solo_plain)));
+
+    // Multi-pipeline DES: two co-resident tinycnn pipelines on one port.
+    let board = zc706();
+    let half = flexipipe::shard::sub_board(&board, 1, 1, 2);
+    let a = FlexAllocator::default()
+        .allocate(&zoo::tinycnn(), &half, QuantMode::W8A8)
+        .unwrap();
+    let s = b
+        .bench("sim/multi 2x tinycnn/4frames", || {
+            sim::simulate_multi(&[&a, &a], &board, 4)
+        })
+        .clone();
+    let multi_ms = s.mean.as_secs_f64() * 1e3;
+    let s = b
+        .bench("sim/solo 2x tinycnn/4frames", || {
+            (sim::simulate(&a, 4), sim::simulate(&a, 4))
+        })
+        .clone();
+    println!(
+        "  -> shared-port overhead vs 2 independent runs: {:.2}x",
+        multi_ms / (s.mean.as_secs_f64() * 1e3)
+    );
+    out.push(("sim_multi_2x_tinycnn_ms", Value::Num(multi_ms)));
+
+    b.finish();
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_shard.json");
+    let json = obj(out).to_pretty();
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -3,21 +3,27 @@
 //!
 //! The paper's host PC streams input frames over PCIe into DDR, kicks the
 //! accelerator, and drains output activations ("sends more input frames
-//! continuously", Sec. 5.1). Here the accelerator is the PJRT-compiled
-//! artifact; the coordinator owns:
+//! continuously", Sec. 5.1). Here the accelerator is a [`Backend`] —
+//! the PJRT-compiled artifact when `artifacts/manifest.json` exists, the
+//! deterministic in-process [`SimBackend`] otherwise; the coordinator owns:
 //!
 //! - an ingest queue ([`Coordinator::submit`] is the host-side API),
-//! - a **dynamic batcher**: artifacts are compiled at several batch sizes
-//!   (`tinycnn_b1/b4/b8`); the worker picks the largest compiled batch
+//! - a **dynamic batcher**: the backend serves several batch sizes
+//!   (`tinycnn_b1/b4/b8`); the worker picks the largest available batch
 //!   ≤ the queue depth, padding only when a timeout forces a partial batch,
 //! - the execute worker (one thread — PJRT CPU executions are already
 //!   internally parallel),
 //! - latency/throughput metrics ([`ServeStats`]).
 //!
+//! The backend is built *inside* the worker thread by a `Send` factory
+//! closure ([`Coordinator::start_with`]) — PJRT clients are `!Send`, so
+//! only the recipe crosses the thread boundary, never the client.
+//!
 //! No tokio in the offline vendor set: std threads + channels. The queue
 //! and stats are the same shape a tokio implementation would have.
 
-use crate::runtime::{Manifest, Runtime};
+use crate::model::Network;
+use crate::runtime::{Backend, PjrtBackend, SimBackend, SIM_BATCHES};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -97,12 +103,10 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start serving `net` at `bits` from an artifact directory.
-    ///
-    /// The PJRT client is `!Send` (Rc internals in the xla crate), so the
-    /// worker thread constructs and exclusively owns the [`Runtime`]; the
-    /// caller-side handle only touches channels. Startup errors inside the
-    /// worker (bad artifacts) surface through a ready-handshake.
+    /// Start serving `net` at `bits` from an artifact directory (the PJRT
+    /// path). Validation (manifest present, variants exist) lives in
+    /// [`PjrtBackend::open`]; its errors surface through
+    /// [`Coordinator::start_with`]'s ready-handshake.
     pub fn start(
         artifact_dir: impl Into<PathBuf>,
         net: &str,
@@ -110,48 +114,97 @@ impl Coordinator {
         policy: BatchPolicy,
     ) -> crate::Result<Coordinator> {
         let dir = artifact_dir.into();
-        // Validate the manifest host-side first (cheap, better errors).
-        let manifest = Manifest::load(dir.join("manifest.json"))?;
-        let variants: Vec<(String, usize)> = manifest
-            .variants(net, bits)
-            .iter()
-            .map(|a| (a.name.clone(), a.batch))
-            .collect();
-        anyhow::ensure!(
-            !variants.is_empty(),
-            "no artifacts for net '{net}' at {bits}-bit — run `make artifacts`"
-        );
-        let frame_elems = manifest.get(&variants[0].0)?.golden.frame_elems;
+        let net = net.to_string();
+        Self::start_with(
+            move || PjrtBackend::open(dir, &net, bits).map(|b| Box::new(b) as Box<dyn Backend>),
+            policy,
+        )
+    }
 
+    /// Start serving `net` through the artifact-free in-process
+    /// [`SimBackend`] at the given batch sizes.
+    pub fn start_sim(
+        net: &Network,
+        batches: &[usize],
+        policy: BatchPolicy,
+    ) -> crate::Result<Coordinator> {
+        let net = net.clone();
+        let batches = batches.to_vec();
+        Self::start_with(
+            move || SimBackend::new(&net, &batches).map(|b| Box::new(b) as Box<dyn Backend>),
+            policy,
+        )
+    }
+
+    /// PJRT when `artifact_dir/manifest.json` exists, [`SimBackend`] on the
+    /// zoo network named `net` otherwise (8-bit only — the sim datapath is
+    /// the i8 reference).
+    pub fn start_auto(
+        artifact_dir: impl Into<PathBuf>,
+        net: &str,
+        bits: usize,
+        policy: BatchPolicy,
+    ) -> crate::Result<Coordinator> {
+        let dir = artifact_dir.into();
+        if dir.join("manifest.json").exists() {
+            Self::start(dir, net, bits, policy)
+        } else {
+            anyhow::ensure!(
+                bits == 8,
+                "no artifacts at {} and the SimBackend fallback serves 8-bit only",
+                dir.display()
+            );
+            let net = crate::model::zoo::by_name(net)?;
+            Self::start_sim(&net, SIM_BATCHES, policy)
+        }
+    }
+
+    /// Start serving on any [`Backend`]. The factory runs on the worker
+    /// thread (backends need not be `Send`; PJRT clients are not); startup
+    /// errors and the backend's frame geometry surface through a
+    /// ready-handshake, after every variant has been warmed once.
+    pub fn start_with<F>(factory: F, policy: BatchPolicy) -> crate::Result<Coordinator>
+    where
+        F: FnOnce() -> crate::Result<Box<dyn Backend>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<usize>>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let running = Arc::new(AtomicBool::new(true));
         let worker = {
             let stats = stats.clone();
             let running = running.clone();
             std::thread::spawn(move || {
-                // Build + warm the runtime inside the worker.
-                let rt = match Runtime::load(&dir) {
-                    Ok(rt) => rt,
+                // Build + warm the backend inside the worker.
+                let be = match factory() {
+                    Ok(be) => be,
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                for (name, _) in &variants {
-                    let elems = rt.manifest().get(name).map(|a| a.input_elems());
-                    let warm = elems.and_then(|n| rt.execute_i8(name, &vec![0i8; n]));
-                    if let Err(e) = warm {
+                if be.variants().is_empty() {
+                    // Guard the batcher's `variants[0]` fallback: a custom
+                    // backend with no batch variants must fail the
+                    // handshake, not panic on the first submit.
+                    let _ = ready_tx.send(Err(anyhow::anyhow!(
+                        "backend '{}' exposes no batch variants",
+                        be.platform()
+                    )));
+                    return;
+                }
+                let frame_elems = be.frame_elems();
+                for (name, batch) in be.variants() {
+                    if let Err(e) = be.execute_i8(&name, &vec![0i8; batch * frame_elems]) {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 }
-                let _ = ready_tx.send(Ok(()));
-                worker_loop(rt, variants, frame_elems, policy, rx, stats, running)
+                let _ = ready_tx.send(Ok(frame_elems));
+                worker_loop(be, policy, rx, stats, running)
             })
         };
-        ready_rx
+        let frame_elems = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("coordinator worker died during startup"))??;
         Ok(Coordinator {
@@ -218,16 +271,15 @@ impl Drop for Coordinator {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    rt: Runtime,
-    variants: Vec<(String, usize)>, // sorted by batch ascending
-    frame_elems: usize,
+    be: Box<dyn Backend>,
     policy: BatchPolicy,
     rx: Receiver<Request>,
     stats: Arc<Mutex<ServeStats>>,
     running: Arc<AtomicBool>,
 ) {
+    let variants = be.variants(); // sorted by batch ascending
+    let frame_elems = be.frame_elems();
     let max_batch = variants.last().map(|v| v.1).unwrap_or(1);
     let mut queue: Vec<Request> = Vec::new();
     'serve: loop {
@@ -272,7 +324,7 @@ fn worker_loop(
         if !policy.link_latency.is_zero() {
             std::thread::sleep(policy.link_latency); // PCIe transfer model
         }
-        let result = rt.execute_i8(&name, &input);
+        let result = be.execute_i8(&name, &input);
 
         let now = Instant::now();
         match result {
@@ -320,5 +372,29 @@ mod tests {
         s.record_batch(8, 8);
         assert_eq!(s.padded_frames, 3);
         assert_eq!(s.batch_sizes, vec![(8, 13)]);
+    }
+
+    #[test]
+    fn sim_backed_coordinator_answers_like_the_oracle() {
+        use crate::model::zoo;
+        use crate::runtime::SimBackend;
+        let coord =
+            Coordinator::start_sim(&zoo::tinycnn(), &[1, 2], BatchPolicy::default()).unwrap();
+        let oracle = SimBackend::new(&zoo::tinycnn(), &[1]).unwrap();
+        let frame = vec![1i8; oracle.frame_elems()];
+        let want = oracle.forward_frame(&frame).unwrap();
+        assert_eq!(coord.infer(frame).unwrap(), want);
+        assert!(coord.submit(vec![0i8; 5]).is_err());
+    }
+
+    #[test]
+    fn start_auto_falls_back_to_sim_without_artifacts() {
+        let dir = std::env::temp_dir().join("flexipipe_no_artifacts_here");
+        std::fs::create_dir_all(&dir).unwrap();
+        let coord = Coordinator::start_auto(&dir, "lenet", 8, BatchPolicy::default()).unwrap();
+        let out = coord.infer(vec![0i8; 28 * 28]).unwrap();
+        assert!(!out.is_empty());
+        // 16-bit has no sim fallback.
+        assert!(Coordinator::start_auto(&dir, "lenet", 16, BatchPolicy::default()).is_err());
     }
 }

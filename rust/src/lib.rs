@@ -29,6 +29,9 @@
 //!   recurrent-architecture simulator.
 //! - [`search`] — parallel design-space search: boards × models × modes ×
 //!   DSP budgets fan-out with shared precomputation + Pareto frontier.
+//! - [`shard`] — multi-tenant board sharding: partition one board's
+//!   DSP/BRAM budget across co-resident models, Pareto frontier of
+//!   per-tenant fps, validated by the multi-pipeline DES.
 //! - [`power`] — calibrated power estimation (the paper uses Vivado's
 //!   estimate; we use an activity-based analytical model).
 //! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
@@ -45,6 +48,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod shard;
 pub mod sim;
 pub mod trace;
 pub mod util;

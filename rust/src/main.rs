@@ -9,16 +9,21 @@
 //! flexipipe sweep    --model vgg16 --param dsps --from 128 --to 1024
 //! flexipipe search   --models vgg16,alexnet --boards zc706,zcu102 \
 //!                    --bits 8,16 [--dsps 512,900] [--threads 0] [--json F]
+//! flexipipe search   --tenants vgg16+alexnet,vgg16+zf --boards zc706
+//! flexipipe shard    --models vgg16,alexnet --board zc706 [--bits 16] \
+//!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0]
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
-use flexipipe::model::config;
+use flexipipe::model::{config, Network};
 use flexipipe::power::PowerModel;
 use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
 use flexipipe::search::{self, DesignSpace};
+use flexipipe::shard::{self, Sharder, Tenant};
 use flexipipe::util::cli::{flag, opt, usage, Args, Spec};
+use flexipipe::util::json::Value;
 use flexipipe::{board, report, sim};
 
 fn main() {
@@ -47,10 +52,17 @@ fn specs() -> Vec<Spec> {
         opt("to", "sweep end", Some("1024")),
         opt("steps", "sweep steps", Some("8")),
         opt("trace", "write per-stage CSV trace to this path (simulate)", None),
-        opt("models", "comma-separated model list (search)", None),
+        opt("models", "comma-separated model list (search/shard)", None),
         opt("boards", "comma-separated board list (search)", None),
         opt("archs", "comma-separated arch list (search)", Some("flex")),
         opt("dsps", "comma-separated DSP budget overrides (search)", None),
+        opt(
+            "tenants",
+            "comma-separated co-resident groups, models joined by '+' (search)",
+            None,
+        ),
+        opt("shard-steps", "shard split granularity: 1/steps quanta", Some("16")),
+        opt("weights", "comma-separated tenant weights (shard)", None),
         opt("threads", "search worker threads, 0 = all cores", Some("0")),
         opt("sim-frames", "confirm each search point with N simulated frames", Some("0")),
         opt("json", "write search results as JSON to this path", None),
@@ -73,6 +85,7 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "e2e" => cmd_e2e(&args),
         "sweep" => cmd_sweep(&args),
         "search" => cmd_search(&args),
+        "shard" => cmd_shard(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -85,7 +98,7 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: allocate simulate report serve e2e sweep search help\n\n{}",
+         commands: allocate simulate report serve e2e sweep search shard help\n\n{}",
         usage(&specs())
     );
 }
@@ -203,14 +216,31 @@ fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
     let frames: usize = args.get_parse("frames", 256)?;
     let net = args.get_or("net", "tinycnn");
     println!("serving '{net}' from {dir}");
-    let coord = Coordinator::start(&dir, net, 8, BatchPolicy::default())?;
+    let have_artifacts = std::path::Path::new(&dir).join("manifest.json").exists();
+    let coord = Coordinator::start_auto(&dir, net, 8, BatchPolicy::default())?;
 
-    // Input frames come from the golden files (no PJRT needed host-side).
-    let manifest = flexipipe::runtime::Manifest::load(format!("{dir}/manifest.json"))?;
-    let art = manifest.variants(net, 8);
-    let elems = art[0].golden.frame_elems;
-    let golden_in =
-        flexipipe::runtime::read_i8(format!("{dir}/{}", art[0].golden.input))?;
+    // Input frames: golden files when artifacts exist (so responses are
+    // oracle-checkable), deterministic noise through the SimBackend
+    // otherwise.
+    let (golden_in, elems) = if have_artifacts {
+        let manifest = flexipipe::runtime::Manifest::load(format!("{dir}/manifest.json"))?;
+        let art = manifest.variants(net, 8);
+        let elems = art[0].golden.frame_elems;
+        (
+            flexipipe::runtime::read_i8(format!("{dir}/{}", art[0].golden.input))?,
+            elems,
+        )
+    } else {
+        println!("(no artifacts at {dir}: serving the in-process SimBackend)");
+        let network = flexipipe::model::zoo::by_name(net)?;
+        let (c0, h0, w0) = network.input;
+        let elems = c0 * h0 * w0;
+        let mut rng = flexipipe::util::prop::Rng::new(0x5EED);
+        (
+            (0..elems * 8).map(|_| rng.range(-128, 127) as i8).collect(),
+            elems,
+        )
+    };
     let n_golden = golden_in.len() / elems;
 
     let t0 = std::time::Instant::now();
@@ -287,20 +317,28 @@ fn cmd_e2e(args: &Args) -> flexipipe::Result<()> {
     Ok(())
 }
 
+/// Split a comma-separated CLI list.
+fn split_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect()
+}
+
 /// `search`: parallel boards × models × modes × budgets sweep with a
-/// Pareto frontier per (model, bits) workload.
+/// Pareto frontier per (model, bits) workload. With `--tenants`, the sweep
+/// instead shards each board across every co-resident group.
 fn cmd_search(args: &Args) -> flexipipe::Result<()> {
-    let split = |s: &str| -> Vec<String> {
-        s.split(',')
-            .map(|p| p.trim().to_string())
-            .filter(|p| !p.is_empty())
-            .collect()
-    };
+    let split = split_list;
     // Singular --model/--board remain usable as one-element sweeps.
     let models = split(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
     let boards = split(args.get("boards").unwrap_or(args.get_or("board", "zc706")));
     let bits = split(args.get_or("bits", "16"));
     let archs = split(args.get_or("archs", "flex"));
+
+    if let Some(tenants) = args.get("tenants") {
+        return cmd_search_shards(args, tenants, &boards, &bits);
+    }
 
     let mut ds = DesignSpace {
         models: models
@@ -384,6 +422,181 @@ fn cmd_search(args: &Args) -> flexipipe::Result<()> {
     if let Some(path) = args.get("json") {
         std::fs::write(path, search::sweep_to_json(&points).to_pretty())?;
         println!("results written to {path}");
+    }
+    Ok(())
+}
+
+/// The `--tenants` axis of `search`: shard every board across every
+/// co-resident group at every precision.
+fn cmd_search_shards(
+    args: &Args,
+    tenants: &str,
+    boards: &[String],
+    bits: &[String],
+) -> flexipipe::Result<()> {
+    let groups: Vec<Vec<Network>> = split_list(tenants)
+        .iter()
+        .map(|g| {
+            g.split('+')
+                .map(|m| config::resolve(m.trim()))
+                .collect::<flexipipe::Result<Vec<_>>>()
+        })
+        .collect::<flexipipe::Result<Vec<_>>>()?;
+    let shard_steps: usize = args.get_parse("shard-steps", 16)?;
+    let ds = DesignSpace {
+        boards: boards
+            .iter()
+            .map(|b| board::by_name(b))
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        modes: bits
+            .iter()
+            .map(|b| {
+                b.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("invalid --bits entry '{b}'"))
+                    .and_then(QuantMode::from_bits)
+            })
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        tenant_groups: groups,
+        shard_steps,
+        sim_frames: args.get_parse("sim-frames", 0usize)?,
+        threads: args.get_parse("threads", 0usize)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let points = ds.sweep_shards()?;
+    let dt = t0.elapsed();
+
+    println!(
+        "{:<10} {:<22} {:>4} {:>6} {:>8}  best min-fps split (per-tenant fps)",
+        "board", "tenants", "bits", "plans", "frontier"
+    );
+    for p in &points {
+        let best = &p.result.plans[p.result.best_min];
+        let fps: Vec<String> = best
+            .tenants
+            .iter()
+            .zip(&best.fps)
+            .map(|(t, f)| format!("{} {:.1}", t.alloc.net.name, f))
+            .collect();
+        println!(
+            "{:<10} {:<22} {:>4} {:>6} {:>8}  {}",
+            p.board,
+            p.models.join("+"),
+            p.mode.bits(),
+            p.result.plans.len(),
+            p.result.frontier.len(),
+            fps.join(" | ")
+        );
+    }
+    println!("{} shard points in {:.2?}", points.len(), dt);
+    if let Some(path) = args.get("json") {
+        let arr = Value::Arr(points.iter().map(|p| p.to_json(shard_steps)).collect());
+        std::fs::write(path, arr.to_pretty())?;
+        println!("results written to {path}");
+    }
+    Ok(())
+}
+
+/// `shard`: partition one board across co-resident models and report the
+/// per-tenant-fps Pareto frontier (JSON to stdout, or `--json FILE`).
+fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
+    let models = split_list(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
+    anyhow::ensure!(!models.is_empty(), "--models needs at least one model");
+    let brd = board::by_name(args.get_or("board", "zc706"))?;
+    let mode = QuantMode::from_bits(args.get_parse("bits", 16usize)?)?;
+    let steps: usize = args.get_parse("shard-steps", 16)?;
+    let weights: Vec<f64> = match args.get("weights") {
+        None => vec![1.0; models.len()],
+        Some(w) => split_list(w)
+            .iter()
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("invalid --weights entry '{v}'"))
+            })
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+    };
+    anyhow::ensure!(
+        weights.len() == models.len(),
+        "--weights needs one entry per model ({} vs {})",
+        weights.len(),
+        models.len()
+    );
+    let sharder = Sharder {
+        board: brd.clone(),
+        tenants: models
+            .iter()
+            .zip(&weights)
+            .map(|(m, &weight)| {
+                Ok(Tenant {
+                    net: config::resolve(m)?,
+                    mode,
+                    weight,
+                })
+            })
+            .collect::<flexipipe::Result<Vec<_>>>()?,
+        steps,
+        sim_frames: args.get_parse("sim-frames", 0usize)?,
+    };
+    let t0 = std::time::Instant::now();
+    let result = sharder.search()?;
+    println!(
+        "shard {} across {} tenants ({mode}, 1/{steps} quanta): {} feasible plans, \
+         {} on the frontier ({:.2?})",
+        brd.name,
+        models.len(),
+        result.plans.len(),
+        result.frontier.len(),
+        t0.elapsed()
+    );
+    let show = |label: String, idx: usize| {
+        println!("  {label}:");
+        let p = &result.plans[idx];
+        for (t, fps) in p.tenants.iter().zip(&p.fps) {
+            println!(
+                "    {:<10} Θ {:>2}/{steps}  α {:>2}/{steps}  {:>4} DSPs {:>5} BRAM18 {:>9.1} fps",
+                t.alloc.net.name, t.dsp_parts, t.bram_parts, t.report.dsps, t.report.bram18, fps
+            );
+        }
+    };
+    show(
+        format!("best min-fps ({:.1})", result.plans[result.best_min].min_fps),
+        result.best_min,
+    );
+    show(
+        format!(
+            "best weighted-fps ({:.1})",
+            result.plans[result.best_weighted].weighted_fps
+        ),
+        result.best_weighted,
+    );
+    println!("  frontier (Θ split | α split | per-tenant fps):");
+    for &i in &result.frontier {
+        let p = &result.plans[i];
+        let dsp: Vec<String> = p.tenants.iter().map(|t| t.dsp_parts.to_string()).collect();
+        let bram: Vec<String> = p.tenants.iter().map(|t| t.bram_parts.to_string()).collect();
+        let fps: Vec<String> = p.fps.iter().map(|f| format!("{f:.1}")).collect();
+        let sim = match &p.sim {
+            Some(s) => format!(
+                "  [sim {}]",
+                s.iter().map(|r| format!("{:.1}", r.fps)).collect::<Vec<_>>().join("/")
+            ),
+            None => String::new(),
+        };
+        println!(
+            "    Θ {} | α {} | {} fps{}",
+            dsp.join("+"),
+            bram.join("+"),
+            fps.join(" / "),
+            sim
+        );
+    }
+    let json = shard::result_to_json(&result, steps).to_pretty();
+    match args.get("json") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            println!("per-tenant allocations + frontier JSON written to {path}");
+        }
+        None => println!("{json}"),
     }
     Ok(())
 }

@@ -1,0 +1,389 @@
+//! Execution backends for the serving stack.
+//!
+//! [`Backend`] is the contract the [`crate::coordinator`] batches against:
+//! a set of batch-size variants plus an `execute_i8` entry point. Two
+//! implementations:
+//!
+//! - [`PjrtBackend`] — the AOT-compiled HLO artifacts through PJRT
+//!   (the original path; needs `make artifacts` + real xla bindings).
+//! - [`SimBackend`] — a deterministic in-process reference: the quantized
+//!   golden operators of [`crate::quant::ops`] run the network directly,
+//!   with weights generated from a seed derived from the network name.
+//!   No artifacts, no PJRT, bit-stable across runs and platforms — the
+//!   backend the serving/runtime tests (and artifact-free CI) run on.
+//!
+//! Selection rule: PJRT when `artifacts/manifest.json` exists
+//! ([`Coordinator::start_auto`]), SimBackend otherwise.
+//!
+//! [`Coordinator::start_auto`]: crate::coordinator::Coordinator::start_auto
+
+use super::Runtime;
+use crate::model::{Layer, Network};
+use crate::quant::ops::{conv_fixed, fc_fixed, maxpool_fixed, Chw, ConvParams};
+use crate::quant::QuantMode;
+use crate::util::prop::Rng;
+use std::path::PathBuf;
+
+/// What the coordinator needs from an execution engine. Implementations
+/// live on the coordinator's worker thread (constructed there by a `Send`
+/// factory), so the trait itself needs no `Send` bound — PJRT clients
+/// are `!Send`.
+pub trait Backend {
+    /// Human label for diagnostics (`"pjrt-cpu"`, `"sim"`).
+    fn platform(&self) -> String;
+    /// Batch-size variants, `(name, batch)` sorted by batch ascending —
+    /// the batcher picks the largest batch ≤ queue depth.
+    fn variants(&self) -> Vec<(String, usize)>;
+    /// Elements per input frame.
+    fn frame_elems(&self) -> usize;
+    /// Elements per output frame.
+    fn out_elems(&self) -> usize;
+    /// Execute one variant on a full batch (`batch × frame_elems` values,
+    /// CHW per frame); returns `batch × out_elems` values.
+    fn execute_i8(&self, name: &str, frames: &[i8]) -> crate::Result<Vec<i8>>;
+}
+
+/// Default batch-size variants a [`SimBackend`] serves.
+pub const SIM_BATCHES: &[usize] = &[1, 4, 8];
+
+// ---------------------------------------------------------------------------
+// PJRT
+// ---------------------------------------------------------------------------
+
+/// The artifact-backed PJRT path as a [`Backend`].
+pub struct PjrtBackend {
+    rt: Runtime,
+    variants: Vec<(String, usize)>,
+    frame_elems: usize,
+    out_elems: usize,
+}
+
+impl PjrtBackend {
+    /// Open an artifact directory and select `net`'s `bits`-bit variants.
+    pub fn open(dir: impl Into<PathBuf>, net: &str, bits: usize) -> crate::Result<PjrtBackend> {
+        let rt = Runtime::load(dir.into())?;
+        let variants: Vec<(String, usize)> = rt
+            .manifest()
+            .variants(net, bits)
+            .iter()
+            .map(|a| (a.name.clone(), a.batch))
+            .collect();
+        anyhow::ensure!(
+            !variants.is_empty(),
+            "no artifacts for net '{net}' at {bits}-bit — run `make artifacts`"
+        );
+        let (frame_elems, out_elems) = {
+            let art = rt.manifest().get(&variants[0].0)?;
+            (art.golden.frame_elems, art.golden.out_elems)
+        };
+        Ok(PjrtBackend {
+            rt,
+            variants,
+            frame_elems,
+            out_elems,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        format!("pjrt-{}", self.rt.platform())
+    }
+
+    fn variants(&self) -> Vec<(String, usize)> {
+        self.variants.clone()
+    }
+
+    fn frame_elems(&self) -> usize {
+        self.frame_elems
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn execute_i8(&self, name: &str, frames: &[i8]) -> crate::Result<Vec<i8>> {
+        self.rt.execute_i8(name, frames)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimBackend
+// ---------------------------------------------------------------------------
+
+/// One instantiated layer of the reference datapath.
+enum SimLayer {
+    Conv {
+        p: ConvParams,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+    },
+    Pool {
+        r: usize,
+        stride: usize,
+    },
+    Fc {
+        w: Vec<i64>,
+        bias: Vec<i64>,
+        rshift: Vec<u32>,
+        relu: bool,
+    },
+}
+
+/// Deterministic in-process backend: the quantized reference operators of
+/// [`crate::quant::ops`] with seeded pseudo-random weights.
+///
+/// Determinism contract: weights depend only on the network *name* and
+/// layer order (xorshift64* stream, seed = FNV-1a of the name), and the
+/// operators are pure integer arithmetic — two instances of the same
+/// network produce bit-identical outputs on every platform. That makes
+/// `execute_i8` its own golden oracle: tests compare a served response
+/// against a direct [`SimBackend::forward_frame`] call.
+pub struct SimBackend {
+    name: String,
+    input: (usize, usize, usize),
+    layers: Vec<SimLayer>,
+    batches: Vec<usize>,
+    frame_elems: usize,
+    out_elems: usize,
+}
+
+/// FNV-1a, so the weight stream is a stable function of the net name.
+fn seed_from_name(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        })
+}
+
+impl SimBackend {
+    /// Instantiate `net` with deterministic weights, serving the given
+    /// batch sizes (deduplicated, sorted ascending).
+    pub fn new(net: &Network, batches: &[usize]) -> crate::Result<SimBackend> {
+        net.validate()?;
+        anyhow::ensure!(!net.layers.is_empty(), "SimBackend: network has no layers");
+        let mut batches: Vec<usize> = batches.iter().copied().filter(|&b| b >= 1).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        anyhow::ensure!(!batches.is_empty(), "SimBackend needs at least one batch size");
+
+        let mut rng = Rng::new(seed_from_name(&net.name));
+        let last = net.layers.len() - 1;
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for (i, l) in net.layers.iter().enumerate() {
+            // Hidden layers ReLU; the final layer emits raw logits.
+            let relu = i < last;
+            match l {
+                Layer::Conv(c) => {
+                    anyhow::ensure!(
+                        c.groups == 1,
+                        "SimBackend: grouped convolutions unsupported (layer {i} of {})",
+                        net.name
+                    );
+                    // Scale the psum back near activation range. Random
+                    // ±2 weights make the psum a zero-mean walk whose std
+                    // grows like √(C·R·S·E[w²]), not like the worst case —
+                    // shifting by the worst case's bit length collapses
+                    // every activation to {−1,0} within three layers
+                    // (verified numerically), so shift by *half* the bit
+                    // length (≈ log2 of the std gain) instead.
+                    let gain = (c.c * c.r * c.s * 2) as u64;
+                    let rshift = (64 - gain.leading_zeros()) / 2;
+                    layers.push(SimLayer::Conv {
+                        p: ConvParams {
+                            w: (0..c.m * c.c * c.r * c.s).map(|_| rng.range(-2, 2)).collect(),
+                            m: c.m,
+                            c: c.c,
+                            r: c.r,
+                            s: c.s,
+                            bias: (0..c.m).map(|_| rng.range(-64, 64)).collect(),
+                            lshift: vec![0; c.c],
+                            rshift: vec![rshift; c.m],
+                        },
+                        stride: c.stride,
+                        pad: c.pad,
+                        relu,
+                    });
+                }
+                Layer::Pool(p) => layers.push(SimLayer::Pool {
+                    r: p.r,
+                    stride: p.stride,
+                }),
+                Layer::Fc(f) => {
+                    let gain = (f.n_in * 2) as u64;
+                    let rshift = (64 - gain.leading_zeros()) / 2;
+                    layers.push(SimLayer::Fc {
+                        w: (0..f.n_out * f.n_in).map(|_| rng.range(-2, 2)).collect(),
+                        bias: (0..f.n_out).map(|_| rng.range(-64, 64)).collect(),
+                        rshift: vec![rshift; f.n_out],
+                        relu,
+                    });
+                }
+            }
+        }
+
+        let (c0, h0, w0) = net.input;
+        let out_elems = match net.layers[last] {
+            Layer::Fc(f) => f.n_out,
+            Layer::Conv(c) => c.m * c.h * c.w,
+            Layer::Pool(p) => p.c * p.h * p.w,
+        };
+        Ok(SimBackend {
+            name: net.name.clone(),
+            input: net.input,
+            layers,
+            batches,
+            frame_elems: c0 * h0 * w0,
+            out_elems,
+        })
+    }
+
+    /// Run one frame through the reference datapath (the oracle the served
+    /// path is tested against).
+    pub fn forward_frame(&self, frame: &[i8]) -> crate::Result<Vec<i8>> {
+        anyhow::ensure!(
+            frame.len() == self.frame_elems,
+            "frame must have {} elements, got {}",
+            self.frame_elems,
+            frame.len()
+        );
+        let (c0, h0, w0) = self.input;
+        let mut x = Chw::from_i8(c0, h0, w0, frame);
+        let mut flat: Option<Vec<i64>> = None;
+        for l in &self.layers {
+            match l {
+                SimLayer::Conv { p, stride, pad, relu } => {
+                    x = conv_fixed(&x, p, *stride, *pad, QuantMode::W8A8, *relu);
+                }
+                SimLayer::Pool { r, stride } => {
+                    x = maxpool_fixed(&x, *r, *stride);
+                }
+                SimLayer::Fc { w, bias, rshift, relu } => {
+                    let input = match flat.take() {
+                        Some(v) => v,
+                        None => x.data.clone(),
+                    };
+                    flat = Some(fc_fixed(&input, w, bias, rshift, QuantMode::W8A8, *relu));
+                }
+            }
+        }
+        let out = flat.unwrap_or(x.data);
+        // shift_sat already clamped everything to the 8-bit rails.
+        Ok(out.into_iter().map(|v| v as i8).collect())
+    }
+
+    /// The variant name this backend gives a batch size.
+    pub fn variant_name(&self, batch: usize) -> String {
+        format!("{}_b{}_sim8", self.name, batch)
+    }
+}
+
+impl Backend for SimBackend {
+    fn platform(&self) -> String {
+        "sim".into()
+    }
+
+    fn variants(&self) -> Vec<(String, usize)> {
+        self.batches
+            .iter()
+            .map(|&b| (self.variant_name(b), b))
+            .collect()
+    }
+
+    fn frame_elems(&self) -> usize {
+        self.frame_elems
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn execute_i8(&self, name: &str, frames: &[i8]) -> crate::Result<Vec<i8>> {
+        let batch = self
+            .batches
+            .iter()
+            .copied()
+            .find(|&b| self.variant_name(b) == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no sim variant '{name}' (have: {})",
+                    self.variants()
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        let want = batch * self.frame_elems;
+        anyhow::ensure!(
+            frames.len() == want,
+            "{name}: expected {want} input elements, got {}",
+            frames.len()
+        );
+        let mut out = Vec::with_capacity(batch * self.out_elems);
+        for f in 0..batch {
+            out.extend(self.forward_frame(
+                &frames[f * self.frame_elems..(f + 1) * self.frame_elems],
+            )?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn frame(elems: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..elems).map(|_| rng.range(-128, 127) as i8).collect()
+    }
+
+    #[test]
+    fn sim_backend_shapes_match_the_net() {
+        let be = SimBackend::new(&zoo::tinycnn(), &[1, 4]).unwrap();
+        assert_eq!(be.frame_elems(), 3 * 32 * 32);
+        assert_eq!(be.out_elems(), 10);
+        assert_eq!(
+            be.variants(),
+            vec![("tinycnn_b1_sim8".to_string(), 1), ("tinycnn_b4_sim8".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn sim_backend_is_deterministic() {
+        let a = SimBackend::new(&zoo::lenet(), &[1]).unwrap();
+        let b = SimBackend::new(&zoo::lenet(), &[1]).unwrap();
+        let f = frame(a.frame_elems(), 7);
+        assert_eq!(
+            a.execute_i8("lenet_b1_sim8", &f).unwrap(),
+            b.execute_i8("lenet_b1_sim8", &f).unwrap()
+        );
+    }
+
+    #[test]
+    fn sim_backend_outputs_are_nondegenerate() {
+        // Guard against an all-saturated or all-zero datapath, which would
+        // make the serving correctness tests vacuous.
+        let be = SimBackend::new(&zoo::tinycnn(), &[1]).unwrap();
+        let a = be.execute_i8("tinycnn_b1_sim8", &frame(be.frame_elems(), 1)).unwrap();
+        let b = be.execute_i8("tinycnn_b1_sim8", &frame(be.frame_elems(), 2)).unwrap();
+        assert_ne!(a, b, "different frames must map to different outputs");
+        assert!(a.iter().any(|&v| v != a[0]), "output is constant: {a:?}");
+    }
+
+    #[test]
+    fn sim_backend_rejects_grouped_convs() {
+        assert!(SimBackend::new(&zoo::alexnet(), &[1]).is_err());
+    }
+
+    #[test]
+    fn sim_backend_rejects_bad_sizes() {
+        let be = SimBackend::new(&zoo::tinycnn(), &[2]).unwrap();
+        assert!(be.execute_i8("tinycnn_b2_sim8", &[0i8; 5]).is_err());
+        assert!(be.execute_i8("tinycnn_b9_sim8", &[0i8; 9]).is_err());
+        assert!(SimBackend::new(&zoo::tinycnn(), &[]).is_err());
+    }
+}

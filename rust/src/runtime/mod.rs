@@ -8,9 +8,17 @@
 //! Python never runs here: `Runtime::load` compiles every artifact once at
 //! startup (or lazily), and [`Runtime::execute_i8`] is the only thing on
 //! the request path.
+//!
+//! [`backend`] abstracts the execution engine behind the serving stack:
+//! [`PjrtBackend`] wraps this runtime, [`SimBackend`] is a deterministic
+//! in-process substitute (quantized reference operators, seeded weights)
+//! that needs no artifacts — the coordinator auto-selects PJRT when
+//! `manifest.json` exists and SimBackend otherwise.
 
+pub mod backend;
 pub mod manifest;
 
+pub use backend::{Backend, PjrtBackend, SimBackend, SIM_BATCHES};
 pub use manifest::{Artifact, Manifest};
 
 use std::collections::HashMap;

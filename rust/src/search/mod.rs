@@ -28,6 +28,7 @@ use crate::board::Board;
 use crate::model::Network;
 use crate::power::PowerModel;
 use crate::quant::QuantMode;
+use crate::shard::{self, Sharder, Tenant};
 use crate::sim::{self, SimReport};
 use crate::util::json::{self, Value};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -104,6 +105,13 @@ pub struct DesignSpace {
     pub sim_frames: usize,
     /// Worker threads; 0 = `std::thread::available_parallelism()`.
     pub threads: usize,
+    /// Co-resident tenant groups for [`DesignSpace::sweep_shards`]: each
+    /// inner vec is one set of models to shard a board across (the CLI's
+    /// `--tenants vgg16+alexnet,vgg16+zf` axis). Ignored by the
+    /// single-model [`DesignSpace::sweep`].
+    pub tenant_groups: Vec<Vec<Network>>,
+    /// Split granularity handed to the [`Sharder`] per shard job.
+    pub shard_steps: usize,
 }
 
 impl Default for DesignSpace {
@@ -116,6 +124,8 @@ impl Default for DesignSpace {
             dsp_budgets: vec![None],
             sim_frames: 0,
             threads: 0,
+            tenant_groups: Vec::new(),
+            shard_steps: 16,
         }
     }
 }
@@ -127,6 +137,35 @@ struct Job {
     mode: QuantMode,
     arch: ArchKind,
     dsps: Option<usize>,
+}
+
+/// One evaluated shard job of [`DesignSpace::sweep_shards`]: a board ×
+/// tenant-group × precision point, carrying the full split-search result.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    /// Board name.
+    pub board: String,
+    /// Co-resident model names, in tenant order.
+    pub models: Vec<String>,
+    /// Quantization mode shared by the group.
+    pub mode: QuantMode,
+    /// The split-space search output.
+    pub result: shard::ShardResult,
+}
+
+impl ShardPoint {
+    /// JSON encoding (board/models/bits + the shard frontier).
+    pub fn to_json(&self, steps: usize) -> Value {
+        json::obj(vec![
+            ("board", Value::Str(self.board.clone())),
+            (
+                "models",
+                Value::Arr(self.models.iter().map(|m| Value::Str(m.clone())).collect()),
+            ),
+            ("bits", Value::Num(self.mode.bits() as f64)),
+            ("shard", shard::result_to_json(&self.result, steps)),
+        ])
+    }
 }
 
 impl DesignSpace {
@@ -196,10 +235,9 @@ impl DesignSpace {
         })
     }
 
-    /// Worker threads [`DesignSpace::sweep`] will actually use: the
-    /// `threads` override (or the core count when 0), clamped to the
-    /// number of jobs.
-    pub fn workers(&self) -> usize {
+    /// Worker threads a fan-out of `n_jobs` will use: the `threads`
+    /// override (or the core count when 0), clamped to the job count.
+    fn worker_count(&self, n_jobs: usize) -> usize {
         if self.threads == 0 {
             std::thread::available_parallelism()
                 .map(|v| v.get())
@@ -207,7 +245,12 @@ impl DesignSpace {
         } else {
             self.threads
         }
-        .clamp(1, self.len().max(1))
+        .clamp(1, n_jobs.max(1))
+    }
+
+    /// Worker threads [`DesignSpace::sweep`] will actually use.
+    pub fn workers(&self) -> usize {
+        self.worker_count(self.len())
     }
 
     /// Evaluate every point of the sweep, fanning jobs out across worker
@@ -219,30 +262,81 @@ impl DesignSpace {
         // Shared precomputation: decomposition staircases once per model.
         let tables: Vec<NetTables> = self.models.iter().map(NetTables::build).collect();
         let jobs = self.jobs();
-        let n_jobs = jobs.len();
-        let workers = self.workers();
-
-        let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<crate::Result<DesignPoint>>>> =
-            (0..n_jobs).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_jobs {
-                        break;
-                    }
-                    let out = self.run_job(&jobs[i], &tables);
-                    *slots[i].lock().unwrap() = Some(out);
-                });
-            }
-        });
-
-        slots
-            .into_iter()
-            .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
-            .collect()
+        fan_out(jobs.len(), self.workers(), |i| self.run_job(&jobs[i], &tables))
     }
+
+    /// Evaluate every shard job of the sweep: boards × tenant groups ×
+    /// modes, each running a full [`Sharder`] split search (the
+    /// `--tenants` axis). Same deterministic-output parallel fan-out as
+    /// [`DesignSpace::sweep`].
+    pub fn sweep_shards(&self) -> crate::Result<Vec<ShardPoint>> {
+        anyhow::ensure!(
+            !self.boards.is_empty() && !self.tenant_groups.is_empty(),
+            "empty shard space (no boards or tenant groups?)"
+        );
+        struct SJob {
+            board: usize,
+            group: usize,
+            mode: QuantMode,
+        }
+        let mut jobs = Vec::new();
+        for board in 0..self.boards.len() {
+            for group in 0..self.tenant_groups.len() {
+                for &mode in &self.modes {
+                    jobs.push(SJob { board, group, mode });
+                }
+            }
+        }
+        fan_out(jobs.len(), self.worker_count(jobs.len()), |i| {
+            let job = &jobs[i];
+            let board = self.boards[job.board].clone();
+            let group = &self.tenant_groups[job.group];
+            let sharder = Sharder {
+                board: board.clone(),
+                tenants: group
+                    .iter()
+                    .map(|net| Tenant::new(net.clone(), job.mode))
+                    .collect(),
+                steps: self.shard_steps,
+                sim_frames: self.sim_frames,
+            };
+            sharder.search().map(|result| ShardPoint {
+                board: board.name.clone(),
+                models: group.iter().map(|n| n.name.clone()).collect(),
+                mode: job.mode,
+                result,
+            })
+        })
+    }
+}
+
+/// Deterministic-order parallel fan-out shared by the sweep entry points:
+/// an atomic cursor hands out job indices, results land in per-index
+/// slots, so output order is the enumeration order regardless of thread
+/// count or scheduling.
+fn fan_out<T: Send>(
+    n_jobs: usize,
+    workers: usize,
+    run: impl Fn(usize) -> crate::Result<T> + Sync,
+) -> crate::Result<Vec<T>> {
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<crate::Result<T>>>> =
+        (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(run(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
 }
 
 /// Dominance under (maximize fps, minimize power, minimize DSPs used).
@@ -379,5 +473,23 @@ mod tests {
     #[test]
     fn empty_space_errors() {
         assert!(DesignSpace::default().sweep().is_err());
+        assert!(DesignSpace::default().sweep_shards().is_err());
+    }
+
+    #[test]
+    fn shard_sweep_runs_tenant_groups() {
+        let ds = DesignSpace {
+            boards: vec![zedboard()],
+            tenant_groups: vec![vec![zoo::tinycnn(), zoo::lenet()]],
+            modes: vec![QuantMode::W8A8],
+            shard_steps: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let pts = ds.sweep_shards().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].models, vec!["tinycnn".to_string(), "lenet".to_string()]);
+        assert!(!pts[0].result.plans.is_empty());
+        assert!(!pts[0].result.frontier.is_empty());
     }
 }

@@ -1,0 +1,579 @@
+//! Multi-tenant board sharding: one physical FPGA serving several
+//! co-resident models.
+//!
+//! # Relation to the paper (Sec. 4)
+//!
+//! The paper's framework answers "what is the *balanced* flexible pipeline
+//! for one model on one board?": Algorithm 1 splits the multiplier budget
+//! Θ across the model's layers proportionally to workload, Algorithm 2
+//! trades the BRAM budget α against the DDR bandwidth β. This module lifts
+//! the same question one level up — *the board itself becomes the resource
+//! being allocated*. Each tenant model receives a slice of the physical
+//! (Θ, α, β) and instantiates its own flexible pipeline inside that slice
+//! with the unmodified Sec. 4 machinery:
+//!
+//! - **Θ (DSPs)** is partitioned in `1/steps` quanta; a tenant's quantum
+//!   count also scales its LUT/FF caps and its DDR bandwidth share (compute
+//!   rate is what generates traffic, so β follows Θ — the share Algorithm 2
+//!   balances each tenant's pipeline against).
+//! - **α (BRAM)** gets an *independent* split axis: a model's buffer
+//!   footprint is set by its feature-map geometry, not its compute share
+//!   (VGG16 needs ~⅔ of a ZC706's BRAM18 at 16-bit whether it holds 25% or
+//!   100% of the DSPs), so tying the two axes together would forfeit most
+//!   of the interesting co-residence points.
+//!
+//! The split space is searched exhaustively at the configured granularity.
+//! Per split, every tenant runs Algorithm 1 + Algorithm 2 on its sub-board
+//! — warm-started by sharing each model's decomposition staircases
+//! ([`NetTables`], which depend only on layer dimensions) across *all*
+//! candidate splits — and infeasible splits (a tenant's pipeline cannot fit
+//! its DSP or BRAM slice) are discarded. Feasible splits are reduced to the
+//! Pareto frontier of per-tenant fps vectors, alongside two scalarized
+//! picks: max–min fps (egalitarian) and weighted-sum fps (SLA-weighted).
+//! Frontier winners are optionally validated by the multi-pipeline
+//! discrete-event simulation ([`crate::sim::simulate_multi_provisioned`]),
+//! which runs every tenant's event wheel against the *shared* physical DDR
+//! port at the provisioned per-tenant shares — the same β split each
+//! tenant's Algorithm 2 run was budgeted against.
+//!
+//! Consumed by the `flexipipe shard` CLI subcommand, the
+//! `search::DesignSpace::sweep_shards` axis, the `design_space` example,
+//! and `benches/shard.rs`.
+
+use crate::alloc::flex::{FlexAllocator, NetTables};
+use crate::alloc::{AllocReport, Allocation};
+use crate::board::Board;
+use crate::model::Network;
+use crate::quant::QuantMode;
+use crate::sim::{self, SimReport};
+use crate::util::json::{num, obj, Value};
+use std::sync::Arc;
+
+/// One co-resident workload: a model, its precision, and its weight in the
+/// weighted-fps objective.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub net: Network,
+    pub mode: QuantMode,
+    /// Relative importance in the weighted-fps objective (default 1.0).
+    pub weight: f64,
+}
+
+impl Tenant {
+    /// Tenant with unit weight.
+    pub fn new(net: Network, mode: QuantMode) -> Tenant {
+        Tenant {
+            net,
+            mode,
+            weight: 1.0,
+        }
+    }
+}
+
+/// The sub-board a tenant receives: `dsp_parts/steps` of the compute-side
+/// resources (DSPs, LUTs, FFs, DDR bandwidth) and `bram_parts/steps` of
+/// the BRAM. Integer quanta, so `parts == steps` reproduces the physical
+/// board exactly — the anchor of the single-tenant bit-identity invariant.
+pub fn sub_board(board: &Board, dsp_parts: usize, bram_parts: usize, steps: usize) -> Board {
+    Board {
+        name: board.name.clone(),
+        dsps: board.dsps * dsp_parts / steps,
+        luts: board.luts * dsp_parts / steps,
+        ffs: board.ffs * dsp_parts / steps,
+        bram36: board.bram36 * bram_parts / steps,
+        ddr_bytes_per_sec: board.ddr_bytes_per_sec * (dsp_parts as f64 / steps as f64),
+        freq_hz: board.freq_hz,
+    }
+}
+
+/// All ways to hand `steps` quanta to `n` tenants, each receiving at least
+/// one — `C(steps−1, n−1)` compositions, enumerated in lexicographic order
+/// (deterministic, so plan indices are stable across runs).
+pub fn compositions(steps: usize, n: usize) -> Vec<Vec<usize>> {
+    fn rec(out: &mut Vec<Vec<usize>>, cur: &mut Vec<usize>, i: usize, left: usize) {
+        let n = cur.len();
+        if i == n - 1 {
+            cur[i] = left;
+            out.push(cur.clone());
+            return;
+        }
+        // Leave at least one quantum for each remaining tenant.
+        for p in 1..=(left - (n - 1 - i)) {
+            cur[i] = p;
+            rec(out, cur, i + 1, left - p);
+        }
+    }
+    assert!(n >= 1 && steps >= n, "need at least one quantum per tenant");
+    let mut out = Vec::new();
+    rec(&mut out, &mut vec![0usize; n], 0, steps);
+    out
+}
+
+/// One tenant's slice of a [`ShardPlan`].
+#[derive(Debug, Clone)]
+pub struct TenantAlloc {
+    /// DSP-side quanta this tenant holds (`dsp_parts/steps` of Θ/LUT/FF/β).
+    pub dsp_parts: usize,
+    /// BRAM quanta this tenant holds (`bram_parts/steps` of α).
+    pub bram_parts: usize,
+    /// The tenant's flexible pipeline on its sub-board. Shared (`Arc`)
+    /// across every plan that gives this tenant the same slice — the
+    /// per-tenant allocation depends only on its own (dsp, bram) quanta,
+    /// never on how the remainder is divided among the others.
+    pub alloc: Arc<Allocation>,
+    /// Closed-form report for that pipeline.
+    pub report: Arc<AllocReport>,
+}
+
+/// One feasible split of the board across all tenants.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Per-tenant slices, in the sharder's tenant order.
+    pub tenants: Vec<TenantAlloc>,
+    /// Per-tenant closed-form fps (same order).
+    pub fps: Vec<f64>,
+    /// `min_i fps_i` — the egalitarian objective.
+    pub min_fps: f64,
+    /// `Σ_i weight_i · fps_i` — the SLA-weighted objective.
+    pub weighted_fps: f64,
+    /// Multi-pipeline DES confirmation, one report per tenant (frontier
+    /// plans only, when `sim_frames > 0`).
+    pub sim: Option<Vec<SimReport>>,
+}
+
+/// The searched split space for one board + tenant set.
+#[derive(Debug, Clone)]
+pub struct Sharder {
+    /// The physical board being shared.
+    pub board: Board,
+    /// Co-resident workloads.
+    pub tenants: Vec<Tenant>,
+    /// Split granularity: resources move between tenants in `1/steps`
+    /// quanta. Default 16 — fine enough to separate VGG16-class BRAM
+    /// footprints from AlexNet-class ones, coarse enough that a two-tenant
+    /// search is a few hundred allocator runs.
+    pub steps: usize,
+    /// Frames for the multi-pipeline DES validation of frontier plans
+    /// (0 = closed-form only).
+    pub sim_frames: usize,
+}
+
+/// Search output: every feasible plan plus the interesting subsets.
+#[derive(Debug, Clone)]
+pub struct ShardResult {
+    /// All feasible plans, in deterministic enumeration order
+    /// (DSP composition outer, BRAM composition inner, lexicographic).
+    pub plans: Vec<ShardPlan>,
+    /// Indices of the non-dominated per-tenant fps vectors.
+    pub frontier: Vec<usize>,
+    /// Index of the plan maximizing `min_fps` (first wins ties).
+    pub best_min: usize,
+    /// Index of the plan maximizing `weighted_fps` (first wins ties).
+    pub best_weighted: usize,
+}
+
+impl Sharder {
+    /// Sharder with default granularity and no DES validation.
+    pub fn new(board: Board, tenants: Vec<Tenant>) -> Sharder {
+        Sharder {
+            board,
+            tenants,
+            steps: 16,
+            sim_frames: 0,
+        }
+    }
+
+    /// Enumerate the split space, keep the feasible plans, reduce to the
+    /// fps-vector Pareto frontier, and (optionally) confirm frontier plans
+    /// with the shared-DDR multi-pipeline DES.
+    pub fn search(&self) -> crate::Result<ShardResult> {
+        let n = self.tenants.len();
+        anyhow::ensure!(n >= 1, "shard: no tenants given");
+        anyhow::ensure!(
+            self.steps >= n,
+            "shard: {} tenants need at least {} split steps (have {})",
+            n,
+            n,
+            self.steps
+        );
+        for t in &self.tenants {
+            t.net.validate()?;
+        }
+        // The plan space is C(steps−1, n−1)² and the frontier reduction is
+        // O(plans²): bound it so a 4-tenant run at fine granularity fails
+        // fast with guidance instead of grinding for hours.
+        let splits_per_axis = binomial(self.steps - 1, n - 1);
+        let space = splits_per_axis.saturating_mul(splits_per_axis);
+        anyhow::ensure!(
+            space <= 50_000,
+            "shard: split space too large ({splits_per_axis}² = {space} candidate plans for \
+             {n} tenants at {} steps) — lower `steps` (e.g. `--shard-steps {}`)",
+            self.steps,
+            suggest_steps(n),
+        );
+
+        // Warm start: each model's decomposition staircases depend only on
+        // its layer dimensions, so they are built once and shared across
+        // every candidate split's Algorithm 1/2 run.
+        let tables: Vec<NetTables> = self.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
+
+        // A tenant's allocation depends only on its own slice, so the
+        // split space factorizes: allocate each tenant once per
+        // (dsp_parts, bram_parts) it can receive, then assemble plans by
+        // table lookup. `None` = that slice is infeasible for the tenant.
+        let max_parts = self.steps - (n - 1);
+        let slot = |p: usize, q: usize| (p - 1) * max_parts + (q - 1);
+        // Slice sizes any composition can actually hand out (a lone tenant
+        // always gets the whole board — no point allocating the rest).
+        let parts_range: Vec<usize> = if n == 1 {
+            vec![self.steps]
+        } else {
+            (1..=max_parts).collect()
+        };
+        let mut cells: Vec<Vec<Option<TenantAlloc>>> = Vec::with_capacity(n);
+        for (i, t) in self.tenants.iter().enumerate() {
+            let mut row: Vec<Option<TenantAlloc>> = vec![None; max_parts * max_parts];
+            for &p in &parts_range {
+                for &q in &parts_range {
+                    let sub = sub_board(&self.board, p, q, self.steps);
+                    if sub.dsps == 0 || sub.bram36 == 0 {
+                        continue;
+                    }
+                    let Ok(alloc) =
+                        FlexAllocator::default().allocate_with(&t.net, &sub, t.mode, &tables[i])
+                    else {
+                        continue;
+                    };
+                    let report = alloc.evaluate();
+                    // Feasible iff the pipeline fits the slice's Θ and α
+                    // (the paper's partitioned budgets; LUT/FF are reported
+                    // but interconnect-dominated, not partition-enforced).
+                    if report.dsps > sub.dsps || report.bram18 > sub.bram18() {
+                        continue;
+                    }
+                    row[slot(p, q)] = Some(TenantAlloc {
+                        dsp_parts: p,
+                        bram_parts: q,
+                        alloc: Arc::new(alloc),
+                        report: Arc::new(report),
+                    });
+                }
+            }
+            cells.push(row);
+        }
+
+        // Assemble: every (DSP composition × BRAM composition) whose
+        // tenant cells all exist is a feasible plan.
+        let dsp_splits = compositions(self.steps, n);
+        let bram_splits = compositions(self.steps, n);
+        let mut plans: Vec<ShardPlan> = Vec::new();
+        for dsp in &dsp_splits {
+            for bram in &bram_splits {
+                let mut slices = Vec::with_capacity(n);
+                for i in 0..n {
+                    match &cells[i][slot(dsp[i], bram[i])] {
+                        Some(cell) => slices.push(cell.clone()),
+                        None => {
+                            slices.clear();
+                            break;
+                        }
+                    }
+                }
+                if slices.len() != n {
+                    continue;
+                }
+                let fps: Vec<f64> = slices.iter().map(|s| s.report.fps).collect();
+                let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
+                let weighted_fps = fps
+                    .iter()
+                    .zip(&self.tenants)
+                    .map(|(f, t)| f * t.weight)
+                    .sum();
+                plans.push(ShardPlan {
+                    tenants: slices,
+                    fps,
+                    min_fps,
+                    weighted_fps,
+                    sim: None,
+                });
+            }
+        }
+        anyhow::ensure!(
+            !plans.is_empty(),
+            "shard: no feasible split of {} across {} tenants at {} steps \
+             (board too small for the tenant set — try fewer tenants, 8-bit \
+             mode, or a larger board)",
+            self.board.name,
+            n,
+            self.steps
+        );
+
+        let frontier = frontier(&plans);
+        let best_min = argmax(&plans, |p| p.min_fps);
+        let best_weighted = argmax(&plans, |p| p.weighted_fps);
+
+        let mut result = ShardResult {
+            plans,
+            frontier,
+            best_min,
+            best_weighted,
+        };
+        if self.sim_frames > 0 {
+            for idx in result.frontier.clone() {
+                let plan = &result.plans[idx];
+                let refs: Vec<&Allocation> =
+                    plan.tenants.iter().map(|t| t.alloc.as_ref()).collect();
+                // Validate against the *provisioned* port split (each
+                // tenant gets the dsp_parts/steps of β its Algorithm 2 run
+                // was budgeted), not the demand-converged split — the plan
+                // was ranked on the former.
+                let shares: Vec<f64> = plan
+                    .tenants
+                    .iter()
+                    .map(|t| t.dsp_parts as f64 / self.steps as f64)
+                    .collect();
+                let sims =
+                    sim::simulate_multi_provisioned(&refs, &shares, &self.board, self.sim_frames);
+                result.plans[idx].sim = Some(sims);
+            }
+        }
+        Ok(result)
+    }
+}
+
+/// `C(n, k)` with saturation (plan-space sizing only).
+fn binomial(n: usize, k: usize) -> usize {
+    let k = k.min(n - k);
+    let mut acc: usize = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul(n - i) / (i + 1);
+    }
+    acc
+}
+
+/// Largest `steps` whose split space `C(steps−1, n−1)²` stays within the
+/// search bound for `n` tenants (the error message's suggestion).
+fn suggest_steps(n: usize) -> usize {
+    if n <= 1 {
+        return 64; // a lone tenant has one split at any granularity
+    }
+    let fits = |s: usize| {
+        let b = binomial(s - 1, n - 1);
+        b.saturating_mul(b) <= 50_000
+    };
+    let mut s = n;
+    while s < 1024 && fits(s + 1) {
+        s += 1;
+    }
+    s
+}
+
+/// `a` dominates `b` when it is ≥ on every tenant's fps and > on one.
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
+}
+
+/// Indices of the non-dominated fps vectors.
+pub fn frontier(plans: &[ShardPlan]) -> Vec<usize> {
+    (0..plans.len())
+        .filter(|&i| {
+            !(0..plans.len()).any(|j| j != i && dominates(&plans[j].fps, &plans[i].fps))
+        })
+        .collect()
+}
+
+fn argmax(plans: &[ShardPlan], key: impl Fn(&ShardPlan) -> f64) -> usize {
+    let mut best = 0;
+    for i in 1..plans.len() {
+        if key(&plans[i]) > key(&plans[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// JSON encoding of one plan: per-tenant allocation (slice sizes, resource
+/// use, per-stage `(C', M', K)`) plus the objective values.
+pub fn plan_to_json(plan: &ShardPlan) -> Value {
+    let tenants: Vec<Value> = plan
+        .tenants
+        .iter()
+        .zip(&plan.fps)
+        .enumerate()
+        .map(|(i, (t, &fps))| {
+            let stages: Vec<Value> = t
+                .alloc
+                .stages
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("layer", Value::Str(t.alloc.net.layers[s.layer_idx].label())),
+                        ("cp", num(s.cfg.cp)),
+                        ("mp", num(s.cfg.mp)),
+                        ("k", num(s.cfg.k)),
+                    ])
+                })
+                .collect();
+            let mut pairs = vec![
+                ("model", Value::Str(t.alloc.net.name.clone())),
+                ("bits", num(t.alloc.mode.bits())),
+                ("dsp_parts", num(t.dsp_parts)),
+                ("bram_parts", num(t.bram_parts)),
+                ("dsps", num(t.report.dsps)),
+                ("bram18", num(t.report.bram18)),
+                ("fps", Value::Num(fps)),
+                ("gops", Value::Num(t.report.gops)),
+                ("stages", Value::Arr(stages)),
+            ];
+            if let Some(sims) = &plan.sim {
+                pairs.push(("sim_fps", Value::Num(sims[i].fps)));
+                pairs.push((
+                    "sim_cycles_per_frame",
+                    Value::Num(sims[i].cycles_per_frame),
+                ));
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![
+        ("min_fps", Value::Num(plan.min_fps)),
+        ("weighted_fps", Value::Num(plan.weighted_fps)),
+        ("tenants", Value::Arr(tenants)),
+    ])
+}
+
+/// JSON encoding of a whole search: the frontier plans plus the two
+/// scalarized picks (`flexipipe shard --json`).
+pub fn result_to_json(r: &ShardResult, steps: usize) -> Value {
+    obj(vec![
+        ("steps", num(steps)),
+        ("feasible_plans", num(r.plans.len())),
+        (
+            "frontier",
+            Value::Arr(r.frontier.iter().map(|&i| plan_to_json(&r.plans[i])).collect()),
+        ),
+        ("best_min_fps", plan_to_json(&r.plans[r.best_min])),
+        ("best_weighted_fps", plan_to_json(&r.plans[r.best_weighted])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::{zc706, zedboard};
+    use crate::model::zoo;
+
+    #[test]
+    fn compositions_count_and_sum() {
+        // C(steps-1, n-1): 2 tenants over 16 steps → 15 splits.
+        let c = compositions(16, 2);
+        assert_eq!(c.len(), 15);
+        assert!(c.iter().all(|v| v.iter().sum::<usize>() == 16));
+        assert!(c.iter().all(|v| v.iter().all(|&p| p >= 1)));
+        assert_eq!(compositions(6, 3).len(), 10); // C(5,2)
+        assert_eq!(compositions(4, 1), vec![vec![4]]);
+    }
+
+    #[test]
+    fn sub_board_full_share_is_identity() {
+        let b = zc706();
+        let s = sub_board(&b, 16, 16, 16);
+        assert_eq!(s, b);
+    }
+
+    #[test]
+    fn sub_board_partitions_never_oversubscribe() {
+        let b = zc706();
+        for splits in compositions(16, 3) {
+            let subs: Vec<Board> = splits.iter().map(|&p| sub_board(&b, p, p, 16)).collect();
+            assert!(subs.iter().map(|s| s.dsps).sum::<usize>() <= b.dsps);
+            assert!(subs.iter().map(|s| s.bram36).sum::<usize>() <= b.bram36);
+            assert!(
+                subs.iter().map(|s| s.ddr_bytes_per_sec).sum::<f64>()
+                    <= b.ddr_bytes_per_sec * (1.0 + 1e-9)
+            );
+        }
+    }
+
+    #[test]
+    fn two_small_tenants_shard_a_zedboard() {
+        let sh = Sharder {
+            steps: 8,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let r = sh.search().unwrap();
+        assert!(!r.plans.is_empty());
+        assert!(!r.frontier.is_empty());
+        for p in &r.plans {
+            assert_eq!(p.tenants.len(), 2);
+            assert!(p.fps.iter().all(|&f| f > 0.0));
+            // Partition safety: slices sum within the physical board.
+            let dsps: usize = p.tenants.iter().map(|t| t.report.dsps).sum();
+            let bram: usize = p.tenants.iter().map(|t| t.report.bram18).sum();
+            assert!(dsps <= zedboard().dsps, "{dsps} DSPs oversubscribed");
+            assert!(bram <= zedboard().bram18(), "{bram} BRAM18 oversubscribed");
+        }
+        // The frontier is non-dominated.
+        for &i in &r.frontier {
+            for &j in &r.frontier {
+                if i != j {
+                    assert!(!dominates(&r.plans[j].fps, &r.plans[i].fps));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_tenant_shard_is_the_plain_allocator() {
+        use crate::alloc::Allocator;
+        let sh = Sharder::new(zc706(), vec![Tenant::new(zoo::zf(), QuantMode::W16A16)]);
+        let r = sh.search().unwrap();
+        assert_eq!(r.plans.len(), 1);
+        let plain = FlexAllocator::default()
+            .allocate(&zoo::zf(), &zc706(), QuantMode::W16A16)
+            .unwrap();
+        let shard_alloc = &r.plans[0].tenants[0].alloc;
+        for (a, b) in shard_alloc.stages.iter().zip(&plain.stages) {
+            assert_eq!(a.cfg, b.cfg);
+        }
+        assert_eq!(
+            r.plans[0].tenants[0].report.fps.to_bits(),
+            plain.evaluate().fps.to_bits()
+        );
+    }
+
+    #[test]
+    fn weighted_objective_responds_to_weights() {
+        let mk = |w1: f64, w2: f64| Sharder {
+            steps: 8,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant {
+                        net: zoo::tinycnn(),
+                        mode: QuantMode::W8A8,
+                        weight: w1,
+                    },
+                    Tenant {
+                        net: zoo::lenet(),
+                        mode: QuantMode::W8A8,
+                        weight: w2,
+                    },
+                ],
+            )
+        };
+        let a = mk(1.0, 1.0).search().unwrap();
+        let b = mk(10.0, 1.0).search().unwrap();
+        // Heavier weight on tenant 0 can only shift the weighted pick
+        // toward plans serving tenant 0 at least as fast.
+        assert!(
+            b.plans[b.best_weighted].fps[0] >= a.plans[a.best_weighted].fps[0] - 1e-9
+        );
+    }
+}

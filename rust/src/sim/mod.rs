@@ -34,6 +34,7 @@
 //! first-lowest-index-wins rule.
 
 use crate::alloc::{AllocReport, Allocation};
+use crate::board::Board;
 use crate::engine::buffer_geometry;
 use crate::model::Layer;
 use std::cmp::Reverse;
@@ -185,24 +186,63 @@ struct SimState {
     /// Completion time of each frame (last stage's last group) — used to
     /// separate the steady-state beat from the pipeline fill.
     frame_done: Vec<u64>,
+    /// DDR bytes per cycle of the *physical* port this pipeline draws from
+    /// (the full board rate in multi-tenant runs, not the tenant's share).
+    bpc: f64,
+}
+
+/// The WFQ denominator for one pipeline: every stage's per-frame weight
+/// stream plus the actIn frame stream, in bytes/frame. [`simulate_multi`]
+/// sums this across tenants to weigh each stream's share of the shared
+/// physical port; computed with the *same arithmetic* as the single-
+/// pipeline setup so a lone tenant's schedule is bit-identical.
+fn demand_of(params: &[StageParams], alloc: &Allocation) -> f64 {
+    let (c0, h0, w0) = alloc.net.input;
+    let row_bytes = (c0 * w0 * alloc.mode.act_bytes()) as u64;
+    let actin_bpf = (h0 as u64) * row_bytes;
+    params
+        .iter()
+        .map(|p| (p.weight_bytes * p.groups) as f64)
+        .sum::<f64>()
+        + actin_bpf as f64
+}
+
+/// Public view of [`demand_of`]: one allocation's total DDR stream demand
+/// in bytes per frame, exactly as the simulator's fluid WFQ model weighs it.
+pub fn ddr_stream_demand(alloc: &Allocation) -> f64 {
+    demand_of(&stage_params(alloc), alloc)
 }
 
 impl SimState {
     fn new(alloc: &Allocation, frames: usize) -> SimState {
+        Self::with_ddr(alloc, frames, alloc.board.ddr_bytes_per_sec, None)
+    }
+
+    /// Like [`SimState::new`] but with the physical DDR rate and
+    /// (optionally) the WFQ denominator supplied by the caller. This is how
+    /// the multi-tenant simulation shares one port: every tenant's streams
+    /// are weighed against `shared_demand` (the union of all tenants'
+    /// streams) instead of only their own pipeline's. `None` reproduces the
+    /// single-pipeline behaviour bit-for-bit.
+    fn with_ddr(
+        alloc: &Allocation,
+        frames: usize,
+        ddr_bytes_per_sec: f64,
+        shared_demand: Option<f64>,
+    ) -> SimState {
         let params = stage_params(alloc);
         let n = params.len();
-        let bpc = alloc.board.ddr_bytes_per_sec / alloc.freq_hz; // bytes/cycle
+        let bpc = ddr_bytes_per_sec / alloc.freq_hz; // bytes/cycle
 
         let mut ddr_bytes = 0u64;
         let (c0, h0, w0) = alloc.net.input;
         let row_bytes = (c0 * w0 * alloc.mode.act_bytes()) as u64;
         let total_in_rows = h0 * frames;
         let actin_bpf = (h0 as u64) * row_bytes;
-        let total_bpf: f64 = params
-            .iter()
-            .map(|p| (p.weight_bytes * p.groups) as f64)
-            .sum::<f64>()
-            + actin_bpf as f64;
+        let total_bpf: f64 = match shared_demand {
+            Some(t) => t,
+            None => demand_of(&params, alloc),
+        };
         // Bandwidth share per stage (fluid WFQ): own demand / total demand.
         let share = |bytes_per_frame: f64| -> f64 { (bytes_per_frame / total_bpf).max(1e-6) };
         // actIn: input rows become resident at the unpacker's fair rate.
@@ -247,6 +287,7 @@ impl SimState {
             done_groups: 0,
             now_max: 0,
             frame_done: vec![0u64; frames],
+            bpc,
             params,
         }
     }
@@ -328,7 +369,7 @@ impl SimState {
 
     /// Wrap up into a [`SimReport`] once all groups are done.
     fn report(self, alloc: &Allocation) -> SimReport {
-        let bpc = alloc.board.ddr_bytes_per_sec / alloc.freq_hz;
+        let bpc = self.bpc;
         let makespan = self.now_max.max(1);
         // Steady-state beat: inter-frame completion gap once the pipeline
         // is full (fill latency belongs to the first frame only — Eq. 4 is
@@ -364,7 +405,84 @@ impl SimState {
 /// Ready-queue discrete-event pipeline simulation at row-group granularity.
 /// Per event: O(affected stages · log n).
 pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
-    let mut st = SimState::new(alloc, frames);
+    run_ready_queue(SimState::new(alloc, frames), alloc)
+}
+
+/// Simulate `N` co-resident pipelines sharing one physical DDR port (the
+/// multi-tenant validation pass of [`crate::shard`]).
+///
+/// The DDR model stays the fluid weighted-fair server documented on
+/// [`SimState`], with the WFQ denominator widened to the union of *every*
+/// tenant's streams: tenant `t`'s stage gets
+/// `bpc_physical · (own_stream / Σ_all_tenants streams)` bytes/cycle. The
+/// shares are static, so each tenant's event wheel runs independently
+/// against its reduced rates — deterministic and order-independent, like
+/// an AXI interconnect with per-requestor QoS weights that has converged.
+///
+/// `board` is the *physical* board (full DDR rate). Each allocation keeps
+/// its own clock (`alloc.freq_hz`); sequential-group architectures fall
+/// back to their analytic makespan as in [`simulate`].
+///
+/// Invariant (regression-tested): a tenant whose share works out to the
+/// bandwidth its solo board offered — e.g. two identical tenants on a
+/// board with doubled DSP/BRAM/DDR — reports a bit-identical schedule to
+/// the solo run: the fluid shares make "half of twice the port" exactly
+/// the original port.
+pub fn simulate_multi(allocs: &[&Allocation], board: &Board, frames: usize) -> Vec<SimReport> {
+    let shared: f64 = allocs.iter().map(|a| ddr_stream_demand(a)).sum();
+    allocs
+        .iter()
+        .map(|a| match &a.groups {
+            None => run_ready_queue(
+                SimState::with_ddr(a, frames, board.ddr_bytes_per_sec, Some(shared)),
+                a,
+            ),
+            Some(_) => simulate_sequential(a, frames),
+        })
+        .collect()
+}
+
+/// Like [`simulate_multi`], but with the port split **provisioned**:
+/// tenant `i`'s streams collectively receive `shares[i]` of the physical
+/// port (an AXI interconnect with fixed QoS weights), regardless of how
+/// much the other tenants demand. This is the model the sharder's
+/// validation pass uses, because Algorithm 2 allocated each tenant against
+/// exactly that provisioned bandwidth — validating against the
+/// demand-converged split of [`simulate_multi`] would measure a different
+/// port division than the one the frontier was ranked on (a heavy tenant
+/// would capture bandwidth its plan never promised it).
+///
+/// Internally: tenant `i`'s WFQ denominator becomes `own_demand /
+/// shares[i]`, so its streams' shares sum to `shares[i]`. For equal
+/// tenants with equal shares this coincides with [`simulate_multi`]
+/// (bit-for-bit — division by an exact power of two preserves the
+/// doubled-board identity).
+pub fn simulate_multi_provisioned(
+    allocs: &[&Allocation],
+    shares: &[f64],
+    board: &Board,
+    frames: usize,
+) -> Vec<SimReport> {
+    assert_eq!(allocs.len(), shares.len(), "one port share per tenant");
+    debug_assert!(shares.iter().all(|&s| s > 0.0 && s <= 1.0));
+    allocs
+        .iter()
+        .zip(shares)
+        .map(|(a, &share)| match &a.groups {
+            None => {
+                let denom = ddr_stream_demand(a) / share;
+                run_ready_queue(
+                    SimState::with_ddr(a, frames, board.ddr_bytes_per_sec, Some(denom)),
+                    a,
+                )
+            }
+            Some(_) => simulate_sequential(a, frames),
+        })
+        .collect()
+}
+
+/// The greedy list scheduler both public entry points run on.
+fn run_ready_queue(mut st: SimState, alloc: &Allocation) -> SimReport {
     let n = st.n;
 
     // Min-heap of (start, stage) for currently-startable stages, with lazy
@@ -555,6 +673,51 @@ mod tests {
         let sim = simulate(&alloc, 2);
         let total_wstall: u64 = sim.stages.iter().map(|s| s.stall_weights).sum();
         assert!(total_wstall > 0, "expected weight stalls on starved DDR");
+    }
+
+    #[test]
+    fn multi_with_one_tenant_matches_single() {
+        // The widened WFQ denominator over a single tenant's own streams is
+        // the single-pipeline denominator: schedules must be bit-identical.
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let solo = simulate(&alloc, 3);
+        let multi = simulate_multi(&[&alloc], &zc706(), 3);
+        assert_eq!(multi.len(), 1);
+        assert_eq!(multi[0].makespan, solo.makespan);
+        assert_eq!(
+            multi[0].cycles_per_frame.to_bits(),
+            solo.cycles_per_frame.to_bits()
+        );
+        assert_eq!(multi[0].stages, solo.stages);
+    }
+
+    #[test]
+    fn sharing_a_starved_port_costs_weight_stalls() {
+        // Two co-resident pipelines on one starved port: each stream's WFQ
+        // share halves, so weight-service times grow and total weight
+        // stalls must strictly exceed the solo run's.
+        let mut starved = zc706();
+        starved.ddr_bytes_per_sec /= 100.0;
+        let alloc = FlexAllocator {
+            max_k_steps: 0, // disable Alg.2 so the stall is visible
+            ..Default::default()
+        }
+        .allocate(&zoo::vgg16(), &starved, QuantMode::W16A16)
+        .unwrap();
+        let solo = simulate(&alloc, 2);
+        let solo_stalls: u64 = solo.stages.iter().map(|s| s.stall_weights).sum();
+        assert!(solo_stalls > 0);
+        let multi = simulate_multi(&[&alloc, &alloc], &starved, 2);
+        for m in &multi {
+            assert!(m.makespan >= solo.makespan, "sharing a port can never speed a tenant up");
+            let stalls: u64 = m.stages.iter().map(|s| s.stall_weights).sum();
+            assert!(
+                stalls > solo_stalls,
+                "halved shares must deepen weight stalls ({stalls} vs {solo_stalls})"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Property + regression tests for the multi-tenant sharder and the
+//! shared-DDR multi-pipeline DES.
+
+use flexipipe::alloc::flex::FlexAllocator;
+use flexipipe::alloc::Allocator;
+use flexipipe::board::{zc706, zedboard, Board};
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{sub_board, Sharder, Tenant};
+use flexipipe::sim;
+use flexipipe::util::prop::{check, Rng};
+
+fn random_board(rng: &mut Rng) -> Board {
+    let mut b = zc706();
+    b.dsps = rng.urange(128, 1600);
+    b.bram36 = rng.urange(200, 900);
+    b.ddr_bytes_per_sec = rng.urange(3, 16) as f64 * 1e9;
+    b
+}
+
+fn small_tenant(rng: &mut Rng) -> Tenant {
+    let net = match rng.urange(0, 2) {
+        0 => zoo::tinycnn(),
+        1 => zoo::lenet(),
+        _ => zoo::vgg_micro(),
+    };
+    let mode = *rng.pick(&[QuantMode::W8A8, QuantMode::W16A16]);
+    Tenant::new(net, mode)
+}
+
+#[test]
+fn prop_every_plan_is_feasible() {
+    // Per-tenant DSP/BRAM use within each slice, and slice sums within the
+    // physical board — no plan may oversubscribe anything.
+    check("shard-feasible", 12, |rng| {
+        let board = random_board(rng);
+        let n = rng.urange(2, 3);
+        let tenants: Vec<Tenant> = (0..n).map(|_| small_tenant(rng)).collect();
+        let sharder = Sharder {
+            steps: rng.urange(4, 8),
+            ..Sharder::new(board.clone(), tenants)
+        };
+        let Ok(result) = sharder.search() else {
+            return; // board too small for this tenant set: nothing to check
+        };
+        for plan in &result.plans {
+            let mut dsp_parts = 0;
+            let mut bram_parts = 0;
+            for t in &plan.tenants {
+                let sub = sub_board(&board, t.dsp_parts, t.bram_parts, sharder.steps);
+                assert!(
+                    t.report.dsps <= sub.dsps,
+                    "tenant over its DSP slice: {} > {}",
+                    t.report.dsps,
+                    sub.dsps
+                );
+                assert!(
+                    t.report.bram18 <= sub.bram18(),
+                    "tenant over its BRAM slice: {} > {}",
+                    t.report.bram18,
+                    sub.bram18()
+                );
+                dsp_parts += t.dsp_parts;
+                bram_parts += t.bram_parts;
+            }
+            assert_eq!(dsp_parts, sharder.steps, "Θ quanta must partition");
+            assert_eq!(bram_parts, sharder.steps, "α quanta must partition");
+            let dsps: usize = plan.tenants.iter().map(|t| t.report.dsps).sum();
+            let bram: usize = plan.tenants.iter().map(|t| t.report.bram18).sum();
+            assert!(dsps <= board.dsps, "board DSPs oversubscribed");
+            assert!(bram <= board.bram18(), "board BRAM oversubscribed");
+        }
+    });
+}
+
+#[test]
+fn prop_frontier_is_nondominated_and_complete() {
+    check("shard-frontier", 8, |rng| {
+        let board = random_board(rng);
+        let tenants = vec![small_tenant(rng), small_tenant(rng)];
+        let sharder = Sharder {
+            steps: 6,
+            ..Sharder::new(board, tenants)
+        };
+        let Ok(result) = sharder.search() else { return };
+        let dominates = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
+        };
+        // No frontier member is dominated by any plan.
+        for &i in &result.frontier {
+            for (j, p) in result.plans.iter().enumerate() {
+                assert!(
+                    j == i || !dominates(&p.fps, &result.plans[i].fps),
+                    "frontier member {i} dominated by plan {j}"
+                );
+            }
+        }
+        // Every non-frontier plan is dominated by someone.
+        for (i, p) in result.plans.iter().enumerate() {
+            if !result.frontier.contains(&i) {
+                assert!(
+                    result
+                        .plans
+                        .iter()
+                        .enumerate()
+                        .any(|(j, q)| j != i && dominates(&q.fps, &p.fps)),
+                    "plan {i} excluded from the frontier but undominated"
+                );
+            }
+        }
+        // The scalarized picks are consistent with the plan set.
+        let best_min = &result.plans[result.best_min];
+        assert!(result
+            .plans
+            .iter()
+            .all(|p| p.min_fps <= best_min.min_fps));
+        let best_w = &result.plans[result.best_weighted];
+        assert!(result
+            .plans
+            .iter()
+            .all(|p| p.weighted_fps <= best_w.weighted_fps));
+    });
+}
+
+#[test]
+fn single_tenant_shard_is_bit_identical_to_flex_allocator() {
+    for (net, mode) in [
+        (zoo::tinycnn(), QuantMode::W8A8),
+        (zoo::lenet(), QuantMode::W16A16),
+        (zoo::zf(), QuantMode::W16A16),
+        (zoo::vgg16(), QuantMode::W8A8),
+    ] {
+        let sharder = Sharder::new(zc706(), vec![Tenant::new(net.clone(), mode)]);
+        let result = sharder.search().unwrap();
+        assert_eq!(result.plans.len(), 1, "{}: one split only", net.name);
+        assert_eq!(result.frontier, vec![0]);
+        let shard_alloc = &result.plans[0].tenants[0].alloc;
+        assert_eq!(shard_alloc.board, zc706(), "{}: sub-board must be the board", net.name);
+
+        let plain = FlexAllocator::default().allocate(&net, &zc706(), mode).unwrap();
+        for (a, b) in shard_alloc.stages.iter().zip(&plain.stages) {
+            assert_eq!(a.cfg, b.cfg, "{}: stage configs diverge", net.name);
+        }
+        let (rs, rp) = (shard_alloc.evaluate(), plain.evaluate());
+        assert_eq!(rs.t_frame_cycles, rp.t_frame_cycles, "{}", net.name);
+        assert_eq!(rs.fps.to_bits(), rp.fps.to_bits(), "{}", net.name);
+        assert_eq!(rs.bram18, rp.bram18, "{}", net.name);
+        assert_eq!(
+            result.plans[0].fps[0].to_bits(),
+            rp.fps.to_bits(),
+            "{}: reported fps diverges",
+            net.name
+        );
+    }
+}
+
+/// A board with every partitionable resource doubled (and the same clock).
+fn doubled(b: &Board) -> Board {
+    Board {
+        name: format!("{}x2", b.name),
+        dsps: b.dsps * 2,
+        luts: b.luts * 2,
+        ffs: b.ffs * 2,
+        bram36: b.bram36 * 2,
+        ddr_bytes_per_sec: b.ddr_bytes_per_sec * 2.0,
+        freq_hz: b.freq_hz,
+    }
+}
+
+#[test]
+fn two_identical_tenants_on_doubled_board_match_solo_cycles() {
+    // The multi-pipeline DES regression anchor: each of two identical
+    // tenants holding half of a doubled board gets a WFQ share of the
+    // doubled port that works out to exactly the original board's
+    // bandwidth, so both schedules must be *bit-identical* to the solo run
+    // — any cross-tenant interference in the model would break this.
+    for (net, frames) in [(zoo::tinycnn(), 4), (zoo::lenet(), 3), (zoo::vgg_micro(), 3)] {
+        for base in [zc706(), zedboard()] {
+            let solo = FlexAllocator::default()
+                .allocate(&net, &base, QuantMode::W8A8)
+                .unwrap();
+            let solo_sim = sim::simulate(&solo, frames);
+
+            let big = doubled(&base);
+            // Half of the doubled board is exactly the original board.
+            let half = sub_board(&big, 1, 1, 2);
+            assert_eq!(half.dsps, base.dsps);
+            assert_eq!(half.bram36, base.bram36);
+            assert_eq!(half.ddr_bytes_per_sec.to_bits(), base.ddr_bytes_per_sec.to_bits());
+            let a = FlexAllocator::default()
+                .allocate(&net, &half, QuantMode::W8A8)
+                .unwrap();
+            for (x, y) in a.stages.iter().zip(&solo.stages) {
+                assert_eq!(x.cfg, y.cfg, "{}: half-of-doubled allocation differs", net.name);
+            }
+
+            // Both port models must agree here: equal tenants, equal
+            // provisioned shares, equal demand.
+            let prov = sim::simulate_multi_provisioned(&[&a, &a], &[0.5, 0.5], &big, frames);
+            let sims = sim::simulate_multi(&[&a, &a], &big, frames);
+            assert_eq!(sims.len(), 2);
+            for (s, p) in sims.iter().zip(&prov) {
+                assert_eq!(s.makespan, p.makespan, "{}: port models disagree", net.name);
+                assert_eq!(
+                    s.cycles_per_frame.to_bits(),
+                    p.cycles_per_frame.to_bits(),
+                    "{}",
+                    net.name
+                );
+            }
+            for (t, s) in sims.iter().enumerate() {
+                assert_eq!(
+                    s.makespan, solo_sim.makespan,
+                    "{} tenant {t}: makespan diverges from solo",
+                    net.name
+                );
+                assert_eq!(
+                    s.cycles_per_frame.to_bits(),
+                    solo_sim.cycles_per_frame.to_bits(),
+                    "{} tenant {t}: beat diverges from solo",
+                    net.name
+                );
+                assert_eq!(s.ddr_bytes, solo_sim.ddr_bytes, "{} tenant {t}", net.name);
+                assert_eq!(s.stages, solo_sim.stages, "{} tenant {t}", net.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn provisioned_shares_isolate_tenants_from_neighbors() {
+    // The whole point of the provisioned port model: a tenant's schedule
+    // depends only on its own share of β, never on who it shares the board
+    // with — so swapping its neighbor must not move a cycle.
+    let board = zc706();
+    let half = sub_board(&board, 1, 1, 2);
+    let a = FlexAllocator::default()
+        .allocate(&zoo::tinycnn(), &half, QuantMode::W8A8)
+        .unwrap();
+    let light = FlexAllocator::default()
+        .allocate(&zoo::lenet(), &half, QuantMode::W8A8)
+        .unwrap();
+    let heavy = FlexAllocator::default()
+        .allocate(&zoo::vgg_micro(), &half, QuantMode::W8A8)
+        .unwrap();
+    let with_light = sim::simulate_multi_provisioned(&[&a, &light], &[0.5, 0.5], &board, 3);
+    let with_heavy = sim::simulate_multi_provisioned(&[&a, &heavy], &[0.5, 0.5], &board, 3);
+    assert_eq!(with_light[0].makespan, with_heavy[0].makespan);
+    assert_eq!(
+        with_light[0].cycles_per_frame.to_bits(),
+        with_heavy[0].cycles_per_frame.to_bits()
+    );
+    // Solo with the full port at share 1.0 is the plain simulation.
+    let solo = sim::simulate_multi_provisioned(&[&a], &[1.0], &half, 3);
+    let plain = sim::simulate(&a, 3);
+    assert_eq!(solo[0].makespan, plain.makespan);
+    assert_eq!(solo[0].stages, plain.stages);
+}
+
+#[test]
+fn shard_search_validates_frontier_with_the_multi_des() {
+    let sharder = Sharder {
+        steps: 4,
+        sim_frames: 2,
+        ..Sharder::new(
+            zedboard(),
+            vec![
+                Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                Tenant::new(zoo::lenet(), QuantMode::W8A8),
+            ],
+        )
+    };
+    let result = sharder.search().unwrap();
+    for &i in &result.frontier {
+        let sims = result.plans[i].sim.as_ref().expect("frontier plans get sim");
+        assert_eq!(sims.len(), 2);
+        for s in sims {
+            assert!(s.fps > 0.0 && s.fps.is_finite());
+            assert!(s.makespan > 0);
+        }
+    }
+    // Non-frontier plans skip the (expensive) DES pass.
+    for (i, p) in result.plans.iter().enumerate() {
+        if !result.frontier.contains(&i) {
+            assert!(p.sim.is_none());
+        }
+    }
+}
