@@ -15,6 +15,7 @@ use flexipipe::board::{vc707, zc706, zcu102, zedboard};
 use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::search::{frontier_by_workload, DesignSpace};
+use flexipipe::shard::{Regime, ScheduleMode};
 
 fn main() -> flexipipe::Result<()> {
     // 1. Board × model matrix at both precisions — one parallel sweep.
@@ -154,6 +155,50 @@ fn main() -> flexipipe::Result<()> {
                 })
                 .collect();
             println!("  {}", desc.join(" | "));
+        }
+    }
+
+    // 5. Spatial vs time-multiplexed sharding, merged: `--schedule auto`
+    // also enumerates cyclic full-board schedules (each tenant gets the
+    // whole board in a time slice, paying a partial-reconfiguration cost
+    // per switch) and reduces both regimes to one per-tenant-fps frontier.
+    println!("\n== shard zc706 across vgg16 + alexnet (8b, schedule=auto) ==");
+    let ds = DesignSpace {
+        boards: vec![zc706()],
+        tenant_groups: vec![vec![zoo::vgg16(), zoo::alexnet()]],
+        modes: vec![QuantMode::W8A8],
+        shard_steps: 8,
+        schedule: ScheduleMode::Auto,
+        ..Default::default()
+    };
+    for point in ds.sweep_shards()? {
+        let r = &point.result;
+        let temporal = r.plans.iter().filter(|p| p.regime.is_temporal()).count();
+        println!(
+            "{} on {}: {} plans ({} temporal), {} on the merged frontier",
+            point.models.join("+"),
+            point.board,
+            r.plans.len(),
+            temporal,
+            r.frontier.len()
+        );
+        for &i in &r.frontier {
+            let p = &r.plans[i];
+            let shape = match &p.regime {
+                Regime::Spatial => "spatial".to_string(),
+                Regime::Temporal(info) => format!(
+                    "temporal {:?} ({:.0}% dead)",
+                    info.time_parts,
+                    info.dead_frac * 100.0
+                ),
+            };
+            let fps: Vec<String> = p
+                .tenants
+                .iter()
+                .zip(&p.fps)
+                .map(|(t, f)| format!("{} {:.1}", t.alloc.net.name, f))
+                .collect();
+            println!("  {shape}: {}", fps.join(" | "));
         }
     }
     Ok(())

@@ -1,0 +1,121 @@
+//! Bench: the time-multiplexed sharding planner and the reconfiguration-
+//! aware DES, for the §Perf trajectory.
+//!
+//! - temporal plan search (vgg16 + alexnet on a ZC706 at 8-bit): per-tenant
+//!   full-board allocation + DES calibration once, then quanta ×
+//!   compositions scored analytically,
+//! - merged (auto) search: spatial split space + temporal schedules into
+//!   one frontier,
+//! - `sim::simulate_timeshared` of the best min-fps temporal plan — one
+//!   schedule period executed drain → reconfigure → refill.
+//!
+//! Emits machine-readable `BENCH_timeshare.json` at the repository root,
+//! alongside `BENCH_hotpath.json` / `BENCH_shard.json`.
+
+use flexipipe::alloc::Allocation;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{Regime, ScheduleMode, Sharder, Tenant};
+use flexipipe::sim;
+use flexipipe::util::bench::Bench;
+use flexipipe::util::json::{obj, Value};
+use std::path::Path;
+
+fn sharder(schedule: ScheduleMode) -> Sharder {
+    Sharder {
+        steps: 8,
+        schedule,
+        ..Sharder::new(
+            zc706(),
+            vec![
+                Tenant::new(zoo::vgg16(), QuantMode::W8A8),
+                Tenant::new(zoo::alexnet(), QuantMode::W8A8),
+            ],
+        )
+    }
+}
+
+fn main() {
+    let mut b = Bench::with_budget_secs(2.0);
+    let mut out: Vec<(&str, Value)> = Vec::new();
+
+    // Temporal-only plan search.
+    let s = b
+        .bench("timeshare/vgg16+alexnet/plan", || {
+            sharder(ScheduleMode::Temporal).search().unwrap()
+        })
+        .clone();
+    out.push(("timeshare_search_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let temporal = sharder(ScheduleMode::Temporal).search().unwrap();
+    println!(
+        "  -> {} temporal plans, {} on the frontier",
+        temporal.plans.len(),
+        temporal.frontier.len()
+    );
+    out.push(("timeshare_plans", Value::Num(temporal.plans.len() as f64)));
+
+    // Merged (auto) search: both regimes into one frontier.
+    let s = b
+        .bench("timeshare/vgg16+alexnet/auto", || {
+            sharder(ScheduleMode::Auto).search().unwrap()
+        })
+        .clone();
+    out.push(("auto_search_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let auto = sharder(ScheduleMode::Auto).search().unwrap();
+    let n_temporal = auto.plans.iter().filter(|p| p.regime.is_temporal()).count();
+    println!(
+        "  -> auto: {} plans ({} temporal), merged frontier {}",
+        auto.plans.len(),
+        n_temporal,
+        auto.frontier.len()
+    );
+    out.push(("auto_plans", Value::Num(auto.plans.len() as f64)));
+    out.push(("auto_frontier", Value::Num(auto.frontier.len() as f64)));
+    out.push(("auto_temporal_plans", Value::Num(n_temporal as f64)));
+
+    // Execute one period of the best min-fps temporal plan.
+    let best = &temporal.plans[temporal.best_min];
+    let Regime::Temporal(info) = &best.regime else {
+        unreachable!("temporal search returns temporal plans")
+    };
+    let refs: Vec<&Allocation> = best.tenants.iter().map(|t| t.alloc.as_ref()).collect();
+    let slices: Vec<u64> = info
+        .time_parts
+        .iter()
+        .map(|&p| p as u64 * info.quantum_cycles)
+        .collect();
+    let s = b
+        .bench("timeshare/sim one period", || {
+            sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles)
+        })
+        .clone();
+    out.push(("timeshare_sim_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let ts = sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles);
+    println!(
+        "  -> period {:.1} ms, dead {:.1}%, per-tenant fps {:?}",
+        ts.period_cycles as f64 / zc706().freq_hz * 1e3,
+        ts.dead_frac * 100.0,
+        ts.slices.iter().map(|s| (s.fps * 10.0).round() / 10.0).collect::<Vec<_>>()
+    );
+    // Executed-schedule dead fraction (refill counts as busy) — the
+    // analytic `TemporalInfo::dead_frac` is a stricter definition.
+    out.push(("timeshare_sim_dead_frac", Value::Num(ts.dead_frac)));
+    out.push((
+        "timeshare_min_fps_analytic",
+        Value::Num(best.min_fps),
+    ));
+    out.push((
+        "timeshare_min_fps_sim",
+        Value::Num(ts.slices.iter().map(|s| s.fps).fold(f64::INFINITY, f64::min)),
+    ));
+
+    b.finish();
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_timeshare.json");
+    let json = obj(out).to_pretty();
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

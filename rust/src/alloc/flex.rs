@@ -78,6 +78,27 @@ impl Default for FlexAllocator {
     }
 }
 
+/// The θ vector a finished Algorithm 1 run settles on, carried between
+/// neighboring DSP budgets of a design-space sweep as a warm start.
+///
+/// Warm-start contract (regression-tested in `search`): seeding the next
+/// (larger) budget's run with the previous budget's settled θ skips the
+/// proportional pre-allocation + trim and goes straight to the grow /
+/// rebalance loops — and produces the **bit-identical** allocation the
+/// cold start would, because the rebalance rounds re-canonicalize every
+/// stage against the final bottleneck (`min_theta_under(t_frame)` depends
+/// only on `t_frame`, not on how θ got there). A seed from a *larger*
+/// budget than the current one is ignored (cold start) — shrinking is the
+/// trim loop's job and its tie-breaks are anchored to the pre-allocation.
+#[derive(Debug, Clone)]
+pub struct ThetaSeed {
+    /// Per-compute-layer multiplier budgets (granule multiples), in
+    /// `Network::compute_layers` order.
+    pub theta: Vec<usize>,
+    /// The Θ total the vector settled under.
+    pub theta_total: usize,
+}
+
 /// Decompose a multiplier budget into `(C', M')` for one layer.
 ///
 /// Minimizes the phase count `ceil(C/C')·ceil(M/M')` subject to
@@ -354,41 +375,68 @@ impl FlexAllocator {
         theta_total: usize,
         tables: &NetTables,
     ) -> Vec<EngineConfig> {
+        self.algorithm1_seeded(net, theta_total, tables, None).0
+    }
+
+    /// [`FlexAllocator::algorithm1`] with an optional θ warm start (see
+    /// [`ThetaSeed`] for the bit-identity contract). Also returns the
+    /// settled θ vector for the caller to carry to the next budget.
+    fn algorithm1_seeded(
+        &self,
+        net: &Network,
+        theta_total: usize,
+        tables: &NetTables,
+        seed: Option<&ThetaSeed>,
+    ) -> (Vec<EngineConfig>, ThetaSeed) {
         let compute: Vec<usize> = net.compute_layers();
         let pis: Vec<u64> = compute.iter().map(|&i| workload(&net.layers[i])).collect();
         let pi_sum: u64 = pis.iter().sum();
 
-        // Lines 2–3: proportional pre-allocation rounded to R·S granules.
-        let mut theta: Vec<usize> = compute
-            .iter()
-            .zip(&pis)
-            .map(|(&i, &pi)| {
-                let l = &net.layers[i];
-                let g = granule(l);
-                let ideal = (pi as f64 * theta_total as f64 / pi_sum as f64) as usize;
-                ((ideal / g).max(1)) * g
-            })
-            .collect();
+        let mut theta: Vec<usize> = match seed {
+            // Warm start: the previous (smaller) budget's settled θ is a
+            // valid sub-budget state — skip pre-allocation + trim and let
+            // the grow/rebalance loops spend the new headroom.
+            Some(s) if s.theta_total <= theta_total && s.theta.len() == compute.len() => {
+                debug_assert!(s.theta.iter().sum::<usize>() <= theta_total);
+                s.theta.clone()
+            }
+            _ => {
+                // Lines 2–3: proportional pre-allocation rounded to R·S
+                // granules.
+                let mut theta: Vec<usize> = compute
+                    .iter()
+                    .zip(&pis)
+                    .map(|(&i, &pi)| {
+                        let l = &net.layers[i];
+                        let g = granule(l);
+                        let ideal = (pi as f64 * theta_total as f64 / pi_sum as f64) as usize;
+                        ((ideal / g).max(1)) * g
+                    })
+                    .collect();
 
-        // Pre-allocation may overshoot after rounding-up: trim the most
-        // over-served layers (smallest π/θ) back one granule at a time.
-        loop {
-            let used: usize = theta.iter().sum();
-            if used <= theta_total {
-                break;
+                // Pre-allocation may overshoot after rounding-up: trim the
+                // most over-served layers (smallest π/θ) back one granule
+                // at a time.
+                loop {
+                    let used: usize = theta.iter().sum();
+                    if used <= theta_total {
+                        break;
+                    }
+                    let j = (0..theta.len())
+                        .filter(|&j| theta[j] > granule(&net.layers[compute[j]]))
+                        .min_by(|&a, &b| {
+                            let ra = pis[a] as f64 / theta[a] as f64;
+                            let rb = pis[b] as f64 / theta[b] as f64;
+                            ra.partial_cmp(&rb).unwrap()
+                        });
+                    match j {
+                        Some(j) => theta[j] -= granule(&net.layers[compute[j]]),
+                        None => break,
+                    }
+                }
+                theta
             }
-            let j = (0..theta.len())
-                .filter(|&j| theta[j] > granule(&net.layers[compute[j]]))
-                .min_by(|&a, &b| {
-                    let ra = pis[a] as f64 / theta[a] as f64;
-                    let rb = pis[b] as f64 / theta[b] as f64;
-                    ra.partial_cmp(&rb).unwrap()
-                });
-            match j {
-                Some(j) => theta[j] -= granule(&net.layers[compute[j]]),
-                None => break,
-            }
-        }
+        };
 
         // Lines 4–8: greedy — keep feeding the slowest layer. The paper
         // adds one R·S granule at a time; we strengthen this to "grow the
@@ -427,7 +475,11 @@ impl FlexAllocator {
             let (cp, mp) = decompose(c_eff, m, granule(l), theta[j]);
             cfgs[i] = EngineConfig { cp, mp, k: 1 };
         }
-        cfgs
+        let seed_out = ThetaSeed {
+            theta,
+            theta_total,
+        };
+        (cfgs, seed_out)
     }
 
     /// Algorithm 2: raise `K` of the heaviest weight-traffic layer until
@@ -523,6 +575,21 @@ impl FlexAllocator {
         mode: QuantMode,
         tables: &NetTables,
     ) -> crate::Result<Allocation> {
+        Ok(self.allocate_seeded(net, board, mode, tables, None)?.0)
+    }
+
+    /// [`FlexAllocator::allocate_with`] plus the θ warm-start channel: the
+    /// budget sweep threads each point's [`ThetaSeed`] into its
+    /// larger-budget neighbor (bit-identical to cold starts — see
+    /// [`ThetaSeed`]) and gets the settled seed back for the next point.
+    pub fn allocate_seeded(
+        &self,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        tables: &NetTables,
+        seed: Option<&ThetaSeed>,
+    ) -> crate::Result<(Allocation, ThetaSeed)> {
         net.validate()?;
         anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
         anyhow::ensure!(
@@ -539,7 +606,7 @@ impl FlexAllocator {
         let pack = mode.mults_per_dsp();
         let slack = (pack - 1) * net.compute_layers().len();
         let theta_total = ((board.dsps - self.dsp_reserve) * pack).saturating_sub(slack);
-        let cfgs = self.algorithm1(net, theta_total, tables);
+        let (cfgs, seed_out) = self.algorithm1_seeded(net, theta_total, tables, seed);
 
         let stages = cfgs
             .iter()
@@ -565,7 +632,7 @@ impl FlexAllocator {
             shared_array: false,
         };
         self.raise_k(net, board, mode, &mut alloc);
-        Ok(alloc)
+        Ok((alloc, seed_out))
     }
 }
 
@@ -911,6 +978,52 @@ mod tests {
                 assert_eq!(rf.t_frame_cycles, rs.t_frame_cycles);
                 assert_eq!(rf.fps.to_bits(), rs.fps.to_bits(), "{}", net.name);
                 assert_eq!(rf.bram18, rs.bram18);
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_allocate_matches_cold_on_growing_budgets() {
+        // The ThetaSeed contract: warm-starting from the previous
+        // (smaller) budget's settled θ must reproduce the cold start
+        // bit-for-bit at every point of an ascending budget chain.
+        for net in [zoo::zf(), zoo::lenet()] {
+            let tables = NetTables::build(&net);
+            let a = FlexAllocator::default();
+            let mut seed: Option<ThetaSeed> = None;
+            let mut board = zc706();
+            for dsps in [200usize, 350, 500, 700, 900, 1200] {
+                board.dsps = dsps;
+                let (warm, s) = a
+                    .allocate_seeded(&net, &board, QuantMode::W16A16, &tables, seed.as_ref())
+                    .unwrap();
+                let cold = a
+                    .allocate_with(&net, &board, QuantMode::W16A16, &tables)
+                    .unwrap();
+                for (x, y) in warm.stages.iter().zip(&cold.stages) {
+                    assert_eq!(x.cfg, y.cfg, "{} dsps={dsps}", net.name);
+                }
+                assert_eq!(
+                    warm.evaluate().fps.to_bits(),
+                    cold.evaluate().fps.to_bits(),
+                    "{} dsps={dsps}",
+                    net.name
+                );
+                // The carried seed reflects the budget it settled under.
+                assert_eq!(s.theta_total, dsps); // 16-bit: Θ = DSPs
+                seed = Some(s);
+            }
+            // A seed from a larger budget is ignored (cold-start path), so
+            // shrinking the budget still matches cold exactly.
+            board.dsps = 300;
+            let (shrunk, _) = a
+                .allocate_seeded(&net, &board, QuantMode::W16A16, &tables, seed.as_ref())
+                .unwrap();
+            let cold = a
+                .allocate_with(&net, &board, QuantMode::W16A16, &tables)
+                .unwrap();
+            for (x, y) in shrunk.stages.iter().zip(&cold.stages) {
+                assert_eq!(x.cfg, y.cfg, "{} shrink", net.name);
             }
         }
     }

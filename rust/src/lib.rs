@@ -29,9 +29,11 @@
 //!   recurrent-architecture simulator.
 //! - [`search`] — parallel design-space search: boards × models × modes ×
 //!   DSP budgets fan-out with shared precomputation + Pareto frontier.
-//! - [`shard`] — multi-tenant board sharding: partition one board's
-//!   DSP/BRAM budget across co-resident models, Pareto frontier of
-//!   per-tenant fps, validated by the multi-pipeline DES.
+//! - [`shard`] — multi-tenant board sharding, spatial (partition one
+//!   board's DSP/BRAM budget across co-resident models) and temporal
+//!   (time-multiplex full-board allocations with a partial-reconfiguration
+//!   cost model), merged into one per-tenant-fps Pareto frontier and
+//!   validated by the multi-pipeline / time-shared DES.
 //! - [`power`] — calibrated power estimation (the paper uses Vivado's
 //!   estimate; we use an activity-based analytical model).
 //! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.

@@ -11,7 +11,8 @@
 //!                    --bits 8,16 [--dsps 512,900] [--threads 0] [--json F]
 //! flexipipe search   --tenants vgg16+alexnet,vgg16+zf --boards zc706
 //! flexipipe shard    --models vgg16,alexnet --board zc706 [--bits 16] \
-//!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0]
+//!                    [--schedule spatial|temporal|auto] [--shard-steps 16] \
+//!                    [--weights 1,1] [--sim-frames 0] [--max-period 0.5]
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
@@ -21,7 +22,7 @@ use flexipipe::power::PowerModel;
 use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
 use flexipipe::search::{self, DesignSpace};
-use flexipipe::shard::{self, Sharder, Tenant};
+use flexipipe::shard::{self, Regime, ScheduleMode, Sharder, Tenant};
 use flexipipe::util::cli::{flag, opt, usage, Args, Spec};
 use flexipipe::util::json::Value;
 use flexipipe::{board, report, sim};
@@ -62,9 +63,24 @@ fn specs() -> Vec<Spec> {
             None,
         ),
         opt("shard-steps", "shard split granularity: 1/steps quanta", Some("16")),
+        opt(
+            "schedule",
+            "shard regime: spatial | temporal | auto (search/shard)",
+            Some("spatial"),
+        ),
+        opt(
+            "max-period",
+            "temporal schedule period bound in seconds (search/shard)",
+            Some("0.5"),
+        ),
         opt("weights", "comma-separated tenant weights (shard)", None),
         opt("threads", "search worker threads, 0 = all cores", Some("0")),
-        opt("sim-frames", "confirm each search point with N simulated frames", Some("0")),
+        opt(
+            "sim-frames",
+            "confirm frontier points with the DES: N frames per point (temporal shard \
+             plans execute one full schedule period instead — N>0 just enables the pass)",
+            Some("0"),
+        ),
         opt("json", "write search results as JSON to this path", None),
         flag("no-paper", "omit paper reference rows from the report"),
         flag("verbose", "per-stage detail"),
@@ -458,6 +474,8 @@ fn cmd_search_shards(
             .collect::<flexipipe::Result<Vec<_>>>()?,
         tenant_groups: groups,
         shard_steps,
+        schedule: ScheduleMode::parse(args.get_or("schedule", "spatial"))?,
+        max_period_s: args.get_parse("max-period", 0.5f64)?,
         sim_frames: args.get_parse("sim-frames", 0usize)?,
         threads: args.get_parse("threads", 0usize)?,
         ..Default::default()
@@ -467,7 +485,7 @@ fn cmd_search_shards(
     let dt = t0.elapsed();
 
     println!(
-        "{:<10} {:<22} {:>4} {:>6} {:>8}  best min-fps split (per-tenant fps)",
+        "{:<10} {:<22} {:>4} {:>6} {:>8}  best min-fps plan (regime, per-tenant fps)",
         "board", "tenants", "bits", "plans", "frontier"
     );
     for p in &points {
@@ -479,12 +497,13 @@ fn cmd_search_shards(
             .map(|(t, f)| format!("{} {:.1}", t.alloc.net.name, f))
             .collect();
         println!(
-            "{:<10} {:<22} {:>4} {:>6} {:>8}  {}",
+            "{:<10} {:<22} {:>4} {:>6} {:>8}  {} {}",
             p.board,
             p.models.join("+"),
             p.mode.bits(),
             p.result.plans.len(),
             p.result.frontier.len(),
+            best.regime.label(),
             fps.join(" | ")
         );
     }
@@ -521,36 +540,61 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
         weights.len(),
         models.len()
     );
+    let schedule = ScheduleMode::parse(args.get_or("schedule", "spatial"))?;
     let sharder = Sharder {
-        board: brd.clone(),
-        tenants: models
-            .iter()
-            .zip(&weights)
-            .map(|(m, &weight)| {
-                Ok(Tenant {
-                    net: config::resolve(m)?,
-                    mode,
-                    weight,
-                })
-            })
-            .collect::<flexipipe::Result<Vec<_>>>()?,
         steps,
         sim_frames: args.get_parse("sim-frames", 0usize)?,
+        schedule,
+        max_period_s: args.get_parse("max-period", 0.5f64)?,
+        ..Sharder::new(
+            brd.clone(),
+            models
+                .iter()
+                .zip(&weights)
+                .map(|(m, &weight)| {
+                    Ok(Tenant {
+                        net: config::resolve(m)?,
+                        mode,
+                        weight,
+                    })
+                })
+                .collect::<flexipipe::Result<Vec<_>>>()?,
+        )
     };
     let t0 = std::time::Instant::now();
     let result = sharder.search()?;
     println!(
-        "shard {} across {} tenants ({mode}, 1/{steps} quanta): {} feasible plans, \
-         {} on the frontier ({:.2?})",
+        "shard {} across {} tenants ({mode}, {} regime, 1/{steps} quanta): {} feasible \
+         plans, {} on the frontier ({:.2?})",
         brd.name,
         models.len(),
+        schedule.label(),
         result.plans.len(),
         result.frontier.len(),
         t0.elapsed()
     );
+    let describe = |p: &shard::ShardPlan| -> String {
+        match &p.regime {
+            Regime::Spatial => {
+                let dsp: Vec<String> = p.tenants.iter().map(|t| t.dsp_parts.to_string()).collect();
+                let bram: Vec<String> = p.tenants.iter().map(|t| t.bram_parts.to_string()).collect();
+                format!("spatial  Θ {} | α {}", dsp.join("+"), bram.join("+"))
+            }
+            Regime::Temporal(info) if info.period_cycles == 0 => "temporal solo".to_string(),
+            Regime::Temporal(info) => {
+                let slices: Vec<String> = info.time_parts.iter().map(|t| t.to_string()).collect();
+                format!(
+                    "temporal slices {} | period {:.1} ms | dead {:.0}%",
+                    slices.join("+"),
+                    info.period_cycles as f64 / brd.freq_hz * 1e3,
+                    info.dead_frac * 100.0
+                )
+            }
+        }
+    };
     let show = |label: String, idx: usize| {
-        println!("  {label}:");
         let p = &result.plans[idx];
+        println!("  {label} [{}]:", describe(p));
         for (t, fps) in p.tenants.iter().zip(&p.fps) {
             println!(
                 "    {:<10} Θ {:>2}/{steps}  α {:>2}/{steps}  {:>4} DSPs {:>5} BRAM18 {:>9.1} fps",
@@ -569,11 +613,9 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
         ),
         result.best_weighted,
     );
-    println!("  frontier (Θ split | α split | per-tenant fps):");
+    println!("  frontier (regime | split | per-tenant fps):");
     for &i in &result.frontier {
         let p = &result.plans[i];
-        let dsp: Vec<String> = p.tenants.iter().map(|t| t.dsp_parts.to_string()).collect();
-        let bram: Vec<String> = p.tenants.iter().map(|t| t.bram_parts.to_string()).collect();
         let fps: Vec<String> = p.fps.iter().map(|f| format!("{f:.1}")).collect();
         let sim = match &p.sim {
             Some(s) => format!(
@@ -582,13 +624,7 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
             ),
             None => String::new(),
         };
-        println!(
-            "    Θ {} | α {} | {} fps{}",
-            dsp.join("+"),
-            bram.join("+"),
-            fps.join(" / "),
-            sim
-        );
+        println!("    {} | {} fps{}", describe(p), fps.join(" / "), sim);
     }
     let json = shard::result_to_json(&result, steps).to_pretty();
     match args.get("json") {

@@ -126,6 +126,73 @@ pub fn conv_fixed(
     out
 }
 
+/// Grouped fixed-point convolution (AlexNet's split layers): input
+/// channels divide into `groups` contiguous bands, and output-channel band
+/// `g` reads only input band `g` — a block-diagonal weight matrix.
+///
+/// Parameter layout: `p.c` is the **per-group** input channel count
+/// (`C/groups`), `p.m` the *total* output channels, `p.w` is
+/// `[M][C/groups][R][S]` flattened (matching `ConvShape::weights()`),
+/// `p.bias`/`p.rshift` are per output channel (`M` entries) and `p.lshift`
+/// per physical input channel (`C = p.c·groups` entries). `groups == 1`
+/// is exactly [`conv_fixed`].
+///
+/// Golden equivalence (tested): the result is bit-identical to an
+/// *ungrouped* [`conv_fixed`] over the full input whose weight tensor is
+/// the block-diagonal embedding of `p.w` (zeros across bands).
+pub fn conv_grouped_fixed(
+    x: &Chw,
+    p: &ConvParams,
+    groups: usize,
+    stride: usize,
+    pad: usize,
+    mode: QuantMode,
+    relu: bool,
+) -> Chw {
+    if groups == 1 {
+        return conv_fixed(x, p, stride, pad, mode, relu);
+    }
+    assert_eq!(x.c, p.c * groups, "p.c must be per-group channels");
+    assert_eq!(p.m % groups, 0, "groups must divide M");
+    assert_eq!(p.lshift.len(), x.c, "one lshift per physical input channel");
+    let cg = p.c;
+    let mg = p.m / groups;
+    let h_out = (x.h + 2 * pad - p.r) / stride + 1;
+    let w_out = (x.w + 2 * pad - p.s) / stride + 1;
+    let mut out = Chw::zeros(p.m, h_out, w_out);
+    let bits = mode.bits();
+    // Same loop nest as conv_fixed, with output channel `m` reading only
+    // its band's physical input channels — no per-call band copies (this
+    // sits on the artifact-free serving path).
+    for m in 0..p.m {
+        let band = (m / mg) * cg; // first physical input channel of m's band
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut psum: i64 = p.bias[m];
+                for c in 0..cg {
+                    let xs = p.lshift[band + c];
+                    for r in 0..p.r {
+                        for s in 0..p.s {
+                            let iy = (oy * stride + r) as isize - pad as isize;
+                            let ix = (ox * stride + s) as isize - pad as isize;
+                            let xv = x.get_padded(band + c, iy, ix) << xs;
+                            // p.c is the per-group count, so `weight`'s
+                            // [M][C/g][R][S] stride is already right.
+                            psum += xv * p.weight(m, c, r, s);
+                        }
+                    }
+                }
+                let mut v = shift_sat(psum, p.rshift[m], bits);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out.set(m, oy, ox, v);
+            }
+        }
+    }
+    out
+}
+
 /// Fixed-point max pooling.
 pub fn maxpool_fixed(x: &Chw, r: usize, stride: usize) -> Chw {
     let h_out = (x.h - r) / stride + 1;
@@ -257,6 +324,63 @@ mod tests {
         }
         let y = maxpool_fixed(&x, 2, 2);
         assert_eq!(y.data, vec![9]);
+    }
+
+    #[test]
+    fn grouped_conv_matches_block_diagonal_ungrouped() {
+        // Independent oracle: a grouped conv is exactly an ungrouped conv
+        // whose weight tensor is block-diagonal across channel bands. The
+        // ungrouped path never looks at `groups`, so this genuinely tests
+        // the band routing (slicing of x, w, bias, shifts).
+        use crate::util::prop::Rng;
+        let (groups, c, m, r, hw) = (2usize, 6usize, 4usize, 3usize, 5usize);
+        let (cg, mg) = (c / groups, m / groups);
+        let mut rng = Rng::new(0xA1EC);
+        let mut x = Chw::zeros(c, hw, hw);
+        for v in x.data.iter_mut() {
+            *v = rng.range(-128, 127);
+        }
+        let grouped = ConvParams {
+            w: (0..m * cg * r * r).map(|_| rng.range(-4, 4)).collect(),
+            m,
+            c: cg,
+            r,
+            s: r,
+            bias: (0..m).map(|_| rng.range(-64, 64)).collect(),
+            lshift: (0..c).map(|_| rng.range(0, 2) as u32).collect(),
+            rshift: (0..m).map(|_| rng.range(0, 3) as u32).collect(),
+        };
+        // Block-diagonal embedding: full [M][C][R][S], zero across bands.
+        let mut wfull = vec![0i64; m * c * r * r];
+        for om in 0..m {
+            let g = om / mg;
+            for ic in 0..cg {
+                for k in 0..r * r {
+                    wfull[(om * c + g * cg + ic) * r * r + k] =
+                        grouped.w[(om * cg + ic) * r * r + k];
+                }
+            }
+        }
+        let full = ConvParams {
+            w: wfull,
+            m,
+            c,
+            r,
+            s: r,
+            bias: grouped.bias.clone(),
+            lshift: grouped.lshift.clone(),
+            rshift: grouped.rshift.clone(),
+        };
+        for (stride, pad, relu) in [(1, 1, true), (2, 0, false)] {
+            let a = conv_grouped_fixed(&x, &grouped, groups, stride, pad, QuantMode::W8A8, relu);
+            let b = conv_fixed(&x, &full, stride, pad, QuantMode::W8A8, relu);
+            assert_eq!(a.data, b.data, "stride={stride} pad={pad}");
+            assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+        }
+        // groups == 1 degenerates to the plain path.
+        let a = conv_grouped_fixed(&x, &full, 1, 1, 1, QuantMode::W8A8, true);
+        let b = conv_fixed(&x, &full, 1, 1, QuantMode::W8A8, true);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

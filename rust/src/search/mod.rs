@@ -22,13 +22,13 @@
 //! Consumed by the `flexipipe search` CLI subcommand, the `design_space`
 //! example, and `benches/{hotpath,bandwidth_sweep}.rs`.
 
-use crate::alloc::flex::{FlexAllocator, NetTables};
+use crate::alloc::flex::{FlexAllocator, NetTables, ThetaSeed};
 use crate::alloc::{allocator_for, AllocReport, ArchKind};
 use crate::board::Board;
 use crate::model::Network;
 use crate::power::PowerModel;
 use crate::quant::QuantMode;
-use crate::shard::{self, Sharder, Tenant};
+use crate::shard::{self, ScheduleMode, Sharder, Tenant};
 use crate::sim::{self, SimReport};
 use crate::util::json::{self, Value};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -112,6 +112,16 @@ pub struct DesignSpace {
     pub tenant_groups: Vec<Vec<Network>>,
     /// Split granularity handed to the [`Sharder`] per shard job.
     pub shard_steps: usize,
+    /// Sharding regime(s) for [`DesignSpace::sweep_shards`]: spatial
+    /// splits, temporal schedules, or both merged (`--schedule`).
+    pub schedule: ScheduleMode,
+    /// Temporal-schedule period bound in seconds handed to each
+    /// [`Sharder`] (`--max-period`).
+    pub max_period_s: f64,
+    /// Warm-start neighboring DSP-budget points of a sweep chain by
+    /// carrying the settled Algorithm 1 θ vector forward (flex arch only;
+    /// regression-tested bit-identical to cold starts). Default on.
+    pub warm_start: bool,
 }
 
 impl Default for DesignSpace {
@@ -126,6 +136,9 @@ impl Default for DesignSpace {
             threads: 0,
             tenant_groups: Vec::new(),
             shard_steps: 16,
+            schedule: ScheduleMode::Spatial,
+            max_period_s: 0.5,
+            warm_start: true,
         }
     }
 }
@@ -137,6 +150,14 @@ struct Job {
     mode: QuantMode,
     arch: ArchKind,
     dsps: Option<usize>,
+}
+
+/// One parallel work unit of [`DesignSpace::sweep`]: a whole flex-arch
+/// budget chain (sequential, carrying the θ seed) or a single job.
+#[derive(Clone, Copy)]
+enum Unit {
+    Chain(usize),
+    Job(usize),
 }
 
 /// One evaluated shard job of [`DesignSpace::sweep_shards`]: a board ×
@@ -205,34 +226,54 @@ impl DesignSpace {
         jobs
     }
 
-    fn run_job(&self, job: &Job, tables: &[NetTables]) -> crate::Result<DesignPoint> {
+    /// Run one sweep job. `seed` is the θ vector settled by the previous
+    /// (smaller-budget) point of this job's chain — [`FlexAllocator`]
+    /// warm-starts Algorithm 1 from it when usable and returns the seed for
+    /// the next point; non-flex architectures pass no seed through.
+    fn run_job(
+        &self,
+        job: &Job,
+        tables: &[NetTables],
+        seed: Option<&ThetaSeed>,
+    ) -> crate::Result<(DesignPoint, Option<ThetaSeed>)> {
         let net = &self.models[job.model];
         let mut board = self.boards[job.board].clone();
         if let Some(d) = job.dsps {
             board.dsps = d;
         }
-        let alloc = match job.arch {
-            // Flex reuses the model's shared decomposition tables.
+        let (alloc, seed_out) = match job.arch {
+            // Flex reuses the model's shared decomposition tables (and the
+            // chain's θ seed, when warm starts are on).
             ArchKind::FlexPipeline => {
-                FlexAllocator::default().allocate_with(net, &board, job.mode, &tables[job.model])?
+                let (alloc, seed_out) = FlexAllocator::default().allocate_seeded(
+                    net,
+                    &board,
+                    job.mode,
+                    &tables[job.model],
+                    seed.filter(|_| self.warm_start),
+                )?;
+                (alloc, Some(seed_out))
             }
-            other => allocator_for(other).allocate(net, &board, job.mode)?,
+            other => (allocator_for(other).allocate(net, &board, job.mode)?, None),
         };
         let report = alloc.evaluate();
         let power_w = PowerModel::default().estimate(&alloc, &report).total();
         let max_k = alloc.stages.iter().map(|s| s.cfg.k).max().unwrap_or(1);
         let sim = (self.sim_frames > 0).then(|| sim::simulate(&alloc, self.sim_frames));
-        Ok(DesignPoint {
-            board: board.name.clone(),
-            model: net.name.clone(),
-            mode: job.mode,
-            arch: job.arch,
-            dsps_avail: board.dsps,
-            report,
-            power_w,
-            max_k,
-            sim,
-        })
+        Ok((
+            DesignPoint {
+                board: board.name.clone(),
+                model: net.name.clone(),
+                mode: job.mode,
+                arch: job.arch,
+                dsps_avail: board.dsps,
+                report,
+                power_w,
+                max_k,
+                sim,
+            },
+            seed_out,
+        ))
     }
 
     /// Worker threads a fan-out of `n_jobs` will use: the `threads`
@@ -248,21 +289,72 @@ impl DesignSpace {
         .clamp(1, n_jobs.max(1))
     }
 
-    /// Worker threads [`DesignSpace::sweep`] will actually use.
+    /// Partition the job list into parallel work units: flex-arch budget
+    /// chains stay whole (their θ seed is carried sequentially), every
+    /// other job — warm starts off, single-budget chains, non-flex
+    /// architectures — fans out individually. Units cover the job list in
+    /// ascending contiguous ranges, so flattening per-unit results
+    /// reproduces the job enumeration order. Single source of truth for
+    /// both [`DesignSpace::sweep`] and [`DesignSpace::workers`].
+    fn sweep_units(&self, jobs: &[Job]) -> Vec<Unit> {
+        let chain_len = self.dsp_budgets.len().max(1);
+        debug_assert_eq!(jobs.len() % chain_len, 0, "budgets are the innermost axis");
+        let mut units = Vec::new();
+        for c in 0..jobs.len() / chain_len {
+            let chained = self.warm_start
+                && chain_len > 1
+                && jobs[c * chain_len].arch == ArchKind::FlexPipeline;
+            if chained {
+                units.push(Unit::Chain(c));
+            } else {
+                units.extend((0..chain_len).map(|k| Unit::Job(c * chain_len + k)));
+            }
+        }
+        units
+    }
+
+    /// Worker threads [`DesignSpace::sweep`] will actually use (one work
+    /// unit per worker at a time — see [`DesignSpace::sweep_units`]).
     pub fn workers(&self) -> usize {
-        self.worker_count(self.len())
+        self.worker_count(self.sweep_units(&self.jobs()).len())
     }
 
     /// Evaluate every point of the sweep, fanning jobs out across worker
     /// threads. Output order is the deterministic job enumeration order
     /// (boards, then models, then modes, archs, budgets) independent of
     /// `threads`.
+    ///
+    /// Parallel structure ([`DesignSpace::sweep_units`]): flex-arch budget
+    /// *chains* — contiguous runs sharing (board, model, mode) and
+    /// differing only in DSP budget, the innermost enumeration axis — run
+    /// sequentially on one worker so each point carries its settled θ
+    /// vector to the next budget as an Algorithm 1 warm start
+    /// ([`ThetaSeed`]; bit-identical to cold starts — regression-tested).
+    /// Everything that carries no seed (warm starts off via
+    /// `warm_start: false`, single-budget chains, non-flex architectures)
+    /// fans out per job.
     pub fn sweep(&self) -> crate::Result<Vec<DesignPoint>> {
         anyhow::ensure!(!self.is_empty(), "empty design space (no boards or models?)");
         // Shared precomputation: decomposition staircases once per model.
         let tables: Vec<NetTables> = self.models.iter().map(NetTables::build).collect();
         let jobs = self.jobs();
-        fan_out(jobs.len(), self.workers(), |i| self.run_job(&jobs[i], &tables))
+        let chain_len = self.dsp_budgets.len().max(1);
+        let units = self.sweep_units(&jobs);
+        let results = fan_out(units.len(), self.worker_count(units.len()), |u| match units[u] {
+            Unit::Job(i) => Ok(vec![self.run_job(&jobs[i], &tables, None)?.0]),
+            Unit::Chain(c) => {
+                let mut out = Vec::with_capacity(chain_len);
+                let mut seed: Option<ThetaSeed> = None;
+                for k in 0..chain_len {
+                    let (point, next) =
+                        self.run_job(&jobs[c * chain_len + k], &tables, seed.as_ref())?;
+                    seed = next;
+                    out.push(point);
+                }
+                Ok(out)
+            }
+        })?;
+        Ok(results.into_iter().flatten().collect())
     }
 
     /// Evaluate every shard job of the sweep: boards × tenant groups ×
@@ -292,13 +384,17 @@ impl DesignSpace {
             let board = self.boards[job.board].clone();
             let group = &self.tenant_groups[job.group];
             let sharder = Sharder {
-                board: board.clone(),
-                tenants: group
-                    .iter()
-                    .map(|net| Tenant::new(net.clone(), job.mode))
-                    .collect(),
                 steps: self.shard_steps,
                 sim_frames: self.sim_frames,
+                schedule: self.schedule,
+                max_period_s: self.max_period_s,
+                ..Sharder::new(
+                    board.clone(),
+                    group
+                        .iter()
+                        .map(|net| Tenant::new(net.clone(), job.mode))
+                        .collect(),
+                )
             };
             sharder.search().map(|result| ShardPoint {
                 board: board.name.clone(),
@@ -437,6 +533,47 @@ mod tests {
             .evaluate();
         assert_eq!(points[0].report.fps.to_bits(), direct.fps.to_bits());
         assert_eq!(points[0].report.bram18, direct.bram18);
+    }
+
+    #[test]
+    fn warm_started_budget_sweep_is_bit_identical_to_cold() {
+        // The θ-vector warm start across a budget chain must be a pure
+        // optimization: every point (and hence the frontier) bit-identical
+        // to cold-starting each budget. Covers two models × both
+        // precisions over the documented sweep grid.
+        let mk = |warm: bool, threads: usize| DesignSpace {
+            boards: vec![zc706()],
+            models: vec![zoo::vgg16(), zoo::lenet()],
+            modes: vec![QuantMode::W16A16, QuantMode::W8A8],
+            dsp_budgets: [256, 384, 512, 680, 900, 1100, 1400]
+                .iter()
+                .map(|&d| Some(d))
+                .collect(),
+            warm_start: warm,
+            threads,
+            ..Default::default()
+        };
+        let warm = mk(true, 1).sweep().unwrap();
+        let cold = mk(false, 1).sweep().unwrap();
+        assert_eq!(warm.len(), cold.len());
+        for (a, b) in warm.iter().zip(&cold) {
+            let ctx = format!("{} {}b dsps={}", a.model, a.mode.bits(), a.dsps_avail);
+            assert_eq!(a.report.fps.to_bits(), b.report.fps.to_bits(), "{ctx}");
+            assert_eq!(a.report.t_frame_cycles, b.report.t_frame_cycles, "{ctx}");
+            assert_eq!(a.report.dsps, b.report.dsps, "{ctx}");
+            assert_eq!(a.report.bram18, b.report.bram18, "{ctx}");
+            assert_eq!(a.report.stage_cycles, b.report.stage_cycles, "{ctx}");
+            assert_eq!(a.max_k, b.max_k, "{ctx}");
+        }
+        // Frontier indices must therefore agree too.
+        let fw = frontier_by_workload(&warm);
+        let fc = frontier_by_workload(&cold);
+        assert_eq!(fw, fc);
+        // And warm-started chains stay deterministic across thread counts.
+        let parallel = mk(true, 4).sweep().unwrap();
+        for (a, b) in warm.iter().zip(&parallel) {
+            assert_eq!(a.report.fps.to_bits(), b.report.fps.to_bits());
+        }
     }
 
     #[test]

@@ -39,6 +39,21 @@
 //! Consumed by the `flexipipe shard` CLI subcommand, the
 //! `search::DesignSpace::sweep_shards` axis, the `design_space` example,
 //! and `benches/shard.rs`.
+//!
+//! # Regimes
+//!
+//! Spatial co-residence (this module's split search) is one of two ways to
+//! share a board. [`schedule`] implements the other — **time
+//! multiplexing**: each tenant runs its full-board allocation in a slice
+//! of a cyclic schedule, paying a partial-reconfiguration cost per switch.
+//! [`Sharder::search`] enumerates either or both ([`ScheduleMode`]) and
+//! merges the plan sets into one Pareto frontier: per-tenant fps vectors
+//! are directly comparable across regimes, so a spatial plan beaten by a
+//! temporal plan (or vice versa) drops off the merged frontier.
+
+pub mod schedule;
+
+pub use schedule::{ReconfigModel, TemporalInfo};
 
 use crate::alloc::flex::{FlexAllocator, NetTables};
 use crate::alloc::{AllocReport, Allocation};
@@ -109,6 +124,63 @@ pub fn compositions(steps: usize, n: usize) -> Vec<Vec<usize>> {
     out
 }
 
+/// Which plans [`Sharder::search`] enumerates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Spatial co-residence only (the PR-2 behaviour; the default).
+    Spatial,
+    /// Time multiplexing only.
+    Temporal,
+    /// Both regimes, merged into one Pareto frontier.
+    Auto,
+}
+
+impl ScheduleMode {
+    /// CLI/report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScheduleMode::Spatial => "spatial",
+            ScheduleMode::Temporal => "temporal",
+            ScheduleMode::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "spatial" => Ok(ScheduleMode::Spatial),
+            "temporal" | "time" => Ok(ScheduleMode::Temporal),
+            "auto" | "both" => Ok(ScheduleMode::Auto),
+            other => anyhow::bail!("unknown schedule '{other}' (spatial temporal auto)"),
+        }
+    }
+}
+
+/// Which resource-division regime produced a plan.
+#[derive(Debug, Clone)]
+pub enum Regime {
+    /// Spatial co-residence: tenants hold disjoint (Θ, α) slices at once.
+    Spatial,
+    /// Time multiplexing: each tenant runs its full-board pipeline in a
+    /// slice of the schedule period ([`schedule`]).
+    Temporal(TemporalInfo),
+}
+
+impl Regime {
+    /// Report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Regime::Spatial => "spatial",
+            Regime::Temporal(_) => "temporal",
+        }
+    }
+
+    /// Is this a time-multiplexed plan?
+    pub fn is_temporal(&self) -> bool {
+        matches!(self, Regime::Temporal(_))
+    }
+}
+
 /// One tenant's slice of a [`ShardPlan`].
 #[derive(Debug, Clone)]
 pub struct TenantAlloc {
@@ -125,20 +197,28 @@ pub struct TenantAlloc {
     pub report: Arc<AllocReport>,
 }
 
-/// One feasible split of the board across all tenants.
+/// One feasible plan: a spatial split of the board, or one temporal
+/// schedule of it (see [`Regime`]).
 #[derive(Debug, Clone)]
 pub struct ShardPlan {
-    /// Per-tenant slices, in the sharder's tenant order.
+    /// Per-tenant slices, in the sharder's tenant order. For temporal
+    /// plans every tenant holds the whole board (`parts == steps`) during
+    /// its time slice.
     pub tenants: Vec<TenantAlloc>,
-    /// Per-tenant closed-form fps (same order).
+    /// Per-tenant effective fps (closed-form for spatial plans, analytic
+    /// schedule for temporal ones — same order as `tenants`).
     pub fps: Vec<f64>,
     /// `min_i fps_i` — the egalitarian objective.
     pub min_fps: f64,
     /// `Σ_i weight_i · fps_i` — the SLA-weighted objective.
     pub weighted_fps: f64,
-    /// Multi-pipeline DES confirmation, one report per tenant (frontier
-    /// plans only, when `sim_frames > 0`).
+    /// DES confirmation, one report per tenant (frontier plans only, when
+    /// `sim_frames > 0`): the shared-port multi-pipeline wheel for spatial
+    /// plans, [`sim::simulate_timeshared`] for temporal ones (fps is the
+    /// effective over-the-period rate).
     pub sim: Option<Vec<SimReport>>,
+    /// Which regime produced this plan.
+    pub regime: Regime,
 }
 
 /// The searched split space for one board + tenant set.
@@ -156,6 +236,29 @@ pub struct Sharder {
     /// Frames for the multi-pipeline DES validation of frontier plans
     /// (0 = closed-form only).
     pub sim_frames: usize,
+    /// Which plan regimes to enumerate (spatial splits, temporal
+    /// schedules, or both merged — default [`ScheduleMode::Spatial`]).
+    pub schedule: ScheduleMode,
+    /// Partial-reconfiguration cost model for temporal schedules.
+    pub reconfig: ReconfigModel,
+    /// Latency bound for temporal schedules: the cyclic period never
+    /// exceeds this many seconds (a tenant waits at most one period
+    /// between slices). Longer periods amortize reconfiguration dead time
+    /// better. Default 0.5 s.
+    pub max_period_s: f64,
+    /// Solo DES frames used to calibrate each tenant's fill latency and
+    /// steady beat for the analytic temporal schedule. Default 6. The
+    /// max-gap extrapolation assumes the window sees the pipeline's
+    /// largest completion gap (true for steady-periodic pipelines — the
+    /// shipped workloads settle within 2 frames, mirror-checked); raise
+    /// this for pipelines whose gaps oscillate with a longer period.
+    /// Mis-calibration is never silent: over-admitted slices surface as
+    /// DES `overrun` / below-analytic fps in the validation pass.
+    pub calib_frames: usize,
+    /// Admission-control ceiling on frames per slice (bounds the queue
+    /// depth a tenant needs and the DES validation cost for very fast
+    /// models). Default 4096.
+    pub max_slice_frames: usize,
 }
 
 /// Search output: every feasible plan plus the interesting subsets.
@@ -173,19 +276,28 @@ pub struct ShardResult {
 }
 
 impl Sharder {
-    /// Sharder with default granularity and no DES validation.
+    /// Sharder with default granularity, spatial regime, and no DES
+    /// validation.
     pub fn new(board: Board, tenants: Vec<Tenant>) -> Sharder {
         Sharder {
             board,
             tenants,
             steps: 16,
             sim_frames: 0,
+            schedule: ScheduleMode::Spatial,
+            reconfig: ReconfigModel::default(),
+            max_period_s: 0.5,
+            calib_frames: 6,
+            max_slice_frames: 4096,
         }
     }
 
-    /// Enumerate the split space, keep the feasible plans, reduce to the
-    /// fps-vector Pareto frontier, and (optionally) confirm frontier plans
-    /// with the shared-DDR multi-pipeline DES.
+    /// Enumerate the plan space of the selected regime(s) — spatial
+    /// splits, temporal schedules, or both — keep the feasible plans,
+    /// reduce the union to the per-tenant-fps Pareto frontier, and
+    /// (optionally) confirm frontier plans with the matching DES
+    /// (shared-port multi-pipeline wheel for spatial plans,
+    /// [`sim::simulate_timeshared`] for temporal ones).
     pub fn search(&self) -> crate::Result<ShardResult> {
         let n = self.tenants.len();
         anyhow::ensure!(n >= 1, "shard: no tenants given");
@@ -199,6 +311,109 @@ impl Sharder {
         for t in &self.tenants {
             t.net.validate()?;
         }
+
+        // Shared precomputation: each model's decomposition staircases
+        // depend only on its layer dimensions, so they are built once and
+        // warm-start every allocator run of either regime.
+        let tables: Vec<NetTables> = self.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
+
+        let mut plans: Vec<ShardPlan> = Vec::new();
+        if self.schedule != ScheduleMode::Temporal {
+            plans.extend(self.spatial_plans(&tables)?);
+        }
+        if self.schedule != ScheduleMode::Spatial {
+            plans.extend(schedule::temporal_plans(self, &tables)?);
+        }
+        anyhow::ensure!(
+            !plans.is_empty(),
+            "shard: no feasible {} plan for {} across {} tenants at {} steps \
+             (board too small for the tenant set — try fewer tenants, 8-bit \
+             mode, `--schedule auto`, or a larger board)",
+            self.schedule.label(),
+            self.board.name,
+            n,
+            self.steps
+        );
+
+        let frontier = frontier(&plans);
+        let best_min = argmax(&plans, |p| p.min_fps);
+        let best_weighted = argmax(&plans, |p| p.weighted_fps);
+
+        let mut result = ShardResult {
+            plans,
+            frontier,
+            best_min,
+            best_weighted,
+        };
+        if self.sim_frames > 0 {
+            for idx in result.frontier.clone() {
+                let sims = self.validate_plan(&result.plans[idx]);
+                result.plans[idx].sim = Some(sims);
+            }
+        }
+        Ok(result)
+    }
+
+    /// DES confirmation of one frontier plan, regime-matched.
+    fn validate_plan(&self, plan: &ShardPlan) -> Vec<SimReport> {
+        let refs: Vec<&Allocation> = plan.tenants.iter().map(|t| t.alloc.as_ref()).collect();
+        match &plan.regime {
+            // Validate against the *provisioned* port split (each tenant
+            // gets the dsp_parts/steps of β its Algorithm 2 run was
+            // budgeted), not the demand-converged split — the plan was
+            // ranked on the former.
+            Regime::Spatial => {
+                let shares: Vec<f64> = plan
+                    .tenants
+                    .iter()
+                    .map(|t| t.dsp_parts as f64 / self.steps as f64)
+                    .collect();
+                sim::simulate_multi_provisioned(&refs, &shares, &self.board, self.sim_frames)
+            }
+            // Degenerate single-tenant schedule: continuous solo run.
+            Regime::Temporal(info) if info.period_cycles == 0 => {
+                sim::simulate_multi_provisioned(&refs, &[1.0], &self.board, self.sim_frames)
+            }
+            // Execute one schedule period: drain → reconfigure → refill,
+            // dead cycles charged. Per-tenant fps becomes the effective
+            // over-the-period rate (analytic-schedule-comparable).
+            Regime::Temporal(info) => {
+                let slices: Vec<u64> = info
+                    .time_parts
+                    .iter()
+                    .map(|&p| p as u64 * info.quantum_cycles)
+                    .collect();
+                let ts =
+                    sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles);
+                let period = ts.period_cycles;
+                ts.slices
+                    .into_iter()
+                    .map(|s| {
+                        let mut r = s.sim.expect("feasible temporal plans admit ≥1 frame");
+                        // Re-base the batch report to the effective
+                        // over-the-period view so the struct stays
+                        // coherent: gops/dsp_efficiency are linear in fps,
+                        // the port is only drawn during this slice's
+                        // makespan, and fps == freq/cycles_per_frame again
+                        // after both are rewritten. `makespan` keeps the
+                        // slice's own execution window.
+                        let rate = s.fps / r.fps;
+                        r.gops *= rate;
+                        r.dsp_efficiency *= rate;
+                        r.ddr_utilization *= r.makespan as f64 / period as f64;
+                        r.fps = s.fps;
+                        r.cycles_per_frame = period as f64 / s.frames.max(1) as f64;
+                        r
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Enumerate the spatial split space and keep the feasible plans (the
+    /// PR-2 search, factored out of [`Sharder::search`]).
+    fn spatial_plans(&self, tables: &[NetTables]) -> crate::Result<Vec<ShardPlan>> {
+        let n = self.tenants.len();
         // The plan space is C(steps−1, n−1)² and the frontier reduction is
         // O(plans²): bound it so a 4-tenant run at fine granularity fails
         // fast with guidance instead of grinding for hours.
@@ -211,11 +426,6 @@ impl Sharder {
             self.steps,
             suggest_steps(n),
         );
-
-        // Warm start: each model's decomposition staircases depend only on
-        // its layer dimensions, so they are built once and shared across
-        // every candidate split's Algorithm 1/2 run.
-        let tables: Vec<NetTables> = self.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
 
         // A tenant's allocation depends only on its own slice, so the
         // split space factorizes: allocate each tenant once per
@@ -295,54 +505,16 @@ impl Sharder {
                     min_fps,
                     weighted_fps,
                     sim: None,
+                    regime: Regime::Spatial,
                 });
             }
         }
-        anyhow::ensure!(
-            !plans.is_empty(),
-            "shard: no feasible split of {} across {} tenants at {} steps \
-             (board too small for the tenant set — try fewer tenants, 8-bit \
-             mode, or a larger board)",
-            self.board.name,
-            n,
-            self.steps
-        );
-
-        let frontier = frontier(&plans);
-        let best_min = argmax(&plans, |p| p.min_fps);
-        let best_weighted = argmax(&plans, |p| p.weighted_fps);
-
-        let mut result = ShardResult {
-            plans,
-            frontier,
-            best_min,
-            best_weighted,
-        };
-        if self.sim_frames > 0 {
-            for idx in result.frontier.clone() {
-                let plan = &result.plans[idx];
-                let refs: Vec<&Allocation> =
-                    plan.tenants.iter().map(|t| t.alloc.as_ref()).collect();
-                // Validate against the *provisioned* port split (each
-                // tenant gets the dsp_parts/steps of β its Algorithm 2 run
-                // was budgeted), not the demand-converged split — the plan
-                // was ranked on the former.
-                let shares: Vec<f64> = plan
-                    .tenants
-                    .iter()
-                    .map(|t| t.dsp_parts as f64 / self.steps as f64)
-                    .collect();
-                let sims =
-                    sim::simulate_multi_provisioned(&refs, &shares, &self.board, self.sim_frames);
-                result.plans[idx].sim = Some(sims);
-            }
-        }
-        Ok(result)
+        Ok(plans)
     }
 }
 
 /// `C(n, k)` with saturation (plan-space sizing only).
-fn binomial(n: usize, k: usize) -> usize {
+pub(crate) fn binomial(n: usize, k: usize) -> usize {
     let k = k.min(n - k);
     let mut acc: usize = 1;
     for i in 0..k {
@@ -353,7 +525,7 @@ fn binomial(n: usize, k: usize) -> usize {
 
 /// Largest `steps` whose split space `C(steps−1, n−1)²` stays within the
 /// search bound for `n` tenants (the error message's suggestion).
-fn suggest_steps(n: usize) -> usize {
+pub(crate) fn suggest_steps(n: usize) -> usize {
     if n <= 1 {
         return 64; // a lone tenant has one split at any granularity
     }
@@ -368,8 +540,10 @@ fn suggest_steps(n: usize) -> usize {
     s
 }
 
-/// `a` dominates `b` when it is ≥ on every tenant's fps and > on one.
-fn dominates(a: &[f64], b: &[f64]) -> bool {
+/// `a` dominates `b` when it is ≥ on every tenant's fps and > on one —
+/// the canonical predicate behind [`frontier`] (public so tests assert
+/// against the same definition the search uses).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
 }
 
@@ -435,11 +609,38 @@ pub fn plan_to_json(plan: &ShardPlan) -> Value {
             obj(pairs)
         })
         .collect();
-    obj(vec![
+    let mut pairs = vec![
+        ("schedule", Value::Str(plan.regime.label().to_string())),
         ("min_fps", Value::Num(plan.min_fps)),
         ("weighted_fps", Value::Num(plan.weighted_fps)),
         ("tenants", Value::Arr(tenants)),
-    ])
+    ];
+    match &plan.regime {
+        Regime::Spatial => {}
+        // Degenerate lone-tenant schedule: continuous solo operation — the
+        // slice/period numbers would be 0/0 noise, so mark it instead.
+        Regime::Temporal(info) if info.period_cycles == 0 => {
+            pairs.push(("continuous_solo", Value::Bool(true)));
+        }
+        Regime::Temporal(info) => {
+            pairs.push((
+                "time_parts",
+                Value::Arr(info.time_parts.iter().map(|&p| num(p)).collect()),
+            ));
+            pairs.push(("quantum_cycles", Value::Num(info.quantum_cycles as f64)));
+            pairs.push(("period_cycles", Value::Num(info.period_cycles as f64)));
+            pairs.push((
+                "frames_per_slice",
+                Value::Arr(info.frames.iter().map(|&f| num(f)).collect()),
+            ));
+            pairs.push((
+                "reconfig_cycles",
+                Value::Arr(info.reconfig_cycles.iter().map(|&c| Value::Num(c as f64)).collect()),
+            ));
+            pairs.push(("dead_frac", Value::Num(info.dead_frac)));
+        }
+    }
+    obj(pairs)
 }
 
 /// JSON encoding of a whole search: the frontier plans plus the two
@@ -545,6 +746,86 @@ mod tests {
         assert_eq!(
             r.plans[0].tenants[0].report.fps.to_bits(),
             plain.evaluate().fps.to_bits()
+        );
+    }
+
+    #[test]
+    fn temporal_mode_produces_consistent_schedules() {
+        let sh = Sharder {
+            steps: 8,
+            schedule: ScheduleMode::Temporal,
+            max_period_s: 0.2,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let r = sh.search().unwrap();
+        assert!(!r.plans.is_empty());
+        let freq = zedboard().freq_hz;
+        for p in &r.plans {
+            let Regime::Temporal(info) = &p.regime else {
+                panic!("temporal mode emitted a spatial plan")
+            };
+            assert_eq!(info.time_parts.iter().sum::<usize>(), 8);
+            // fps is exactly the analytic schedule: frames·f/period.
+            for (i, &f) in info.frames.iter().enumerate() {
+                assert!(f >= 1);
+                let want = f as f64 * freq / info.period_cycles as f64;
+                assert_eq!(p.fps[i].to_bits(), want.to_bits());
+            }
+            // Every tenant holds the whole board during its slice.
+            assert!(p.tenants.iter().all(|t| t.dsp_parts == 8 && t.bram_parts == 8));
+        }
+    }
+
+    #[test]
+    fn auto_mode_merges_both_regimes_into_one_frontier() {
+        let sh = Sharder {
+            steps: 8,
+            schedule: ScheduleMode::Auto,
+            max_period_s: 0.2,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let r = sh.search().unwrap();
+        let spatial = r.plans.iter().filter(|p| !p.regime.is_temporal()).count();
+        let temporal = r.plans.iter().filter(|p| p.regime.is_temporal()).count();
+        assert!(spatial > 0, "auto must include the spatial split space");
+        assert!(temporal > 0, "auto must include temporal schedules");
+        // The frontier is non-dominated across the *union* of regimes.
+        for &i in &r.frontier {
+            for (j, p) in r.plans.iter().enumerate() {
+                assert!(
+                    j == i || !dominates(&p.fps, &r.plans[i].fps),
+                    "frontier member {i} dominated by plan {j}"
+                );
+            }
+        }
+        // And auto's frontier objectives are at least as good as either
+        // regime alone.
+        let solo = |mode| {
+            Sharder {
+                schedule: mode,
+                ..sh.clone()
+            }
+            .search()
+            .unwrap()
+        };
+        let s = solo(ScheduleMode::Spatial);
+        let t = solo(ScheduleMode::Temporal);
+        let eps = 1e-9;
+        assert!(
+            r.plans[r.best_min].min_fps >= s.plans[s.best_min].min_fps - eps
+                && r.plans[r.best_min].min_fps >= t.plans[t.best_min].min_fps - eps
         );
     }
 

@@ -1,0 +1,510 @@
+//! Time-multiplexed sharding: give each tenant the *whole* board in turn.
+//!
+//! Spatial sharding ([`crate::shard`]) keeps every tenant resident at once,
+//! but the paper's layer-wise pipeline only clears its >90% DSP-efficiency
+//! band when a tenant holds enough multipliers to balance its stages —
+//! small slices starve (the single-engine/multi-CLP trade-off of the
+//! partitioning literature). This module is the other regime: each tenant
+//! runs its **full-board** Sec. 4 allocation inside a time slice of a
+//! cyclic schedule, paying a partial-reconfiguration cost at every switch.
+//! Per-tenant fps vectors are directly comparable across the two regimes,
+//! so [`crate::shard::Sharder::search`] merges both plan sets into one
+//! Pareto frontier (`--schedule auto`).
+//!
+//! # The schedule
+//!
+//! A period of `steps` quanta is cut into per-tenant slices by the same
+//! composition machinery the spatial axis uses. A slice executes:
+//! *drain* (the previous tenant's pipeline empties) → *reconfigure*
+//! ([`ReconfigModel`]: partial-bitstream bytes derived from the incoming
+//! tenant's LUT/DSP/BRAM footprint, loaded through the configuration
+//! port) → *refill + run* (the tenant's pipeline fills and processes its
+//! admitted batch). Reconfiguration and refill are dead time charged
+//! against the schedule, which is why slice *quantum* matters: longer
+//! periods amortize the dead time, at the cost of per-tenant service
+//! latency (bounded by [`crate::shard::Sharder::max_period_s`]). The
+//! planner sweeps the quantum over halvings of that bound together with
+//! all slice compositions and lets the frontier reduction pick; cyclic
+//! tenant *order* is throughput-neutral under this cost model (each
+//! period pays every tenant's swap-in exactly once, whatever the
+//! rotation), so plans keep the caller's tenant order.
+//!
+//! # Analytic schedule vs. simulated confirmation
+//!
+//! Admission (how many frames fit a slice) is decided analytically from a
+//! one-time DES calibration of each tenant's solo pipeline: the exact
+//! makespans of the first `calib` frames plus a conservative (max-gap)
+//! steady-state beat for extrapolation — conservative because the
+//! completion-time prefix property ([`SimReport::frame_done`]) makes
+//! over-estimating a batch's makespan safe (idle tail) while
+//! under-estimating would stretch the period. The sharder's validation
+//! pass then *executes* frontier schedules with
+//! [`crate::sim::simulate_timeshared`] — drain, reconfigure, refill, dead
+//! cycles charged — and the acceptance tests pin the simulated per-tenant
+//! fps to the analytic schedule within 1%.
+//!
+//! [`SimReport::frame_done`]: crate::sim::SimReport::frame_done
+
+use crate::alloc::flex::{FlexAllocator, NetTables};
+use crate::alloc::{AllocReport, Allocation};
+use crate::shard::{binomial, compositions, suggest_steps, Regime, ShardPlan, Sharder, TenantAlloc};
+use crate::sim;
+use std::sync::Arc;
+
+/// Partial-reconfiguration cost model: configuration bytes proportional to
+/// the fabric footprint of the incoming tenant's region, loaded through
+/// the configuration port.
+///
+/// The per-resource byte weights are calibrated so a region covering a
+/// full XC7Z045 (ZC706: 218.6k LUTs, 900 DSPs, 1090 BRAM18) costs ≈13 MB
+/// — that device's full-bitstream size — and the default port rate is the
+/// Zynq-7000 PCAP's ≈145 MB/s, giving ≈60–90 ms for a VGG16-sized region.
+/// Weight preloads are deliberately *not* billed here: the DES already
+/// charges each pipeline's first weight-buffer fill per slice (the
+/// group-0 weight service in [`crate::sim`]), so adding them would double
+/// count the DDR side of a swap.
+#[derive(Debug, Clone)]
+pub struct ReconfigModel {
+    /// Configuration bytes per LUT in the region.
+    pub bytes_per_lut: f64,
+    /// Configuration bytes per DSP slice.
+    pub bytes_per_dsp: f64,
+    /// Configuration bytes per BRAM18 (frame config + content init).
+    pub bytes_per_bram18: f64,
+    /// Fixed per-swap overhead (headers, region clearing, port setup).
+    pub base_bytes: f64,
+    /// Configuration port throughput (PCAP ≈145 MB/s; ICAP ≈400 MB/s).
+    pub port_bytes_per_sec: f64,
+}
+
+impl Default for ReconfigModel {
+    fn default() -> Self {
+        ReconfigModel {
+            bytes_per_lut: 45.0,
+            bytes_per_dsp: 600.0,
+            bytes_per_bram18: 2_304.0,
+            base_bytes: 65_536.0,
+            port_bytes_per_sec: 145e6,
+        }
+    }
+}
+
+impl ReconfigModel {
+    /// Free reconfiguration: the limit where tenants share one overlay and
+    /// a swap is pure state (also what the temporal-vs-spatial dominance
+    /// property tests pin down).
+    pub fn zero() -> ReconfigModel {
+        ReconfigModel {
+            bytes_per_lut: 0.0,
+            bytes_per_dsp: 0.0,
+            bytes_per_bram18: 0.0,
+            base_bytes: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Partial-bitstream bytes for the region a tenant's allocation
+    /// occupies.
+    pub fn bitstream_bytes(&self, r: &AllocReport) -> f64 {
+        self.base_bytes
+            + self.bytes_per_lut * r.luts as f64
+            + self.bytes_per_dsp * r.dsps as f64
+            + self.bytes_per_bram18 * r.bram18 as f64
+    }
+
+    /// Seconds to swap the tenant's region in.
+    pub fn seconds(&self, r: &AllocReport) -> f64 {
+        self.bitstream_bytes(r) / self.port_bytes_per_sec
+    }
+
+    /// Dead cycles at the board clock.
+    pub fn cycles(&self, r: &AllocReport, freq_hz: f64) -> u64 {
+        (self.seconds(r) * freq_hz).ceil() as u64
+    }
+}
+
+/// The temporal half of a [`ShardPlan`]: how the period is cut and what
+/// the analytic schedule admits.
+///
+/// A lone tenant degenerates to continuous solo operation (no switches, no
+/// reconfiguration): `period_cycles == 0` marks that case and the plan's
+/// fps is the closed-form solo fps, bit-identical to the plain
+/// [`FlexAllocator`] (property-tested).
+#[derive(Debug, Clone)]
+pub struct TemporalInfo {
+    /// Per-tenant time quanta (out of the sharder's `steps`).
+    pub time_parts: Vec<usize>,
+    /// Slice quantum in cycles; a tenant's slice is `time_parts · quantum`.
+    pub quantum_cycles: u64,
+    /// Schedule period in cycles (`steps · quantum`).
+    pub period_cycles: u64,
+    /// Frames the analytic schedule admits per tenant per period.
+    pub frames: Vec<usize>,
+    /// Per-tenant reconfiguration dead cycles at the head of each slice.
+    pub reconfig_cycles: Vec<u64>,
+    /// Calibrated first-frame latency (pipeline refill) per tenant.
+    pub fill_cycles: Vec<u64>,
+    /// Calibrated steady-state beat per tenant (max completion gap — the
+    /// conservative extrapolation base).
+    pub beat_cycles: Vec<u64>,
+    /// Fraction of the period not covered by steady-state frame beats
+    /// (reconfiguration + refill + idle tails), analytic. Stricter than
+    /// the executed-schedule [`TimeshareReport::dead_frac`], which counts
+    /// a batch's whole makespan (refill included) as busy.
+    ///
+    /// [`TimeshareReport::dead_frac`]: crate::sim::TimeshareReport::dead_frac
+    pub dead_frac: f64,
+}
+
+/// One tenant's full-board solo allocation plus its DES calibration.
+struct SoloTenant {
+    alloc: Arc<Allocation>,
+    report: Arc<AllocReport>,
+    /// Dead cycles to swap this tenant's region in.
+    reconfig: u64,
+    /// Exact batch makespans for 1..=calib frames (prefix property of
+    /// [`crate::sim::SimReport::frame_done`]).
+    frame_done: Vec<u64>,
+    /// Conservative steady beat: the largest completion gap observed.
+    beat: u64,
+}
+
+impl SoloTenant {
+    /// Over-approximate DES makespan of an `n`-frame batch: exact inside
+    /// the calibration window, max-gap extrapolation beyond it.
+    fn est_makespan(&self, n: usize) -> u64 {
+        match n {
+            0 => 0,
+            n if n <= self.frame_done.len() => self.frame_done[n - 1],
+            n => {
+                self.frame_done[self.frame_done.len() - 1]
+                    + (n - self.frame_done.len()) as u64 * self.beat
+            }
+        }
+    }
+
+    /// Largest batch whose estimated makespan, after the reconfiguration
+    /// swap, fits a `slice`-cycle provision (capped at `max_frames`).
+    fn admit(&self, slice: u64, max_frames: usize) -> usize {
+        let budget = slice.saturating_sub(self.reconfig);
+        if budget < self.frame_done[0] {
+            return 0;
+        }
+        let last = self.frame_done[self.frame_done.len() - 1];
+        let n = if budget < last {
+            self.frame_done.iter().take_while(|&&m| m <= budget).count()
+        } else {
+            self.frame_done.len() + ((budget - last) / self.beat) as usize
+        };
+        let n = n.min(max_frames);
+        // Admission invariant: the batch's (over-approximated) makespan
+        // fits the post-reconfiguration budget.
+        debug_assert!(n == 0 || self.est_makespan(n) <= budget);
+        n
+    }
+}
+
+/// Build each tenant's full-board allocation and calibrate its pipeline
+/// with a short solo DES run. `Ok(None)` means the temporal regime is
+/// infeasible for this tenant set (some tenant's pipeline does not fit the
+/// board even alone).
+fn solo_tenants(sh: &Sharder, tables: &[NetTables]) -> crate::Result<Option<Vec<SoloTenant>>> {
+    let n = sh.tenants.len();
+    let mut solos = Vec::with_capacity(n);
+    for (i, t) in sh.tenants.iter().enumerate() {
+        let Ok(alloc) =
+            FlexAllocator::default().allocate_with(&t.net, &sh.board, t.mode, &tables[i])
+        else {
+            return Ok(None);
+        };
+        let report = alloc.evaluate();
+        if report.dsps > sh.board.dsps || report.bram18 > sh.board.bram18() {
+            return Ok(None);
+        }
+        let calib = sim::simulate(&alloc, sh.calib_frames.max(2));
+        let beat = calib
+            .frame_done
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        // A lone tenant never switches, so it pays no reconfiguration.
+        let reconfig = if n == 1 {
+            0
+        } else {
+            sh.reconfig.cycles(&report, sh.board.freq_hz)
+        };
+        solos.push(SoloTenant {
+            alloc: Arc::new(alloc),
+            report: Arc::new(report),
+            reconfig,
+            frame_done: calib.frame_done,
+            beat,
+        });
+    }
+    Ok(Some(solos))
+}
+
+/// Enumerate the temporal plan space for a sharder: slice quantum
+/// (halvings of the period bound) × slice compositions, each scored by the
+/// analytic schedule. Returns an empty vec when the regime is infeasible
+/// (a tenant's full-board pipeline doesn't fit, or no composition gives
+/// every tenant at least one frame per period).
+pub(crate) fn temporal_plans(
+    sh: &Sharder,
+    tables: &[NetTables],
+) -> crate::Result<Vec<ShardPlan>> {
+    let n = sh.tenants.len();
+    let Some(solos) = solo_tenants(sh, tables)? else {
+        return Ok(vec![]);
+    };
+    let tenant_alloc = |s: &SoloTenant| TenantAlloc {
+        // Each tenant owns the whole board during its slice.
+        dsp_parts: sh.steps,
+        bram_parts: sh.steps,
+        alloc: Arc::clone(&s.alloc),
+        report: Arc::clone(&s.report),
+    };
+
+    // Degenerate single-tenant schedule: continuous solo operation at the
+    // closed-form fps — bit-identical to the plain FlexAllocator.
+    if n == 1 {
+        let fps = solos[0].report.fps;
+        return Ok(vec![ShardPlan {
+            tenants: vec![tenant_alloc(&solos[0])],
+            fps: vec![fps],
+            min_fps: fps,
+            weighted_fps: fps * sh.tenants[0].weight,
+            sim: None,
+            regime: Regime::Temporal(TemporalInfo {
+                time_parts: vec![sh.steps],
+                quantum_cycles: 0,
+                period_cycles: 0,
+                frames: vec![0],
+                reconfig_cycles: vec![0],
+                fill_cycles: vec![solos[0].frame_done[0]],
+                beat_cycles: vec![solos[0].beat],
+                dead_frac: 0.0,
+            }),
+        }]);
+    }
+
+    anyhow::ensure!(
+        sh.max_period_s > 0.0,
+        "shard: temporal schedule needs max_period_s > 0"
+    );
+    // Same explosion guard as the spatial path: the plan space is
+    // C(steps−1, n−1) compositions × 4 quanta, and the frontier reduction
+    // downstream is O(plans²) — fail fast with guidance instead of
+    // grinding for hours at fine granularity.
+    let space = binomial(sh.steps - 1, n - 1).saturating_mul(4);
+    anyhow::ensure!(
+        space <= 50_000,
+        "shard: temporal plan space too large ({space} candidate schedules for {n} \
+         tenants at {} steps) — lower `steps` (e.g. `--shard-steps {}`)",
+        sh.steps,
+        suggest_steps(n),
+    );
+    let freq = sh.board.freq_hz;
+    let q_max = ((sh.max_period_s * freq / sh.steps as f64) as u64).max(1);
+    // Quantum candidates: halvings of the period bound. Longer periods
+    // amortize reconfiguration better, but floor effects (whole frames per
+    // slice) keep shorter quanta occasionally non-dominated — the frontier
+    // reduction decides.
+    let mut quanta: Vec<u64> = (0..4).map(|i| q_max >> i).filter(|&q| q > 0).collect();
+    quanta.dedup();
+
+    let comps = compositions(sh.steps, n);
+    let mut plans: Vec<ShardPlan> = Vec::new();
+    for &quantum in &quanta {
+        let period = quantum * sh.steps as u64;
+        for comp in &comps {
+            let frames: Vec<usize> = comp
+                .iter()
+                .zip(&solos)
+                .map(|(&parts, s)| s.admit(parts as u64 * quantum, sh.max_slice_frames))
+                .collect();
+            // Every tenant must make progress each period.
+            if frames.iter().any(|&f| f == 0) {
+                continue;
+            }
+            let fps: Vec<f64> = frames
+                .iter()
+                .map(|&f| f as f64 * freq / period as f64)
+                .collect();
+            // Dedup: a shorter quantum often lands on the same per-tenant
+            // frame rates; keep the first (largest-quantum) representative.
+            if plans.iter().any(|p| {
+                p.fps.len() == fps.len()
+                    && p.fps.iter().zip(&fps).all(|(a, b)| a.to_bits() == b.to_bits())
+            }) {
+                continue;
+            }
+            let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
+            let weighted_fps = fps
+                .iter()
+                .zip(&sh.tenants)
+                .map(|(f, t)| f * t.weight)
+                .sum();
+            let beats: Vec<u64> = solos.iter().map(|s| s.beat).collect();
+            let useful: u64 = frames
+                .iter()
+                .zip(&beats)
+                .map(|(&f, &b)| f as u64 * b)
+                .sum();
+            plans.push(ShardPlan {
+                tenants: solos.iter().map(tenant_alloc).collect(),
+                fps,
+                min_fps,
+                weighted_fps,
+                sim: None,
+                regime: Regime::Temporal(TemporalInfo {
+                    time_parts: comp.clone(),
+                    quantum_cycles: quantum,
+                    period_cycles: period,
+                    frames,
+                    reconfig_cycles: solos.iter().map(|s| s.reconfig).collect(),
+                    fill_cycles: solos.iter().map(|s| s.frame_done[0]).collect(),
+                    beat_cycles: beats,
+                    dead_frac: 1.0 - useful.min(period) as f64 / period as f64,
+                }),
+            });
+        }
+    }
+    Ok(plans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zc706;
+    use crate::model::zoo;
+    use crate::quant::QuantMode;
+    use crate::shard::Tenant;
+
+    #[test]
+    fn reconfig_model_calibration_matches_full_device() {
+        // A region covering the whole ZC706 fabric should cost about the
+        // device's 13 MB full bitstream.
+        let m = ReconfigModel::default();
+        let full = AllocReport {
+            t_frame_cycles: 1,
+            bottleneck: 0,
+            fps: 0.0,
+            gops: 0.0,
+            mults: 900,
+            dsps: 900,
+            dsp_efficiency: 0.0,
+            bram18: 1090,
+            luts: 218_600,
+            ffs: 437_200,
+            ddr_bytes_per_sec: 0.0,
+            ddr_demand_bytes_per_sec: 0.0,
+            stage_cycles: vec![],
+        };
+        let mb = m.bitstream_bytes(&full) / 1e6;
+        assert!((10.0..16.0).contains(&mb), "full-device estimate {mb:.1} MB");
+        // ≈13 MB at 145 MB/s is ~90 ms; at 200 MHz that is ~1.8e7 cycles.
+        let cyc = m.cycles(&full, 200e6);
+        assert!((1.0e7..2.5e7).contains(&(cyc as f64)), "{cyc} cycles");
+        // The zero model really is free.
+        assert_eq!(ReconfigModel::zero().cycles(&full, 200e6), 0);
+    }
+
+    #[test]
+    fn reconfig_grows_with_footprint() {
+        let m = ReconfigModel::default();
+        let mut small = AllocReport {
+            t_frame_cycles: 1,
+            bottleneck: 0,
+            fps: 0.0,
+            gops: 0.0,
+            mults: 0,
+            dsps: 32,
+            dsp_efficiency: 0.0,
+            bram18: 40,
+            luts: 10_000,
+            ffs: 0,
+            ddr_bytes_per_sec: 0.0,
+            ddr_demand_bytes_per_sec: 0.0,
+            stage_cycles: vec![],
+        };
+        let s = m.seconds(&small);
+        small.luts *= 4;
+        small.bram18 *= 4;
+        small.dsps *= 4;
+        assert!(m.seconds(&small) > s);
+    }
+
+    #[test]
+    fn admission_is_exact_in_window_and_monotone() {
+        let solo = SoloTenant {
+            alloc: Arc::new(
+                FlexAllocator::default()
+                    .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+                    .unwrap(),
+            ),
+            report: Arc::new(
+                FlexAllocator::default()
+                    .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+                    .unwrap()
+                    .evaluate(),
+            ),
+            reconfig: 100,
+            frame_done: vec![1_000, 1_800, 2_600, 3_400],
+            beat: 800,
+        };
+        assert_eq!(solo.admit(1_099, usize::MAX), 0); // budget 999 < fill
+        assert_eq!(solo.admit(1_100, usize::MAX), 1);
+        assert_eq!(solo.admit(2_699, usize::MAX), 2); // budget 2599 < 2600
+        assert_eq!(solo.admit(2_700, usize::MAX), 3);
+        // Beyond the window: max-gap extrapolation.
+        assert_eq!(solo.admit(3_500, usize::MAX), 4);
+        assert_eq!(solo.admit(3_500 + 800, usize::MAX), 5);
+        assert_eq!(solo.admit(3_500 + 1_599, usize::MAX), 5);
+        // Cap applies.
+        assert_eq!(solo.admit(1_000_000, 7), 7);
+        // est_makespan is exact inside the window, linear past it.
+        assert_eq!(solo.est_makespan(0), 0);
+        assert_eq!(solo.est_makespan(3), 2_600);
+        assert_eq!(solo.est_makespan(6), 3_400 + 2 * 800);
+        // Monotone in the slice budget.
+        let mut prev = 0;
+        for slice in (0..20_000).step_by(137) {
+            let n = solo.admit(slice, usize::MAX);
+            assert!(n >= prev);
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn temporal_plans_respect_the_latency_bound() {
+        let sh = Sharder {
+            steps: 4,
+            max_period_s: 0.1,
+            ..Sharder::new(
+                zc706(),
+                vec![
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let tables: Vec<NetTables> =
+            sh.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
+        let plans = temporal_plans(&sh, &tables).unwrap();
+        assert!(!plans.is_empty());
+        let bound = (0.1 * sh.board.freq_hz) as u64;
+        for p in &plans {
+            let Regime::Temporal(info) = &p.regime else {
+                panic!("temporal planner emitted a spatial plan")
+            };
+            assert!(info.period_cycles <= bound, "{} > {bound}", info.period_cycles);
+            assert_eq!(info.time_parts.iter().sum::<usize>(), sh.steps);
+            assert_eq!(info.period_cycles, info.quantum_cycles * sh.steps as u64);
+            assert!(info.frames.iter().all(|&f| f >= 1));
+            assert!((0.0..1.0).contains(&info.dead_frac));
+        }
+    }
+}

@@ -73,6 +73,13 @@ pub struct SimReport {
     pub ddr_utilization: f64,
     /// Per-stage stats.
     pub stages: Vec<StageStats>,
+    /// Completion cycle of each simulated frame (last stage's last group).
+    /// Because a frame's schedule never depends on later frames (stages
+    /// process groups in frame order and the actIn stream rate is fixed),
+    /// `frame_done[n-1]` of a long run *is* the makespan of an `n`-frame
+    /// run — the prefix property the time-shared scheduler's calibration
+    /// ([`crate::shard::schedule`]) relies on.
+    pub frame_done: Vec<u64>,
 }
 
 /// Simulate an allocation for `frames` frames.
@@ -398,6 +405,7 @@ impl SimState {
             ddr_bytes: self.ddr_bytes,
             ddr_utilization,
             stages: self.stats,
+            frame_done: self.frame_done,
         }
     }
 }
@@ -565,6 +573,126 @@ pub fn simulate_pipeline_naive(alloc: &Allocation, frames: usize) -> SimReport {
 }
 
 // ---------------------------------------------------------------------------
+// Time-multiplexed schedules: reconfiguration events between full-board runs
+// ---------------------------------------------------------------------------
+
+/// One tenant's slice of a time-shared schedule period, as executed by
+/// [`simulate_timeshared`].
+#[derive(Debug, Clone)]
+pub struct TimeshareSlice {
+    /// Frames the schedule admitted into this slice.
+    pub frames: usize,
+    /// Provisioned slice length in cycles (time quanta × quantum).
+    pub slice_cycles: u64,
+    /// Dead cycles swapping this tenant's region in (partial
+    /// reconfiguration) before its pipeline can refill.
+    pub reconfig_cycles: u64,
+    /// DES makespan of the admitted batch (pipeline refill → drain — the
+    /// batch starts from an empty pipeline and its last output marks the
+    /// slice's useful end).
+    pub makespan: u64,
+    /// Cycles the slice ran past its provision
+    /// (`reconfig + makespan − slice` when positive): the schedule
+    /// stretches rather than dropping admitted frames, and the stretch
+    /// lands in [`TimeshareReport::period_cycles`].
+    pub overrun: u64,
+    /// Effective frames/second for this tenant over the whole period.
+    pub fps: f64,
+    /// The underlying single-pipeline DES report for the batch (`None`
+    /// when the slice admitted zero frames).
+    pub sim: Option<SimReport>,
+}
+
+/// One simulated period of a time-shared schedule
+/// ([`simulate_timeshared`]).
+#[derive(Debug, Clone)]
+pub struct TimeshareReport {
+    /// Actual period: `Σ max(slice_i, reconfig_i + makespan_i)`.
+    pub period_cycles: u64,
+    /// Executed-schedule accounting: reconfiguration plus intra-slice idle
+    /// tails (`period − Σ makespan`). A batch's whole makespan — pipeline
+    /// fill included — counts as busy here; this intentionally differs
+    /// from the *analytic* `TemporalInfo::dead_frac`, which counts only
+    /// steady-state frame beats as useful (refill is dead there).
+    ///
+    /// [`TemporalInfo::dead_frac`]: crate::shard::TemporalInfo::dead_frac
+    pub dead_cycles: u64,
+    /// `dead_cycles / period_cycles` (executed-schedule definition).
+    pub dead_frac: f64,
+    /// Per-tenant slices, in schedule order.
+    pub slices: Vec<TimeshareSlice>,
+}
+
+/// Execute one period of a time-multiplexed schedule: for each tenant in
+/// turn, *drain* (the previous slice ended with its pipeline empty),
+/// *reconfigure* (`reconfig_cycles[i]` dead cycles — the partial bitstream
+/// swap of [`crate::shard::schedule::ReconfigModel`]), then *refill* — run
+/// the tenant's full-board pipeline for its admitted `frames[i]` through
+/// the ordinary event-wheel DES, pipeline fill and drain included in the
+/// measured makespan.
+///
+/// Because every slice starts from a drained pipeline, no simulation state
+/// crosses slice boundaries: the schedule is period-periodic by
+/// construction, and one simulated period is the whole steady state.
+/// Admission control (how many frames fit a slice) belongs to the planner
+/// ([`crate::shard::schedule`]); this function *executes* the planned
+/// batches and reports where reality diverged — a slice whose
+/// `reconfig + makespan` exceeds its provision stretches the period
+/// (`overrun`) instead of dropping frames, so a mis-calibrated plan shows
+/// up as `fps` below the analytic schedule rather than as silent loss.
+///
+/// Effective per-tenant fps is `frames_i · f / period` — reconfiguration
+/// dead time and idle tails are charged against every tenant's
+/// denominator, which is exactly the amortization trade the temporal
+/// sharder searches over.
+pub fn simulate_timeshared(
+    allocs: &[&Allocation],
+    frames: &[usize],
+    slice_cycles: &[u64],
+    reconfig_cycles: &[u64],
+) -> TimeshareReport {
+    assert_eq!(allocs.len(), frames.len(), "one frame budget per tenant");
+    assert_eq!(allocs.len(), slice_cycles.len(), "one slice per tenant");
+    assert_eq!(allocs.len(), reconfig_cycles.len(), "one reconfig cost per tenant");
+    assert!(!allocs.is_empty(), "time-share needs at least one tenant");
+    let freq = allocs[0].freq_hz;
+    debug_assert!(
+        allocs.iter().all(|a| a.freq_hz == freq),
+        "co-scheduled tenants share one board clock"
+    );
+
+    let mut slices = Vec::with_capacity(allocs.len());
+    let mut busy = 0u64;
+    let mut period = 0u64;
+    for (i, a) in allocs.iter().enumerate() {
+        let sim = (frames[i] > 0).then(|| simulate(a, frames[i]));
+        let makespan = sim.as_ref().map_or(0, |s| s.makespan);
+        let used = reconfig_cycles[i] + makespan;
+        period += slice_cycles[i].max(used);
+        busy += makespan;
+        slices.push(TimeshareSlice {
+            frames: frames[i],
+            slice_cycles: slice_cycles[i],
+            reconfig_cycles: reconfig_cycles[i],
+            makespan,
+            overrun: used.saturating_sub(slice_cycles[i]),
+            fps: 0.0,
+            sim,
+        });
+    }
+    let dead = period - busy;
+    for s in &mut slices {
+        s.fps = s.frames as f64 * freq / period.max(1) as f64;
+    }
+    TimeshareReport {
+        period_cycles: period,
+        dead_cycles: dead,
+        dead_frac: dead as f64 / period.max(1) as f64,
+        slices,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Sequential-group architectures: analytic makespan
 // ---------------------------------------------------------------------------
 
@@ -596,6 +724,7 @@ fn simulate_sequential(alloc: &Allocation, frames: usize) -> SimReport {
         ddr_bytes: weight_bytes * frames as u64,
         ddr_utilization: (weight_bytes as f64 * r.fps) / alloc.board.ddr_bytes_per_sec,
         stages: stats,
+        frame_done: (1..=frames as u64).map(|f| r.t_frame_cycles * f).collect(),
     }
 }
 
@@ -733,6 +862,75 @@ mod tests {
             s8.cycles_per_frame,
             s2.cycles_per_frame
         );
+    }
+
+    #[test]
+    fn frame_done_has_prefix_property() {
+        // frame_done[n-1] of a long run must equal the makespan of an
+        // n-frame run: frames never wait on later frames. The time-shared
+        // scheduler's calibration is built on this.
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::vgg_micro(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let long = simulate(&alloc, 6);
+        assert_eq!(long.frame_done.len(), 6);
+        assert_eq!(*long.frame_done.last().unwrap(), long.makespan);
+        for n in 1..=6 {
+            let short = simulate(&alloc, n);
+            assert_eq!(
+                short.makespan,
+                long.frame_done[n - 1],
+                "prefix property broken at n={n}"
+            );
+            assert_eq!(&short.frame_done[..], &long.frame_done[..n]);
+        }
+        // Completion times are nondecreasing.
+        assert!(long.frame_done.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn timeshare_accounting_is_conserved() {
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let solo = simulate(&alloc, 3);
+        let slice = solo.makespan + 10_000; // roomy provision
+        let rc = 5_000u64;
+        let ts = simulate_timeshared(&[&alloc, &alloc], &[3, 3], &[slice, slice], &[rc, rc]);
+        assert_eq!(ts.slices.len(), 2);
+        // Each slice executes the same drained-pipeline batch as a solo run.
+        for s in &ts.slices {
+            assert_eq!(s.makespan, solo.makespan);
+            assert_eq!(s.overrun, 0, "provision covers reconfig + makespan");
+        }
+        // Conservation: period = Σ slices, dead = period − Σ makespans.
+        assert_eq!(ts.period_cycles, 2 * slice);
+        assert_eq!(ts.dead_cycles, ts.period_cycles - 2 * solo.makespan);
+        assert!((ts.dead_frac - ts.dead_cycles as f64 / ts.period_cycles as f64).abs() < 1e-12);
+        // Identical tenants with identical slices: identical effective fps,
+        // and exactly frames·f/period.
+        let want = 3.0 * alloc.freq_hz / ts.period_cycles as f64;
+        assert_eq!(ts.slices[0].fps.to_bits(), ts.slices[1].fps.to_bits());
+        assert_eq!(ts.slices[0].fps.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn timeshare_underprovisioned_slice_stretches_the_period() {
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let solo = simulate(&alloc, 2);
+        // Slice shorter than the batch needs: the schedule must stretch
+        // (overrun), never drop admitted frames.
+        let slice = solo.makespan / 2;
+        let ts = simulate_timeshared(&[&alloc], &[2], &[slice], &[1_000]);
+        assert_eq!(ts.slices[0].overrun, 1_000 + solo.makespan - slice);
+        assert_eq!(ts.period_cycles, 1_000 + solo.makespan);
+        // Zero-frame slices are pure dead time.
+        let ts0 = simulate_timeshared(&[&alloc, &alloc], &[2, 0], &[slice, slice], &[0, 0]);
+        assert!(ts0.slices[1].sim.is_none());
+        assert_eq!(ts0.slices[1].makespan, 0);
+        assert_eq!(ts0.slices[1].fps, 0.0);
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! Golden tests for the merged spatial + temporal shard frontier
+//! (`--schedule auto`), seeded with the paper pair vgg16 + alexnet on the
+//! ZC706 — the acceptance case of the time-multiplexed sharding issue.
+
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{dominates, Regime, ScheduleMode, Sharder, Tenant};
+
+fn auto_sharder() -> Sharder {
+    Sharder {
+        steps: 8,
+        schedule: ScheduleMode::Auto,
+        max_period_s: 1.0,
+        sim_frames: 1,
+        ..Sharder::new(
+            zc706(),
+            vec![
+                Tenant::new(zoo::vgg16(), QuantMode::W16A16),
+                Tenant::new(zoo::alexnet(), QuantMode::W16A16),
+            ],
+        )
+    }
+}
+
+#[test]
+fn merged_frontier_is_nondominated_and_complete_across_regimes() {
+    let result = auto_sharder().search().unwrap();
+
+    // Both regimes must be represented in the merged plan space: the
+    // spatial split space (the PR-2 acceptance case) and full-board
+    // time-multiplexed schedules.
+    let n_spatial = result.plans.iter().filter(|p| !p.regime.is_temporal()).count();
+    let n_temporal = result.plans.iter().filter(|p| p.regime.is_temporal()).count();
+    assert!(n_spatial > 0, "vgg16+alexnet@16b must admit spatial splits on zc706");
+    assert!(n_temporal > 0, "vgg16+alexnet@16b must admit temporal schedules on zc706");
+
+    // Non-domination: no frontier member is dominated by ANY plan — in
+    // particular, no surviving spatial plan is beaten by a temporal plan,
+    // and vice versa.
+    for &i in &result.frontier {
+        for (j, p) in result.plans.iter().enumerate() {
+            assert!(
+                j == i || !dominates(&p.fps, &result.plans[i].fps),
+                "frontier member {i} ({}) dominated by plan {j} ({})",
+                result.plans[i].regime.label(),
+                p.regime.label()
+            );
+        }
+    }
+    // Completeness: every excluded plan is dominated by someone.
+    for (i, p) in result.plans.iter().enumerate() {
+        if !result.frontier.contains(&i) {
+            assert!(
+                result
+                    .plans
+                    .iter()
+                    .enumerate()
+                    .any(|(j, q)| j != i && dominates(&q.fps, &p.fps)),
+                "plan {i} ({}) excluded from the frontier but undominated",
+                p.regime.label()
+            );
+        }
+    }
+
+    // Every plan serves both tenants.
+    for p in &result.plans {
+        assert_eq!(p.fps.len(), 2);
+        assert!(p.fps.iter().all(|&f| f > 0.0 && f.is_finite()));
+    }
+}
+
+#[test]
+fn timeshared_des_confirms_analytic_schedule_within_one_percent() {
+    // Acceptance criterion: the chosen temporal plans' per-tenant fps is
+    // reproduced by one executed schedule period (drain → reconfigure →
+    // refill, dead cycles charged) within 1% of the analytic schedule.
+    let sharder = Sharder {
+        schedule: ScheduleMode::Temporal,
+        ..auto_sharder()
+    };
+    let result = sharder.search().unwrap();
+    assert!(!result.frontier.is_empty());
+    let mut validated = 0;
+    for &i in &result.frontier {
+        let plan = &result.plans[i];
+        let Regime::Temporal(info) = &plan.regime else {
+            panic!("temporal-only search produced a spatial plan")
+        };
+        assert!(info.period_cycles > 0, "two tenants never degenerate to solo");
+        let sims = plan.sim.as_ref().expect("sim_frames > 0 validates the frontier");
+        assert_eq!(sims.len(), plan.fps.len());
+        for (t, s) in sims.iter().enumerate() {
+            let rel = (s.fps - plan.fps[t]).abs() / plan.fps[t];
+            assert!(
+                rel <= 0.01,
+                "plan {i} tenant {t}: simulated {} vs analytic {} fps ({:.3}% off)",
+                s.fps,
+                plan.fps[t],
+                rel * 100.0
+            );
+        }
+        validated += 1;
+    }
+    assert!(validated > 0);
+}
