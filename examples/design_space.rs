@@ -16,6 +16,7 @@ use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::search::{frontier_by_workload, DesignSpace};
 use flexipipe::shard::{Regime, ScheduleMode};
+use flexipipe::util::json::Value;
 
 fn main() -> flexipipe::Result<()> {
     // 1. Board × model matrix at both precisions — one parallel sweep.
@@ -200,6 +201,59 @@ fn main() -> flexipipe::Result<()> {
                 .collect();
             println!("  {shape}: {}", fps.join(" | "));
         }
+    }
+
+    // 6. Latency-aware temporal scheduling: a per-tenant sojourn SLO
+    // (`--slo`) plus interleaving (`--interleave`) — the planner may cut a
+    // tenant's quanta into k sub-slices per period, trading extra
+    // (drain-overlapped) reconfiguration switches for a k-fold tighter
+    // worst-case frame sojourn. The overlay regime (`--overlay`) is the
+    // zero-reconfiguration limit: one shared superset datapath, switches
+    // pay only weight re-streaming.
+    println!("\n== SLO-interleaved + overlay schedules, lenet ×2 on zc706 (8b) ==");
+    let ds = DesignSpace {
+        boards: vec![zc706()],
+        tenant_groups: vec![vec![zoo::lenet(), zoo::lenet()]],
+        modes: vec![QuantMode::W8A8],
+        shard_steps: 4,
+        schedule: ScheduleMode::Auto,
+        max_period_s: 0.1,
+        max_interleave: 2,
+        slos: vec![("lenet".to_string(), 0.080)],
+        ..Default::default()
+    };
+    for point in ds.sweep_shards()? {
+        let r = &point.result;
+        println!(
+            "{} on {}: {} SLO-satisfying plans, {} on the (fps, latency) frontier",
+            point.models.join("+"),
+            point.board,
+            r.plans.len(),
+            r.frontier.len()
+        );
+        for &i in &r.frontier {
+            let p = &r.plans[i];
+            let shape = match &p.regime {
+                Regime::Spatial => "spatial".to_string(),
+                Regime::Temporal(info) => format!(
+                    "{} {:?}×{:?}",
+                    p.regime.label(),
+                    info.time_parts,
+                    info.interleave
+                ),
+            };
+            let obj: Vec<String> = p
+                .fps
+                .iter()
+                .zip(&p.latency_s)
+                .map(|(f, l)| format!("{f:.1} fps / {:.1} ms", l * 1e3))
+                .collect();
+            println!("  {shape}: {}", obj.join(" | "));
+        }
+        // The JSON view carries the same axes (machine-readable).
+        let Value::Obj(_) = point.to_json(4) else {
+            unreachable!("shard points encode as JSON objects")
+        };
     }
     Ok(())
 }

@@ -1,0 +1,145 @@
+//! Bench: latency-aware temporal scheduling — SLO-constrained interleaved
+//! planning, the static-region overlay regime, and the drain-overlapped
+//! schedule DES, for the §Perf trajectory.
+//!
+//! - SLO-interleaved search (two lenet tenants, tenant 0 under an 80 ms
+//!   sojourn SLO, `max_interleave 2`): quanta × compositions × interleave
+//!   factors scored analytically and SLO-filtered,
+//! - overlay search (vgg16 + alexnet on a ZC706 at 8-bit): zero-reconfig
+//!   superset-datapath schedules,
+//! - `sim::simulate_schedule` of the best overlay plan — one period
+//!   executed with drain-overlapped reconfiguration.
+//!
+//! Emits machine-readable `BENCH_slo.json` at the repository root,
+//! alongside `BENCH_hotpath.json` / `BENCH_shard.json` /
+//! `BENCH_timeshare.json`.
+
+use flexipipe::alloc::Allocation;
+use flexipipe::board::zc706;
+use flexipipe::model::zoo;
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{Regime, ScheduleMode, Sharder, Tenant};
+use flexipipe::sim;
+use flexipipe::util::bench::Bench;
+use flexipipe::util::json::{obj, Value};
+use std::path::Path;
+
+fn slo_sharder() -> Sharder {
+    Sharder {
+        steps: 4,
+        schedule: ScheduleMode::Temporal,
+        max_interleave: 2,
+        max_period_s: 0.1,
+        calib_frames: 8,
+        ..Sharder::new(
+            zc706(),
+            vec![
+                Tenant::new(zoo::lenet(), QuantMode::W8A8).with_slo(0.080),
+                Tenant::new(zoo::lenet(), QuantMode::W8A8),
+            ],
+        )
+    }
+}
+
+fn overlay_sharder() -> Sharder {
+    Sharder {
+        steps: 8,
+        schedule: ScheduleMode::Overlay,
+        ..Sharder::new(
+            zc706(),
+            vec![
+                Tenant::new(zoo::vgg16(), QuantMode::W8A8),
+                Tenant::new(zoo::alexnet(), QuantMode::W8A8),
+            ],
+        )
+    }
+}
+
+fn main() {
+    let mut b = Bench::with_budget_secs(2.0);
+    let mut out: Vec<(&str, Value)> = Vec::new();
+
+    // SLO-constrained interleaved plan search.
+    let s = b
+        .bench("slo/lenet×2 interleaved plan", || slo_sharder().search().unwrap())
+        .clone();
+    out.push(("slo_search_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let slo = slo_sharder().search().unwrap();
+    let interleaved = slo
+        .plans
+        .iter()
+        .filter(|p| match &p.regime {
+            Regime::Temporal(info) => info.interleave.iter().any(|&k| k > 1),
+            Regime::Spatial => false,
+        })
+        .count();
+    let best_lat = slo
+        .plans
+        .iter()
+        .map(|p| p.latency_s[0])
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "  -> {} SLO-satisfying plans ({} interleaved), best tenant-0 sojourn {:.1} ms",
+        slo.plans.len(),
+        interleaved,
+        best_lat * 1e3
+    );
+    out.push(("slo_plans", Value::Num(slo.plans.len() as f64)));
+    out.push(("slo_interleaved_plans", Value::Num(interleaved as f64)));
+    out.push(("slo_best_sojourn_ms", Value::Num(best_lat * 1e3)));
+
+    // Overlay (zero-reconfiguration superset datapath) search.
+    let s = b
+        .bench("slo/vgg16+alexnet overlay", || overlay_sharder().search().unwrap())
+        .clone();
+    out.push(("overlay_search_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let overlay = overlay_sharder().search().unwrap();
+    println!(
+        "  -> overlay: {} plans, {} on the frontier",
+        overlay.plans.len(),
+        overlay.frontier.len()
+    );
+    out.push(("overlay_plans", Value::Num(overlay.plans.len() as f64)));
+    out.push((
+        "overlay_min_fps",
+        Value::Num(overlay.plans[overlay.best_min].min_fps),
+    ));
+
+    // Execute one drain-overlapped period of the best overlay plan.
+    let best = &overlay.plans[overlay.best_min];
+    let Regime::Temporal(info) = &best.regime else {
+        unreachable!("overlay search returns temporal-regime plans")
+    };
+    let refs: Vec<&Allocation> = best.tenants.iter().map(|t| t.alloc.as_ref()).collect();
+    let seq = info.schedule_slices();
+    let s = b
+        .bench("slo/sim one overlay period", || {
+            sim::simulate_schedule(&refs, &seq, true)
+        })
+        .clone();
+    out.push(("overlay_sim_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let ts = sim::simulate_schedule(&refs, &seq, true);
+    println!(
+        "  -> period {:.1} ms, dead {:.1}%, worst sojourn {:?} ms",
+        ts.period_cycles as f64 / zc706().freq_hz * 1e3,
+        ts.dead_frac * 100.0,
+        ts.worst_sojourn
+            .iter()
+            .map(|&c| (c as f64 / zc706().freq_hz * 1e4).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    out.push(("overlay_sim_dead_frac", Value::Num(ts.dead_frac)));
+    out.push((
+        "overlay_sim_min_fps",
+        Value::Num(ts.tenant_fps.iter().copied().fold(f64::INFINITY, f64::min)),
+    ));
+
+    b.finish();
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_slo.json");
+    let json = obj(out).to_pretty();
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

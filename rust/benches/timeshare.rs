@@ -6,8 +6,9 @@
 //!   compositions scored analytically,
 //! - merged (auto) search: spatial split space + temporal schedules into
 //!   one frontier,
-//! - `sim::simulate_timeshared` of the best min-fps temporal plan — one
-//!   schedule period executed drain → reconfigure → refill.
+//! - `sim::simulate_schedule` of the best min-fps temporal plan — one
+//!   schedule period executed drain → (drain-overlapped) reconfigure →
+//!   refill.
 //!
 //! Emits machine-readable `BENCH_timeshare.json` at the repository root,
 //! alongside `BENCH_hotpath.json` / `BENCH_shard.json`.
@@ -74,29 +75,28 @@ fn main() {
     out.push(("auto_frontier", Value::Num(auto.frontier.len() as f64)));
     out.push(("auto_temporal_plans", Value::Num(n_temporal as f64)));
 
-    // Execute one period of the best min-fps temporal plan.
+    // Execute one period of the best min-fps temporal plan — through the
+    // same drain-overlapped schedule DES the planner's admission assumed
+    // (a serial re-charge of the full reconfiguration would overrun
+    // slices the planner sized against the overlap credit).
     let best = &temporal.plans[temporal.best_min];
     let Regime::Temporal(info) = &best.regime else {
         unreachable!("temporal search returns temporal plans")
     };
     let refs: Vec<&Allocation> = best.tenants.iter().map(|t| t.alloc.as_ref()).collect();
-    let slices: Vec<u64> = info
-        .time_parts
-        .iter()
-        .map(|&p| p as u64 * info.quantum_cycles)
-        .collect();
+    let seq = info.schedule_slices();
     let s = b
         .bench("timeshare/sim one period", || {
-            sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles)
+            sim::simulate_schedule(&refs, &seq, true)
         })
         .clone();
     out.push(("timeshare_sim_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
-    let ts = sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles);
+    let ts = sim::simulate_schedule(&refs, &seq, true);
     println!(
         "  -> period {:.1} ms, dead {:.1}%, per-tenant fps {:?}",
         ts.period_cycles as f64 / zc706().freq_hz * 1e3,
         ts.dead_frac * 100.0,
-        ts.slices.iter().map(|s| (s.fps * 10.0).round() / 10.0).collect::<Vec<_>>()
+        ts.tenant_fps.iter().map(|f| (f * 10.0).round() / 10.0).collect::<Vec<_>>()
     );
     // Executed-schedule dead fraction (refill counts as busy) — the
     // analytic `TemporalInfo::dead_frac` is a stricter definition.
@@ -107,7 +107,7 @@ fn main() {
     ));
     out.push((
         "timeshare_min_fps_sim",
-        Value::Num(ts.slices.iter().map(|s| s.fps).fold(f64::INFINITY, f64::min)),
+        Value::Num(ts.tenant_fps.iter().copied().fold(f64::INFINITY, f64::min)),
     ));
 
     b.finish();

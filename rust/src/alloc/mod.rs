@@ -73,9 +73,13 @@ pub struct StageAlloc {
 /// A complete allocation for one network on one board.
 #[derive(Debug, Clone)]
 pub struct Allocation {
+    /// Architecture that produced this allocation.
     pub arch: ArchKind,
+    /// The network being accelerated.
     pub net: Network,
+    /// The board allocated against.
     pub board: Board,
+    /// Quantization mode.
     pub mode: QuantMode,
     /// One entry per layer of `net`.
     pub stages: Vec<StageAlloc>,

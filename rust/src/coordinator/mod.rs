@@ -61,7 +61,9 @@ struct Request {
 /// Aggregated serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Frames served.
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
     /// Histogram source: per-request latencies (µs).
     pub latencies_us: Vec<u64>,

@@ -32,7 +32,9 @@ const FF_TOP: f64 = 10_000.0;
 /// LUT/FF totals for a full pipeline.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LogicCost {
+    /// Look-up tables used.
     pub luts: usize,
+    /// Flip-flops used.
     pub ffs: usize,
 }
 

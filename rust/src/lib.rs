@@ -39,6 +39,39 @@
 //! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! - [`coordinator`] — tokio frame server: the Fig. 4 host↔accelerator loop.
 //! - [`report`] — Table I regeneration and paper-vs-measured comparison.
+//!
+//! A map of how the subsystems fit together — and the invariants the
+//! regression suites pin — lives in `docs/ARCHITECTURE.md`.
+//!
+//! # Quickstart
+//!
+//! Allocate the paper's framework for a model/board pair, read the
+//! closed-form report, and confirm it with the cycle-accurate simulator
+//! (the `quickstart` example is the narrated version of this):
+//!
+//! ```
+//! use flexipipe::alloc::{allocator_for, ArchKind};
+//! use flexipipe::board::zedboard;
+//! use flexipipe::model::zoo;
+//! use flexipipe::quant::QuantMode;
+//! use flexipipe::sim;
+//!
+//! let alloc = allocator_for(ArchKind::FlexPipeline)
+//!     .allocate(&zoo::lenet(), &zedboard(), QuantMode::W8A8)
+//!     .unwrap();
+//! let report = alloc.evaluate();
+//! assert!(report.fps > 0.0 && report.dsps <= zedboard().dsps);
+//!
+//! let sim = sim::simulate(&alloc, 3);
+//! assert!(sim.makespan > 0);
+//! // Frames never wait on later frames: completion times are a prefix.
+//! assert_eq!(sim.frame_done.len(), 3);
+//! ```
+
+// Every public item carries a doc comment (with units where they apply);
+// CI builds rustdoc with `-D warnings`, so a missing doc or a broken
+// intra-doc link fails the gate.
+#![warn(missing_docs)]
 
 pub mod alloc;
 pub mod board;

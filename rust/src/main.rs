@@ -11,8 +11,9 @@
 //!                    --bits 8,16 [--dsps 512,900] [--threads 0] [--json F]
 //! flexipipe search   --tenants vgg16+alexnet,vgg16+zf --boards zc706
 //! flexipipe shard    --models vgg16,alexnet --board zc706 [--bits 16] \
-//!                    [--schedule spatial|temporal|auto] [--shard-steps 16] \
-//!                    [--weights 1,1] [--sim-frames 0] [--max-period 0.5]
+//!                    [--schedule spatial|temporal|overlay|auto] [--overlay] \
+//!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0] \
+//!                    [--max-period 0.5] [--slo vgg16=33ms] [--interleave 2]
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
@@ -65,13 +66,30 @@ fn specs() -> Vec<Spec> {
         opt("shard-steps", "shard split granularity: 1/steps quanta", Some("16")),
         opt(
             "schedule",
-            "shard regime: spatial | temporal | auto (search/shard)",
+            "shard regime: spatial | temporal | overlay | auto (search/shard)",
             Some("spatial"),
         ),
         opt(
             "max-period",
             "temporal schedule period bound in seconds (search/shard)",
             Some("0.5"),
+        ),
+        opt(
+            "slo",
+            "per-tenant latency SLOs, model=duration with s/ms/us suffixes: \
+             vgg16=33ms,zf=0.05s (search/shard)",
+            None,
+        ),
+        opt(
+            "interleave",
+            "max sub-slices per tenant per period; k>1 trades switches for \
+             latency (search/shard)",
+            Some("1"),
+        ),
+        flag(
+            "overlay",
+            "static-region overlay regime: shared superset datapath, \
+             zero-reconfig switches (= --schedule overlay)",
         ),
         opt("weights", "comma-separated tenant weights (shard)", None),
         opt("threads", "search worker threads, 0 = all cores", Some("0")),
@@ -333,6 +351,21 @@ fn cmd_e2e(args: &Args) -> flexipipe::Result<()> {
     Ok(())
 }
 
+/// The shard regime from `--schedule`, with the `--overlay` flag as a
+/// shorthand for `--schedule overlay`.
+fn parse_schedule(args: &Args) -> flexipipe::Result<ScheduleMode> {
+    if args.has("overlay") {
+        let explicit = args.get("schedule");
+        anyhow::ensure!(
+            explicit.is_none() || explicit == Some("overlay"),
+            "--overlay contradicts --schedule {}",
+            explicit.unwrap_or_default()
+        );
+        return Ok(ScheduleMode::Overlay);
+    }
+    ScheduleMode::parse(args.get_or("schedule", "spatial"))
+}
+
 /// Split a comma-separated CLI list.
 fn split_list(s: &str) -> Vec<String> {
     s.split(',')
@@ -474,8 +507,13 @@ fn cmd_search_shards(
             .collect::<flexipipe::Result<Vec<_>>>()?,
         tenant_groups: groups,
         shard_steps,
-        schedule: ScheduleMode::parse(args.get_or("schedule", "spatial"))?,
+        schedule: parse_schedule(args)?,
         max_period_s: args.get_parse("max-period", 0.5f64)?,
+        max_interleave: args.get_parse("interleave", 1usize)?,
+        slos: match args.get("slo") {
+            Some(s) => shard::parse_slos(s)?,
+            None => Vec::new(),
+        },
         sim_frames: args.get_parse("sim-frames", 0usize)?,
         threads: args.get_parse("threads", 0usize)?,
         ..Default::default()
@@ -540,26 +578,27 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
         weights.len(),
         models.len()
     );
-    let schedule = ScheduleMode::parse(args.get_or("schedule", "spatial"))?;
+    let schedule = parse_schedule(args)?;
+    let mut tenants = models
+        .iter()
+        .zip(&weights)
+        .map(|(m, &weight)| {
+            Ok(Tenant {
+                weight,
+                ..Tenant::new(config::resolve(m)?, mode)
+            })
+        })
+        .collect::<flexipipe::Result<Vec<_>>>()?;
+    if let Some(slo) = args.get("slo") {
+        shard::apply_slos(&mut tenants, &shard::parse_slos(slo)?)?;
+    }
     let sharder = Sharder {
         steps,
         sim_frames: args.get_parse("sim-frames", 0usize)?,
         schedule,
         max_period_s: args.get_parse("max-period", 0.5f64)?,
-        ..Sharder::new(
-            brd.clone(),
-            models
-                .iter()
-                .zip(&weights)
-                .map(|(m, &weight)| {
-                    Ok(Tenant {
-                        net: config::resolve(m)?,
-                        mode,
-                        weight,
-                    })
-                })
-                .collect::<flexipipe::Result<Vec<_>>>()?,
-        )
+        max_interleave: args.get_parse("interleave", 1usize)?,
+        ..Sharder::new(brd.clone(), tenants)
     };
     let t0 = std::time::Instant::now();
     let result = sharder.search()?;
@@ -582,9 +621,21 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
             }
             Regime::Temporal(info) if info.period_cycles == 0 => "temporal solo".to_string(),
             Regime::Temporal(info) => {
-                let slices: Vec<String> = info.time_parts.iter().map(|t| t.to_string()).collect();
+                let slices: Vec<String> = info
+                    .time_parts
+                    .iter()
+                    .zip(&info.interleave)
+                    .map(|(t, &k)| {
+                        if k > 1 {
+                            format!("{t}\u{00d7}{k}")
+                        } else {
+                            t.to_string()
+                        }
+                    })
+                    .collect();
                 format!(
-                    "temporal slices {} | period {:.1} ms | dead {:.0}%",
+                    "{} slices {} | period {:.1} ms | dead {:.0}%",
+                    p.regime.label(),
                     slices.join("+"),
                     info.period_cycles as f64 / brd.freq_hz * 1e3,
                     info.dead_frac * 100.0
@@ -595,10 +646,17 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
     let show = |label: String, idx: usize| {
         let p = &result.plans[idx];
         println!("  {label} [{}]:", describe(p));
-        for (t, fps) in p.tenants.iter().zip(&p.fps) {
+        for ((t, fps), lat) in p.tenants.iter().zip(&p.fps).zip(&p.latency_s) {
             println!(
-                "    {:<10} Θ {:>2}/{steps}  α {:>2}/{steps}  {:>4} DSPs {:>5} BRAM18 {:>9.1} fps",
-                t.alloc.net.name, t.dsp_parts, t.bram_parts, t.report.dsps, t.report.bram18, fps
+                "    {:<10} Θ {:>2}/{steps}  α {:>2}/{steps}  {:>4} DSPs {:>5} BRAM18 \
+                 {:>9.1} fps  lat {:>7.2} ms",
+                t.alloc.net.name,
+                t.dsp_parts,
+                t.bram_parts,
+                t.report.dsps,
+                t.report.bram18,
+                fps,
+                lat * 1e3
             );
         }
     };
@@ -613,10 +671,11 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
         ),
         result.best_weighted,
     );
-    println!("  frontier (regime | split | per-tenant fps):");
+    println!("  frontier (regime | split | per-tenant fps | worst-case latency):");
     for &i in &result.frontier {
         let p = &result.plans[i];
         let fps: Vec<String> = p.fps.iter().map(|f| format!("{f:.1}")).collect();
+        let lat: Vec<String> = p.latency_s.iter().map(|l| format!("{:.1}", l * 1e3)).collect();
         let sim = match &p.sim {
             Some(s) => format!(
                 "  [sim {}]",
@@ -624,7 +683,13 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
             ),
             None => String::new(),
         };
-        println!("    {} | {} fps{}", describe(p), fps.join(" / "), sim);
+        println!(
+            "    {} | {} fps | {} ms{}",
+            describe(p),
+            fps.join(" / "),
+            lat.join(" / "),
+            sim
+        );
     }
     let json = shard::result_to_json(&result, steps).to_pretty();
     match args.get("json") {

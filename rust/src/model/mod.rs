@@ -99,8 +99,11 @@ impl FcShape {
 /// One pipeline stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layer {
+    /// Convolution.
     Conv(ConvShape),
+    /// Max pooling.
     Pool(PoolShape),
+    /// Fully connected.
     Fc(FcShape),
 }
 

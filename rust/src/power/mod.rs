@@ -44,10 +44,15 @@ impl Default for PowerModel {
 /// Power estimate breakdown.
 #[derive(Debug, Clone)]
 pub struct PowerEstimate {
+    /// Device static power (W).
     pub static_w: f64,
+    /// DSP dynamic power (W).
     pub dsp_w: f64,
+    /// BRAM dynamic power (W).
     pub bram_w: f64,
+    /// LUT/FF dynamic power (W).
     pub logic_w: f64,
+    /// DDR interface power (W).
     pub ddr_w: f64,
 }
 

@@ -12,9 +12,13 @@ use super::{shift_sat, QuantMode};
 /// declared mode (values always fit the mode's range).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Chw {
+    /// Channels.
     pub c: usize,
+    /// Rows.
     pub h: usize,
+    /// Columns.
     pub w: usize,
+    /// Values, `c*h*w` long, row-major within each channel.
     pub data: Vec<i64>,
 }
 
@@ -40,11 +44,13 @@ impl Chw {
         }
     }
 
+    /// Value at `(channel, row, col)`.
     #[inline]
     pub fn get(&self, c: usize, y: usize, x: usize) -> i64 {
         self.data[(c * self.h + y) * self.w + x]
     }
 
+    /// Store `v` at `(channel, row, col)`.
     #[inline]
     pub fn set(&mut self, c: usize, y: usize, x: usize, v: i64) {
         self.data[(c * self.h + y) * self.w + x] = v;
@@ -66,9 +72,13 @@ impl Chw {
 pub struct ConvParams {
     /// Weights `[M][C][R][S]` flattened.
     pub w: Vec<i64>,
+    /// Output channels.
     pub m: usize,
+    /// Input channels.
     pub c: usize,
+    /// Kernel rows.
     pub r: usize,
+    /// Kernel columns.
     pub s: usize,
     /// `[M]` int32 bias in accumulator format.
     pub bias: Vec<i64>,

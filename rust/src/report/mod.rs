@@ -12,19 +12,33 @@ use crate::sim;
 /// One regenerated Table I column (a net × arch design point).
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Network name.
     pub net: String,
+    /// Architecture the row was allocated with.
     pub arch: ArchKind,
+    /// Board clock in MHz.
     pub freq_mhz: f64,
+    /// DSP slices used.
     pub dsps: usize,
+    /// LUT utilization in percent of the board.
     pub lut_pct: f64,
+    /// FF utilization in percent of the board.
     pub ff_pct: f64,
+    /// BRAM utilization in percent of the board.
     pub bram_pct: f64,
+    /// Achieved / peak MAC rate of the used DSPs (Table I's metric).
     pub dsp_efficiency: f64,
+    /// Throughput at 16-bit (GOPS).
     pub gops_16b: f64,
+    /// Frame rate at 16-bit (fps).
     pub fps_16b: f64,
+    /// Throughput at 8-bit (GOPS).
     pub gops_8b: f64,
+    /// Frame rate at 8-bit (fps).
     pub fps_8b: f64,
+    /// Estimated power (W).
     pub power_w: f64,
+    /// Energy efficiency at 16-bit (GOPS per watt).
     pub gops_per_w_16b: f64,
     /// Simulator cross-check: measured DSP efficiency.
     pub sim_dsp_efficiency: f64,
@@ -33,13 +47,21 @@ pub struct Row {
 /// Paper Table I reference values: (net, reference label, dsp_eff %, GOPS
 /// 16b, FPS 16b, GOPS 8b, power W). `None` = not reported ("/" in Table I).
 pub struct PaperRef {
+    /// Network name.
     pub net: &'static str,
+    /// Reference design label (citation).
     pub label: &'static str,
+    /// DSP slices the reference used.
     pub dsps: usize,
+    /// Reported DSP efficiency (percent).
     pub dsp_eff: f64,
+    /// Reported throughput at 16-bit (GOPS).
     pub gops_16b: f64,
+    /// Reported frame rate at 16-bit (fps).
     pub fps_16b: f64,
+    /// Reported throughput at 8-bit (GOPS), when given.
     pub gops_8b: Option<f64>,
+    /// Reported power (W), when given.
     pub power_w: Option<f64>,
 }
 

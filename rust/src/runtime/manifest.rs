@@ -7,25 +7,40 @@ use std::path::Path;
 /// Golden-file description for an artifact.
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// Frames in the golden input/output files.
     pub frames: usize,
+    /// Input file path, relative to the artifact directory.
     pub input: String,
+    /// Expected-output file path, relative to the artifact directory.
     pub output: String,
+    /// Elements per input frame.
     pub frame_elems: usize,
+    /// Elements per output frame.
     pub out_elems: usize,
 }
 
 /// One compiled executable variant (a net at a fixed batch size).
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Unique artifact name (`net_bBATCH_WxAx` convention).
     pub name: String,
+    /// Network the artifact executes.
     pub net: String,
+    /// Batch size the HLO was compiled at.
     pub batch: usize,
+    /// Quantization width (8 or 16).
     pub bits: usize,
+    /// Row parallelism the kernel was compiled with.
     pub row_parallelism: usize,
+    /// HLO text file path, relative to the artifact directory.
     pub hlo: String,
+    /// Input tensor shape (batch first).
     pub input_shape: Vec<usize>,
+    /// Output tensor shape (batch first).
     pub output_shape: Vec<usize>,
+    /// Golden-file description for bit-exact checking.
     pub golden: Golden,
+    /// SHA-256 of the HLO text (staleness detection).
     pub hlo_sha256: String,
 }
 
@@ -44,7 +59,9 @@ impl Artifact {
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: usize,
+    /// Every compiled variant the directory holds.
     pub artifacts: Vec<Artifact>,
 }
 

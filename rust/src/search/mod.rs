@@ -113,11 +113,20 @@ pub struct DesignSpace {
     /// Split granularity handed to the [`Sharder`] per shard job.
     pub shard_steps: usize,
     /// Sharding regime(s) for [`DesignSpace::sweep_shards`]: spatial
-    /// splits, temporal schedules, or both merged (`--schedule`).
+    /// splits, temporal schedules, the static-region overlay, or all
+    /// merged (`--schedule`, `--overlay`).
     pub schedule: ScheduleMode,
     /// Temporal-schedule period bound in seconds handed to each
     /// [`Sharder`] (`--max-period`).
     pub max_period_s: f64,
+    /// Largest per-tenant interleave factor the temporal planner may use
+    /// (`--interleave`; 1 = whole slices, the PR-3 layout).
+    pub max_interleave: usize,
+    /// Per-model latency SLOs in seconds applied to every shard job's
+    /// matching tenants (`--slo vgg16=33ms,...` parsed by
+    /// [`crate::shard::parse_slos`]). Models absent from a tenant group
+    /// are ignored there.
+    pub slos: Vec<(String, f64)>,
     /// Warm-start neighboring DSP-budget points of a sweep chain by
     /// carrying the settled Algorithm 1 θ vector forward (flex arch only;
     /// regression-tested bit-identical to cold starts). Default on.
@@ -138,6 +147,8 @@ impl Default for DesignSpace {
             shard_steps: 16,
             schedule: ScheduleMode::Spatial,
             max_period_s: 0.5,
+            max_interleave: 1,
+            slos: Vec::new(),
             warm_start: true,
         }
     }
@@ -366,6 +377,17 @@ impl DesignSpace {
             !self.boards.is_empty() && !self.tenant_groups.is_empty(),
             "empty shard space (no boards or tenant groups?)"
         );
+        // An SLO naming no tenant in any group is a typo, not a no-op —
+        // fail it like `shard`'s apply_slos does instead of silently
+        // running the sweep latency-unconstrained.
+        for (name, _) in &self.slos {
+            anyhow::ensure!(
+                self.tenant_groups
+                    .iter()
+                    .any(|g| g.iter().any(|net| &net.name == name)),
+                "--slo names model '{name}' which appears in no tenant group"
+            );
+        }
         struct SJob {
             board: usize,
             group: usize,
@@ -383,18 +405,29 @@ impl DesignSpace {
             let job = &jobs[i];
             let board = self.boards[job.board].clone();
             let group = &self.tenant_groups[job.group];
+            let mut tenants: Vec<Tenant> = group
+                .iter()
+                .map(|net| Tenant::new(net.clone(), job.mode))
+                .collect();
+            // Per-model SLOs: apply the ones this group actually serves
+            // (globally unknown names were already rejected above; a name
+            // absent from *this* group is legitimate).
+            let group_slos: Vec<(String, f64)> = self
+                .slos
+                .iter()
+                .filter(|(name, _)| group.iter().any(|net| &net.name == name))
+                .cloned()
+                .collect();
+            if !group_slos.is_empty() {
+                shard::apply_slos(&mut tenants, &group_slos)?;
+            }
             let sharder = Sharder {
                 steps: self.shard_steps,
                 sim_frames: self.sim_frames,
                 schedule: self.schedule,
                 max_period_s: self.max_period_s,
-                ..Sharder::new(
-                    board.clone(),
-                    group
-                        .iter()
-                        .map(|net| Tenant::new(net.clone(), job.mode))
-                        .collect(),
-                )
+                max_interleave: self.max_interleave,
+                ..Sharder::new(board.clone(), tenants)
             };
             sharder.search().map(|result| ShardPoint {
                 board: board.name.clone(),

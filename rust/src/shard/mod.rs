@@ -42,18 +42,24 @@
 //!
 //! # Regimes
 //!
-//! Spatial co-residence (this module's split search) is one of two ways to
-//! share a board. [`schedule`] implements the other — **time
+//! Spatial co-residence (this module's split search) is one of three ways
+//! to share a board. [`schedule`] implements the other two — **time
 //! multiplexing**: each tenant runs its full-board allocation in a slice
-//! of a cyclic schedule, paying a partial-reconfiguration cost per switch.
-//! [`Sharder::search`] enumerates either or both ([`ScheduleMode`]) and
-//! merges the plan sets into one Pareto frontier: per-tenant fps vectors
-//! are directly comparable across regimes, so a spatial plan beaten by a
-//! temporal plan (or vice versa) drops off the merged frontier.
+//! of a cyclic schedule, paying a (drain-overlapped)
+//! partial-reconfiguration cost per switch; and the **static-region
+//! overlay**: all tenants share one synthesized superset datapath, so a
+//! switch costs only the incoming tenant's weight re-streaming.
+//! [`Sharder::search`] enumerates any of them ([`ScheduleMode`]) and
+//! merges the plan sets into one Pareto frontier over *(per-tenant fps ↑,
+//! per-tenant worst-case latency ↓)* vectors ([`plan_dominates`]):
+//! objectives are directly comparable across regimes, so a spatial plan
+//! beaten by a temporal plan on both axes (or vice versa) drops off the
+//! merged frontier. Per-tenant latency SLOs ([`Tenant::slo_s`], the CLI's
+//! `--slo`) additionally filter every regime's plans at admission time.
 
 pub mod schedule;
 
-pub use schedule::{ReconfigModel, TemporalInfo};
+pub use schedule::{ReconfigModel, SliceSpec, TemporalInfo};
 
 use crate::alloc::flex::{FlexAllocator, NetTables};
 use crate::alloc::{AllocReport, Allocation};
@@ -64,25 +70,86 @@ use crate::sim::{self, SimReport};
 use crate::util::json::{num, obj, Value};
 use std::sync::Arc;
 
-/// One co-resident workload: a model, its precision, and its weight in the
-/// weighted-fps objective.
+/// One co-resident workload: a model, its precision, its weight in the
+/// weighted-fps objective, and an optional latency SLO.
 #[derive(Debug, Clone)]
 pub struct Tenant {
+    /// The model this tenant serves.
     pub net: Network,
+    /// Quantization mode the tenant runs at.
     pub mode: QuantMode,
     /// Relative importance in the weighted-fps objective (default 1.0).
     pub weight: f64,
+    /// Latency SLO in seconds: the tenant's worst-case frame sojourn
+    /// (arrival → completion, see [`TemporalInfo::latency_cycles`]) must
+    /// not exceed this. `None` (the default) leaves the tenant
+    /// latency-unconstrained; plans violating a set SLO are dropped at
+    /// admission in every regime. The CLI's `--slo vgg16=33ms` sets this.
+    pub slo_s: Option<f64>,
 }
 
 impl Tenant {
-    /// Tenant with unit weight.
+    /// Tenant with unit weight and no latency SLO.
     pub fn new(net: Network, mode: QuantMode) -> Tenant {
         Tenant {
             net,
             mode,
             weight: 1.0,
+            slo_s: None,
         }
     }
+
+    /// Same tenant with a worst-case frame-sojourn SLO (seconds).
+    pub fn with_slo(mut self, slo_s: f64) -> Tenant {
+        self.slo_s = Some(slo_s);
+        self
+    }
+}
+
+/// Parse a CLI `--slo` list: comma-separated `model=duration` entries
+/// where the duration accepts `s`, `ms`, or `us` suffixes (bare numbers
+/// are seconds) — e.g. `vgg16=33ms,zf=0.05s`. Returns
+/// `(model name, seconds)` pairs.
+pub fn parse_slos(s: &str) -> crate::Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((model, dur)) = entry.split_once('=') else {
+            anyhow::bail!("--slo entry '{entry}' is not model=duration");
+        };
+        let dur = dur.trim();
+        let (num, scale) = if let Some(v) = dur.strip_suffix("ms") {
+            (v, 1e-3)
+        } else if let Some(v) = dur.strip_suffix("us") {
+            (v, 1e-6)
+        } else if let Some(v) = dur.strip_suffix('s') {
+            (v, 1.0)
+        } else {
+            (dur, 1.0)
+        };
+        let v: f64 = num
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--slo entry '{entry}': bad duration '{dur}'"))?;
+        anyhow::ensure!(v > 0.0, "--slo entry '{entry}': duration must be positive");
+        out.push((model.trim().to_string(), v * scale));
+    }
+    anyhow::ensure!(!out.is_empty(), "--slo given but names no tenants");
+    Ok(out)
+}
+
+/// Apply parsed [`parse_slos`] pairs to a tenant list by model name
+/// (every tenant of that model gets the SLO); errors on a name matching
+/// no tenant.
+pub fn apply_slos(tenants: &mut [Tenant], slos: &[(String, f64)]) -> crate::Result<()> {
+    for (name, slo) in slos {
+        let mut hit = false;
+        for t in tenants.iter_mut().filter(|t| &t.net.name == name) {
+            t.slo_s = Some(*slo);
+            hit = true;
+        }
+        anyhow::ensure!(hit, "--slo names unknown tenant model '{name}'");
+    }
+    Ok(())
 }
 
 /// The sub-board a tenant receives: `dsp_parts/steps` of the compute-side
@@ -129,9 +196,12 @@ pub fn compositions(steps: usize, n: usize) -> Vec<Vec<usize>> {
 pub enum ScheduleMode {
     /// Spatial co-residence only (the PR-2 behaviour; the default).
     Spatial,
-    /// Time multiplexing only.
+    /// Time multiplexing only (partial reconfiguration per switch).
     Temporal,
-    /// Both regimes, merged into one Pareto frontier.
+    /// Static-region overlay only: one shared superset datapath,
+    /// zero-reconfiguration switches (weight re-streaming only).
+    Overlay,
+    /// Every regime, merged into one Pareto frontier.
     Auto,
 }
 
@@ -141,6 +211,7 @@ impl ScheduleMode {
         match self {
             ScheduleMode::Spatial => "spatial",
             ScheduleMode::Temporal => "temporal",
+            ScheduleMode::Overlay => "overlay",
             ScheduleMode::Auto => "auto",
         }
     }
@@ -150,8 +221,9 @@ impl ScheduleMode {
         match s {
             "spatial" => Ok(ScheduleMode::Spatial),
             "temporal" | "time" => Ok(ScheduleMode::Temporal),
-            "auto" | "both" => Ok(ScheduleMode::Auto),
-            other => anyhow::bail!("unknown schedule '{other}' (spatial temporal auto)"),
+            "overlay" => Ok(ScheduleMode::Overlay),
+            "auto" | "both" | "all" => Ok(ScheduleMode::Auto),
+            other => anyhow::bail!("unknown schedule '{other}' (spatial temporal overlay auto)"),
         }
     }
 }
@@ -161,21 +233,24 @@ impl ScheduleMode {
 pub enum Regime {
     /// Spatial co-residence: tenants hold disjoint (Θ, α) slices at once.
     Spatial,
-    /// Time multiplexing: each tenant runs its full-board pipeline in a
-    /// slice of the schedule period ([`schedule`]).
+    /// Time multiplexing: each tenant runs its full-board pipeline in
+    /// sub-slices of the schedule period ([`schedule`]). Covers both the
+    /// reconfiguring regime and the static-region overlay
+    /// ([`TemporalInfo::overlay`]).
     Temporal(TemporalInfo),
 }
 
 impl Regime {
-    /// Report label.
+    /// Report label (`"spatial"`, `"temporal"`, or `"overlay"`).
     pub fn label(&self) -> &'static str {
         match self {
             Regime::Spatial => "spatial",
+            Regime::Temporal(info) if info.overlay => "overlay",
             Regime::Temporal(_) => "temporal",
         }
     }
 
-    /// Is this a time-multiplexed plan?
+    /// Is this a time-multiplexed plan (reconfiguring or overlay)?
     pub fn is_temporal(&self) -> bool {
         matches!(self, Regime::Temporal(_))
     }
@@ -212,10 +287,22 @@ pub struct ShardPlan {
     pub min_fps: f64,
     /// `Σ_i weight_i · fps_i` — the SLA-weighted objective.
     pub weighted_fps: f64,
+    /// Per-tenant worst-case frame latency in seconds — the second
+    /// frontier axis (lower is better). Temporal plans report the analytic
+    /// worst-case sojourn ([`TemporalInfo::latency_cycles`] over the board
+    /// clock). Spatial plans report the same quantity for a continuously
+    /// resident pipeline at its admitted rate: one steady frame interval
+    /// of queueing (`1/fps` — the *effective* rate, bandwidth cap
+    /// included, not the compute beat) plus the pipeline traversal
+    /// (Σ per-stage cycles, closed-form) — the definition the temporal
+    /// degenerate single-tenant schedule uses with its DES-calibrated
+    /// `fill + beat`, so the two regimes' latency axes are comparable and
+    /// `--slo` means the same thing everywhere.
+    pub latency_s: Vec<f64>,
     /// DES confirmation, one report per tenant (frontier plans only, when
     /// `sim_frames > 0`): the shared-port multi-pipeline wheel for spatial
-    /// plans, [`sim::simulate_timeshared`] for temporal ones (fps is the
-    /// effective over-the-period rate).
+    /// plans, the drain-overlapped [`sim::simulate_schedule`] for temporal
+    /// and overlay ones (fps is the effective over-the-period rate).
     pub sim: Option<Vec<SimReport>>,
     /// Which regime produced this plan.
     pub regime: Regime,
@@ -237,10 +324,17 @@ pub struct Sharder {
     /// (0 = closed-form only).
     pub sim_frames: usize,
     /// Which plan regimes to enumerate (spatial splits, temporal
-    /// schedules, or both merged — default [`ScheduleMode::Spatial`]).
+    /// schedules, the static-region overlay, or all merged — default
+    /// [`ScheduleMode::Spatial`]).
     pub schedule: ScheduleMode,
     /// Partial-reconfiguration cost model for temporal schedules.
     pub reconfig: ReconfigModel,
+    /// Largest interleave factor the temporal planner may give one tenant:
+    /// up to `max_interleave` sub-slices per tenant per period. 1 (the
+    /// default) is the PR-3 whole-slice layout; higher values trade extra
+    /// reconfiguration switches for a tighter worst-case frame sojourn —
+    /// the lever that makes tight `--slo` bounds admissible.
+    pub max_interleave: usize,
     /// Latency bound for temporal schedules: the cyclic period never
     /// exceeds this many seconds (a tenant waits at most one period
     /// between slices). Longer periods amortize reconfiguration dead time
@@ -265,9 +359,11 @@ pub struct Sharder {
 #[derive(Debug, Clone)]
 pub struct ShardResult {
     /// All feasible plans, in deterministic enumeration order
-    /// (DSP composition outer, BRAM composition inner, lexicographic).
+    /// (DSP composition outer, BRAM composition inner, lexicographic;
+    /// temporal plans follow, quantum descending).
     pub plans: Vec<ShardPlan>,
-    /// Indices of the non-dominated per-tenant fps vectors.
+    /// Indices of the non-dominated plans under the merged per-tenant
+    /// (fps ↑, worst-case latency ↓) objective ([`plan_dominates`]).
     pub frontier: Vec<usize>,
     /// Index of the plan maximizing `min_fps` (first wins ties).
     pub best_min: usize,
@@ -286,6 +382,7 @@ impl Sharder {
             sim_frames: 0,
             schedule: ScheduleMode::Spatial,
             reconfig: ReconfigModel::default(),
+            max_interleave: 1,
             max_period_s: 0.5,
             calib_frames: 6,
             max_slice_frames: 4096,
@@ -293,11 +390,35 @@ impl Sharder {
     }
 
     /// Enumerate the plan space of the selected regime(s) — spatial
-    /// splits, temporal schedules, or both — keep the feasible plans,
-    /// reduce the union to the per-tenant-fps Pareto frontier, and
-    /// (optionally) confirm frontier plans with the matching DES
-    /// (shared-port multi-pipeline wheel for spatial plans,
-    /// [`sim::simulate_timeshared`] for temporal ones).
+    /// splits, temporal schedules, the static-region overlay, or all of
+    /// them — keep the feasible (and SLO-satisfying) plans, reduce the
+    /// union to the Pareto frontier over per-tenant (fps ↑, worst-case
+    /// latency ↓) vectors, and (optionally) confirm frontier plans with
+    /// the matching DES (shared-port multi-pipeline wheel for spatial
+    /// plans, the drain-overlapped [`sim::simulate_schedule`] for
+    /// temporal and overlay ones).
+    ///
+    /// ```
+    /// use flexipipe::board::zedboard;
+    /// use flexipipe::model::zoo;
+    /// use flexipipe::quant::QuantMode;
+    /// use flexipipe::shard::{Sharder, Tenant};
+    ///
+    /// let sharder = Sharder {
+    ///     steps: 4,
+    ///     ..Sharder::new(
+    ///         zedboard(),
+    ///         vec![
+    ///             Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+    ///             Tenant::new(zoo::lenet(), QuantMode::W8A8),
+    ///         ],
+    ///     )
+    /// };
+    /// let result = sharder.search().unwrap();
+    /// assert!(!result.frontier.is_empty());
+    /// let best = &result.plans[result.best_min];
+    /// assert!(best.fps.iter().all(|&fps| fps > 0.0));
+    /// ```
     pub fn search(&self) -> crate::Result<ShardResult> {
         let n = self.tenants.len();
         anyhow::ensure!(n >= 1, "shard: no tenants given");
@@ -311,6 +432,14 @@ impl Sharder {
         for t in &self.tenants {
             t.net.validate()?;
         }
+        // A lone tenant has nothing to share a static region with — fail
+        // with the real cause instead of the generic "no feasible plan".
+        anyhow::ensure!(
+            !(self.schedule == ScheduleMode::Overlay && n == 1),
+            "shard: the overlay regime needs at least two tenants to share the \
+             static region — a lone tenant is just the plain allocation \
+             (use --schedule temporal or auto)"
+        );
 
         // Shared precomputation: each model's decomposition staircases
         // depend only on its layer dimensions, so they are built once and
@@ -318,17 +447,28 @@ impl Sharder {
         let tables: Vec<NetTables> = self.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
 
         let mut plans: Vec<ShardPlan> = Vec::new();
-        if self.schedule != ScheduleMode::Temporal {
+        if matches!(self.schedule, ScheduleMode::Spatial | ScheduleMode::Auto) {
             plans.extend(self.spatial_plans(&tables)?);
         }
         if self.schedule != ScheduleMode::Spatial {
-            plans.extend(schedule::temporal_plans(self, &tables)?);
+            // One full-board allocation + DES calibration per tenant,
+            // shared by the temporal and overlay enumerations (`None` =
+            // some tenant's pipeline doesn't fit the board even alone).
+            if let Some(solos) = schedule::solo_tenants(self, &tables)? {
+                if matches!(self.schedule, ScheduleMode::Temporal | ScheduleMode::Auto) {
+                    plans.extend(schedule::temporal_plans(self, &solos, false)?);
+                }
+                if matches!(self.schedule, ScheduleMode::Overlay | ScheduleMode::Auto) {
+                    plans.extend(schedule::temporal_plans(self, &solos, true)?);
+                }
+            }
         }
         anyhow::ensure!(
             !plans.is_empty(),
             "shard: no feasible {} plan for {} across {} tenants at {} steps \
-             (board too small for the tenant set — try fewer tenants, 8-bit \
-             mode, `--schedule auto`, or a larger board)",
+             (board too small for the tenant set, or every schedule violates \
+             an --slo — try fewer tenants, 8-bit mode, `--schedule auto`, \
+             `--interleave 2`, or a larger board)",
             self.schedule.label(),
             self.board.name,
             n,
@@ -374,35 +514,46 @@ impl Sharder {
             Regime::Temporal(info) if info.period_cycles == 0 => {
                 sim::simulate_multi_provisioned(&refs, &[1.0], &self.board, self.sim_frames)
             }
-            // Execute one schedule period: drain → reconfigure → refill,
-            // dead cycles charged. Per-tenant fps becomes the effective
-            // over-the-period rate (analytic-schedule-comparable).
+            // Execute one schedule period: drain → (drain-overlapped)
+            // reconfigure → refill, dead cycles charged. Per-tenant fps
+            // becomes the effective over-the-period rate
+            // (analytic-schedule-comparable).
             Regime::Temporal(info) => {
-                let slices: Vec<u64> = info
-                    .time_parts
-                    .iter()
-                    .map(|&p| p as u64 * info.quantum_cycles)
-                    .collect();
-                let ts =
-                    sim::simulate_timeshared(&refs, &info.frames, &slices, &info.reconfig_cycles);
+                let ts = sim::simulate_schedule(&refs, &info.schedule_slices(), true);
                 let period = ts.period_cycles;
-                ts.slices
-                    .into_iter()
-                    .map(|s| {
-                        let mut r = s.sim.expect("feasible temporal plans admit ≥1 frame");
-                        // Re-base the batch report to the effective
-                        // over-the-period view so the struct stays
-                        // coherent: gops/dsp_efficiency are linear in fps,
-                        // the port is only drawn during this slice's
-                        // makespan, and fps == freq/cycles_per_frame again
-                        // after both are rewritten. `makespan` keeps the
-                        // slice's own execution window.
-                        let rate = s.fps / r.fps;
+                (0..plan.tenants.len())
+                    .map(|t| {
+                        // Re-base the tenant's largest batch report to the
+                        // effective over-the-period view so the struct
+                        // stays coherent: gops/dsp_efficiency are linear
+                        // in fps, the port draw sums every sub-slice's
+                        // makespan-window draw over the period, and
+                        // fps == freq/cycles_per_frame again after both
+                        // are rewritten. `makespan` keeps the
+                        // representative batch's own execution window.
+                        let mine: Vec<&sim::TimeshareSlice> =
+                            ts.slices.iter().filter(|s| s.tenant == t).collect();
+                        let repr = mine
+                            .iter()
+                            .max_by_key(|s| s.frames)
+                            .expect("every tenant holds at least one sub-slice");
+                        let mut r = repr
+                            .sim
+                            .clone()
+                            .expect("feasible temporal plans admit ≥1 frame");
+                        let frames: usize = mine.iter().map(|s| s.frames).sum();
+                        let util: f64 = mine
+                            .iter()
+                            .filter_map(|s| s.sim.as_ref())
+                            .map(|s| s.ddr_utilization * s.makespan as f64)
+                            .sum::<f64>()
+                            / period as f64;
+                        let rate = ts.tenant_fps[t] / r.fps;
                         r.gops *= rate;
                         r.dsp_efficiency *= rate;
-                        r.ddr_utilization *= r.makespan as f64 / period as f64;
-                        r.fps = s.fps;
-                        r.cycles_per_frame = period as f64 / s.frames.max(1) as f64;
+                        r.ddr_utilization = util;
+                        r.fps = ts.tenant_fps[t];
+                        r.cycles_per_frame = period as f64 / frames.max(1) as f64;
                         r
                     })
                     .collect()
@@ -493,6 +644,31 @@ impl Sharder {
                     continue;
                 }
                 let fps: Vec<f64> = slices.iter().map(|s| s.report.fps).collect();
+                // Latency axis: one steady frame interval of queueing plus
+                // the frame traversal of the tenant's resident pipeline
+                // (see `ShardPlan::latency_s` — the same worst-case-sojourn
+                // definition the temporal regime calibrates with the DES).
+                // The interval is 1/fps, not the compute beat: a
+                // bandwidth-capped slice serves frames at the throttled
+                // rate, and under-reporting here would let `--slo` admit
+                // plans whose real sojourn violates the bound.
+                let latency_s: Vec<f64> = slices
+                    .iter()
+                    .map(|s| {
+                        1.0 / s.report.fps
+                            + s.report.stage_cycles.iter().sum::<u64>() as f64
+                                / self.board.freq_hz
+                    })
+                    .collect();
+                // SLO admission applies to every regime.
+                if self
+                    .tenants
+                    .iter()
+                    .zip(&latency_s)
+                    .any(|(t, &lat)| t.slo_s.is_some_and(|slo| lat > slo))
+                {
+                    continue;
+                }
                 let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
                 let weighted_fps = fps
                     .iter()
@@ -504,6 +680,7 @@ impl Sharder {
                     fps,
                     min_fps,
                     weighted_fps,
+                    latency_s,
                     sim: None,
                     regime: Regime::Spatial,
                 });
@@ -541,17 +718,31 @@ pub(crate) fn suggest_steps(n: usize) -> usize {
 }
 
 /// `a` dominates `b` when it is ≥ on every tenant's fps and > on one —
-/// the canonical predicate behind [`frontier`] (public so tests assert
-/// against the same definition the search uses).
+/// the throughput half of plan dominance (kept public for fps-only
+/// analyses; the frontier itself uses [`plan_dominates`]).
 pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
 }
 
-/// Indices of the non-dominated fps vectors.
+/// Plan-level dominance over the merged objective: `a` dominates `b` when
+/// it is ≥ on every tenant's fps, ≤ on every tenant's worst-case latency,
+/// and strictly better on at least one coordinate of either vector — the
+/// canonical predicate behind [`frontier`] (public so tests assert
+/// against the same definition the search uses). A plan that trades fps
+/// for latency (or vice versa) is incomparable and survives.
+pub fn plan_dominates(a: &ShardPlan, b: &ShardPlan) -> bool {
+    a.fps.iter().zip(&b.fps).all(|(x, y)| x >= y)
+        && a.latency_s.iter().zip(&b.latency_s).all(|(x, y)| x <= y)
+        && (a.fps.iter().zip(&b.fps).any(|(x, y)| x > y)
+            || a.latency_s.iter().zip(&b.latency_s).any(|(x, y)| x < y))
+}
+
+/// Indices of the non-dominated plans under [`plan_dominates`] — the
+/// merged (fps ↑, worst-case latency ↓) Pareto frontier.
 pub fn frontier(plans: &[ShardPlan]) -> Vec<usize> {
     (0..plans.len())
         .filter(|&i| {
-            !(0..plans.len()).any(|j| j != i && dominates(&plans[j].fps, &plans[i].fps))
+            !(0..plans.len()).any(|j| j != i && plan_dominates(&plans[j], &plans[i]))
         })
         .collect()
 }
@@ -613,6 +804,10 @@ pub fn plan_to_json(plan: &ShardPlan) -> Value {
         ("schedule", Value::Str(plan.regime.label().to_string())),
         ("min_fps", Value::Num(plan.min_fps)),
         ("weighted_fps", Value::Num(plan.weighted_fps)),
+        (
+            "latency_s",
+            Value::Arr(plan.latency_s.iter().map(|&l| Value::Num(l)).collect()),
+        ),
         ("tenants", Value::Arr(tenants)),
     ];
     match &plan.regime {
@@ -627,6 +822,11 @@ pub fn plan_to_json(plan: &ShardPlan) -> Value {
                 "time_parts",
                 Value::Arr(info.time_parts.iter().map(|&p| num(p)).collect()),
             ));
+            pairs.push((
+                "interleave",
+                Value::Arr(info.interleave.iter().map(|&k| num(k)).collect()),
+            ));
+            pairs.push(("overlay", Value::Bool(info.overlay)));
             pairs.push(("quantum_cycles", Value::Num(info.quantum_cycles as f64)));
             pairs.push(("period_cycles", Value::Num(info.period_cycles as f64)));
             pairs.push((
@@ -636,6 +836,23 @@ pub fn plan_to_json(plan: &ShardPlan) -> Value {
             pairs.push((
                 "reconfig_cycles",
                 Value::Arr(info.reconfig_cycles.iter().map(|&c| Value::Num(c as f64)).collect()),
+            ));
+            pairs.push((
+                "slices",
+                Value::Arr(
+                    info.slices
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("tenant", num(s.tenant)),
+                                ("parts", num(s.parts)),
+                                ("frames", num(s.frames)),
+                                ("reconfig_cycles", Value::Num(s.reconfig_cycles as f64)),
+                                ("overlap_cycles", Value::Num(s.overlap_cycles as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ));
             pairs.push(("dead_frac", Value::Num(info.dead_frac)));
         }
@@ -720,13 +937,19 @@ mod tests {
             assert!(dsps <= zedboard().dsps, "{dsps} DSPs oversubscribed");
             assert!(bram <= zedboard().bram18(), "{bram} BRAM18 oversubscribed");
         }
-        // The frontier is non-dominated.
+        // The frontier is non-dominated under the merged
+        // (fps, latency) objective.
         for &i in &r.frontier {
             for &j in &r.frontier {
                 if i != j {
-                    assert!(!dominates(&r.plans[j].fps, &r.plans[i].fps));
+                    assert!(!plan_dominates(&r.plans[j], &r.plans[i]));
                 }
             }
+        }
+        // Every plan carries the latency axis.
+        for p in &r.plans {
+            assert_eq!(p.latency_s.len(), 2);
+            assert!(p.latency_s.iter().all(|&l| l > 0.0 && l.is_finite()));
         }
     }
 
@@ -805,7 +1028,7 @@ mod tests {
         for &i in &r.frontier {
             for (j, p) in r.plans.iter().enumerate() {
                 assert!(
-                    j == i || !dominates(&p.fps, &r.plans[i].fps),
+                    j == i || !plan_dominates(p, &r.plans[i]),
                     "frontier member {i} dominated by plan {j}"
                 );
             }
@@ -830,6 +1053,60 @@ mod tests {
     }
 
     #[test]
+    fn slo_parsing_and_application() {
+        let slos = parse_slos("vgg16=33ms, zf=0.05s,lenet=2000us").unwrap();
+        assert_eq!(slos.len(), 3);
+        assert_eq!(slos[0].0, "vgg16");
+        assert!((slos[0].1 - 0.033).abs() < 1e-12);
+        assert_eq!(slos[1].0, "zf");
+        assert!((slos[1].1 - 0.05).abs() < 1e-12);
+        assert!((slos[2].1 - 0.002).abs() < 1e-12);
+        // Bare numbers are seconds.
+        assert!((parse_slos("x=0.25").unwrap()[0].1 - 0.25).abs() < 1e-12);
+        assert!(parse_slos("vgg16").is_err());
+        assert!(parse_slos("vgg16=-3ms").is_err());
+        assert!(parse_slos("vgg16=soon").is_err());
+        assert!(parse_slos("").is_err());
+
+        let mut tenants = vec![Tenant::new(zoo::zf(), QuantMode::W8A8)];
+        assert!(apply_slos(&mut tenants, &[("nope".to_string(), 0.1)]).is_err());
+        apply_slos(&mut tenants, &[("zf".to_string(), 0.1)]).unwrap();
+        assert_eq!(tenants[0].slo_s, Some(0.1));
+        // The builder form agrees.
+        assert_eq!(
+            Tenant::new(zoo::zf(), QuantMode::W8A8).with_slo(0.1).slo_s,
+            Some(0.1)
+        );
+    }
+
+    #[test]
+    fn overlay_mode_parses_and_searches() {
+        assert_eq!(ScheduleMode::parse("overlay").unwrap(), ScheduleMode::Overlay);
+        assert_eq!(ScheduleMode::Overlay.label(), "overlay");
+        let sh = Sharder {
+            steps: 4,
+            schedule: ScheduleMode::Overlay,
+            max_period_s: 0.2,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let r = sh.search().unwrap();
+        assert!(!r.plans.is_empty());
+        for p in &r.plans {
+            assert!(p.regime.is_temporal());
+            assert_eq!(p.regime.label(), "overlay");
+            let Regime::Temporal(info) = &p.regime else { unreachable!() };
+            assert!(info.overlay);
+            assert!(info.slices.iter().all(|s| s.reconfig_cycles == 0));
+        }
+    }
+
+    #[test]
     fn weighted_objective_responds_to_weights() {
         let mk = |w1: f64, w2: f64| Sharder {
             steps: 8,
@@ -837,14 +1114,12 @@ mod tests {
                 zedboard(),
                 vec![
                     Tenant {
-                        net: zoo::tinycnn(),
-                        mode: QuantMode::W8A8,
                         weight: w1,
+                        ..Tenant::new(zoo::tinycnn(), QuantMode::W8A8)
                     },
                     Tenant {
-                        net: zoo::lenet(),
-                        mode: QuantMode::W8A8,
                         weight: w2,
+                        ..Tenant::new(zoo::lenet(), QuantMode::W8A8)
                     },
                 ],
             )

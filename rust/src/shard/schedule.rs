@@ -7,41 +7,82 @@
 //! partitioning literature). This module is the other regime: each tenant
 //! runs its **full-board** Sec. 4 allocation inside a time slice of a
 //! cyclic schedule, paying a partial-reconfiguration cost at every switch.
-//! Per-tenant fps vectors are directly comparable across the two regimes,
-//! so [`crate::shard::Sharder::search`] merges both plan sets into one
-//! Pareto frontier (`--schedule auto`).
+//! Per-tenant fps vectors are directly comparable across the regimes, so
+//! [`crate::shard::Sharder::search`] merges the plan sets into one Pareto
+//! frontier (`--schedule auto`).
 //!
 //! # The schedule
 //!
 //! A period of `steps` quanta is cut into per-tenant slices by the same
-//! composition machinery the spatial axis uses. A slice executes:
-//! *drain* (the previous tenant's pipeline empties) → *reconfigure*
-//! ([`ReconfigModel`]: partial-bitstream bytes derived from the incoming
-//! tenant's LUT/DSP/BRAM footprint, loaded through the configuration
-//! port) → *refill + run* (the tenant's pipeline fills and processes its
-//! admitted batch). Reconfiguration and refill are dead time charged
-//! against the schedule, which is why slice *quantum* matters: longer
-//! periods amortize the dead time, at the cost of per-tenant service
-//! latency (bounded by [`crate::shard::Sharder::max_period_s`]). The
-//! planner sweeps the quantum over halvings of that bound together with
-//! all slice compositions and lets the frontier reduction pick; cyclic
-//! tenant *order* is throughput-neutral under this cost model (each
-//! period pays every tenant's swap-in exactly once, whatever the
-//! rotation), so plans keep the caller's tenant order.
+//! composition machinery the spatial axis uses, and — new in the
+//! latency-aware planner — a tenant's quanta may be **interleaved** as
+//! `k > 1` sub-slices spread round-robin across the period
+//! (`--interleave`). A sub-slice executes: *drain* (the previous tenant's
+//! pipeline empties) → *reconfigure* ([`ReconfigModel`]: partial-bitstream
+//! bytes derived from the incoming tenant's LUT/DSP/BRAM footprint, loaded
+//! through the configuration port) → *refill + run* (the tenant's pipeline
+//! fills and processes its admitted batch). Reconfiguration is
+//! **drain-overlapped**: once the outgoing tenant's input-side stages go
+//! idle ([`crate::sim::SimReport::input_done`]), their region can be
+//! rewritten while the remaining stages drain, so only
+//! `max(0, reconfig − predecessor's drain)` is charged as dead time
+//! (zero-depth pipelines have no drain window and degenerate to the PR-3
+//! serial cost — regression-tested). Throughput still favors long, whole
+//! slices (dead time amortizes, and every extra sub-slice pays another
+//! swap); **latency** favors interleaving: a tenant's worst-case frame
+//! sojourn is bounded by its largest start-to-start gap plus one charged
+//! swap plus one batch makespan, and `k` sub-slices cut the gap roughly
+//! `k`-fold. Per-tenant latency SLOs ([`crate::shard::Tenant::slo_s`],
+//! `--slo vgg16=33ms`) turn that bound into an admission constraint: a
+//! tenant infeasible under one-slice-per-period planning can become
+//! admissible with `k > 1` (acceptance-tested). The planner sweeps the
+//! quantum over halvings of the period bound
+//! ([`crate::shard::Sharder::max_period_s`]) together with all slice
+//! compositions and per-tenant interleave factors and lets the frontier
+//! reduction — now over (fps ↑, worst-case latency ↓) vectors — pick.
+//! Sub-slice order within a round follows the caller's tenant order;
+//! interleaving, not rotation, is the planner's ordering lever (a pure
+//! rotation changes neither gaps nor, for equal drains, overlap credits).
+//!
+//! # Sharing regimes
+//!
+//! Three regimes feed the merged frontier:
+//!
+//! - **Spatial** ([`crate::shard`]): disjoint (Θ, α) slices, all tenants
+//!   resident, no switching.
+//! - **Temporal** (this module): full-board allocations, partial
+//!   reconfiguration per switch, drain-overlapped.
+//! - **Overlay** (`--overlay`): all tenants share one synthesized
+//!   static-region superset datapath, so a switch reprograms *state*, not
+//!   fabric — the [`ReconfigModel::zero`] limit. The only switch cost is
+//!   re-streaming the incoming tenant's weights, which the DES already
+//!   bills through its group-0 weight service (each batch's first group
+//!   pays the weight-buffer fill), so overlay slices charge zero
+//!   reconfiguration dead cycles. The static region is sized at the
+//!   element-wise maximum of the tenants' footprints — the optimistic
+//!   full-reuse bound, checked against the board.
 //!
 //! # Analytic schedule vs. simulated confirmation
 //!
-//! Admission (how many frames fit a slice) is decided analytically from a
-//! one-time DES calibration of each tenant's solo pipeline: the exact
-//! makespans of the first `calib` frames plus a conservative (max-gap)
-//! steady-state beat for extrapolation — conservative because the
-//! completion-time prefix property ([`SimReport::frame_done`]) makes
+//! Admission (how many frames fit a sub-slice) is decided analytically
+//! from a one-time DES calibration of each tenant's solo pipeline: the
+//! exact makespans of the first `calib` frames plus a conservative
+//! (max-gap) steady-state beat for extrapolation — conservative because
+//! the completion-time prefix property ([`SimReport::frame_done`]) makes
 //! over-estimating a batch's makespan safe (idle tail) while
-//! under-estimating would stretch the period. The sharder's validation
+//! under-estimating would stretch the period. Debug builds *spot-check*
+//! that conservativeness against a slightly longer solo run instead of
+//! assuming it outright (and `tests/slo_props.rs` property-tests it out
+//! to 12 frames); drift beyond the probed horizon still surfaces as DES
+//! `overrun` / below-analytic fps in validation. The drain-overlap credit
+//! is likewise conservative: the planner credits the smallest drain
+//! observed in the calibration window (under-crediting idles the port;
+//! over-crediting would stretch the period). The sharder's validation
 //! pass then *executes* frontier schedules with
-//! [`crate::sim::simulate_timeshared`] — drain, reconfigure, refill, dead
-//! cycles charged — and the acceptance tests pin the simulated per-tenant
-//! fps to the analytic schedule within 1%.
+//! [`crate::sim::simulate_schedule`] — drain-overlapped reconfiguration,
+//! dead cycles charged — and the acceptance tests pin the simulated
+//! per-tenant fps within 1% and the measured worst-case sojourn within 5%
+//! of the analytic schedule.
 //!
 //! [`SimReport::frame_done`]: crate::sim::SimReport::frame_done
 
@@ -71,9 +112,11 @@ pub struct ReconfigModel {
     pub bytes_per_dsp: f64,
     /// Configuration bytes per BRAM18 (frame config + content init).
     pub bytes_per_bram18: f64,
-    /// Fixed per-swap overhead (headers, region clearing, port setup).
+    /// Fixed per-swap overhead in bytes (headers, region clearing, port
+    /// setup).
     pub base_bytes: f64,
-    /// Configuration port throughput (PCAP ≈145 MB/s; ICAP ≈400 MB/s).
+    /// Configuration port throughput in bytes/second (PCAP ≈145 MB/s;
+    /// ICAP ≈400 MB/s).
     pub port_bytes_per_sec: f64,
 }
 
@@ -91,8 +134,9 @@ impl Default for ReconfigModel {
 
 impl ReconfigModel {
     /// Free reconfiguration: the limit where tenants share one overlay and
-    /// a swap is pure state (also what the temporal-vs-spatial dominance
-    /// property tests pin down).
+    /// a swap is pure state — what the overlay regime models structurally
+    /// (also what the temporal-vs-spatial dominance property tests pin
+    /// down).
     pub fn zero() -> ReconfigModel {
         ReconfigModel {
             bytes_per_lut: 0.0,
@@ -117,10 +161,31 @@ impl ReconfigModel {
         self.bitstream_bytes(r) / self.port_bytes_per_sec
     }
 
-    /// Dead cycles at the board clock.
+    /// Dead cycles at the board clock (`freq_hz` in Hz).
     pub fn cycles(&self, r: &AllocReport, freq_hz: f64) -> u64 {
         (self.seconds(r) * freq_hz).ceil() as u64
     }
+}
+
+/// One sub-slice of a temporal schedule, in period order — the planner's
+/// counterpart of [`crate::sim::ScheduleSlice`] (cycles there, quanta
+/// here).
+#[derive(Debug, Clone)]
+pub struct SliceSpec {
+    /// Tenant served (index into the sharder's tenant list).
+    pub tenant: usize,
+    /// Quanta this sub-slice holds (its length is `parts · quantum`).
+    pub parts: usize,
+    /// Frames the analytic schedule admits into this sub-slice.
+    pub frames: usize,
+    /// Full partial-bitstream swap cost in cycles (0 when no fabric swap
+    /// happens: overlay plans, lone tenants, or a cyclic predecessor
+    /// serving the same tenant).
+    pub reconfig_cycles: u64,
+    /// Cycles of that swap the planner credits to the predecessor's drain
+    /// window; the dead cycles charged are
+    /// `reconfig_cycles − overlap_cycles`.
+    pub overlap_cycles: u64,
 }
 
 /// The temporal half of a [`ShardPlan`]: how the period is cut and what
@@ -132,21 +197,40 @@ impl ReconfigModel {
 /// [`FlexAllocator`] (property-tested).
 #[derive(Debug, Clone)]
 pub struct TemporalInfo {
-    /// Per-tenant time quanta (out of the sharder's `steps`).
+    /// Per-tenant time quanta per period (out of the sharder's `steps`),
+    /// summed over all of a tenant's sub-slices.
     pub time_parts: Vec<usize>,
-    /// Slice quantum in cycles; a tenant's slice is `time_parts · quantum`.
+    /// Sub-slices per tenant per period (`1` = the PR-3 whole-slice
+    /// layout; `k > 1` spreads the tenant's quanta round-robin).
+    pub interleave: Vec<usize>,
+    /// The schedule itself: every sub-slice in period order.
+    pub slices: Vec<SliceSpec>,
+    /// Slice quantum in cycles.
     pub quantum_cycles: u64,
     /// Schedule period in cycles (`steps · quantum`).
     pub period_cycles: u64,
-    /// Frames the analytic schedule admits per tenant per period.
+    /// Frames the analytic schedule admits per tenant per period (summed
+    /// over the tenant's sub-slices).
     pub frames: Vec<usize>,
-    /// Per-tenant reconfiguration dead cycles at the head of each slice.
+    /// Modeled full swap cost per tenant in cycles (before drain-overlap
+    /// credit; the per-sub-slice charge lives in [`SliceSpec`]).
     pub reconfig_cycles: Vec<u64>,
-    /// Calibrated first-frame latency (pipeline refill) per tenant.
+    /// Calibrated first-frame latency (pipeline refill) per tenant, in
+    /// cycles.
     pub fill_cycles: Vec<u64>,
-    /// Calibrated steady-state beat per tenant (max completion gap — the
-    /// conservative extrapolation base).
+    /// Calibrated steady-state beat per tenant in cycles (max completion
+    /// gap — the conservative extrapolation base).
     pub beat_cycles: Vec<u64>,
+    /// Analytic worst-case frame sojourn per tenant, in cycles: the
+    /// largest start-to-start gap between the tenant's consecutive
+    /// sub-slices plus the next sub-slice's charged reconfiguration plus
+    /// its batch's (over-approximated) makespan. What `--slo` admissions
+    /// check, and what [`crate::sim::TimeshareReport::worst_sojourn`]
+    /// confirms within 5%.
+    pub latency_cycles: Vec<u64>,
+    /// Is this an overlay-regime plan (shared static-region superset
+    /// datapath, zero reconfiguration)?
+    pub overlay: bool,
     /// Fraction of the period not covered by steady-state frame beats
     /// (reconfiguration + refill + idle tails), analytic. Stricter than
     /// the executed-schedule [`TimeshareReport::dead_frac`], which counts
@@ -156,17 +240,45 @@ pub struct TemporalInfo {
     pub dead_frac: f64,
 }
 
+impl TemporalInfo {
+    /// The executable form of this schedule: one
+    /// [`crate::sim::ScheduleSlice`] per sub-slice, in period order —
+    /// exactly what [`crate::sim::simulate_schedule`] consumes. The single
+    /// source of the planner→simulator slice conversion (the validation
+    /// pass, the benches, and the acceptance tests all go through here).
+    pub fn schedule_slices(&self) -> Vec<crate::sim::ScheduleSlice> {
+        self.slices
+            .iter()
+            .map(|s| crate::sim::ScheduleSlice {
+                tenant: s.tenant,
+                frames: s.frames,
+                slice_cycles: s.parts as u64 * self.quantum_cycles,
+                reconfig_cycles: s.reconfig_cycles,
+            })
+            .collect()
+    }
+}
+
 /// One tenant's full-board solo allocation plus its DES calibration.
-struct SoloTenant {
+/// Built once per search by [`solo_tenants`] and shared by the temporal
+/// and overlay enumerations (`--schedule auto` calibrates once, not per
+/// regime).
+pub(crate) struct SoloTenant {
     alloc: Arc<Allocation>,
     report: Arc<AllocReport>,
-    /// Dead cycles to swap this tenant's region in.
+    /// Full dead cycles to swap this tenant's region in (before any
+    /// drain-overlap credit).
     reconfig: u64,
     /// Exact batch makespans for 1..=calib frames (prefix property of
     /// [`crate::sim::SimReport::frame_done`]).
     frame_done: Vec<u64>,
     /// Conservative steady beat: the largest completion gap observed.
     beat: u64,
+    /// Conservative drain-overlap credit: the *smallest* drain tail
+    /// (`frame_done − input_done`) observed in the calibration window.
+    /// Under-crediting only idles the configuration port; over-crediting
+    /// would stretch the period.
+    drain_min: u64,
 }
 
 impl SoloTenant {
@@ -183,10 +295,11 @@ impl SoloTenant {
         }
     }
 
-    /// Largest batch whose estimated makespan, after the reconfiguration
-    /// swap, fits a `slice`-cycle provision (capped at `max_frames`).
-    fn admit(&self, slice: u64, max_frames: usize) -> usize {
-        let budget = slice.saturating_sub(self.reconfig);
+    /// Largest batch whose estimated makespan, after `reconfig` charged
+    /// swap cycles, fits a `slice`-cycle provision (capped at
+    /// `max_frames`).
+    fn admit(&self, slice: u64, reconfig: u64, max_frames: usize) -> usize {
+        let budget = slice.saturating_sub(reconfig);
         if budget < self.frame_done[0] {
             return 0;
         }
@@ -202,13 +315,54 @@ impl SoloTenant {
         debug_assert!(n == 0 || self.est_makespan(n) <= budget);
         n
     }
+
+    /// Debug-build spot-check of the calibration's core assumptions,
+    /// which the admission arithmetic otherwise takes on faith: (a) the
+    /// max-gap beat extrapolated past the window never undershoots a
+    /// longer solo run's true makespans, and (b) the drain-overlap
+    /// credit's symmetric claim — no later batch's drain tail dips below
+    /// the window's minimum (the DES charges the *actual* predecessor
+    /// drain, so a dip would charge more swap than the planner budgeted).
+    ///
+    /// This probes a window + 2 horizon (and `tests/slo_props.rs`
+    /// property-tests the same claims out to 12 frames) — a smoke test
+    /// that catches broken calibration cheaply, **not** a proof over the
+    /// full `max_slice_frames` extrapolation range. Longer-horizon drift
+    /// is not silent either: it surfaces as slice `overrun` / below-
+    /// analytic fps in the DES validation pass.
+    #[cfg(debug_assertions)]
+    fn assert_extrapolation_conservative(&self, alloc: &Allocation) {
+        let long = sim::simulate(alloc, self.frame_done.len() + 2);
+        for n in 1..=long.frame_done.len() {
+            debug_assert!(
+                self.est_makespan(n) >= long.frame_done[n - 1],
+                "max-gap extrapolation undershoots at n={n}: est {} < true {}",
+                self.est_makespan(n),
+                long.frame_done[n - 1]
+            );
+        }
+        for (n, (f, i)) in long.frame_done.iter().zip(&long.input_done).enumerate() {
+            debug_assert!(
+                f - i >= self.drain_min,
+                "drain tail dips below the calibrated credit at n={}: {} < {}",
+                n + 1,
+                f - i,
+                self.drain_min
+            );
+        }
+    }
 }
 
 /// Build each tenant's full-board allocation and calibrate its pipeline
 /// with a short solo DES run. `Ok(None)` means the temporal regime is
 /// infeasible for this tenant set (some tenant's pipeline does not fit the
-/// board even alone).
-fn solo_tenants(sh: &Sharder, tables: &[NetTables]) -> crate::Result<Option<Vec<SoloTenant>>> {
+/// board even alone). The calibration DES dominates temporal planning
+/// cost, so [`crate::shard::Sharder::search`] runs this once and hands
+/// the result to every regime enumeration.
+pub(crate) fn solo_tenants(
+    sh: &Sharder,
+    tables: &[NetTables],
+) -> crate::Result<Option<Vec<SoloTenant>>> {
     let n = sh.tenants.len();
     let mut solos = Vec::with_capacity(n);
     for (i, t) in sh.tenants.iter().enumerate() {
@@ -229,36 +383,110 @@ fn solo_tenants(sh: &Sharder, tables: &[NetTables]) -> crate::Result<Option<Vec<
             .max()
             .unwrap_or(1)
             .max(1);
+        let drain_min = calib
+            .frame_done
+            .iter()
+            .zip(&calib.input_done)
+            .map(|(&f, &i)| f - i)
+            .min()
+            .unwrap_or(0);
         // A lone tenant never switches, so it pays no reconfiguration.
         let reconfig = if n == 1 {
             0
         } else {
             sh.reconfig.cycles(&report, sh.board.freq_hz)
         };
-        solos.push(SoloTenant {
+        let solo = SoloTenant {
             alloc: Arc::new(alloc),
             report: Arc::new(report),
             reconfig,
             frame_done: calib.frame_done,
             beat,
-        });
+            drain_min,
+        };
+        #[cfg(debug_assertions)]
+        solo.assert_extrapolation_conservative(&solo.alloc);
+        solos.push(solo);
     }
     Ok(Some(solos))
 }
 
-/// Enumerate the temporal plan space for a sharder: slice quantum
-/// (halvings of the period bound) × slice compositions, each scored by the
-/// analytic schedule. Returns an empty vec when the regime is infeasible
-/// (a tenant's full-board pipeline doesn't fit, or no composition gives
-/// every tenant at least one frame per period).
+/// Spread each tenant's quanta over `ks[i]` sub-slices by **target
+/// phase**: sub-slice `j` of tenant `i` aims at period fraction
+/// `(j + i/n) / ks[i]`, and sub-slices execute in target order (ties:
+/// earlier sub-slice index first, then tenant order). This interleaves a
+/// `k`-sliced tenant's sub-slices *between* the other tenants' blocks —
+/// the property that actually shrinks its start-to-start gaps (a
+/// round-robin that clusters all whole-slice tenants into one run would
+/// leave one near-period gap). Chunk sizes are near-equal splits of the
+/// tenant's quanta, larger chunks first; all-ones `ks` reproduces the
+/// PR-3 one-slice-per-tenant caller-order layout exactly. Phases are
+/// compared as exact rationals (`(j·n + i) / (n·ks[i])`), so the layout
+/// is deterministic.
+fn interleave_layout(comp: &[usize], ks: &[usize]) -> Vec<(usize, usize)> {
+    let n = comp.len();
+    // (numerator, denominator, sub-slice index, tenant, parts).
+    let mut subs: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+    for i in 0..n {
+        let k = ks[i];
+        for j in 0..k {
+            let parts = comp[i] / k + usize::from(j < comp[i] % k);
+            subs.push((j * n + i, n * k, j, i, parts));
+        }
+    }
+    subs.sort_by(|a, b| {
+        (a.0 * b.1)
+            .cmp(&(b.0 * a.1))
+            .then(a.2.cmp(&b.2))
+            .then(a.3.cmp(&b.3))
+    });
+    let seq: Vec<(usize, usize)> = subs
+        .into_iter()
+        .map(|(_, _, _, i, parts)| (i, parts))
+        .collect();
+    debug_assert_eq!(
+        seq.iter().map(|&(_, p)| p).sum::<usize>(),
+        comp.iter().sum::<usize>(),
+        "interleaved chunks must partition the composition"
+    );
+    seq
+}
+
+/// Every per-tenant interleave vector with `1 ≤ k_i ≤ min(max_k,
+/// comp[i])` (each sub-slice needs at least one quantum), lowest factors
+/// first so the dedup keeps the simplest representative of equal plans.
+fn interleave_choices(comp: &[usize], max_k: usize) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = vec![Vec::new()];
+    for &p in comp {
+        let cap = max_k.max(1).min(p);
+        out = out
+            .into_iter()
+            .flat_map(|v| {
+                (1..=cap).map(move |k| {
+                    let mut w = v.clone();
+                    w.push(k);
+                    w
+                })
+            })
+            .collect();
+    }
+    out
+}
+
+/// Enumerate the temporal (or, with `overlay`, the static-region overlay)
+/// plan space for a sharder over the calibrated [`solo_tenants`]: slice
+/// quantum (halvings of the period bound) × slice compositions ×
+/// per-tenant interleave factors, each scored by the analytic schedule
+/// and filtered against the tenants' latency SLOs. Returns an empty vec
+/// when the regime is infeasible (no composition gives every sub-slice at
+/// least one frame per period, or no SLO-satisfying schedule exists).
 pub(crate) fn temporal_plans(
     sh: &Sharder,
-    tables: &[NetTables],
+    solos: &[SoloTenant],
+    overlay: bool,
 ) -> crate::Result<Vec<ShardPlan>> {
     let n = sh.tenants.len();
-    let Some(solos) = solo_tenants(sh, tables)? else {
-        return Ok(vec![]);
-    };
+    let freq = sh.board.freq_hz;
     let tenant_alloc = |s: &SoloTenant| TenantAlloc {
         // Each tenant owns the whole board during its slice.
         dsp_parts: sh.steps,
@@ -267,24 +495,61 @@ pub(crate) fn temporal_plans(
         report: Arc::clone(&s.report),
     };
 
+    if overlay {
+        // A lone tenant has nothing to share an overlay with; the plain
+        // temporal degenerate covers that case.
+        if n == 1 {
+            return Ok(vec![]);
+        }
+        // The static region hosts the superset datapath: size it at the
+        // element-wise maximum of the tenants' footprints (the optimistic
+        // full-reuse bound) and check it fits. Trivially true when every
+        // tenant fits alone, but kept explicit as the hook for synthesis
+        // overhead factors.
+        let max_dsps = solos.iter().map(|s| s.report.dsps).max().unwrap_or(0);
+        let max_bram = solos.iter().map(|s| s.report.bram18).max().unwrap_or(0);
+        if max_dsps > sh.board.dsps || max_bram > sh.board.bram18() {
+            return Ok(vec![]);
+        }
+    }
+
     // Degenerate single-tenant schedule: continuous solo operation at the
-    // closed-form fps — bit-identical to the plain FlexAllocator.
+    // closed-form fps — bit-identical to the plain FlexAllocator. Worst
+    // sojourn: a frame arriving just after the previous one's ingest waits
+    // one beat, then traverses the full pipeline.
     if n == 1 {
         let fps = solos[0].report.fps;
+        let latency = solos[0].frame_done[0] + solos[0].beat;
+        if let Some(slo) = sh.tenants[0].slo_s {
+            if latency as f64 > slo * freq {
+                return Ok(vec![]);
+            }
+        }
         return Ok(vec![ShardPlan {
             tenants: vec![tenant_alloc(&solos[0])],
             fps: vec![fps],
             min_fps: fps,
             weighted_fps: fps * sh.tenants[0].weight,
+            latency_s: vec![latency as f64 / freq],
             sim: None,
             regime: Regime::Temporal(TemporalInfo {
                 time_parts: vec![sh.steps],
+                interleave: vec![1],
+                slices: vec![SliceSpec {
+                    tenant: 0,
+                    parts: sh.steps,
+                    frames: 0,
+                    reconfig_cycles: 0,
+                    overlap_cycles: 0,
+                }],
                 quantum_cycles: 0,
                 period_cycles: 0,
                 frames: vec![0],
                 reconfig_cycles: vec![0],
                 fill_cycles: vec![solos[0].frame_done[0]],
                 beat_cycles: vec![solos[0].beat],
+                latency_cycles: vec![latency],
+                overlay: false,
                 dead_frac: 0.0,
             }),
         }]);
@@ -295,23 +560,27 @@ pub(crate) fn temporal_plans(
         "shard: temporal schedule needs max_period_s > 0"
     );
     // Same explosion guard as the spatial path: the plan space is
-    // C(steps−1, n−1) compositions × 4 quanta, and the frontier reduction
-    // downstream is O(plans²) — fail fast with guidance instead of
-    // grinding for hours at fine granularity.
-    let space = binomial(sh.steps - 1, n - 1).saturating_mul(4);
+    // C(steps−1, n−1) compositions × 4 quanta × interleave choices, and
+    // the frontier reduction downstream is O(plans²) — fail fast with
+    // guidance instead of grinding for hours at fine granularity.
+    let k_pow = sh.max_interleave.max(1).saturating_pow(n as u32);
+    let space = binomial(sh.steps - 1, n - 1)
+        .saturating_mul(4)
+        .saturating_mul(k_pow);
     anyhow::ensure!(
         space <= 50_000,
         "shard: temporal plan space too large ({space} candidate schedules for {n} \
-         tenants at {} steps) — lower `steps` (e.g. `--shard-steps {}`)",
+         tenants at {} steps, interleave ≤ {}) — lower `steps` (e.g. `--shard-steps {}`) \
+         or `--interleave`",
         sh.steps,
+        sh.max_interleave.max(1),
         suggest_steps(n),
     );
-    let freq = sh.board.freq_hz;
     let q_max = ((sh.max_period_s * freq / sh.steps as f64) as u64).max(1);
     // Quantum candidates: halvings of the period bound. Longer periods
     // amortize reconfiguration better, but floor effects (whole frames per
-    // slice) keep shorter quanta occasionally non-dominated — the frontier
-    // reduction decides.
+    // slice) and the latency axis (shorter periods bound sojourn tighter)
+    // keep shorter quanta non-dominated — the frontier reduction decides.
     let mut quanta: Vec<u64> = (0..4).map(|i| q_max >> i).filter(|&q| q > 0).collect();
     quanta.dedup();
 
@@ -320,56 +589,141 @@ pub(crate) fn temporal_plans(
     for &quantum in &quanta {
         let period = quantum * sh.steps as u64;
         for comp in &comps {
-            let frames: Vec<usize> = comp
-                .iter()
-                .zip(&solos)
-                .map(|(&parts, s)| s.admit(parts as u64 * quantum, sh.max_slice_frames))
-                .collect();
-            // Every tenant must make progress each period.
-            if frames.iter().any(|&f| f == 0) {
-                continue;
+            for ks in interleave_choices(comp, sh.max_interleave) {
+                let layout = interleave_layout(comp, &ks);
+                let m = layout.len();
+                // Per-sub-slice reconfiguration (drain-overlapped) and
+                // admission; every sub-slice must make progress.
+                let mut slices: Vec<SliceSpec> = Vec::with_capacity(m);
+                for (j, &(t, parts)) in layout.iter().enumerate() {
+                    let prev_t = layout[(j + m - 1) % m].0;
+                    let rc = if overlay || prev_t == t {
+                        0
+                    } else {
+                        solos[t].reconfig
+                    };
+                    let overlap = rc.min(solos[prev_t].drain_min);
+                    let frames = solos[t].admit(
+                        parts as u64 * quantum,
+                        rc - overlap,
+                        sh.max_slice_frames,
+                    );
+                    if frames == 0 {
+                        break;
+                    }
+                    slices.push(SliceSpec {
+                        tenant: t,
+                        parts,
+                        frames,
+                        reconfig_cycles: rc,
+                        overlap_cycles: overlap,
+                    });
+                }
+                if slices.len() != m {
+                    continue;
+                }
+
+                // Analytic worst-case sojourn per tenant: largest
+                // start-to-start gap to the tenant's next sub-slice, plus
+                // that sub-slice's charged swap and batch makespan.
+                let starts: Vec<u64> = slices
+                    .iter()
+                    .scan(0u64, |cum, s| {
+                        let here = *cum;
+                        *cum += s.parts as u64 * quantum;
+                        Some(here)
+                    })
+                    .collect();
+                let mut latency_cycles = vec![0u64; n];
+                for t in 0..n {
+                    let js: Vec<usize> =
+                        (0..m).filter(|&j| slices[j].tenant == t).collect();
+                    for (a, &j_from) in js.iter().enumerate() {
+                        let j_to = js[(a + 1) % js.len()];
+                        let gap = if starts[j_to] > starts[j_from] {
+                            starts[j_to] - starts[j_from]
+                        } else {
+                            period - starts[j_from] + starts[j_to]
+                        };
+                        let served = slices[j_to].reconfig_cycles
+                            - slices[j_to].overlap_cycles
+                            + solos[t].est_makespan(slices[j_to].frames);
+                        latency_cycles[t] = latency_cycles[t].max(gap + served);
+                    }
+                }
+                // SLO admission: drop schedules that violate any tenant's
+                // worst-case sojourn bound.
+                if sh.tenants.iter().zip(&latency_cycles).any(|(t, &lat)| {
+                    t.slo_s.is_some_and(|slo| lat as f64 > slo * freq)
+                }) {
+                    continue;
+                }
+
+                let mut frames = vec![0usize; n];
+                for s in &slices {
+                    frames[s.tenant] += s.frames;
+                }
+                let fps: Vec<f64> = frames
+                    .iter()
+                    .map(|&f| f as f64 * freq / period as f64)
+                    .collect();
+                let latency_s: Vec<f64> =
+                    latency_cycles.iter().map(|&c| c as f64 / freq).collect();
+                // Dedup on the full objective vector: a shorter quantum or
+                // higher interleave often lands on the same (fps, latency)
+                // point; keep the first (largest-quantum, lowest-k)
+                // representative.
+                if plans.iter().any(|p| {
+                    p.fps.len() == fps.len()
+                        && p.fps.iter().zip(&fps).all(|(a, b)| a.to_bits() == b.to_bits())
+                        && p.latency_s
+                            .iter()
+                            .zip(&latency_s)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                }) {
+                    continue;
+                }
+                let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
+                let weighted_fps = fps
+                    .iter()
+                    .zip(&sh.tenants)
+                    .map(|(f, t)| f * t.weight)
+                    .sum();
+                let beats: Vec<u64> = solos.iter().map(|s| s.beat).collect();
+                let useful: u64 = frames
+                    .iter()
+                    .zip(&beats)
+                    .map(|(&f, &b)| f as u64 * b)
+                    .sum();
+                plans.push(ShardPlan {
+                    tenants: solos.iter().map(tenant_alloc).collect(),
+                    fps,
+                    min_fps,
+                    weighted_fps,
+                    latency_s,
+                    sim: None,
+                    regime: Regime::Temporal(TemporalInfo {
+                        time_parts: comp.clone(),
+                        interleave: ks,
+                        slices,
+                        quantum_cycles: quantum,
+                        period_cycles: period,
+                        frames,
+                        // Overlay switches reprogram state, not fabric:
+                        // the per-tenant modeled swap cost is zero there,
+                        // matching every slice's zero charge.
+                        reconfig_cycles: solos
+                            .iter()
+                            .map(|s| if overlay { 0 } else { s.reconfig })
+                            .collect(),
+                        fill_cycles: solos.iter().map(|s| s.frame_done[0]).collect(),
+                        beat_cycles: beats,
+                        latency_cycles,
+                        overlay,
+                        dead_frac: 1.0 - useful.min(period) as f64 / period as f64,
+                    }),
+                });
             }
-            let fps: Vec<f64> = frames
-                .iter()
-                .map(|&f| f as f64 * freq / period as f64)
-                .collect();
-            // Dedup: a shorter quantum often lands on the same per-tenant
-            // frame rates; keep the first (largest-quantum) representative.
-            if plans.iter().any(|p| {
-                p.fps.len() == fps.len()
-                    && p.fps.iter().zip(&fps).all(|(a, b)| a.to_bits() == b.to_bits())
-            }) {
-                continue;
-            }
-            let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
-            let weighted_fps = fps
-                .iter()
-                .zip(&sh.tenants)
-                .map(|(f, t)| f * t.weight)
-                .sum();
-            let beats: Vec<u64> = solos.iter().map(|s| s.beat).collect();
-            let useful: u64 = frames
-                .iter()
-                .zip(&beats)
-                .map(|(&f, &b)| f as u64 * b)
-                .sum();
-            plans.push(ShardPlan {
-                tenants: solos.iter().map(tenant_alloc).collect(),
-                fps,
-                min_fps,
-                weighted_fps,
-                sim: None,
-                regime: Regime::Temporal(TemporalInfo {
-                    time_parts: comp.clone(),
-                    quantum_cycles: quantum,
-                    period_cycles: period,
-                    frames,
-                    reconfig_cycles: solos.iter().map(|s| s.reconfig).collect(),
-                    fill_cycles: solos.iter().map(|s| s.frame_done[0]).collect(),
-                    beat_cycles: beats,
-                    dead_frac: 1.0 - useful.min(period) as f64 / period as f64,
-                }),
-            });
         }
     }
     Ok(plans)
@@ -437,34 +791,38 @@ mod tests {
         assert!(m.seconds(&small) > s);
     }
 
-    #[test]
-    fn admission_is_exact_in_window_and_monotone() {
-        let solo = SoloTenant {
-            alloc: Arc::new(
-                FlexAllocator::default()
-                    .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
-                    .unwrap(),
-            ),
-            report: Arc::new(
-                FlexAllocator::default()
-                    .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
-                    .unwrap()
-                    .evaluate(),
-            ),
+    fn lenet_solo() -> SoloTenant {
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let report = alloc.evaluate();
+        SoloTenant {
+            alloc: Arc::new(alloc),
+            report: Arc::new(report),
             reconfig: 100,
             frame_done: vec![1_000, 1_800, 2_600, 3_400],
             beat: 800,
-        };
-        assert_eq!(solo.admit(1_099, usize::MAX), 0); // budget 999 < fill
-        assert_eq!(solo.admit(1_100, usize::MAX), 1);
-        assert_eq!(solo.admit(2_699, usize::MAX), 2); // budget 2599 < 2600
-        assert_eq!(solo.admit(2_700, usize::MAX), 3);
+            drain_min: 100,
+        }
+    }
+
+    #[test]
+    fn admission_is_exact_in_window_and_monotone() {
+        let solo = lenet_solo();
+        let rc = solo.reconfig;
+        assert_eq!(solo.admit(1_099, rc, usize::MAX), 0); // budget 999 < fill
+        assert_eq!(solo.admit(1_100, rc, usize::MAX), 1);
+        assert_eq!(solo.admit(2_699, rc, usize::MAX), 2); // budget 2599 < 2600
+        assert_eq!(solo.admit(2_700, rc, usize::MAX), 3);
         // Beyond the window: max-gap extrapolation.
-        assert_eq!(solo.admit(3_500, usize::MAX), 4);
-        assert_eq!(solo.admit(3_500 + 800, usize::MAX), 5);
-        assert_eq!(solo.admit(3_500 + 1_599, usize::MAX), 5);
+        assert_eq!(solo.admit(3_500, rc, usize::MAX), 4);
+        assert_eq!(solo.admit(3_500 + 800, rc, usize::MAX), 5);
+        assert_eq!(solo.admit(3_500 + 1_599, rc, usize::MAX), 5);
         // Cap applies.
-        assert_eq!(solo.admit(1_000_000, 7), 7);
+        assert_eq!(solo.admit(1_000_000, rc, 7), 7);
+        // A drain-overlap credit widens the budget: charging less swap
+        // admits no fewer frames.
+        assert_eq!(solo.admit(1_099, 0, usize::MAX), 1);
         // est_makespan is exact inside the window, linear past it.
         assert_eq!(solo.est_makespan(0), 0);
         assert_eq!(solo.est_makespan(3), 2_600);
@@ -472,10 +830,51 @@ mod tests {
         // Monotone in the slice budget.
         let mut prev = 0;
         for slice in (0..20_000).step_by(137) {
-            let n = solo.admit(slice, usize::MAX);
+            let n = solo.admit(slice, rc, usize::MAX);
             assert!(n >= prev);
             prev = n;
         }
+    }
+
+    #[test]
+    fn interleave_layout_spreads_chunks_evenly() {
+        // k = 1 everywhere reproduces the PR-3 whole-slice layout.
+        assert_eq!(
+            interleave_layout(&[3, 5], &[1, 1]),
+            vec![(0, 3), (1, 5)]
+        );
+        // A 2-way interleave splits the tenant's quanta into near-equal
+        // chunks, larger first, with the whole-slice tenant between them.
+        assert_eq!(
+            interleave_layout(&[3, 5], &[2, 1]),
+            vec![(0, 2), (1, 5), (0, 1)]
+        );
+        assert_eq!(
+            interleave_layout(&[2, 2], &[2, 2]),
+            vec![(0, 1), (1, 1), (0, 1), (1, 1)]
+        );
+        // Uneven interleave factors stay phase-spread.
+        assert_eq!(
+            interleave_layout(&[4, 2], &[4, 2]),
+            vec![(0, 1), (1, 1), (0, 1), (0, 1), (1, 1), (0, 1)]
+        );
+        // Three tenants, first interleaved: its sub-slices land *between*
+        // the other tenants' blocks (A B A C), never clustered — this is
+        // what halves the start-to-start gap.
+        assert_eq!(
+            interleave_layout(&[2, 1, 3], &[2, 1, 1]),
+            vec![(0, 1), (1, 1), (0, 1), (2, 3)]
+        );
+        assert_eq!(
+            interleave_layout(&[2, 3, 3], &[2, 1, 1]),
+            vec![(0, 1), (1, 3), (0, 1), (2, 3)]
+        );
+        // Choices respect the per-tenant quanta cap.
+        let choices = interleave_choices(&[1, 3], 4);
+        assert!(choices.contains(&vec![1, 1]));
+        assert!(choices.contains(&vec![1, 3]));
+        assert!(choices.iter().all(|ks| ks[0] == 1 && ks[1] <= 3));
+        assert_eq!(choices.len(), 3);
     }
 
     #[test]
@@ -493,7 +892,8 @@ mod tests {
         };
         let tables: Vec<NetTables> =
             sh.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
-        let plans = temporal_plans(&sh, &tables).unwrap();
+        let solos = solo_tenants(&sh, &tables).unwrap().expect("tenants fit solo");
+        let plans = temporal_plans(&sh, &solos, false).unwrap();
         assert!(!plans.is_empty());
         let bound = (0.1 * sh.board.freq_hz) as u64;
         for p in &plans {
@@ -505,6 +905,70 @@ mod tests {
             assert_eq!(info.period_cycles, info.quantum_cycles * sh.steps as u64);
             assert!(info.frames.iter().all(|&f| f >= 1));
             assert!((0.0..1.0).contains(&info.dead_frac));
+            assert!(!info.overlay);
+            // The sub-slice sequence is coherent with the per-tenant
+            // totals, and the worst-case sojourn never beats one period
+            // plus a batch (a tenant is served once per gap).
+            assert_eq!(
+                info.slices.iter().map(|s| s.parts).sum::<usize>(),
+                sh.steps
+            );
+            for t in 0..2 {
+                let total: usize = info
+                    .slices
+                    .iter()
+                    .filter(|s| s.tenant == t)
+                    .map(|s| s.frames)
+                    .sum();
+                assert_eq!(total, info.frames[t]);
+                assert!(info.latency_cycles[t] > 0);
+                assert_eq!(p.latency_s[t], info.latency_cycles[t] as f64 / sh.board.freq_hz);
+            }
+            // Drain-overlap credits never exceed the modeled swap.
+            for s in &info.slices {
+                assert!(s.overlap_cycles <= s.reconfig_cycles);
+            }
         }
+    }
+
+    #[test]
+    fn overlay_plans_charge_zero_reconfiguration() {
+        let sh = Sharder {
+            steps: 4,
+            max_period_s: 0.1,
+            ..Sharder::new(
+                zc706(),
+                vec![
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let tables: Vec<NetTables> =
+            sh.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
+        let solos = solo_tenants(&sh, &tables).unwrap().expect("tenants fit solo");
+        let plans = temporal_plans(&sh, &solos, true).unwrap();
+        assert!(!plans.is_empty());
+        for p in &plans {
+            let Regime::Temporal(info) = &p.regime else {
+                panic!("overlay planner emitted a spatial plan")
+            };
+            assert!(info.overlay);
+            assert!(info.slices.iter().all(|s| s.reconfig_cycles == 0));
+            assert!(info.slices.iter().all(|s| s.overlap_cycles == 0));
+        }
+        // An overlay schedule with the same shape never admits fewer
+        // frames than the reconfiguring one (zero swap can only widen
+        // budgets).
+        let plain = temporal_plans(&sh, &solos, false).unwrap();
+        let best_overlay = plans
+            .iter()
+            .map(|p| p.min_fps)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let best_plain = plain
+            .iter()
+            .map(|p| p.min_fps)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(best_overlay >= best_plain);
     }
 }

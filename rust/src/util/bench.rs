@@ -10,10 +10,15 @@ use std::time::{Duration, Instant};
 /// One benchmark's timing summary.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Median wall time per iteration.
     pub p50: Duration,
+    /// 95th-percentile wall time per iteration.
     pub p95: Duration,
 }
 

@@ -13,10 +13,15 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Number (all JSON numbers are f64 here).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Value>),
     /// Object (sorted keys — deterministic output).
     Obj(BTreeMap<String, Value>),

@@ -5,7 +5,7 @@
 use flexipipe::board::zc706;
 use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
-use flexipipe::shard::{dominates, Regime, ScheduleMode, Sharder, Tenant};
+use flexipipe::shard::{plan_dominates, Regime, ScheduleMode, Sharder, Tenant};
 
 fn auto_sharder() -> Sharder {
     Sharder {
@@ -35,13 +35,14 @@ fn merged_frontier_is_nondominated_and_complete_across_regimes() {
     assert!(n_spatial > 0, "vgg16+alexnet@16b must admit spatial splits on zc706");
     assert!(n_temporal > 0, "vgg16+alexnet@16b must admit temporal schedules on zc706");
 
-    // Non-domination: no frontier member is dominated by ANY plan — in
-    // particular, no surviving spatial plan is beaten by a temporal plan,
-    // and vice versa.
+    // Non-domination under the merged (fps ↑, worst-case latency ↓)
+    // objective: no frontier member is dominated by ANY plan — in
+    // particular, no surviving spatial plan is beaten by a temporal plan
+    // on both axes, and vice versa.
     for &i in &result.frontier {
         for (j, p) in result.plans.iter().enumerate() {
             assert!(
-                j == i || !dominates(&p.fps, &result.plans[i].fps),
+                j == i || !plan_dominates(p, &result.plans[i]),
                 "frontier member {i} ({}) dominated by plan {j} ({})",
                 result.plans[i].regime.label(),
                 p.regime.label()
@@ -56,17 +57,19 @@ fn merged_frontier_is_nondominated_and_complete_across_regimes() {
                     .plans
                     .iter()
                     .enumerate()
-                    .any(|(j, q)| j != i && dominates(&q.fps, &p.fps)),
+                    .any(|(j, q)| j != i && plan_dominates(q, p)),
                 "plan {i} ({}) excluded from the frontier but undominated",
                 p.regime.label()
             );
         }
     }
 
-    // Every plan serves both tenants.
+    // Every plan serves both tenants, with both objective axes populated.
     for p in &result.plans {
         assert_eq!(p.fps.len(), 2);
         assert!(p.fps.iter().all(|&f| f > 0.0 && f.is_finite()));
+        assert_eq!(p.latency_s.len(), 2);
+        assert!(p.latency_s.iter().all(|&l| l > 0.0 && l.is_finite()));
     }
 }
 

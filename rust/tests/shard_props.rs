@@ -6,7 +6,9 @@ use flexipipe::alloc::Allocator;
 use flexipipe::board::{zc706, zedboard, Board};
 use flexipipe::model::{conv, zoo, Network};
 use flexipipe::quant::QuantMode;
-use flexipipe::shard::{dominates, sub_board, Regime, ReconfigModel, ScheduleMode, Sharder, Tenant};
+use flexipipe::shard::{
+    plan_dominates, sub_board, Regime, ReconfigModel, ScheduleMode, Sharder, Tenant,
+};
 use flexipipe::sim;
 use flexipipe::util::prop::{check, Rng};
 
@@ -83,11 +85,12 @@ fn prop_frontier_is_nondominated_and_complete() {
             ..Sharder::new(board, tenants)
         };
         let Ok(result) = sharder.search() else { return };
-        // No frontier member is dominated by any plan.
+        // No frontier member is dominated — under the merged
+        // (fps ↑, worst-case latency ↓) objective — by any plan.
         for &i in &result.frontier {
             for (j, p) in result.plans.iter().enumerate() {
                 assert!(
-                    j == i || !dominates(&p.fps, &result.plans[i].fps),
+                    j == i || !plan_dominates(p, &result.plans[i]),
                     "frontier member {i} dominated by plan {j}"
                 );
             }
@@ -100,7 +103,7 @@ fn prop_frontier_is_nondominated_and_complete() {
                         .plans
                         .iter()
                         .enumerate()
-                        .any(|(j, q)| j != i && dominates(&q.fps, &p.fps)),
+                        .any(|(j, q)| j != i && plan_dominates(q, p)),
                     "plan {i} excluded from the frontier but undominated"
                 );
             }
@@ -282,16 +285,36 @@ fn prop_temporal_time_conservation() {
             };
             assert_eq!(info.time_parts.iter().sum::<usize>(), sharder.steps);
             assert_eq!(info.period_cycles, info.quantum_cycles * sharder.steps as u64);
+            // The sub-slice sequence partitions the period, and every
+            // sub-slice covers its *charged* (drain-overlap-credited)
+            // reconfiguration plus the pipeline refill.
+            assert_eq!(
+                info.slices.iter().map(|s| s.parts).sum::<usize>(),
+                sharder.steps
+            );
+            for s in &info.slices {
+                let slice = s.parts as u64 * info.quantum_cycles;
+                assert!(s.frames >= 1, "every sub-slice admits ≥1 frame");
+                assert!(s.overlap_cycles <= s.reconfig_cycles);
+                assert!(
+                    s.reconfig_cycles - s.overlap_cycles + info.fill_cycles[s.tenant]
+                        <= slice,
+                    "sub-slice must cover charged reconfiguration + refill"
+                );
+            }
             let mut useful = 0u64;
             for i in 0..2 {
                 assert!(info.frames[i] >= 1, "feasible plans admit ≥1 frame");
-                let slice = info.time_parts[i] as u64 * info.quantum_cycles;
-                assert!(
-                    info.reconfig_cycles[i] + info.fill_cycles[i] <= slice,
-                    "slice must cover reconfiguration + refill"
-                );
+                let from_slices: usize = info
+                    .slices
+                    .iter()
+                    .filter(|s| s.tenant == i)
+                    .map(|s| s.frames)
+                    .sum();
+                assert_eq!(from_slices, info.frames[i]);
                 let want = info.frames[i] as f64 * board.freq_hz / info.period_cycles as f64;
                 assert_eq!(plan.fps[i].to_bits(), want.to_bits());
+                assert!(info.latency_cycles[i] > 0);
                 useful += info.frames[i] as u64 * info.beat_cycles[i];
             }
             let want_dead =
@@ -440,13 +463,32 @@ fn two_identical_tenants_timeshare_half_solo_minus_reconfig() {
     let freq = zc706().freq_hz;
 
     // Re-derive the schedule from public pieces: solo calibration via the
-    // frame_done prefix property + the reconfiguration model.
+    // frame_done/input_done prefix properties + the reconfiguration model
+    // + the drain-overlap credit (smallest drain in the planner's
+    // 12-frame calibration window).
     let solo = FlexAllocator::default().allocate(&net, &zc706(), mode).unwrap();
     let cal = sim::simulate(&solo, 32);
     let rc = sharder.reconfig.cycles(&solo.evaluate(), freq);
-    assert_eq!(info.reconfig_cycles[0], rc, "plan charges the modeled reconfig cost");
+    assert_eq!(info.reconfig_cycles[0], rc, "plan models the full reconfig cost");
+    let drain_min = cal.frame_done[..12]
+        .iter()
+        .zip(&cal.input_done[..12])
+        .map(|(&f, &i)| f - i)
+        .min()
+        .unwrap();
+    let slice0 = info
+        .slices
+        .iter()
+        .find(|s| s.tenant == 0)
+        .expect("tenant 0 holds a sub-slice");
+    assert_eq!(
+        slice0.overlap_cycles,
+        rc.min(drain_min),
+        "the drain-overlap credit is the calibrated minimum drain"
+    );
+    let eff_rc = rc - slice0.overlap_cycles;
     let slice = info.time_parts[0] as u64 * info.quantum_cycles;
-    let budget = slice.saturating_sub(rc);
+    let budget = slice.saturating_sub(eff_rc);
     let n = info.frames[0];
     assert!(n >= 1);
     // Admission is conservative and, inside the calibration window, exact:
