@@ -13,10 +13,12 @@
 use flexipipe::alloc::ArchKind;
 use flexipipe::board::{vc707, zc706, zcu102, zedboard};
 use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, TenantSpec, Workload};
 use flexipipe::quant::QuantMode;
 use flexipipe::search::{frontier_by_workload, DesignSpace};
 use flexipipe::shard::{Regime, ScheduleMode};
-use flexipipe::util::json::Value;
+use flexipipe::sim::{Simulate, Simulator};
+use flexipipe::util::json::{self, Value};
 
 fn main() -> flexipipe::Result<()> {
     // 1. Board × model matrix at both precisions — one parallel sweep.
@@ -255,5 +257,47 @@ fn main() -> flexipipe::Result<()> {
             unreachable!("shard points encode as JSON objects")
         };
     }
+
+    // 7. The plan-centric flow: everything above condenses into one spine —
+    // a Workload (tenants + constraints + objective) goes through the
+    // Planner facade into a versioned, serializable DeploymentPlan that
+    // the Simulate trait executes and the serving runtime consumes
+    // (`flexipipe plan … --json plan.json` is the CLI spelling).
+    println!("\n== plan-centric flow: Workload → Planner → DeploymentPlan → Simulate ==");
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant_spec(TenantSpec::new(zoo::lenet()).weight(2.0));
+    let set = Planner::on(zedboard()).steps(8).validate(2).plan(&workload)?;
+    let best = &set.plans[set.best];
+    println!(
+        "{} feasible plans, {} on the frontier; best ({} objective): {} regime on {}",
+        set.plans.len(),
+        set.frontier.len(),
+        set.objective.label(),
+        best.regime.label(),
+        best.board.name
+    );
+    for t in &best.tenants {
+        if let Some(r) = &t.record {
+            println!(
+                "  {:<10} Θ {}/{}  α {}/{}: {:.1} fps planned",
+                t.net.name, t.dsp_parts, best.steps, t.bram_parts, best.steps, r.fps
+            );
+        }
+    }
+    // The plan is the deployment artifact: JSON round-trips bit-exactly,
+    // and the DES executes the rehydrated plan.
+    let text = best.to_json().to_pretty();
+    let back = DeploymentPlan::from_json(&json::parse(&text)?)?;
+    assert_eq!(text, back.to_json().to_pretty());
+    let report = Simulator { frames: 2 }.simulate(&back)?;
+    println!(
+        "  DES confirms (via the JSON round trip): {:?} fps",
+        report
+            .tenant_fps()
+            .iter()
+            .map(|f| (f * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
     Ok(())
 }

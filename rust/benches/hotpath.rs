@@ -72,7 +72,7 @@ fn main() {
     println!("  -> simulator speed: {mcps:.1} M simulated cycles / wall-second");
     let s = b
         .bench("sim/vgg16/3frames/naive", || {
-            sim::simulate_pipeline_naive(&alloc, 3)
+            sim::engines::simulate_pipeline_naive(&alloc, 3)
         })
         .clone();
     let sim_naive = s.mean.as_secs_f64();

@@ -82,7 +82,7 @@ fn main() {
         .unwrap();
     let s = b
         .bench("sim/multi 2x tinycnn/4frames", || {
-            sim::simulate_multi(&[&a, &a], &board, 4)
+            sim::engines::simulate_multi(&[&a, &a], &board, 4)
         })
         .clone();
     let multi_ms = s.mean.as_secs_f64() * 1e3;

@@ -114,11 +114,11 @@ fn main() {
     let seq = info.schedule_slices();
     let s = b
         .bench("slo/sim one overlay period", || {
-            sim::simulate_schedule(&refs, &seq, true)
+            sim::engines::simulate_schedule(&refs, &seq, true)
         })
         .clone();
     out.push(("overlay_sim_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
-    let ts = sim::simulate_schedule(&refs, &seq, true);
+    let ts = sim::engines::simulate_schedule(&refs, &seq, true);
     println!(
         "  -> period {:.1} ms, dead {:.1}%, worst sojourn {:?} ms",
         ts.period_cycles as f64 / zc706().freq_hz * 1e3,

@@ -138,6 +138,38 @@ impl Coordinator {
         )
     }
 
+    /// Serve every tenant of a [`DeploymentPlan`] on the in-process
+    /// [`SimBackend`] — the serving half of the plan-centric flow
+    /// (`flexipipe serve --plan plan.json`). The plan is **validated
+    /// before anything starts serving**: every tenant's allocation is
+    /// rehydrated ([`DeploymentPlan::instantiate`]), so an infeasible or
+    /// stale plan is refused with the real cause instead of serving a
+    /// deployment the planner never admitted. One coordinator (ingest
+    /// queue + dynamic batcher + worker) is started per tenant, each on a
+    /// deterministic `SimBackend` over the tenant's embedded network —
+    /// 8-bit plans only, since the sim datapath is the i8 reference.
+    ///
+    /// [`DeploymentPlan`]: crate::plan::DeploymentPlan
+    /// [`DeploymentPlan::instantiate`]: crate::plan::DeploymentPlan::instantiate
+    pub fn start_planned(
+        plan: &crate::plan::DeploymentPlan,
+        policy: BatchPolicy,
+    ) -> crate::Result<PlannedService> {
+        anyhow::ensure!(
+            plan.mode.bits() == 8,
+            "start_planned serves the in-process SimBackend, which runs the 8-bit \
+             reference datapath — re-plan the workload at --bits 8 (or serve \
+             compiled artifacts per tenant via Coordinator::start)"
+        );
+        plan.instantiate()?;
+        let mut tenants = Vec::with_capacity(plan.tenants.len());
+        for t in &plan.tenants {
+            let coord = Coordinator::start_sim(&t.net, SIM_BATCHES, policy.clone())?;
+            tenants.push((t.net.name.clone(), coord));
+        }
+        Ok(PlannedService { tenants })
+    }
+
     /// PJRT when `artifact_dir/manifest.json` exists, [`SimBackend`] on the
     /// zoo network named `net` otherwise (8-bit only — the sim datapath is
     /// the i8 reference).
@@ -260,6 +292,54 @@ impl Coordinator {
         }
         let s = self.stats.lock().unwrap().clone();
         s
+    }
+}
+
+/// A serving fleet executing one deployment plan: one [`Coordinator`] per
+/// tenant, created by [`Coordinator::start_planned`]. Tenants are
+/// addressed by plan index (names may repeat — two `lenet` tenants are
+/// two queues).
+pub struct PlannedService {
+    tenants: Vec<(String, Coordinator)>,
+}
+
+impl PlannedService {
+    /// Number of tenants being served.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Is the service empty? (Never true for a valid plan.)
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Tenant model names, in plan order.
+    pub fn names(&self) -> Vec<&str> {
+        self.tenants.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The coordinator serving tenant `idx` (plan order) — submit frames
+    /// through it like any coordinator.
+    pub fn tenant(&self, idx: usize) -> &Coordinator {
+        &self.tenants[idx].1
+    }
+
+    /// Submit one frame to tenant `idx` and wait for its output.
+    pub fn infer(&self, idx: usize, frame: Vec<i8>) -> crate::Result<Vec<i8>> {
+        self.tenants[idx].1.infer(frame)
+    }
+
+    /// Stop every tenant's worker; returns `(name, stats)` per tenant in
+    /// plan order.
+    pub fn shutdown(self) -> Vec<(String, ServeStats)> {
+        self.tenants
+            .into_iter()
+            .map(|(name, coord)| {
+                let stats = coord.shutdown();
+                (name, stats)
+            })
+            .collect()
     }
 }
 
@@ -387,6 +467,36 @@ mod tests {
         let want = oracle.forward_frame(&frame).unwrap();
         assert_eq!(coord.infer(frame).unwrap(), want);
         assert!(coord.submit(vec![0i8; 5]).is_err());
+    }
+
+    #[test]
+    fn start_planned_serves_every_plan_tenant() {
+        use crate::board::zedboard;
+        use crate::model::zoo;
+        use crate::plan::{Planner, Workload};
+        use crate::quant::QuantMode;
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let plan = set.plans[set.best].clone();
+        let svc = Coordinator::start_planned(&plan, BatchPolicy::default()).unwrap();
+        assert_eq!(svc.len(), 2);
+        assert!(!svc.is_empty());
+        assert_eq!(svc.names(), vec!["tinycnn", "lenet"]);
+        for (t, pt) in plan.tenants.iter().enumerate() {
+            let (c, h, w) = pt.net.input;
+            let out = svc.infer(t, vec![0i8; c * h * w]).unwrap();
+            assert!(!out.is_empty(), "tenant {t} served nothing");
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|(_, s)| s.requests == 1));
+        // Non-8-bit plans are refused up front (SimBackend is the i8
+        // reference datapath).
+        let mut p16 = plan.clone();
+        p16.mode = QuantMode::W16A16;
+        assert!(Coordinator::start_planned(&p16, BatchPolicy::default()).is_err());
     }
 
     #[test]

@@ -15,6 +15,20 @@
 //! conv with channel-wise shift alignment) runs for real: AOT-compiled JAX/
 //! Pallas HLO executed through PJRT from the [`runtime`] module.
 //!
+//! The public API is **plan-centric** — one spine from workload to
+//! serving: a [`plan::Workload`] (tenants, constraints, objective) goes
+//! through the [`plan::Planner`] facade (solo allocation, spatial /
+//! temporal / overlay board sharing, or a multi-board sweep) into a
+//! versioned, JSON-serializable [`plan::DeploymentPlan`] — the only
+//! currency between subsystems. One [`sim::Simulate`] call executes a
+//! plan cycle-accurately;
+//! [`coordinator::Coordinator::start_planned`] serves it. A plan written
+//! to disk re-simulates bit-identically to the in-process search, so
+//! plans are diffed, shipped, and regression-pinned as files
+//! (`flexipipe plan … --json plan.json`, then
+//! `flexipipe simulate --plan plan.json` / `flexipipe serve --plan
+//! plan.json`).
+//!
 //! Module map (one module per subsystem, DESIGN.md §5):
 //!
 //! - [`model`] — CNN layer/network descriptions + the paper's model zoo
@@ -25,29 +39,53 @@
 //!   (recurrent [1], fusion/Winograd [2], DNNBuilder-constrained [3]).
 //! - [`engine`] — convolution-layer-engine micro-model: cycle counts,
 //!   line-buffer geometry, BRAM/LUT/FF cost, address generation.
-//! - [`sim`] — event-driven pipeline simulator (stall-accurate) and the
-//!   recurrent-architecture simulator.
+//! - [`plan`] — the public spine: `Workload` → `Planner` →
+//!   serializable `DeploymentPlan`.
+//! - [`sim`] — event-driven pipeline simulator (stall-accurate);
+//!   [`sim::Simulate`] executes whole deployment plans.
 //! - [`search`] — parallel design-space search: boards × models × modes ×
 //!   DSP budgets fan-out with shared precomputation + Pareto frontier.
 //! - [`shard`] — multi-tenant board sharding, spatial (partition one
 //!   board's DSP/BRAM budget across co-resident models) and temporal
 //!   (time-multiplex full-board allocations with a partial-reconfiguration
 //!   cost model), merged into one per-tenant-fps Pareto frontier and
-//!   validated by the multi-pipeline / time-shared DES.
+//!   validated by the multi-pipeline / time-shared DES — the search
+//!   engine [`plan::Planner`] fronts.
 //! - [`power`] — calibrated power estimation (the paper uses Vivado's
 //!   estimate; we use an activity-based analytical model).
 //! - [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
-//! - [`coordinator`] — tokio frame server: the Fig. 4 host↔accelerator loop.
+//! - [`coordinator`] — tokio frame server: the Fig. 4 host↔accelerator
+//!   loop, including the plan-driven multi-tenant service
+//!   ([`coordinator::Coordinator::start_planned`]).
 //! - [`report`] — Table I regeneration and paper-vs-measured comparison.
 //!
 //! A map of how the subsystems fit together — and the invariants the
 //! regression suites pin — lives in `docs/ARCHITECTURE.md`.
 //!
-//! # Quickstart
+//! # Quickstart: the plan-centric flow
 //!
-//! Allocate the paper's framework for a model/board pair, read the
-//! closed-form report, and confirm it with the cycle-accurate simulator
-//! (the `quickstart` example is the narrated version of this):
+//! Describe the workload, plan it onto a board, and execute the plan with
+//! the cycle-accurate simulator:
+//!
+//! ```
+//! use flexipipe::board::zedboard;
+//! use flexipipe::model::zoo;
+//! use flexipipe::plan::{Planner, Workload};
+//! use flexipipe::quant::QuantMode;
+//! use flexipipe::sim::{Simulate, Simulator};
+//!
+//! let workload = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+//! let set = Planner::on(zedboard()).steps(4).plan(&workload).unwrap();
+//! let plan = &set.plans[set.best];
+//! let report = Simulator::default().simulate(plan).unwrap();
+//! assert!(report.tenants[0].fps > 0.0);
+//! ```
+//!
+//! # Single-allocation quickstart
+//!
+//! The Sec. 4 machinery is still directly addressable — allocate one
+//! model/board pair, read the closed-form report, and confirm it with the
+//! simulator (the `quickstart` example is the narrated version of this):
 //!
 //! ```
 //! use flexipipe::alloc::{allocator_for, ArchKind};
@@ -78,6 +116,7 @@ pub mod board;
 pub mod coordinator;
 pub mod engine;
 pub mod model;
+pub mod plan;
 pub mod power;
 pub mod quant;
 pub mod report;

@@ -1,6 +1,15 @@
-//! `flexipipe` CLI — the framework's front door.
+//! `flexipipe` CLI — the framework's front door, structured around the
+//! plan-centric flow: **plan** a workload onto a board, then **simulate**
+//! and **serve** the emitted plan file.
 //!
 //! ```text
+//! flexipipe plan     --models vgg16,alexnet --board zc706 [--bits 16] \
+//!                    [--schedule spatial|temporal|overlay|auto] [--overlay] \
+//!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0] \
+//!                    [--max-period 0.5] [--slo vgg16=33ms] [--min-fps alexnet=120] \
+//!                    [--interleave 2] [--objective min-fps] [--json plan.json]
+//! flexipipe simulate --plan plan.json [--frames 4]
+//! flexipipe serve    --plan plan.json [--frames 256]
 //! flexipipe allocate --model vgg16 --board zc706 --bits 16 [--arch flex]
 //! flexipipe simulate --model vgg16 --board zc706 --frames 4
 //! flexipipe report   [--no-paper]          # regenerate Table I
@@ -10,21 +19,20 @@
 //! flexipipe search   --models vgg16,alexnet --boards zc706,zcu102 \
 //!                    --bits 8,16 [--dsps 512,900] [--threads 0] [--json F]
 //! flexipipe search   --tenants vgg16+alexnet,vgg16+zf --boards zc706
-//! flexipipe shard    --models vgg16,alexnet --board zc706 [--bits 16] \
-//!                    [--schedule spatial|temporal|overlay|auto] [--overlay] \
-//!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0] \
-//!                    [--max-period 0.5] [--slo vgg16=33ms] [--interleave 2]
+//! flexipipe shard    …                     # deprecated alias of `plan`
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
 use flexipipe::model::{config, Network};
+use flexipipe::plan::{Constraint, DeploymentPlan, Objective, Planner, TenantSpec, Workload};
 use flexipipe::power::PowerModel;
 use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
 use flexipipe::search::{self, DesignSpace};
-use flexipipe::shard::{self, Regime, ScheduleMode, Sharder, Tenant};
-use flexipipe::util::cli::{flag, opt, usage, Args, Spec};
+use flexipipe::shard::{self, Regime, ScheduleMode};
+use flexipipe::sim::{Simulate, Simulator};
+use flexipipe::util::cli::{flag, opt, split_list, usage, Args, Spec};
 use flexipipe::util::json::Value;
 use flexipipe::{board, report, sim};
 
@@ -54,8 +62,8 @@ fn specs() -> Vec<Spec> {
         opt("to", "sweep end", Some("1024")),
         opt("steps", "sweep steps", Some("8")),
         opt("trace", "write per-stage CSV trace to this path (simulate)", None),
-        opt("models", "comma-separated model list (search/shard)", None),
-        opt("boards", "comma-separated board list (search)", None),
+        opt("models", "comma-separated model list (plan/search)", None),
+        opt("boards", "comma-separated board list (plan/search)", None),
         opt("archs", "comma-separated arch list (search)", Some("flex")),
         opt("dsps", "comma-separated DSP budget overrides (search)", None),
         opt(
@@ -63,27 +71,48 @@ fn specs() -> Vec<Spec> {
             "comma-separated co-resident groups, models joined by '+' (search)",
             None,
         ),
-        opt("shard-steps", "shard split granularity: 1/steps quanta", Some("16")),
+        opt(
+            "shard-steps",
+            "split granularity: 1/steps quanta (plan/search)",
+            Some("16"),
+        ),
         opt(
             "schedule",
-            "shard regime: spatial | temporal | overlay | auto (search/shard)",
+            "sharing regime: spatial | temporal | overlay | auto (plan/search)",
             Some("spatial"),
         ),
         opt(
             "max-period",
-            "temporal schedule period bound in seconds (search/shard)",
+            "temporal schedule period bound in seconds (plan/search)",
             Some("0.5"),
         ),
         opt(
             "slo",
             "per-tenant latency SLOs, model=duration with s/ms/us suffixes: \
-             vgg16=33ms,zf=0.05s (search/shard)",
+             vgg16=33ms,zf=0.05s (plan/search)",
+            None,
+        ),
+        opt(
+            "min-fps",
+            "per-tenant effective-fps floors, model=fps: alexnet=120 — plans \
+             starving a floored tenant are dropped (plan/search)",
+            None,
+        ),
+        opt(
+            "objective",
+            "which feasible plan `plan` labels best: min-fps | weighted",
+            Some("min-fps"),
+        ),
+        opt(
+            "plan",
+            "deployment-plan JSON produced by `flexipipe plan --json` \
+             (simulate/serve)",
             None,
         ),
         opt(
             "interleave",
             "max sub-slices per tenant per period; k>1 trades switches for \
-             latency (search/shard)",
+             latency (plan/search)",
             Some("1"),
         ),
         flag(
@@ -91,15 +120,20 @@ fn specs() -> Vec<Spec> {
             "static-region overlay regime: shared superset datapath, \
              zero-reconfig switches (= --schedule overlay)",
         ),
-        opt("weights", "comma-separated tenant weights (shard)", None),
+        opt("weights", "comma-separated tenant weights (plan)", None),
         opt("threads", "search worker threads, 0 = all cores", Some("0")),
         opt(
             "sim-frames",
-            "confirm frontier points with the DES: N frames per point (temporal shard \
-             plans execute one full schedule period instead — N>0 just enables the pass)",
+            "confirm frontier plans with the DES: N frames per point (temporal \
+             plans execute one full schedule period instead — N>0 just enables \
+             the pass and records sim fps in the plan artifact)",
             Some("0"),
         ),
-        opt("json", "write search results as JSON to this path", None),
+        opt(
+            "json",
+            "write results (plan document / search points) to this path",
+            None,
+        ),
         flag("no-paper", "omit paper reference rows from the report"),
         flag("verbose", "per-stage detail"),
     ]
@@ -119,7 +153,15 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "e2e" => cmd_e2e(&args),
         "sweep" => cmd_sweep(&args),
         "search" => cmd_search(&args),
-        "shard" => cmd_shard(&args),
+        "plan" => cmd_plan(&args),
+        "shard" => {
+            // Thin deprecated alias: same flags, same output, one spine.
+            eprintln!(
+                "note: `flexipipe shard` is a deprecated alias of `flexipipe plan` \
+                 (same flags, same output)"
+            );
+            cmd_plan(&args)
+        }
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -132,7 +174,12 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: allocate simulate report serve e2e sweep search shard help\n\n{}",
+         commands: plan simulate serve allocate report e2e sweep search help\n\
+         (shard is a deprecated alias of plan)\n\n\
+         the plan-centric flow: `flexipipe plan … --json plan.json` emits a\n\
+         deployment plan; `flexipipe simulate --plan plan.json` executes it in\n\
+         the cycle-accurate DES; `flexipipe serve --plan plan.json` serves every\n\
+         tenant on the in-process SimBackend.\n\n{}",
         usage(&specs())
     );
 }
@@ -191,6 +238,9 @@ fn cmd_allocate(args: &Args) -> flexipipe::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> flexipipe::Result<()> {
+    if let Some(path) = args.get("plan") {
+        return cmd_simulate_plan(args, path);
+    }
     let (net, brd, mode, arch) = parse_common(args)?;
     let frames = args.get_parse("frames", 4usize)?;
     let alloc = allocator_for(arch).allocate(&net, &brd, mode)?;
@@ -233,6 +283,46 @@ fn cmd_simulate(args: &Args) -> flexipipe::Result<()> {
     Ok(())
 }
 
+/// `simulate --plan plan.json`: execute one deployment plan through the
+/// regime-matched DES and compare against the plan's recorded figures.
+fn cmd_simulate_plan(args: &Args, path: &str) -> flexipipe::Result<()> {
+    let plan = DeploymentPlan::load(path)?;
+    let frames = args.get_parse("frames", 4usize)?;
+    let t0 = std::time::Instant::now();
+    let report = Simulator { frames }.simulate(&plan)?;
+    println!(
+        "{path}: {} regime on {} ({} tenants, {}b, simulated in {:.2?})",
+        plan.regime.label(),
+        plan.board.name,
+        plan.tenants.len(),
+        plan.mode.bits(),
+        t0.elapsed()
+    );
+    println!(
+        "{:<12} {:>6} {:>6} {:>12} {:>12} {:>12}",
+        "tenant", "Θ", "α", "planned fps", "sim fps", "cycles/frame"
+    );
+    for (t, r) in plan.tenants.iter().zip(&report.tenants) {
+        let planned = t
+            .record
+            .as_ref()
+            .map(|rec| format!("{:.1}", rec.fps))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<12} {:>3}/{:<2} {:>3}/{:<2} {:>12} {:>12.1} {:>12.0}",
+            t.net.name,
+            t.dsp_parts,
+            plan.steps,
+            t.bram_parts,
+            plan.steps,
+            planned,
+            r.fps,
+            r.cycles_per_frame
+        );
+    }
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> flexipipe::Result<()> {
     let rows = report::table1()?;
     println!("{}", report::render(&rows, !args.has("no-paper")));
@@ -246,6 +336,9 @@ fn cmd_report(args: &Args) -> flexipipe::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
+    if let Some(path) = args.get("plan") {
+        return cmd_serve_plan(args, path);
+    }
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let frames: usize = args.get_parse("frames", 256)?;
     let net = args.get_or("net", "tinycnn");
@@ -300,6 +393,65 @@ fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
         stats.padded_frames
     );
     println!("batch mix (batch, frames): {:?}", stats.batch_sizes);
+    Ok(())
+}
+
+/// `serve --plan plan.json`: start one coordinator per plan tenant on the
+/// in-process SimBackend and push `--frames` deterministic frames through
+/// each, round-robin.
+fn cmd_serve_plan(args: &Args, path: &str) -> flexipipe::Result<()> {
+    let plan = DeploymentPlan::load(path)?;
+    let frames: usize = args.get_parse("frames", 256)?;
+    println!(
+        "serving plan {path}: {} tenants on {} ({} regime, SimBackend)",
+        plan.tenants.len(),
+        plan.board.name,
+        plan.regime.label()
+    );
+    let svc = Coordinator::start_planned(&plan, BatchPolicy::default())?;
+
+    // Deterministic per-tenant noise frames (the artifact-free input the
+    // plain `serve` path uses too).
+    let mut rng = flexipipe::util::prop::Rng::new(0x5EED);
+    let inputs: Vec<Vec<i8>> = plan
+        .tenants
+        .iter()
+        .map(|t| {
+            let (c, h, w) = t.net.input;
+            (0..c * h * w).map(|_| rng.range(-128, 127) as i8).collect()
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..frames {
+        for (t, input) in inputs.iter().enumerate() {
+            pending.push(svc.tenant(t).submit(input.clone())?);
+        }
+    }
+    for p in pending {
+        p.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+    }
+    let dt = t0.elapsed();
+    let stats = svc.shutdown();
+    let total: u64 = stats.iter().map(|(_, s)| s.requests).sum();
+    println!(
+        "served {total} frames across {} tenants in {dt:.2?} ({:.1} fps aggregate)",
+        stats.len(),
+        total as f64 / dt.as_secs_f64()
+    );
+    for (name, s) in &stats {
+        println!(
+            "  {:<12} {} frames, latency p50 {} µs / p99 {} µs, {} batches \
+             ({} padded slots)",
+            name,
+            s.requests,
+            s.latency_us(50.0),
+            s.latency_us(99.0),
+            s.batches,
+            s.padded_frames
+        );
+    }
     Ok(())
 }
 
@@ -364,14 +516,6 @@ fn parse_schedule(args: &Args) -> flexipipe::Result<ScheduleMode> {
         return Ok(ScheduleMode::Overlay);
     }
     ScheduleMode::parse(args.get_or("schedule", "spatial"))
-}
-
-/// Split a comma-separated CLI list.
-fn split_list(s: &str) -> Vec<String> {
-    s.split(',')
-        .map(|p| p.trim().to_string())
-        .filter(|p| !p.is_empty())
-        .collect()
 }
 
 /// `search`: parallel boards × models × modes × budgets sweep with a
@@ -514,6 +658,10 @@ fn cmd_search_shards(
             Some(s) => shard::parse_slos(s)?,
             None => Vec::new(),
         },
+        min_fps: match args.get("min-fps") {
+            Some(s) => shard::parse_min_fps(s)?,
+            None => Vec::new(),
+        },
         sim_frames: args.get_parse("sim-frames", 0usize)?,
         threads: args.get_parse("threads", 0usize)?,
         ..Default::default()
@@ -554,12 +702,17 @@ fn cmd_search_shards(
     Ok(())
 }
 
-/// `shard`: partition one board across co-resident models and report the
-/// per-tenant-fps Pareto frontier (JSON to stdout, or `--json FILE`).
-fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
+/// `plan` (and its deprecated alias `shard`): plan a workload onto one or
+/// more boards and emit the deployment-plan document — the frontier plus
+/// the objective picks — as JSON (stdout, or `--json FILE`, which
+/// `simulate --plan` / `serve --plan` consume directly).
+fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
     let models = split_list(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
     anyhow::ensure!(!models.is_empty(), "--models needs at least one model");
-    let brd = board::by_name(args.get_or("board", "zc706"))?;
+    let boards = split_list(args.get("boards").unwrap_or(args.get_or("board", "zc706")))
+        .iter()
+        .map(|b| board::by_name(b))
+        .collect::<flexipipe::Result<Vec<_>>>()?;
     let mode = QuantMode::from_bits(args.get_parse("bits", 16usize)?)?;
     let steps: usize = args.get_parse("shard-steps", 16)?;
     let weights: Vec<f64> = match args.get("weights") {
@@ -579,47 +732,55 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
         models.len()
     );
     let schedule = parse_schedule(args)?;
-    let mut tenants = models
-        .iter()
-        .zip(&weights)
-        .map(|(m, &weight)| {
-            Ok(Tenant {
-                weight,
-                ..Tenant::new(config::resolve(m)?, mode)
-            })
-        })
-        .collect::<flexipipe::Result<Vec<_>>>()?;
-    if let Some(slo) = args.get("slo") {
-        shard::apply_slos(&mut tenants, &shard::parse_slos(slo)?)?;
+
+    let mut workload = Workload::new(mode)
+        .objective(Objective::parse(args.get_or("objective", "min-fps"))?);
+    for (m, &weight) in models.iter().zip(&weights) {
+        workload = workload.tenant_spec(TenantSpec::new(config::resolve(m)?).weight(weight));
     }
-    let sharder = Sharder {
-        steps,
-        sim_frames: args.get_parse("sim-frames", 0usize)?,
-        schedule,
-        max_period_s: args.get_parse("max-period", 0.5f64)?,
-        max_interleave: args.get_parse("interleave", 1usize)?,
-        ..Sharder::new(brd.clone(), tenants)
-    };
+    if let Some(slo) = args.get("slo") {
+        for (name, seconds) in shard::parse_slos(slo)? {
+            workload.constrain(&name, Constraint::Slo(seconds))?;
+        }
+    }
+    if let Some(floors) = args.get("min-fps") {
+        for (name, fps) in shard::parse_min_fps(floors)? {
+            workload.constrain(&name, Constraint::MinFps(fps))?;
+        }
+    }
+
+    let planner = Planner::across(boards)
+        .steps(steps)
+        .schedule(schedule)
+        .max_period(args.get_parse("max-period", 0.5f64)?)
+        .interleave(args.get_parse("interleave", 1usize)?)
+        .validate(args.get_parse("sim-frames", 0usize)?);
     let t0 = std::time::Instant::now();
-    let result = sharder.search()?;
+    let set = planner.plan(&workload)?;
     println!(
-        "shard {} across {} tenants ({mode}, {} regime, 1/{steps} quanta): {} feasible \
+        "plan: {} tenants ({mode}, {} regime, 1/{steps} quanta, {} board{}): {} feasible \
          plans, {} on the frontier ({:.2?})",
-        brd.name,
         models.len(),
         schedule.label(),
-        result.plans.len(),
-        result.frontier.len(),
+        planner.boards.len(),
+        if planner.boards.len() == 1 { "" } else { "s" },
+        set.plans.len(),
+        set.frontier.len(),
         t0.elapsed()
     );
-    let describe = |p: &shard::ShardPlan| -> String {
+
+    let describe = |p: &DeploymentPlan| -> String {
         match &p.regime {
             Regime::Spatial => {
-                let dsp: Vec<String> = p.tenants.iter().map(|t| t.dsp_parts.to_string()).collect();
-                let bram: Vec<String> = p.tenants.iter().map(|t| t.bram_parts.to_string()).collect();
-                format!("spatial  Θ {} | α {}", dsp.join("+"), bram.join("+"))
+                let dsp: Vec<String> =
+                    p.tenants.iter().map(|t| t.dsp_parts.to_string()).collect();
+                let bram: Vec<String> =
+                    p.tenants.iter().map(|t| t.bram_parts.to_string()).collect();
+                format!("{} spatial  Θ {} | α {}", p.board.name, dsp.join("+"), bram.join("+"))
             }
-            Regime::Temporal(info) if info.period_cycles == 0 => "temporal solo".to_string(),
+            Regime::Temporal(info) if info.period_cycles == 0 => {
+                format!("{} temporal solo", p.board.name)
+            }
             Regime::Temporal(info) => {
                 let slices: Vec<String> = info
                     .time_parts
@@ -634,54 +795,75 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
                     })
                     .collect();
                 format!(
-                    "{} slices {} | period {:.1} ms | dead {:.0}%",
+                    "{} {} slices {} | period {:.1} ms | dead {:.0}%",
+                    p.board.name,
                     p.regime.label(),
                     slices.join("+"),
-                    info.period_cycles as f64 / brd.freq_hz * 1e3,
+                    info.period_cycles as f64 / p.board.freq_hz * 1e3,
                     info.dead_frac * 100.0
                 )
             }
         }
     };
     let show = |label: String, idx: usize| {
-        let p = &result.plans[idx];
+        let p = &set.plans[idx];
         println!("  {label} [{}]:", describe(p));
-        for ((t, fps), lat) in p.tenants.iter().zip(&p.fps).zip(&p.latency_s) {
+        for t in &p.tenants {
+            let (fps, lat, dsps, bram) = match &t.record {
+                Some(r) => (
+                    format!("{:>9.1}", r.fps),
+                    format!("{:>7.2}", r.latency_s * 1e3),
+                    r.dsps,
+                    r.bram18,
+                ),
+                None => ("        -".to_string(), "      -".to_string(), 0, 0),
+            };
             println!(
                 "    {:<10} Θ {:>2}/{steps}  α {:>2}/{steps}  {:>4} DSPs {:>5} BRAM18 \
-                 {:>9.1} fps  lat {:>7.2} ms",
-                t.alloc.net.name,
-                t.dsp_parts,
-                t.bram_parts,
-                t.report.dsps,
-                t.report.bram18,
-                fps,
-                lat * 1e3
+                 {fps} fps  lat {lat} ms",
+                t.net.name, t.dsp_parts, t.bram_parts, dsps, bram,
             );
         }
     };
     show(
-        format!("best min-fps ({:.1})", result.plans[result.best_min].min_fps),
-        result.best_min,
+        format!(
+            "best min-fps ({:.1})",
+            set.plans[set.best_min].min_fps().unwrap_or(f64::NAN)
+        ),
+        set.best_min,
     );
     show(
         format!(
             "best weighted-fps ({:.1})",
-            result.plans[result.best_weighted].weighted_fps
+            set.plans[set.best_weighted].weighted_fps().unwrap_or(f64::NAN)
         ),
-        result.best_weighted,
+        set.best_weighted,
     );
-    println!("  frontier (regime | split | per-tenant fps | worst-case latency):");
-    for &i in &result.frontier {
-        let p = &result.plans[i];
-        let fps: Vec<String> = p.fps.iter().map(|f| format!("{f:.1}")).collect();
-        let lat: Vec<String> = p.latency_s.iter().map(|l| format!("{:.1}", l * 1e3)).collect();
-        let sim = match &p.sim {
-            Some(s) => format!(
-                "  [sim {}]",
-                s.iter().map(|r| format!("{:.1}", r.fps)).collect::<Vec<_>>().join("/")
-            ),
-            None => String::new(),
+    println!("  frontier (board/regime | split | per-tenant fps | worst-case latency):");
+    for &i in &set.frontier {
+        let p = &set.plans[i];
+        let fps: Vec<String> = p
+            .fps_vec()
+            .unwrap_or_default()
+            .iter()
+            .map(|f| format!("{f:.1}"))
+            .collect();
+        let lat: Vec<String> = p
+            .latency_vec()
+            .unwrap_or_default()
+            .iter()
+            .map(|l| format!("{:.1}", l * 1e3))
+            .collect();
+        let sim: Vec<String> = p
+            .tenants
+            .iter()
+            .filter_map(|t| t.record.as_ref().and_then(|r| r.sim_fps))
+            .map(|f| format!("{f:.1}"))
+            .collect();
+        let sim = if sim.is_empty() {
+            String::new()
+        } else {
+            format!("  [sim {}]", sim.join("/"))
         };
         println!(
             "    {} | {} fps | {} ms{}",
@@ -691,11 +873,11 @@ fn cmd_shard(args: &Args) -> flexipipe::Result<()> {
             sim
         );
     }
-    let json = shard::result_to_json(&result, steps).to_pretty();
+    let json = set.to_json().to_pretty();
     match args.get("json") {
         Some(path) => {
             std::fs::write(path, &json)?;
-            println!("per-tenant allocations + frontier JSON written to {path}");
+            println!("deployment plans (frontier + objective picks) written to {path}");
         }
         None => println!("{json}"),
     }

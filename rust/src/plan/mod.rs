@@ -1,0 +1,1449 @@
+//! Plan-centric public API: `Workload` → [`Planner`] → [`DeploymentPlan`].
+//!
+//! The paper's framework is one flow — describe the CNN workload and the
+//! board, allocate balanced resources (Sec. 4), validate by simulation,
+//! deploy — and this module is that flow as an API. Three pieces:
+//!
+//! - [`Workload`]: *what* must be served — tenant models with weights and
+//!   typed [`Constraint`]s (latency SLO ceilings, fps floors) plus the
+//!   [`Objective`] used to pick among feasible plans.
+//! - [`Planner`]: *how* to map it — one builder routing to solo
+//!   allocation (a one-tenant workload is the plain Sec. 4 allocator),
+//!   spatial / temporal / overlay board sharing
+//!   ([`crate::shard::Sharder`]), or a multi-board sweep (each board's
+//!   plan space is enumerated and the results merge into one frontier;
+//!   for full grid sweeps over models × precisions × budgets, see
+//!   [`crate::search::DesignSpace`], which this facade fronts for the
+//!   board axis).
+//! - [`DeploymentPlan`]: *the artifact* — a versioned, JSON-serializable
+//!   record of one feasible deployment (per-tenant θ/α quanta, schedule
+//!   layout, reconfiguration model, provisioned DDR shares) that is the
+//!   only currency between subsystems: [`crate::sim::Simulate`] executes
+//!   it, [`crate::coordinator::Coordinator::start_planned`] serves it,
+//!   and a plan written to disk re-simulates **bit-identically** to the
+//!   in-process search (regression-pinned), so plans can be diffed,
+//!   shipped, and regression-tested as files.
+//!
+//! ```
+//! use flexipipe::board::zedboard;
+//! use flexipipe::model::zoo;
+//! use flexipipe::plan::{Planner, Workload};
+//! use flexipipe::quant::QuantMode;
+//! use flexipipe::sim::{Simulate, Simulator};
+//!
+//! let workload = Workload::new(QuantMode::W8A8)
+//!     .tenant(zoo::tinycnn())
+//!     .tenant(zoo::lenet());
+//! let set = Planner::on(zedboard()).steps(8).plan(&workload).unwrap();
+//! let plan = &set.plans[set.best];
+//! let report = Simulator::default().simulate(plan).unwrap();
+//! assert!(report.tenants.iter().all(|r| r.fps > 0.0));
+//! ```
+
+use crate::alloc::flex::FlexAllocator;
+use crate::alloc::{Allocation, Allocator};
+use crate::board::Board;
+use crate::engine::EngineConfig;
+use crate::model::{config, Network};
+use crate::quant::QuantMode;
+use crate::shard::{
+    self, ReconfigModel, Regime, ScheduleMode, ShardPlan, Sharder, SliceSpec, TemporalInfo, Tenant,
+};
+use crate::util::json::{self, num, obj, Value};
+use std::path::Path;
+
+/// The deployment-plan format version this build reads and writes.
+/// [`DeploymentPlan::from_json`] rejects any other value, so a plan file
+/// can never be silently misinterpreted across format changes.
+pub const PLAN_VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// Workload
+// ---------------------------------------------------------------------------
+
+/// One typed requirement a plan must satisfy for a tenant. Constraints are
+/// admission filters: every regime's planner drops plans violating any of
+/// a tenant's constraints before the frontier reduction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Constraint {
+    /// Latency ceiling in seconds: the tenant's worst-case frame sojourn
+    /// (arrival → completion) must not exceed this (the CLI's
+    /// `--slo model=33ms`). Several `Slo` constraints combine to the
+    /// tightest.
+    Slo(f64),
+    /// Throughput floor in frames/second: the tenant's effective rate
+    /// must be at least this (the CLI's `--min-fps model=25`), so
+    /// meeting one tenant's SLO can never starve a throughput tenant.
+    /// Several `MinFps` constraints combine to the highest.
+    MinFps(f64),
+}
+
+/// One tenant of a [`Workload`]: a model, its weight in the weighted-fps
+/// objective, and its [`Constraint`]s.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// The model this tenant serves.
+    pub net: Network,
+    /// Relative importance in the weighted-fps objective (default 1.0).
+    pub weight: f64,
+    /// Admission constraints (SLO ceilings, fps floors).
+    pub constraints: Vec<Constraint>,
+}
+
+impl TenantSpec {
+    /// Tenant with unit weight and no constraints.
+    pub fn new(net: Network) -> TenantSpec {
+        TenantSpec {
+            net,
+            weight: 1.0,
+            constraints: Vec::new(),
+        }
+    }
+
+    /// Set the tenant's weighted-fps weight.
+    pub fn weight(mut self, weight: f64) -> TenantSpec {
+        self.weight = weight;
+        self
+    }
+
+    /// Add a worst-case frame-sojourn ceiling ([`Constraint::Slo`], seconds).
+    pub fn slo(mut self, seconds: f64) -> TenantSpec {
+        self.constraints.push(Constraint::Slo(seconds));
+        self
+    }
+
+    /// Add an effective-fps floor ([`Constraint::MinFps`]).
+    pub fn min_fps(mut self, fps: f64) -> TenantSpec {
+        self.constraints.push(Constraint::MinFps(fps));
+        self
+    }
+}
+
+/// Which scalar pick [`Planner::plan`] labels `best`. The full Pareto
+/// frontier over per-tenant (fps ↑, worst-case latency ↓) vectors is
+/// always returned alongside; the objective only selects one plan from it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Maximize `min_i fps_i` — the egalitarian pick (the default).
+    MaxMinFps,
+    /// Maximize `Σ_i weight_i · fps_i` — the SLA-weighted pick.
+    MaxWeightedFps,
+}
+
+impl Objective {
+    /// CLI/report label (`"min_fps"` / `"weighted_fps"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Objective::MaxMinFps => "min_fps",
+            Objective::MaxWeightedFps => "weighted_fps",
+        }
+    }
+
+    /// Parse a CLI label (`min-fps` or `weighted`, with `_` accepted
+    /// for `-`).
+    pub fn parse(s: &str) -> crate::Result<Objective> {
+        match s {
+            "min-fps" | "min_fps" | "min" => Ok(Objective::MaxMinFps),
+            "weighted" | "weighted-fps" | "weighted_fps" => Ok(Objective::MaxWeightedFps),
+            other => anyhow::bail!("unknown objective '{other}' (min-fps | weighted)"),
+        }
+    }
+}
+
+/// What must be served: tenants (with weights and constraints), the
+/// quantization width they run at, and the scalar [`Objective`].
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Co-resident tenants, in plan order.
+    pub tenants: Vec<TenantSpec>,
+    /// Quantization mode every tenant runs at.
+    pub mode: QuantMode,
+    /// Which feasible plan [`Planner::plan`] labels `best`.
+    pub objective: Objective,
+}
+
+impl Workload {
+    /// Empty workload at the given precision (egalitarian objective).
+    pub fn new(mode: QuantMode) -> Workload {
+        Workload {
+            tenants: Vec::new(),
+            mode,
+            objective: Objective::MaxMinFps,
+        }
+    }
+
+    /// Add an unconstrained unit-weight tenant.
+    pub fn tenant(mut self, net: Network) -> Workload {
+        self.tenants.push(TenantSpec::new(net));
+        self
+    }
+
+    /// Add a fully-specified tenant.
+    pub fn tenant_spec(mut self, spec: TenantSpec) -> Workload {
+        self.tenants.push(spec);
+        self
+    }
+
+    /// Set the scalar objective.
+    pub fn objective(mut self, objective: Objective) -> Workload {
+        self.objective = objective;
+        self
+    }
+
+    /// Apply a constraint to every tenant of the named model (the CLI's
+    /// `--slo` / `--min-fps` lists resolve through here); errors when the
+    /// name matches no tenant — a misspelled model is a bug, not a no-op.
+    pub fn constrain(&mut self, model: &str, constraint: Constraint) -> crate::Result<()> {
+        let mut hit = false;
+        for t in self.tenants.iter_mut().filter(|t| t.net.name == model) {
+            t.constraints.push(constraint);
+            hit = true;
+        }
+        anyhow::ensure!(hit, "constraint names unknown tenant model '{model}'");
+        Ok(())
+    }
+
+    /// Reject empty or malformed workloads with the real cause.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty(), "workload has no tenants");
+        for t in &self.tenants {
+            t.net.validate()?;
+            anyhow::ensure!(
+                t.weight > 0.0 && t.weight.is_finite(),
+                "tenant '{}': weight must be positive and finite",
+                t.net.name
+            );
+            for c in &t.constraints {
+                let v = match c {
+                    Constraint::Slo(s) => *s,
+                    Constraint::MinFps(f) => *f,
+                };
+                anyhow::ensure!(
+                    v > 0.0 && v.is_finite(),
+                    "tenant '{}': constraint bounds must be positive and finite",
+                    t.net.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower to the sharder's tenant form: multiple `Slo` constraints
+    /// combine to the tightest ceiling, multiple `MinFps` to the highest
+    /// floor.
+    pub(crate) fn to_tenants(&self) -> Vec<Tenant> {
+        self.tenants
+            .iter()
+            .map(|s| {
+                let mut t = Tenant::new(s.net.clone(), self.mode);
+                t.weight = s.weight;
+                for c in &s.constraints {
+                    match *c {
+                        Constraint::Slo(v) => {
+                            t.slo_s = Some(t.slo_s.map_or(v, |cur| cur.min(v)));
+                        }
+                        Constraint::MinFps(v) => {
+                            t.min_fps = Some(t.min_fps.map_or(v, |cur| cur.max(v)));
+                        }
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planner
+// ---------------------------------------------------------------------------
+
+/// The one planning facade: routes a [`Workload`] to solo allocation
+/// (one tenant), spatial / temporal / overlay sharding, or a multi-board
+/// sweep, and returns every feasible [`DeploymentPlan`] reduced to a
+/// Pareto frontier plus the objective picks. Field defaults match
+/// [`Sharder::new`]; the chainable setters cover the common knobs and the
+/// fields stay public for struct-update syntax.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    /// Candidate boards. One board plans directly; several enumerate each
+    /// board's plan space and merge the results into one frontier (the
+    /// board axis of a design-space sweep).
+    pub boards: Vec<Board>,
+    /// Split granularity: θ/α (and temporal time) move in `1/steps`
+    /// quanta. Default 16.
+    pub steps: usize,
+    /// Which sharing regimes to enumerate. Default
+    /// [`ScheduleMode::Spatial`].
+    pub schedule: ScheduleMode,
+    /// Temporal-schedule period bound in seconds. Default 0.5.
+    pub max_period_s: f64,
+    /// Largest per-tenant interleave factor (sub-slices per period).
+    /// Default 1.
+    pub max_interleave: usize,
+    /// Partial-reconfiguration cost model (and the overlay synthesis
+    /// overhead factor) temporal plans are scored under.
+    pub reconfig: ReconfigModel,
+    /// Solo DES frames calibrating each tenant's temporal admission.
+    /// Default 6.
+    pub calib_frames: usize,
+    /// Admission ceiling on frames per slice. Default 4096.
+    pub max_slice_frames: usize,
+    /// Frames for the DES validation of frontier plans (0 = closed-form
+    /// only). Validated plans record their simulated fps in the plan
+    /// artifact ([`TenantRecord::sim_fps`]).
+    pub sim_frames: usize,
+}
+
+impl Planner {
+    /// Plan onto one board.
+    pub fn on(board: Board) -> Planner {
+        Planner::across(vec![board])
+    }
+
+    /// Plan across several candidate boards (their plan spaces merge into
+    /// one frontier).
+    pub fn across(boards: Vec<Board>) -> Planner {
+        Planner {
+            boards,
+            steps: 16,
+            schedule: ScheduleMode::Spatial,
+            max_period_s: 0.5,
+            max_interleave: 1,
+            reconfig: ReconfigModel::default(),
+            calib_frames: 6,
+            max_slice_frames: 4096,
+            sim_frames: 0,
+        }
+    }
+
+    /// Set the split granularity.
+    pub fn steps(mut self, steps: usize) -> Planner {
+        self.steps = steps;
+        self
+    }
+
+    /// Set the sharing regime(s) to enumerate.
+    pub fn schedule(mut self, mode: ScheduleMode) -> Planner {
+        self.schedule = mode;
+        self
+    }
+
+    /// Set the temporal period bound (seconds).
+    pub fn max_period(mut self, seconds: f64) -> Planner {
+        self.max_period_s = seconds;
+        self
+    }
+
+    /// Set the largest per-tenant interleave factor.
+    pub fn interleave(mut self, k: usize) -> Planner {
+        self.max_interleave = k;
+        self
+    }
+
+    /// Set the reconfiguration cost model.
+    pub fn reconfig(mut self, model: ReconfigModel) -> Planner {
+        self.reconfig = model;
+        self
+    }
+
+    /// Enable the DES validation pass on frontier plans (`frames` per
+    /// tenant for resident plans; temporal plans execute one full period).
+    pub fn validate(mut self, frames: usize) -> Planner {
+        self.sim_frames = frames;
+        self
+    }
+
+    /// Enumerate the workload's plan space on every board, keep the
+    /// feasible (constraint-satisfying) plans, and reduce them to the
+    /// merged Pareto frontier over per-tenant (fps ↑, worst-case
+    /// latency ↓) vectors. On a single board the plan order, frontier,
+    /// and objective picks are exactly [`Sharder::search`]'s (the facade
+    /// adds no search logic of its own); across boards, per-board plan
+    /// sets concatenate in board order and the frontier is recomputed
+    /// over the union. A board where the workload is infeasible is
+    /// skipped when other boards remain; planning fails only when *no*
+    /// board admits a plan (with every board's reason listed).
+    pub fn plan(&self, workload: &Workload) -> crate::Result<PlanSet> {
+        workload.validate()?;
+        anyhow::ensure!(!self.boards.is_empty(), "planner has no boards");
+        let mut plans: Vec<DeploymentPlan> = Vec::new();
+        let mut errors: Vec<String> = Vec::new();
+        for board in &self.boards {
+            let sharder = Sharder {
+                steps: self.steps,
+                sim_frames: self.sim_frames,
+                schedule: self.schedule,
+                reconfig: self.reconfig.clone(),
+                max_interleave: self.max_interleave,
+                max_period_s: self.max_period_s,
+                calib_frames: self.calib_frames,
+                max_slice_frames: self.max_slice_frames,
+                ..Sharder::new(board.clone(), workload.to_tenants())
+            };
+            match sharder.search() {
+                Ok(result) => {
+                    for p in &result.plans {
+                        plans.push(DeploymentPlan::from_shard(
+                            board,
+                            workload.mode,
+                            self.steps,
+                            &self.reconfig,
+                            &workload.tenants,
+                            p,
+                        )?);
+                    }
+                }
+                Err(e) if self.boards.len() > 1 => errors.push(format!("{}: {e}", board.name)),
+                Err(e) => return Err(e),
+            }
+        }
+        anyhow::ensure!(
+            !plans.is_empty(),
+            "plan: the workload is infeasible on every candidate board:\n{}",
+            errors.join("\n")
+        );
+
+        let objectives: Vec<(Vec<f64>, Vec<f64>)> = plans
+            .iter()
+            .map(|p| {
+                (
+                    p.fps_vec().expect("planner-produced plans carry records"),
+                    p.latency_vec().expect("planner-produced plans carry records"),
+                )
+            })
+            .collect();
+        let frontier: Vec<usize> = (0..plans.len())
+            .filter(|&i| {
+                !(0..plans.len()).any(|j| {
+                    j != i
+                        && shard::vec_dominates(
+                            &objectives[j].0,
+                            &objectives[j].1,
+                            &objectives[i].0,
+                            &objectives[i].1,
+                        )
+                })
+            })
+            .collect();
+        let argmax = |key: &dyn Fn(&DeploymentPlan) -> f64| -> usize {
+            let mut best = 0;
+            for i in 1..plans.len() {
+                if key(&plans[i]) > key(&plans[best]) {
+                    best = i;
+                }
+            }
+            best
+        };
+        let best_min = argmax(&|p| p.min_fps().unwrap_or(f64::NEG_INFINITY));
+        let best_weighted = argmax(&|p| p.weighted_fps().unwrap_or(f64::NEG_INFINITY));
+        let best = match workload.objective {
+            Objective::MaxMinFps => best_min,
+            Objective::MaxWeightedFps => best_weighted,
+        };
+        Ok(PlanSet {
+            plans,
+            frontier,
+            best_min,
+            best_weighted,
+            best,
+            objective: workload.objective,
+        })
+    }
+}
+
+/// [`Planner::plan`]'s output: every feasible plan plus the interesting
+/// subsets.
+#[derive(Debug, Clone)]
+pub struct PlanSet {
+    /// All feasible plans, boards concatenated in planner order, each
+    /// board's plans in its deterministic enumeration order.
+    pub plans: Vec<DeploymentPlan>,
+    /// Indices of the non-dominated plans under the merged per-tenant
+    /// (fps ↑, worst-case latency ↓) objective.
+    pub frontier: Vec<usize>,
+    /// Index of the plan maximizing min-fps (first wins ties).
+    pub best_min: usize,
+    /// Index of the plan maximizing weighted fps (first wins ties).
+    pub best_weighted: usize,
+    /// Index of the workload-objective pick (`best_min` or
+    /// `best_weighted`).
+    pub best: usize,
+    /// The objective that selected `best`.
+    pub objective: Objective,
+}
+
+impl PlanSet {
+    /// JSON document for `flexipipe plan --json`: the frontier plans, the
+    /// objective pick inline under `best` (what [`DeploymentPlan::load`]
+    /// reads, so one file feeds `flexipipe simulate --plan` and
+    /// `flexipipe serve --plan`), and the scalar picks as *indices into
+    /// the `frontier` array* (`null` in the rare case a tie-broken pick
+    /// is not itself on the frontier) — plans embed whole networks, so
+    /// the picks are referenced rather than copied.
+    pub fn to_json(&self) -> Value {
+        let in_frontier = |i: usize| -> Value {
+            match self.frontier.iter().position(|&f| f == i) {
+                Some(pos) => num(pos),
+                None => Value::Null,
+            }
+        };
+        obj(vec![
+            ("version", num(PLAN_VERSION)),
+            ("objective", Value::Str(self.objective.label().to_string())),
+            ("feasible_plans", num(self.plans.len())),
+            (
+                "frontier",
+                Value::Arr(self.frontier.iter().map(|&i| self.plans[i].to_json()).collect()),
+            ),
+            ("best_min_fps_frontier_index", in_frontier(self.best_min)),
+            ("best_weighted_fps_frontier_index", in_frontier(self.best_weighted)),
+            ("best_frontier_index", in_frontier(self.best)),
+            ("best", self.plans[self.best].to_json()),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeploymentPlan
+// ---------------------------------------------------------------------------
+
+/// Planning-time figures recorded for one tenant. Informational: the plan
+/// re-derives ground truth by re-running the (deterministic) allocator and
+/// DES on load, so hand-authored plans may omit the record entirely — but
+/// planner-produced records let a consumer diff a plan's promises against
+/// a later re-simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRecord {
+    /// Analytic effective fps the planner scored this tenant at.
+    pub fps: f64,
+    /// Analytic worst-case frame sojourn in seconds.
+    pub latency_s: f64,
+    /// DSP slices the tenant's pipeline uses.
+    pub dsps: usize,
+    /// BRAM18 blocks the tenant's pipeline uses.
+    pub bram18: usize,
+    /// DES-confirmed fps, when the planner ran its validation pass —
+    /// what a later [`crate::sim::Simulate`] run reproduces
+    /// bit-identically.
+    pub sim_fps: Option<f64>,
+}
+
+/// One tenant's slice of a [`DeploymentPlan`].
+#[derive(Debug, Clone)]
+pub struct PlanTenant {
+    /// The model, embedded in full (a plan file is self-contained — no
+    /// zoo or path lookups on load).
+    pub net: Network,
+    /// Weighted-fps weight.
+    pub weight: f64,
+    /// The constraints this tenant was admitted under.
+    pub constraints: Vec<Constraint>,
+    /// DSP-side quanta (`dsp_parts/steps` of Θ, LUT/FF, and β). Temporal
+    /// tenants hold the whole board (`dsp_parts == steps`) during their
+    /// slices.
+    pub dsp_parts: usize,
+    /// BRAM quanta (`bram_parts/steps` of α).
+    pub bram_parts: usize,
+    /// Provisioned share of the physical DDR port this tenant's streams
+    /// receive (spatial: `dsp_parts/steps`, the split Algorithm 2
+    /// budgeted; temporal: 1.0 — the full port during its slice).
+    pub ddr_share: f64,
+    /// Per-stage engine configs `(C', M', K)` recorded for drift
+    /// detection: [`DeploymentPlan::instantiate`] re-runs the allocator
+    /// and errors if its output diverges from the record (empty = skip
+    /// the check, for hand-authored plans).
+    pub stages: Vec<EngineConfig>,
+    /// Planning-time figures (`None` for hand-authored plans).
+    pub record: Option<TenantRecord>,
+}
+
+/// A versioned, serializable deployment: the single artifact passed
+/// between planning ([`Planner`]), simulation ([`crate::sim::Simulate`]),
+/// and serving ([`crate::coordinator::Coordinator::start_planned`]).
+///
+/// A plan is **self-contained** (board resource model and tenant networks
+/// embedded) and **reconstructible**: it stores the θ/α quanta and the
+/// schedule layout, and [`DeploymentPlan::instantiate`] re-derives each
+/// tenant's exact [`Allocation`] with the deterministic Sec. 4 allocator,
+/// cross-checking the recorded stage configs. JSON round-trips preserve
+/// every `f64` bit (shortest-round-trip float formatting), so a plan
+/// written to disk re-simulates bit-identically to the in-process search.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    /// Format version ([`PLAN_VERSION`] when produced by this build).
+    pub version: usize,
+    /// The physical board, resource model embedded.
+    pub board: Board,
+    /// Quantization mode every tenant runs at.
+    pub mode: QuantMode,
+    /// Split granularity the θ/α (and time) quanta are expressed in.
+    pub steps: usize,
+    /// Per-tenant slices, in plan order.
+    pub tenants: Vec<PlanTenant>,
+    /// The sharing regime, including the full temporal schedule layout
+    /// for time-multiplexed and overlay plans.
+    pub regime: Regime,
+    /// Reconfiguration cost model the schedule was planned under
+    /// (including the overlay synthesis overhead factor).
+    pub reconfig: ReconfigModel,
+}
+
+impl DeploymentPlan {
+    /// Build a plan from one [`Sharder`] result plan (what [`Planner`]
+    /// emits; public so custom `Sharder` drivers can produce the same
+    /// artifact). `specs` supplies the workload-level weight/constraint
+    /// data the `ShardPlan` does not carry, in the same tenant order —
+    /// a length mismatch is an error, not a panic.
+    pub fn from_shard(
+        board: &Board,
+        mode: QuantMode,
+        steps: usize,
+        reconfig: &ReconfigModel,
+        specs: &[TenantSpec],
+        plan: &ShardPlan,
+    ) -> crate::Result<DeploymentPlan> {
+        anyhow::ensure!(
+            specs.len() == plan.tenants.len(),
+            "one TenantSpec per ShardPlan tenant ({} specs vs {} tenants)",
+            specs.len(),
+            plan.tenants.len()
+        );
+        let tenants = plan
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| PlanTenant {
+                net: specs[i].net.clone(),
+                weight: specs[i].weight,
+                constraints: specs[i].constraints.clone(),
+                dsp_parts: t.dsp_parts,
+                bram_parts: t.bram_parts,
+                ddr_share: match &plan.regime {
+                    Regime::Spatial => t.dsp_parts as f64 / steps as f64,
+                    Regime::Temporal(_) => 1.0,
+                },
+                stages: t.alloc.stages.iter().map(|s| s.cfg).collect(),
+                record: Some(TenantRecord {
+                    fps: plan.fps[i],
+                    latency_s: plan.latency_s[i],
+                    dsps: t.report.dsps,
+                    bram18: t.report.bram18,
+                    sim_fps: plan.sim.as_ref().map(|s| s[i].fps),
+                }),
+            })
+            .collect();
+        Ok(DeploymentPlan {
+            version: PLAN_VERSION,
+            board: board.clone(),
+            mode,
+            steps,
+            tenants,
+            regime: plan.regime.clone(),
+            reconfig: reconfig.clone(),
+        })
+    }
+
+    /// Recorded per-tenant fps vector (`None` when any tenant lacks a
+    /// record).
+    pub fn fps_vec(&self) -> Option<Vec<f64>> {
+        self.tenants.iter().map(|t| t.record.as_ref().map(|r| r.fps)).collect()
+    }
+
+    /// Recorded per-tenant worst-case latency vector (seconds).
+    pub fn latency_vec(&self) -> Option<Vec<f64>> {
+        self.tenants
+            .iter()
+            .map(|t| t.record.as_ref().map(|r| r.latency_s))
+            .collect()
+    }
+
+    /// Recorded min-fps objective.
+    pub fn min_fps(&self) -> Option<f64> {
+        self.fps_vec()
+            .map(|v| v.into_iter().fold(f64::INFINITY, f64::min))
+    }
+
+    /// Recorded weighted-fps objective.
+    pub fn weighted_fps(&self) -> Option<f64> {
+        self.fps_vec().map(|v| {
+            v.iter()
+                .zip(&self.tenants)
+                .map(|(f, t)| f * t.weight)
+                .sum()
+        })
+    }
+
+    /// Rebuild every tenant's exact [`Allocation`] from the plan: cut the
+    /// tenant's sub-board from the embedded board model, run the
+    /// deterministic Sec. 4 allocator on it, check the result fits the
+    /// slice, and cross-check the recorded stage configs (a mismatch
+    /// means the plan was produced by a different allocator version —
+    /// the error says to regenerate it). This is the single rehydration
+    /// path under both [`crate::sim::Simulate`] and
+    /// [`crate::coordinator::Coordinator::start_planned`].
+    pub fn instantiate(&self) -> crate::Result<Vec<Allocation>> {
+        anyhow::ensure!(
+            self.version == PLAN_VERSION,
+            "unsupported deployment-plan version {} (this build reads version {PLAN_VERSION})",
+            self.version
+        );
+        anyhow::ensure!(!self.tenants.is_empty(), "deployment plan has no tenants");
+        anyhow::ensure!(self.steps >= 1, "deployment plan has zero split steps");
+        // Hand-authored files can carry nonphysical numbers; refuse them
+        // here rather than let 0/0 and ∞ propagate into the DES figures.
+        anyhow::ensure!(
+            self.board.freq_hz > 0.0
+                && self.board.freq_hz.is_finite()
+                && self.board.ddr_bytes_per_sec > 0.0
+                && self.board.ddr_bytes_per_sec.is_finite(),
+            "plan board has nonphysical rates (freq_hz {}, ddr_bytes_per_sec {})",
+            self.board.freq_hz,
+            self.board.ddr_bytes_per_sec
+        );
+        anyhow::ensure!(
+            self.reconfig.overlay_overhead >= 1.0,
+            "plan reconfig model has overlay_overhead {} < 1.0 (the element-wise-max \
+             footprint is already the optimistic bound — the planner rejects this too)",
+            self.reconfig.overlay_overhead
+        );
+        // Regime-level schedule validation up front: hand-authored plans
+        // are a supported input, so a malformed schedule must be refused
+        // with the real cause here — never panic inside the DES engines.
+        match &self.regime {
+            Regime::Spatial => {
+                // Aggregate feasibility: the slices must partition (not
+                // oversubscribe) the physical board and the DDR port.
+                let dsp: usize = self.tenants.iter().map(|t| t.dsp_parts).sum();
+                let bram: usize = self.tenants.iter().map(|t| t.bram_parts).sum();
+                anyhow::ensure!(
+                    dsp <= self.steps && bram <= self.steps,
+                    "spatial plan oversubscribes the board: Θ quanta sum to {dsp} and α \
+                     quanta to {bram} of {} steps",
+                    self.steps
+                );
+                let share: f64 = self.tenants.iter().map(|t| t.ddr_share).sum();
+                anyhow::ensure!(
+                    share <= 1.0 + 1e-9,
+                    "spatial plan oversubscribes the DDR port: provisioned shares sum to \
+                     {share:.6}"
+                );
+            }
+            Regime::Temporal(info) if info.period_cycles == 0 => {
+                // The degenerate schedule is continuous solo operation —
+                // it only exists for a lone tenant.
+                anyhow::ensure!(
+                    self.tenants.len() == 1,
+                    "temporal plan has period_cycles = 0 (continuous solo) but declares \
+                     {} tenants",
+                    self.tenants.len()
+                );
+            }
+            Regime::Temporal(info) => {
+                anyhow::ensure!(
+                    info.slices.iter().all(|s| s.tenant < self.tenants.len()),
+                    "schedule slice references a tenant the plan does not declare"
+                );
+                // Every tenant must actually be served: the schedule
+                // executor requires ≥ 1 sub-slice with ≥ 1 admitted frame
+                // per tenant (anything else is a plan that silently — or
+                // loudly — drops a tenant).
+                for t in 0..self.tenants.len() {
+                    anyhow::ensure!(
+                        info.slices.iter().any(|s| s.tenant == t && s.frames >= 1),
+                        "temporal schedule admits no frames for tenant {t} ('{}')",
+                        self.tenants[t].net.name
+                    );
+                }
+                // Temporal tenants hold the whole board during their
+                // slices (the field contract `dsp_parts == steps`).
+                anyhow::ensure!(
+                    self.tenants
+                        .iter()
+                        .all(|t| t.dsp_parts == self.steps && t.bram_parts == self.steps),
+                    "temporal plan tenants must hold the whole board during their slices \
+                     (θ/α quanta == steps)"
+                );
+            }
+        }
+        let mut out = Vec::with_capacity(self.tenants.len());
+        for (i, t) in self.tenants.iter().enumerate() {
+            t.net.validate()?;
+            anyhow::ensure!(
+                (1..=self.steps).contains(&t.dsp_parts)
+                    && (1..=self.steps).contains(&t.bram_parts),
+                "tenant {i} ('{}'): θ/α quanta out of range (1..={} of {} steps)",
+                t.net.name,
+                self.steps,
+                self.steps
+            );
+            anyhow::ensure!(
+                t.ddr_share > 0.0 && t.ddr_share <= 1.0,
+                "tenant {i} ('{}'): DDR share {} outside (0, 1]",
+                t.net.name,
+                t.ddr_share
+            );
+            let sub = shard::sub_board(&self.board, t.dsp_parts, t.bram_parts, self.steps);
+            let alloc = FlexAllocator::default().allocate(&t.net, &sub, self.mode)?;
+            let report = alloc.evaluate();
+            anyhow::ensure!(
+                report.dsps <= sub.dsps && report.bram18 <= sub.bram18(),
+                "tenant {i} ('{}') no longer fits its slice ({}/{} DSPs, {}/{} BRAM18) — \
+                 the plan is infeasible on this board model",
+                t.net.name,
+                report.dsps,
+                sub.dsps,
+                report.bram18,
+                sub.bram18()
+            );
+            if !t.stages.is_empty() {
+                let got: Vec<EngineConfig> = alloc.stages.iter().map(|s| s.cfg).collect();
+                anyhow::ensure!(
+                    got == t.stages,
+                    "tenant {i} ('{}'): this build's allocator produced different stage \
+                     configs than the plan records — the plan was built by a different \
+                     allocator version; regenerate it with `flexipipe plan`",
+                    t.net.name
+                );
+            }
+            out.push(alloc);
+        }
+        Ok(out)
+    }
+
+    /// Serialize to the versioned JSON plan format (deterministic field
+    /// order; every `f64` round-trips bit-exactly).
+    pub fn to_json(&self) -> Value {
+        let tenants: Vec<Value> = self.tenants.iter().map(tenant_to_json).collect();
+        let mut pairs = vec![
+            ("version", num(self.version)),
+            ("board", board_to_json(&self.board)),
+            ("bits", num(self.mode.bits())),
+            ("steps", num(self.steps)),
+            ("regime", Value::Str(self.regime.label().to_string())),
+            ("reconfig", reconfig_to_json(&self.reconfig)),
+            ("tenants", Value::Arr(tenants)),
+        ];
+        if let Regime::Temporal(info) = &self.regime {
+            pairs.push(("temporal", temporal_to_json(info)));
+        }
+        obj(pairs)
+    }
+
+    /// Deserialize from the versioned JSON plan format. Rejects unknown
+    /// `version` values outright (satellite-pinned), so a plan file can
+    /// never be silently misread across format changes.
+    pub fn from_json(v: &Value) -> crate::Result<DeploymentPlan> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "unsupported deployment-plan version {version} (this build reads version \
+             {PLAN_VERSION}) — regenerate the plan with `flexipipe plan`"
+        );
+        let board = board_from_json(v.req("board")?)?;
+        let mode = QuantMode::from_bits(v.usize_field("bits")?)?;
+        let steps = v.usize_field("steps")?;
+        let tenants = v
+            .req("tenants")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'tenants' must be an array"))?
+            .iter()
+            .map(tenant_from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        anyhow::ensure!(!tenants.is_empty(), "deployment plan has no tenants");
+        let reconfig = reconfig_from_json(v.req("reconfig")?)?;
+        let label = v.str_field("regime")?;
+        let regime = match label {
+            "spatial" => {
+                anyhow::ensure!(
+                    v.get("temporal").is_none(),
+                    "spatial plan carries a 'temporal' section"
+                );
+                Regime::Spatial
+            }
+            "temporal" | "overlay" => {
+                let info = temporal_from_json(v.req("temporal")?)?;
+                anyhow::ensure!(
+                    (label == "overlay") == info.overlay,
+                    "regime label '{label}' contradicts the schedule's overlay flag"
+                );
+                Regime::Temporal(info)
+            }
+            other => anyhow::bail!("unknown regime '{other}' (spatial temporal overlay)"),
+        };
+        Ok(DeploymentPlan {
+            version,
+            board,
+            mode,
+            steps,
+            tenants,
+            regime,
+            reconfig,
+        })
+    }
+
+    /// Write the plan to a file (pretty-printed JSON).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a plan from a file. Accepts either a bare plan object or a
+    /// whole `flexipipe plan --json` document (a [`PlanSet`] dump), in
+    /// which case the `best` plan is read — so the planner's output file
+    /// feeds `simulate --plan` / `serve --plan` directly.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<DeploymentPlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        let v = json::parse(&text)?;
+        match v.get("best") {
+            Some(best) => DeploymentPlan::from_json(best),
+            None => DeploymentPlan::from_json(&v),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON field codecs
+// ---------------------------------------------------------------------------
+
+fn board_to_json(b: &Board) -> Value {
+    obj(vec![
+        ("name", Value::Str(b.name.clone())),
+        ("dsps", num(b.dsps)),
+        ("luts", num(b.luts)),
+        ("ffs", num(b.ffs)),
+        ("bram36", num(b.bram36)),
+        ("ddr_bytes_per_sec", Value::Num(b.ddr_bytes_per_sec)),
+        ("freq_hz", Value::Num(b.freq_hz)),
+    ])
+}
+
+fn board_from_json(v: &Value) -> crate::Result<Board> {
+    Ok(Board {
+        name: v.str_field("name")?.to_string(),
+        dsps: v.usize_field("dsps")?,
+        luts: v.usize_field("luts")?,
+        ffs: v.usize_field("ffs")?,
+        bram36: v.usize_field("bram36")?,
+        ddr_bytes_per_sec: v.f64_field("ddr_bytes_per_sec")?,
+        freq_hz: v.f64_field("freq_hz")?,
+    })
+}
+
+fn reconfig_to_json(m: &ReconfigModel) -> Value {
+    obj(vec![
+        ("bytes_per_lut", Value::Num(m.bytes_per_lut)),
+        ("bytes_per_dsp", Value::Num(m.bytes_per_dsp)),
+        ("bytes_per_bram18", Value::Num(m.bytes_per_bram18)),
+        ("base_bytes", Value::Num(m.base_bytes)),
+        ("port_bytes_per_sec", Value::Num(m.port_bytes_per_sec)),
+        ("overlay_overhead", Value::Num(m.overlay_overhead)),
+    ])
+}
+
+fn reconfig_from_json(v: &Value) -> crate::Result<ReconfigModel> {
+    Ok(ReconfigModel {
+        bytes_per_lut: v.f64_field("bytes_per_lut")?,
+        bytes_per_dsp: v.f64_field("bytes_per_dsp")?,
+        bytes_per_bram18: v.f64_field("bytes_per_bram18")?,
+        base_bytes: v.f64_field("base_bytes")?,
+        port_bytes_per_sec: v.f64_field("port_bytes_per_sec")?,
+        overlay_overhead: v.f64_field("overlay_overhead")?,
+    })
+}
+
+fn constraint_to_json(c: &Constraint) -> Value {
+    match c {
+        Constraint::Slo(s) => obj(vec![
+            ("kind", Value::Str("slo".to_string())),
+            ("seconds", Value::Num(*s)),
+        ]),
+        Constraint::MinFps(f) => obj(vec![
+            ("kind", Value::Str("min_fps".to_string())),
+            ("fps", Value::Num(*f)),
+        ]),
+    }
+}
+
+fn constraint_from_json(v: &Value) -> crate::Result<Constraint> {
+    match v.str_field("kind")? {
+        "slo" => Ok(Constraint::Slo(v.f64_field("seconds")?)),
+        "min_fps" => Ok(Constraint::MinFps(v.f64_field("fps")?)),
+        other => anyhow::bail!("unknown constraint kind '{other}' (slo min_fps)"),
+    }
+}
+
+fn tenant_to_json(t: &PlanTenant) -> Value {
+    let mut pairs = vec![
+        ("model", config::to_json(&t.net)),
+        ("weight", Value::Num(t.weight)),
+        (
+            "constraints",
+            Value::Arr(t.constraints.iter().map(constraint_to_json).collect()),
+        ),
+        ("dsp_parts", num(t.dsp_parts)),
+        ("bram_parts", num(t.bram_parts)),
+        ("ddr_share", Value::Num(t.ddr_share)),
+    ];
+    if !t.stages.is_empty() {
+        pairs.push((
+            "stages",
+            Value::Arr(
+                t.stages
+                    .iter()
+                    .map(|c| {
+                        obj(vec![("cp", num(c.cp)), ("mp", num(c.mp)), ("k", num(c.k))])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    if let Some(r) = &t.record {
+        let mut rec = vec![
+            ("fps", Value::Num(r.fps)),
+            ("latency_s", Value::Num(r.latency_s)),
+            ("dsps", num(r.dsps)),
+            ("bram18", num(r.bram18)),
+        ];
+        if let Some(sf) = r.sim_fps {
+            rec.push(("sim_fps", Value::Num(sf)));
+        }
+        pairs.push(("record", obj(rec)));
+    }
+    obj(pairs)
+}
+
+fn tenant_from_json(v: &Value) -> crate::Result<PlanTenant> {
+    let net = config::from_json(v.req("model")?)?;
+    let constraints = v
+        .req("constraints")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'constraints' must be an array"))?
+        .iter()
+        .map(constraint_from_json)
+        .collect::<crate::Result<Vec<_>>>()?;
+    let stages = match v.get("stages") {
+        None => Vec::new(),
+        Some(s) => s
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'stages' must be an array"))?
+            .iter()
+            .map(|c| {
+                Ok(EngineConfig {
+                    cp: c.usize_field("cp")?,
+                    mp: c.usize_field("mp")?,
+                    k: c.usize_field("k")?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?,
+    };
+    let record = match v.get("record") {
+        None => None,
+        Some(r) => Some(TenantRecord {
+            fps: r.f64_field("fps")?,
+            latency_s: r.f64_field("latency_s")?,
+            dsps: r.usize_field("dsps")?,
+            bram18: r.usize_field("bram18")?,
+            sim_fps: match r.get("sim_fps") {
+                None => None,
+                Some(s) => Some(
+                    s.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'sim_fps' must be a number"))?,
+                ),
+            },
+        }),
+    };
+    Ok(PlanTenant {
+        net,
+        weight: v.f64_field("weight")?,
+        constraints,
+        dsp_parts: v.usize_field("dsp_parts")?,
+        bram_parts: v.usize_field("bram_parts")?,
+        ddr_share: v.f64_field("ddr_share")?,
+        stages,
+        record,
+    })
+}
+
+fn temporal_to_json(info: &TemporalInfo) -> Value {
+    let usizes = |v: &[usize]| Value::Arr(v.iter().map(|&x| num(x)).collect());
+    let u64s = |v: &[u64]| Value::Arr(v.iter().map(|&x| Value::Num(x as f64)).collect());
+    obj(vec![
+        ("time_parts", usizes(&info.time_parts)),
+        ("interleave", usizes(&info.interleave)),
+        ("quantum_cycles", Value::Num(info.quantum_cycles as f64)),
+        ("period_cycles", Value::Num(info.period_cycles as f64)),
+        ("frames", usizes(&info.frames)),
+        ("reconfig_cycles", u64s(&info.reconfig_cycles)),
+        ("fill_cycles", u64s(&info.fill_cycles)),
+        ("beat_cycles", u64s(&info.beat_cycles)),
+        ("latency_cycles", u64s(&info.latency_cycles)),
+        ("overlay", Value::Bool(info.overlay)),
+        ("dead_frac", Value::Num(info.dead_frac)),
+        (
+            "slices",
+            Value::Arr(
+                info.slices
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("tenant", num(s.tenant)),
+                            ("parts", num(s.parts)),
+                            ("frames", num(s.frames)),
+                            ("reconfig_cycles", Value::Num(s.reconfig_cycles as f64)),
+                            ("overlap_cycles", Value::Num(s.overlap_cycles as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn u64_field(v: &Value, key: &str) -> crate::Result<u64> {
+    v.req(key)?
+        .as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a non-negative integer"))
+}
+
+fn usize_list(v: &Value, key: &str) -> crate::Result<Vec<usize>> {
+    v.req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))?
+        .iter()
+        .map(|e| {
+            e.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' entries must be non-negative integers"))
+        })
+        .collect()
+}
+
+fn u64_list(v: &Value, key: &str) -> crate::Result<Vec<u64>> {
+    Ok(usize_list(v, key)?.into_iter().map(|x| x as u64).collect())
+}
+
+fn temporal_from_json(v: &Value) -> crate::Result<TemporalInfo> {
+    let slices = v
+        .req("slices")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'slices' must be an array"))?
+        .iter()
+        .map(|s| {
+            Ok(SliceSpec {
+                tenant: s.usize_field("tenant")?,
+                parts: s.usize_field("parts")?,
+                frames: s.usize_field("frames")?,
+                reconfig_cycles: u64_field(s, "reconfig_cycles")?,
+                overlap_cycles: u64_field(s, "overlap_cycles")?,
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(TemporalInfo {
+        time_parts: usize_list(v, "time_parts")?,
+        interleave: usize_list(v, "interleave")?,
+        slices,
+        quantum_cycles: u64_field(v, "quantum_cycles")?,
+        period_cycles: u64_field(v, "period_cycles")?,
+        frames: usize_list(v, "frames")?,
+        reconfig_cycles: u64_list(v, "reconfig_cycles")?,
+        fill_cycles: u64_list(v, "fill_cycles")?,
+        beat_cycles: u64_list(v, "beat_cycles")?,
+        latency_cycles: u64_list(v, "latency_cycles")?,
+        overlay: v.bool_field("overlay")?,
+        dead_frac: v.f64_field("dead_frac")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zedboard;
+    use crate::model::zoo;
+
+    #[test]
+    fn workload_builder_collects_tenants_and_constraints() {
+        let mut w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant_spec(TenantSpec::new(zoo::lenet()).weight(2.0).slo(0.05).min_fps(10.0))
+            .objective(Objective::MaxWeightedFps);
+        assert_eq!(w.tenants.len(), 2);
+        assert_eq!(w.objective, Objective::MaxWeightedFps);
+        w.validate().unwrap();
+        w.constrain("tinycnn", Constraint::MinFps(5.0)).unwrap();
+        assert!(w.constrain("nope", Constraint::Slo(0.1)).is_err());
+
+        // Lowering merges duplicate constraints to the binding one.
+        let mut dup = Workload::new(QuantMode::W8A8).tenant_spec(
+            TenantSpec::new(zoo::tinycnn())
+                .slo(0.05)
+                .slo(0.02)
+                .min_fps(10.0)
+                .min_fps(30.0),
+        );
+        dup.objective = Objective::MaxMinFps;
+        let tenants = dup.to_tenants();
+        assert_eq!(tenants[0].slo_s, Some(0.02));
+        assert_eq!(tenants[0].min_fps, Some(30.0));
+
+        // Malformed workloads are rejected with the real cause.
+        assert!(Workload::new(QuantMode::W8A8).validate().is_err());
+        let bad = Workload::new(QuantMode::W8A8)
+            .tenant_spec(TenantSpec::new(zoo::tinycnn()).min_fps(-1.0));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn objective_labels_round_trip() {
+        for o in [Objective::MaxMinFps, Objective::MaxWeightedFps] {
+            assert_eq!(Objective::parse(o.label()).unwrap(), o);
+        }
+        assert_eq!(Objective::parse("min-fps").unwrap(), Objective::MaxMinFps);
+        assert_eq!(Objective::parse("weighted").unwrap(), Objective::MaxWeightedFps);
+        assert!(Objective::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn single_tenant_plans_route_to_solo_allocation() {
+        // One tenant → the plain Sec. 4 allocation (the Sharder's pinned
+        // single-tenant degeneracy), surfaced through the facade.
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(4).plan(&w).unwrap();
+        assert_eq!(set.plans.len(), 1);
+        assert_eq!(set.best, set.best_min);
+        let plan = &set.plans[set.best];
+        assert_eq!(plan.tenants.len(), 1);
+        assert_eq!(plan.tenants[0].dsp_parts, 4);
+        let direct = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zedboard(), QuantMode::W8A8)
+            .unwrap()
+            .evaluate();
+        let rec = plan.tenants[0].record.as_ref().unwrap();
+        assert_eq!(rec.fps.to_bits(), direct.fps.to_bits());
+        // And the plan rehydrates to the same allocation.
+        let allocs = plan.instantiate().unwrap();
+        assert_eq!(allocs[0].evaluate().fps.to_bits(), direct.fps.to_bits());
+    }
+
+    #[test]
+    fn planner_single_board_matches_sharder_search() {
+        // The facade adds no search logic: plan order, frontier, and the
+        // objective picks are exactly Sharder::search's.
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let sharder = Sharder {
+            steps: 8,
+            ..Sharder::new(zedboard(), w.to_tenants())
+        };
+        let r = sharder.search().unwrap();
+        assert_eq!(set.plans.len(), r.plans.len());
+        assert_eq!(set.frontier, r.frontier);
+        assert_eq!(set.best_min, r.best_min);
+        assert_eq!(set.best_weighted, r.best_weighted);
+        for (dp, sp) in set.plans.iter().zip(&r.plans) {
+            let fps = dp.fps_vec().unwrap();
+            for (a, b) in fps.iter().zip(&sp.fps) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn multi_board_planning_merges_frontiers() {
+        use crate::board::zc706;
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::across(vec![zedboard(), zc706()])
+            .steps(4)
+            .plan(&w)
+            .unwrap();
+        // Both boards contribute plans; every frontier member is
+        // non-dominated across the union.
+        assert!(set.plans.iter().any(|p| p.board.name == "zedboard"));
+        assert!(set.plans.iter().any(|p| p.board.name == "zc706"));
+        for &i in &set.frontier {
+            let (fi, li) = (
+                set.plans[i].fps_vec().unwrap(),
+                set.plans[i].latency_vec().unwrap(),
+            );
+            for (j, p) in set.plans.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let (fj, lj) = (p.fps_vec().unwrap(), p.latency_vec().unwrap());
+                assert!(
+                    !shard::vec_dominates(&fj, &lj, &fi, &li),
+                    "frontier member {i} dominated by plan {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_json_round_trips_bit_exactly() {
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant_spec(TenantSpec::new(zoo::lenet()).weight(2.0).min_fps(1.0));
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        for &i in &set.frontier {
+            let plan = &set.plans[i];
+            let text = plan.to_json().to_pretty();
+            let back = DeploymentPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(text, back.to_json().to_pretty(), "serialization not stable");
+            assert_eq!(back.version, PLAN_VERSION);
+            assert_eq!(back.tenants.len(), 2);
+            assert_eq!(back.tenants[1].weight, 2.0);
+            assert_eq!(back.tenants[1].constraints, vec![Constraint::MinFps(1.0)]);
+            let (a, b) = (plan.fps_vec().unwrap(), back.fps_vec().unwrap());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "fps must round-trip bit-exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_plan_version_is_rejected() {
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn());
+        let set = Planner::on(zedboard()).steps(4).plan(&w).unwrap();
+        let Value::Obj(mut m) = set.plans[set.best].to_json() else {
+            panic!("plans encode as objects")
+        };
+        m.insert("version".to_string(), Value::Num(99.0));
+        let err = DeploymentPlan::from_json(&Value::Obj(m.clone())).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        m.remove("version");
+        assert!(DeploymentPlan::from_json(&Value::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn planset_json_best_is_loadable() {
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let dir = std::env::temp_dir().join("flexipipe_planset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("set.json");
+        std::fs::write(&path, set.to_json().to_pretty()).unwrap();
+        let best = DeploymentPlan::load(&path).unwrap();
+        assert_eq!(
+            best.to_json().to_pretty(),
+            set.plans[set.best].to_json().to_pretty()
+        );
+        // A bare plan file loads too.
+        set.plans[set.best].save(&path).unwrap();
+        let bare = DeploymentPlan::load(&path).unwrap();
+        assert_eq!(
+            bare.to_json().to_pretty(),
+            set.plans[set.best].to_json().to_pretty()
+        );
+    }
+
+    #[test]
+    fn instantiate_rejects_oversubscribed_spatial_plans() {
+        // A hand-edited plan can claim more board than exists; the
+        // rehydration path must refuse it with the real cause — never
+        // simulate or serve physically impossible resources.
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let plan = set.plans[set.best].clone();
+        let mut over = plan.clone();
+        for t in &mut over.tenants {
+            t.dsp_parts = over.steps;
+            t.bram_parts = over.steps;
+            t.ddr_share = 1.0;
+        }
+        let err = over.instantiate().unwrap_err();
+        assert!(err.to_string().contains("oversubscribes"), "{err}");
+        // Oversubscribing only the DDR port is refused too.
+        let mut port = plan.clone();
+        for t in &mut port.tenants {
+            t.ddr_share = 1.0;
+        }
+        let err = port.instantiate().unwrap_err();
+        assert!(err.to_string().contains("DDR"), "{err}");
+    }
+
+    #[test]
+    fn instantiate_rejects_nonphysical_boards_and_overheads() {
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(4).plan(&w).unwrap();
+        let plan = &set.plans[set.best];
+        let mut frozen = plan.clone();
+        frozen.board.freq_hz = 0.0;
+        let err = frozen.instantiate().unwrap_err();
+        assert!(err.to_string().contains("nonphysical"), "{err}");
+        let mut portless = plan.clone();
+        portless.board.ddr_bytes_per_sec = -1.0;
+        assert!(portless.instantiate().is_err());
+        let mut optimistic = plan.clone();
+        optimistic.reconfig.overlay_overhead = 0.5;
+        let err = optimistic.instantiate().unwrap_err();
+        assert!(err.to_string().contains("overlay_overhead"), "{err}");
+    }
+
+    #[test]
+    fn instantiate_rejects_malformed_temporal_schedules() {
+        use crate::board::zc706;
+        use crate::shard::ScheduleMode;
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zc706())
+            .steps(4)
+            .schedule(ScheduleMode::Temporal)
+            .max_period(0.1)
+            .plan(&w)
+            .unwrap();
+        let plan = set.plans[set.frontier[0]].clone();
+        plan.instantiate().unwrap();
+        // (a) A schedule that forgets a tenant must be refused, not panic
+        // inside the DES.
+        let mut orphaned = plan.clone();
+        if let Regime::Temporal(info) = &mut orphaned.regime {
+            for s in &mut info.slices {
+                s.tenant = 0;
+            }
+        }
+        let err = orphaned.instantiate().unwrap_err();
+        assert!(err.to_string().contains("admits no frames"), "{err}");
+        // (b) Zero-frame slices for one tenant are the same hole.
+        let mut starved = plan.clone();
+        if let Regime::Temporal(info) = &mut starved.regime {
+            for s in info.slices.iter_mut().filter(|s| s.tenant == 1) {
+                s.frames = 0;
+            }
+        }
+        let err = starved.instantiate().unwrap_err();
+        assert!(err.to_string().contains("admits no frames"), "{err}");
+        // (c) period_cycles == 0 means continuous solo — impossible with
+        // two tenants.
+        let mut solo = plan.clone();
+        if let Regime::Temporal(info) = &mut solo.regime {
+            info.period_cycles = 0;
+        }
+        let err = solo.instantiate().unwrap_err();
+        assert!(err.to_string().contains("continuous solo"), "{err}");
+    }
+
+    #[test]
+    fn instantiate_rejects_allocator_drift() {
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(4).plan(&w).unwrap();
+        let mut plan = set.plans[set.best].clone();
+        plan.instantiate().unwrap();
+        // Corrupt a recorded stage config: rehydration must refuse.
+        plan.tenants[0].stages[0].cp += 1;
+        let err = plan.instantiate().unwrap_err();
+        assert!(err.to_string().contains("allocator"), "{err}");
+        // Hand-authored plans (no recorded stages) skip the check.
+        plan.tenants[0].stages.clear();
+        plan.instantiate().unwrap();
+    }
+}

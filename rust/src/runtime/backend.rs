@@ -13,9 +13,14 @@
 //!   backend the serving/runtime tests (and artifact-free CI) run on.
 //!
 //! Selection rule: PJRT when `artifacts/manifest.json` exists
-//! ([`Coordinator::start_auto`]), SimBackend otherwise.
+//! ([`Coordinator::start_auto`]), SimBackend otherwise. The plan-driven
+//! service ([`Coordinator::start_planned`]) always runs on SimBackend —
+//! one deterministic backend per tenant of a
+//! [`crate::plan::DeploymentPlan`], built from the plan's embedded
+//! networks so a plan file serves without any artifact or zoo lookup.
 //!
 //! [`Coordinator::start_auto`]: crate::coordinator::Coordinator::start_auto
+//! [`Coordinator::start_planned`]: crate::coordinator::Coordinator::start_planned
 
 use super::Runtime;
 use crate::model::{Layer, Network};

@@ -127,6 +127,12 @@ pub struct DesignSpace {
     /// [`crate::shard::parse_slos`]). Models absent from a tenant group
     /// are ignored there.
     pub slos: Vec<(String, f64)>,
+    /// Per-model effective-fps floors applied to every shard job's
+    /// matching tenants (`--min-fps vgg16=25,...` parsed by
+    /// [`crate::shard::parse_min_fps`]) — plans starving a floored
+    /// tenant are dropped at admission. Models absent from a tenant
+    /// group are ignored there.
+    pub min_fps: Vec<(String, f64)>,
     /// Warm-start neighboring DSP-budget points of a sweep chain by
     /// carrying the settled Algorithm 1 θ vector forward (flex arch only;
     /// regression-tested bit-identical to cold starts). Default on.
@@ -149,6 +155,7 @@ impl Default for DesignSpace {
             max_period_s: 0.5,
             max_interleave: 1,
             slos: Vec::new(),
+            min_fps: Vec::new(),
             warm_start: true,
         }
     }
@@ -377,16 +384,18 @@ impl DesignSpace {
             !self.boards.is_empty() && !self.tenant_groups.is_empty(),
             "empty shard space (no boards or tenant groups?)"
         );
-        // An SLO naming no tenant in any group is a typo, not a no-op —
-        // fail it like `shard`'s apply_slos does instead of silently
-        // running the sweep latency-unconstrained.
-        for (name, _) in &self.slos {
-            anyhow::ensure!(
-                self.tenant_groups
-                    .iter()
-                    .any(|g| g.iter().any(|net| &net.name == name)),
-                "--slo names model '{name}' which appears in no tenant group"
-            );
+        // An SLO or fps floor naming no tenant in any group is a typo,
+        // not a no-op — fail it like `shard`'s apply_slos does instead of
+        // silently running the sweep unconstrained.
+        for (flag, pairs) in [("--slo", &self.slos), ("--min-fps", &self.min_fps)] {
+            for (name, _) in pairs {
+                anyhow::ensure!(
+                    self.tenant_groups
+                        .iter()
+                        .any(|g| g.iter().any(|net| &net.name == name)),
+                    "{flag} names model '{name}' which appears in no tenant group"
+                );
+            }
         }
         struct SJob {
             board: usize,
@@ -420,6 +429,15 @@ impl DesignSpace {
                 .collect();
             if !group_slos.is_empty() {
                 shard::apply_slos(&mut tenants, &group_slos)?;
+            }
+            let group_floors: Vec<(String, f64)> = self
+                .min_fps
+                .iter()
+                .filter(|(name, _)| group.iter().any(|net| &net.name == name))
+                .cloned()
+                .collect();
+            if !group_floors.is_empty() {
+                shard::apply_min_fps(&mut tenants, &group_floors)?;
             }
             let sharder = Sharder {
                 steps: self.shard_steps,
@@ -644,6 +662,26 @@ mod tests {
     fn empty_space_errors() {
         assert!(DesignSpace::default().sweep().is_err());
         assert!(DesignSpace::default().sweep_shards().is_err());
+    }
+
+    #[test]
+    fn shard_sweep_validates_floor_names_and_applies_floors() {
+        let mk = |floors: Vec<(String, f64)>| DesignSpace {
+            boards: vec![zedboard()],
+            tenant_groups: vec![vec![zoo::tinycnn(), zoo::lenet()]],
+            modes: vec![QuantMode::W8A8],
+            shard_steps: 8,
+            min_fps: floors,
+            threads: 1,
+            ..Default::default()
+        };
+        // A floor naming no tenant group member is a typo, not a no-op.
+        assert!(mk(vec![("nope".to_string(), 10.0)]).sweep_shards().is_err());
+        // A trivially-low floor prunes nothing; plans still satisfy it.
+        let free = mk(Vec::new()).sweep_shards().unwrap();
+        let floored = mk(vec![("lenet".to_string(), 1e-6)]).sweep_shards().unwrap();
+        assert_eq!(free[0].result.plans.len(), floored[0].result.plans.len());
+        assert!(floored[0].result.plans.iter().all(|p| p.fps[1] >= 1e-6));
     }
 
     #[test]

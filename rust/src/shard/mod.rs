@@ -31,10 +31,11 @@
 //! Pareto frontier of per-tenant fps vectors, alongside two scalarized
 //! picks: max–min fps (egalitarian) and weighted-sum fps (SLA-weighted).
 //! Frontier winners are optionally validated by the multi-pipeline
-//! discrete-event simulation ([`crate::sim::simulate_multi_provisioned`]),
-//! which runs every tenant's event wheel against the *shared* physical DDR
-//! port at the provisioned per-tenant shares — the same β split each
-//! tenant's Algorithm 2 run was budgeted against.
+//! discrete-event simulation (the provisioned-share engine behind
+//! [`crate::sim::Simulate`]), which runs every tenant's event wheel
+//! against the *shared* physical DDR port at the provisioned per-tenant
+//! shares — the same β split each tenant's Algorithm 2 run was budgeted
+//! against.
 //!
 //! Consumed by the `flexipipe shard` CLI subcommand, the
 //! `search::DesignSpace::sweep_shards` axis, the `design_space` example,
@@ -71,7 +72,8 @@ use crate::util::json::{num, obj, Value};
 use std::sync::Arc;
 
 /// One co-resident workload: a model, its precision, its weight in the
-/// weighted-fps objective, and an optional latency SLO.
+/// weighted-fps objective, and optional admission bounds (latency SLO
+/// ceiling, effective-fps floor).
 #[derive(Debug, Clone)]
 pub struct Tenant {
     /// The model this tenant serves.
@@ -86,6 +88,12 @@ pub struct Tenant {
     /// latency-unconstrained; plans violating a set SLO are dropped at
     /// admission in every regime. The CLI's `--slo vgg16=33ms` sets this.
     pub slo_s: Option<f64>,
+    /// Throughput floor in frames/second: plans serving this tenant below
+    /// the floor are dropped at admission in every regime — the guard
+    /// that keeps one tenant's SLO from starving a throughput tenant.
+    /// `None` (the default) leaves the tenant floor-free. The CLI's
+    /// `--min-fps vgg16=25` sets this.
+    pub min_fps: Option<f64>,
 }
 
 impl Tenant {
@@ -96,6 +104,7 @@ impl Tenant {
             mode,
             weight: 1.0,
             slo_s: None,
+            min_fps: None,
         }
     }
 
@@ -104,6 +113,22 @@ impl Tenant {
         self.slo_s = Some(slo_s);
         self
     }
+
+    /// Same tenant with an effective-fps floor (frames/second).
+    pub fn with_min_fps(mut self, min_fps: f64) -> Tenant {
+        self.min_fps = Some(min_fps);
+        self
+    }
+}
+
+/// Do `fps` rates satisfy every tenant's `min_fps` floor? The admission
+/// predicate every regime applies (crate-shared so the spatial and
+/// temporal planners cannot drift).
+pub(crate) fn meets_floors(tenants: &[Tenant], fps: &[f64]) -> bool {
+    !tenants
+        .iter()
+        .zip(fps)
+        .any(|(t, &f)| t.min_fps.is_some_and(|floor| f < floor))
 }
 
 /// Parse a CLI `--slo` list: comma-separated `model=duration` entries
@@ -148,6 +173,43 @@ pub fn apply_slos(tenants: &mut [Tenant], slos: &[(String, f64)]) -> crate::Resu
             hit = true;
         }
         anyhow::ensure!(hit, "--slo names unknown tenant model '{name}'");
+    }
+    Ok(())
+}
+
+/// Parse a CLI `--min-fps` list: comma-separated `model=fps` entries —
+/// e.g. `alexnet=120,vgg16=25`. Returns `(model name, fps floor)` pairs.
+pub fn parse_min_fps(s: &str) -> crate::Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((model, fps)) = entry.split_once('=') else {
+            anyhow::bail!("--min-fps entry '{entry}' is not model=fps");
+        };
+        let v: f64 = fps
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--min-fps entry '{entry}': bad fps '{}'", fps.trim()))?;
+        anyhow::ensure!(
+            v > 0.0 && v.is_finite(),
+            "--min-fps entry '{entry}': fps must be positive and finite"
+        );
+        out.push((model.trim().to_string(), v));
+    }
+    anyhow::ensure!(!out.is_empty(), "--min-fps given but names no tenants");
+    Ok(out)
+}
+
+/// Apply parsed [`parse_min_fps`] pairs to a tenant list by model name
+/// (every tenant of that model gets the floor); errors on a name matching
+/// no tenant.
+pub fn apply_min_fps(tenants: &mut [Tenant], floors: &[(String, f64)]) -> crate::Result<()> {
+    for (name, floor) in floors {
+        let mut hit = false;
+        for t in tenants.iter_mut().filter(|t| &t.net.name == name) {
+            t.min_fps = Some(*floor);
+            hit = true;
+        }
+        anyhow::ensure!(hit, "--min-fps names unknown tenant model '{name}'");
     }
     Ok(())
 }
@@ -301,8 +363,8 @@ pub struct ShardPlan {
     pub latency_s: Vec<f64>,
     /// DES confirmation, one report per tenant (frontier plans only, when
     /// `sim_frames > 0`): the shared-port multi-pipeline wheel for spatial
-    /// plans, the drain-overlapped [`sim::simulate_schedule`] for temporal
-    /// and overlay ones (fps is the effective over-the-period rate).
+    /// plans, the drain-overlapped schedule executor for temporal and
+    /// overlay ones (fps is the effective over-the-period rate).
     pub sim: Option<Vec<SimReport>>,
     /// Which regime produced this plan.
     pub regime: Regime,
@@ -395,8 +457,8 @@ impl Sharder {
     /// union to the Pareto frontier over per-tenant (fps ↑, worst-case
     /// latency ↓) vectors, and (optionally) confirm frontier plans with
     /// the matching DES (shared-port multi-pipeline wheel for spatial
-    /// plans, the drain-overlapped [`sim::simulate_schedule`] for
-    /// temporal and overlay ones).
+    /// plans, the drain-overlapped schedule executor for temporal and
+    /// overlay ones).
     ///
     /// ```
     /// use flexipipe::board::zedboard;
@@ -432,6 +494,11 @@ impl Sharder {
         for t in &self.tenants {
             t.net.validate()?;
         }
+        anyhow::ensure!(
+            self.reconfig.overlay_overhead >= 1.0,
+            "shard: overlay_overhead must be ≥ 1.0 — the element-wise-max footprint it \
+             scales is already the optimistic full-reuse bound"
+        );
         // A lone tenant has nothing to share a static region with — fail
         // with the real cause instead of the generic "no feasible plan".
         anyhow::ensure!(
@@ -467,8 +534,9 @@ impl Sharder {
             !plans.is_empty(),
             "shard: no feasible {} plan for {} across {} tenants at {} steps \
              (board too small for the tenant set, or every schedule violates \
-             an --slo — try fewer tenants, 8-bit mode, `--schedule auto`, \
-             `--interleave 2`, or a larger board)",
+             an --slo or --min-fps bound — try fewer tenants, 8-bit mode, \
+             `--schedule auto`, `--interleave 2`, relaxed bounds, or a larger \
+             board)",
             self.schedule.label(),
             self.board.name,
             n,
@@ -494,71 +562,16 @@ impl Sharder {
         Ok(result)
     }
 
-    /// DES confirmation of one frontier plan, regime-matched.
+    /// DES confirmation of one frontier plan, regime-matched (the shared
+    /// [`confirm_plan`] engine with this sharder's provisioned shares).
     fn validate_plan(&self, plan: &ShardPlan) -> Vec<SimReport> {
         let refs: Vec<&Allocation> = plan.tenants.iter().map(|t| t.alloc.as_ref()).collect();
-        match &plan.regime {
-            // Validate against the *provisioned* port split (each tenant
-            // gets the dsp_parts/steps of β its Algorithm 2 run was
-            // budgeted), not the demand-converged split — the plan was
-            // ranked on the former.
-            Regime::Spatial => {
-                let shares: Vec<f64> = plan
-                    .tenants
-                    .iter()
-                    .map(|t| t.dsp_parts as f64 / self.steps as f64)
-                    .collect();
-                sim::simulate_multi_provisioned(&refs, &shares, &self.board, self.sim_frames)
-            }
-            // Degenerate single-tenant schedule: continuous solo run.
-            Regime::Temporal(info) if info.period_cycles == 0 => {
-                sim::simulate_multi_provisioned(&refs, &[1.0], &self.board, self.sim_frames)
-            }
-            // Execute one schedule period: drain → (drain-overlapped)
-            // reconfigure → refill, dead cycles charged. Per-tenant fps
-            // becomes the effective over-the-period rate
-            // (analytic-schedule-comparable).
-            Regime::Temporal(info) => {
-                let ts = sim::simulate_schedule(&refs, &info.schedule_slices(), true);
-                let period = ts.period_cycles;
-                (0..plan.tenants.len())
-                    .map(|t| {
-                        // Re-base the tenant's largest batch report to the
-                        // effective over-the-period view so the struct
-                        // stays coherent: gops/dsp_efficiency are linear
-                        // in fps, the port draw sums every sub-slice's
-                        // makespan-window draw over the period, and
-                        // fps == freq/cycles_per_frame again after both
-                        // are rewritten. `makespan` keeps the
-                        // representative batch's own execution window.
-                        let mine: Vec<&sim::TimeshareSlice> =
-                            ts.slices.iter().filter(|s| s.tenant == t).collect();
-                        let repr = mine
-                            .iter()
-                            .max_by_key(|s| s.frames)
-                            .expect("every tenant holds at least one sub-slice");
-                        let mut r = repr
-                            .sim
-                            .clone()
-                            .expect("feasible temporal plans admit ≥1 frame");
-                        let frames: usize = mine.iter().map(|s| s.frames).sum();
-                        let util: f64 = mine
-                            .iter()
-                            .filter_map(|s| s.sim.as_ref())
-                            .map(|s| s.ddr_utilization * s.makespan as f64)
-                            .sum::<f64>()
-                            / period as f64;
-                        let rate = ts.tenant_fps[t] / r.fps;
-                        r.gops *= rate;
-                        r.dsp_efficiency *= rate;
-                        r.ddr_utilization = util;
-                        r.fps = ts.tenant_fps[t];
-                        r.cycles_per_frame = period as f64 / frames.max(1) as f64;
-                        r
-                    })
-                    .collect()
-            }
-        }
+        let shares: Vec<f64> = plan
+            .tenants
+            .iter()
+            .map(|t| t.dsp_parts as f64 / self.steps as f64)
+            .collect();
+        confirm_plan(&refs, &shares, &self.board, &plan.regime, self.sim_frames)
     }
 
     /// Enumerate the spatial split space and keep the feasible plans (the
@@ -660,13 +673,16 @@ impl Sharder {
                                 / self.board.freq_hz
                     })
                     .collect();
-                // SLO admission applies to every regime.
+                // SLO and fps-floor admission apply to every regime.
                 if self
                     .tenants
                     .iter()
                     .zip(&latency_s)
                     .any(|(t, &lat)| t.slo_s.is_some_and(|slo| lat > slo))
                 {
+                    continue;
+                }
+                if !meets_floors(&self.tenants, &fps) {
                     continue;
                 }
                 let min_fps = fps.iter().copied().fold(f64::INFINITY, f64::min);
@@ -687,6 +703,77 @@ impl Sharder {
             }
         }
         Ok(plans)
+    }
+}
+
+/// Regime-matched DES confirmation of one plan's per-tenant rates — the
+/// single execution engine behind both [`Sharder::search`]'s validation
+/// pass and the [`crate::sim::Simulate`] plan executor, so a serialized
+/// [`crate::plan::DeploymentPlan`] re-simulates **bit-identically** to the
+/// in-process search (acceptance-pinned). `shares` is each tenant's
+/// provisioned fraction of the physical DDR port (spatial plans validate
+/// against the split Algorithm 2 budgeted, not the demand-converged one);
+/// temporal plans ignore it and execute one full schedule period.
+pub(crate) fn confirm_plan(
+    allocs: &[&Allocation],
+    shares: &[f64],
+    board: &Board,
+    regime: &Regime,
+    sim_frames: usize,
+) -> Vec<SimReport> {
+    match regime {
+        // Validate against the *provisioned* port split (each tenant gets
+        // the dsp_parts/steps of β its Algorithm 2 run was budgeted), not
+        // the demand-converged split — the plan was ranked on the former.
+        Regime::Spatial => sim::simulate_multi_provisioned(allocs, shares, board, sim_frames),
+        // Degenerate single-tenant schedule: continuous solo run.
+        Regime::Temporal(info) if info.period_cycles == 0 => {
+            sim::simulate_multi_provisioned(allocs, &[1.0], board, sim_frames)
+        }
+        // Execute one schedule period: drain → (drain-overlapped)
+        // reconfigure → refill, dead cycles charged. Per-tenant fps
+        // becomes the effective over-the-period rate
+        // (analytic-schedule-comparable).
+        Regime::Temporal(info) => {
+            let ts = sim::simulate_schedule(allocs, &info.schedule_slices(), true);
+            let period = ts.period_cycles;
+            (0..allocs.len())
+                .map(|t| {
+                    // Re-base the tenant's largest batch report to the
+                    // effective over-the-period view so the struct
+                    // stays coherent: gops/dsp_efficiency are linear
+                    // in fps, the port draw sums every sub-slice's
+                    // makespan-window draw over the period, and
+                    // fps == freq/cycles_per_frame again after both
+                    // are rewritten. `makespan` keeps the
+                    // representative batch's own execution window.
+                    let mine: Vec<&sim::TimeshareSlice> =
+                        ts.slices.iter().filter(|s| s.tenant == t).collect();
+                    let repr = mine
+                        .iter()
+                        .max_by_key(|s| s.frames)
+                        .expect("every tenant holds at least one sub-slice");
+                    let mut r = repr
+                        .sim
+                        .clone()
+                        .expect("feasible temporal plans admit ≥1 frame");
+                    let frames: usize = mine.iter().map(|s| s.frames).sum();
+                    let util: f64 = mine
+                        .iter()
+                        .filter_map(|s| s.sim.as_ref())
+                        .map(|s| s.ddr_utilization * s.makespan as f64)
+                        .sum::<f64>()
+                        / period as f64;
+                    let rate = ts.tenant_fps[t] / r.fps;
+                    r.gops *= rate;
+                    r.dsp_efficiency *= rate;
+                    r.ddr_utilization = util;
+                    r.fps = ts.tenant_fps[t];
+                    r.cycles_per_frame = period as f64 / frames.max(1) as f64;
+                    r
+                })
+                .collect()
+        }
     }
 }
 
@@ -731,10 +818,17 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
 /// against the same definition the search uses). A plan that trades fps
 /// for latency (or vice versa) is incomparable and survives.
 pub fn plan_dominates(a: &ShardPlan, b: &ShardPlan) -> bool {
-    a.fps.iter().zip(&b.fps).all(|(x, y)| x >= y)
-        && a.latency_s.iter().zip(&b.latency_s).all(|(x, y)| x <= y)
-        && (a.fps.iter().zip(&b.fps).any(|(x, y)| x > y)
-            || a.latency_s.iter().zip(&b.latency_s).any(|(x, y)| x < y))
+    vec_dominates(&a.fps, &a.latency_s, &b.fps, &b.latency_s)
+}
+
+/// The raw dominance arithmetic behind [`plan_dominates`], on bare
+/// objective vectors — crate-shared with [`crate::plan::Planner`]'s
+/// multi-board frontier so the two reductions cannot drift.
+pub(crate) fn vec_dominates(a_fps: &[f64], a_lat: &[f64], b_fps: &[f64], b_lat: &[f64]) -> bool {
+    a_fps.iter().zip(b_fps).all(|(x, y)| x >= y)
+        && a_lat.iter().zip(b_lat).all(|(x, y)| x <= y)
+        && (a_fps.iter().zip(b_fps).any(|(x, y)| x > y)
+            || a_lat.iter().zip(b_lat).any(|(x, y)| x < y))
 }
 
 /// Indices of the non-dominated plans under [`plan_dominates`] — the
@@ -1077,6 +1171,67 @@ mod tests {
             Tenant::new(zoo::zf(), QuantMode::W8A8).with_slo(0.1).slo_s,
             Some(0.1)
         );
+    }
+
+    #[test]
+    fn min_fps_parsing_and_application() {
+        let floors = parse_min_fps("vgg16=25, alexnet=120.5").unwrap();
+        assert_eq!(floors.len(), 2);
+        assert_eq!(floors[0].0, "vgg16");
+        assert!((floors[0].1 - 25.0).abs() < 1e-12);
+        assert!((floors[1].1 - 120.5).abs() < 1e-12);
+        assert!(parse_min_fps("vgg16").is_err());
+        assert!(parse_min_fps("vgg16=-3").is_err());
+        assert!(parse_min_fps("vgg16=fast").is_err());
+        assert!(parse_min_fps("").is_err());
+
+        let mut tenants = vec![Tenant::new(zoo::zf(), QuantMode::W8A8)];
+        assert!(apply_min_fps(&mut tenants, &[("nope".to_string(), 10.0)]).is_err());
+        apply_min_fps(&mut tenants, &[("zf".to_string(), 10.0)]).unwrap();
+        assert_eq!(tenants[0].min_fps, Some(10.0));
+        assert_eq!(
+            Tenant::new(zoo::zf(), QuantMode::W8A8).with_min_fps(10.0).min_fps,
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn min_fps_floor_prunes_spatial_plans() {
+        let base = Sharder {
+            steps: 8,
+            ..Sharder::new(
+                zedboard(),
+                vec![
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                ],
+            )
+        };
+        let free = base.search().unwrap();
+        // A floor strictly between tenant 1's worst and best rates must
+        // prune the plans below it and keep the ones above.
+        let lo = free.plans.iter().map(|p| p.fps[1]).fold(f64::INFINITY, f64::min);
+        let hi = free
+            .plans
+            .iter()
+            .map(|p| p.fps[1])
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < hi, "fixture needs fps spread on tenant 1");
+        let floor = 0.5 * (lo + hi);
+        let mut floored = base.clone();
+        floored.tenants[1].min_fps = Some(floor);
+        let kept = floored.search().unwrap();
+        let expect = free.plans.iter().filter(|p| p.fps[1] >= floor).count();
+        assert_eq!(kept.plans.len(), expect);
+        assert!(kept.plans.len() < free.plans.len(), "floor must prune");
+        assert!(kept.plans.iter().all(|p| p.fps[1] >= floor));
+        // The floored best-min pick serves tenant 1 at least at the floor.
+        assert!(kept.plans[kept.best_min].fps[1] >= floor);
+        // An unachievable floor makes the search fail with the real cause.
+        let mut starved = base.clone();
+        starved.tenants[1].min_fps = Some(hi * 10.0);
+        let err = starved.search().unwrap_err();
+        assert!(err.to_string().contains("min-fps"), "{err}");
     }
 
     #[test]

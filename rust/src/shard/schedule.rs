@@ -78,8 +78,8 @@
 //! is likewise conservative: the planner credits the smallest drain
 //! observed in the calibration window (under-crediting idles the port;
 //! over-crediting would stretch the period). The sharder's validation
-//! pass then *executes* frontier schedules with
-//! [`crate::sim::simulate_schedule`] — drain-overlapped reconfiguration,
+//! pass then *executes* frontier schedules with the crate-private
+//! `sim::simulate_schedule` engine — drain-overlapped reconfiguration,
 //! dead cycles charged — and the acceptance tests pin the simulated
 //! per-tenant fps within 1% and the measured worst-case sojourn within 5%
 //! of the analytic schedule.
@@ -118,6 +118,17 @@ pub struct ReconfigModel {
     /// Configuration port throughput in bytes/second (PCAP ≈145 MB/s;
     /// ICAP ≈400 MB/s).
     pub port_bytes_per_sec: f64,
+    /// Synthesis overhead factor for the static-region overlay: the
+    /// shared superset datapath is sized at `overlay_overhead ×` the
+    /// element-wise maximum of the tenants' DSP/BRAM footprints before
+    /// the board-fit check. `1.0` (the default, calibrated to the pinned
+    /// PR-4 overlay invariants) is the optimistic full-reuse bound —
+    /// every tenant's engines fold perfectly into the superset; real
+    /// overlays pay muxing/packing logic, so calibrate ≥ 1.0 against
+    /// synthesis reports (values below 1.0 are rejected at search time).
+    /// Scaling only gates overlay *feasibility*: an admitted overlay's
+    /// schedule and rates are unchanged.
+    pub overlay_overhead: f64,
 }
 
 impl Default for ReconfigModel {
@@ -128,6 +139,7 @@ impl Default for ReconfigModel {
             bytes_per_bram18: 2_304.0,
             base_bytes: 65_536.0,
             port_bytes_per_sec: 145e6,
+            overlay_overhead: 1.0,
         }
     }
 }
@@ -243,9 +255,10 @@ pub struct TemporalInfo {
 impl TemporalInfo {
     /// The executable form of this schedule: one
     /// [`crate::sim::ScheduleSlice`] per sub-slice, in period order —
-    /// exactly what [`crate::sim::simulate_schedule`] consumes. The single
-    /// source of the planner→simulator slice conversion (the validation
-    /// pass, the benches, and the acceptance tests all go through here).
+    /// exactly what the schedule-execution engine behind
+    /// [`crate::sim::Simulate`] consumes. The single source of the
+    /// planner→simulator slice conversion (the validation pass, the
+    /// benches, and the acceptance tests all go through here).
     pub fn schedule_slices(&self) -> Vec<crate::sim::ScheduleSlice> {
         self.slices
             .iter()
@@ -502,13 +515,17 @@ pub(crate) fn temporal_plans(
             return Ok(vec![]);
         }
         // The static region hosts the superset datapath: size it at the
-        // element-wise maximum of the tenants' footprints (the optimistic
-        // full-reuse bound) and check it fits. Trivially true when every
-        // tenant fits alone, but kept explicit as the hook for synthesis
-        // overhead factors.
+        // element-wise maximum of the tenants' footprints scaled by the
+        // configurable synthesis overhead ([`ReconfigModel::
+        // overlay_overhead`]; 1.0 = the optimistic full-reuse bound,
+        // under which the check is trivially true whenever every tenant
+        // fits alone) and check it fits the board.
+        let oh = sh.reconfig.overlay_overhead;
         let max_dsps = solos.iter().map(|s| s.report.dsps).max().unwrap_or(0);
         let max_bram = solos.iter().map(|s| s.report.bram18).max().unwrap_or(0);
-        if max_dsps > sh.board.dsps || max_bram > sh.board.bram18() {
+        let need_dsps = (max_dsps as f64 * oh).ceil() as usize;
+        let need_bram = (max_bram as f64 * oh).ceil() as usize;
+        if need_dsps > sh.board.dsps || need_bram > sh.board.bram18() {
             return Ok(vec![]);
         }
     }
@@ -524,6 +541,9 @@ pub(crate) fn temporal_plans(
             if latency as f64 > slo * freq {
                 return Ok(vec![]);
             }
+        }
+        if sh.tenants[0].min_fps.is_some_and(|floor| fps < floor) {
+            return Ok(vec![]);
         }
         return Ok(vec![ShardPlan {
             tenants: vec![tenant_alloc(&solos[0])],
@@ -667,6 +687,11 @@ pub(crate) fn temporal_plans(
                     .iter()
                     .map(|&f| f as f64 * freq / period as f64)
                     .collect();
+                // Per-tenant fps floors are admission constraints like the
+                // SLOs: drop schedules starving any floored tenant.
+                if !crate::shard::meets_floors(&sh.tenants, &fps) {
+                    continue;
+                }
                 let latency_s: Vec<f64> =
                     latency_cycles.iter().map(|&c| c as f64 / freq).collect();
                 // Dedup on the full objective vector: a shorter quantum or
@@ -929,6 +954,51 @@ mod tests {
                 assert!(s.overlap_cycles <= s.reconfig_cycles);
             }
         }
+    }
+
+    #[test]
+    fn overlay_overhead_gates_feasibility_and_unity_reproduces_default() {
+        let mk = |overhead: f64| Sharder {
+            steps: 4,
+            schedule: crate::shard::ScheduleMode::Overlay,
+            max_period_s: 0.1,
+            reconfig: ReconfigModel {
+                overlay_overhead: overhead,
+                ..ReconfigModel::default()
+            },
+            ..Sharder::new(
+                zc706(),
+                vec![
+                    Tenant::new(zoo::lenet(), QuantMode::W8A8),
+                    Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                ],
+            )
+        };
+        // overhead = 1.0 (the optimistic element-wise-max bound) must be
+        // bit-identical to the default model — the PR-4 behaviour.
+        let unity = mk(1.0).search().unwrap();
+        let default = Sharder {
+            reconfig: ReconfigModel::default(),
+            ..mk(1.0)
+        }
+        .search()
+        .unwrap();
+        assert_eq!(unity.plans.len(), default.plans.len());
+        assert_eq!(unity.frontier, default.frontier);
+        for (a, b) in unity.plans.iter().zip(&default.plans) {
+            for (x, y) in a.fps.iter().zip(&b.fps) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.latency_s.iter().zip(&b.latency_s) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // A huge overhead makes the superset datapath exceed the board:
+        // the overlay regime becomes infeasible (search reports it).
+        assert!(mk(1e6).search().is_err());
+        // Overheads below the optimistic bound are rejected outright.
+        let err = mk(0.5).search().unwrap_err();
+        assert!(err.to_string().contains("overlay_overhead"), "{err}");
     }
 
     #[test]

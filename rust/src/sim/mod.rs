@@ -17,17 +17,29 @@
 //! groups by construction; their makespan is the analytic per-group sum —
 //! the DES applies to the pipelined archs where stalls are emergent.
 //!
+//! # Public surface
+//!
+//! Two entry points: [`simulate`] runs one allocation's pipeline, and the
+//! [`Simulate`] trait executes a whole [`crate::plan::DeploymentPlan`]
+//! (spatial shared-port, time-multiplexed, or overlay) through one
+//! `simulate(&plan)` call — the only way a multi-tenant deployment is
+//! simulated. The specialized DES engines behind it (`simulate_multi`,
+//! `simulate_multi_provisioned`, `simulate_schedule`,
+//! `simulate_timeshared`, and the naive executable spec) are
+//! crate-private; the hidden `engines` module re-exports them for the
+//! crate's own property/golden suites and benches only.
+//!
 //! # Scheduler structure
 //!
 //! The simulation is a greedy list scheduler: repeatedly fire the startable
-//! stage with the earliest start time. [`simulate_pipeline`] implements it
-//! as a ready-queue DES — a min-heap of `(start, stage)` entries kept
-//! current by recomputing only the stages an event can affect. Firing stage
+//! stage with the earliest start time. The ready-queue DES keeps a
+//! min-heap of `(start, stage)` entries current by recomputing only the
+//! stages an event can affect. Firing stage
 //! `i` changes exactly the eligibility inputs of stages `i−1` (space in
 //! `i`'s buffer frees), `i` (engine busy, next group), and `i+1` (new input
 //! rows): per-event work is O(affected stages · log n) instead of the
 //! naive O(all stages). The naive full-rescan loop is preserved as
-//! [`simulate_pipeline_naive`] — the executable spec; both run on the same
+//! `simulate_pipeline_naive` — the executable spec; both run on the same
 //! [`SimState`] eligibility/firing code, and property + golden tests assert
 //! identical reports. Tie-breaking matches too: the heap orders
 //! `(start, stage)` ascending, which is the naive scan's
@@ -85,7 +97,8 @@ pub struct SimReport {
     /// `n`-frame batch is `frame_done[n-1] - input_done[n-1]`: the window
     /// in which the input-side stages sit idle while the rest of the
     /// pipeline empties — the window a drain-overlapped reconfiguration
-    /// ([`simulate_schedule`]) hides partial-bitstream streaming under.
+    /// (the schedule executor behind [`Simulate`]) hides
+    /// partial-bitstream streaming under.
     /// Shares `frame_done`'s prefix property (the first stage's schedule
     /// never depends on later frames either); single-stage pipelines have
     /// `input_done == frame_done` (no drain window at all). For
@@ -432,7 +445,7 @@ impl SimState {
 
 /// Ready-queue discrete-event pipeline simulation at row-group granularity.
 /// Per event: O(affected stages · log n).
-pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
+pub(crate) fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
     run_ready_queue(SimState::new(alloc, frames), alloc)
 }
 
@@ -456,7 +469,7 @@ pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
 /// board with doubled DSP/BRAM/DDR — reports a bit-identical schedule to
 /// the solo run: the fluid shares make "half of twice the port" exactly
 /// the original port.
-pub fn simulate_multi(allocs: &[&Allocation], board: &Board, frames: usize) -> Vec<SimReport> {
+pub(crate) fn simulate_multi(allocs: &[&Allocation], board: &Board, frames: usize) -> Vec<SimReport> {
     let shared: f64 = allocs.iter().map(|a| ddr_stream_demand(a)).sum();
     allocs
         .iter()
@@ -485,7 +498,7 @@ pub fn simulate_multi(allocs: &[&Allocation], board: &Board, frames: usize) -> V
 /// tenants with equal shares this coincides with [`simulate_multi`]
 /// (bit-for-bit — division by an exact power of two preserves the
 /// doubled-board identity).
-pub fn simulate_multi_provisioned(
+pub(crate) fn simulate_multi_provisioned(
     allocs: &[&Allocation],
     shares: &[f64],
     board: &Board,
@@ -562,7 +575,7 @@ fn run_ready_queue(mut st: SimState, alloc: &Allocation) -> SimReport {
 /// the earliest startable one (O(total groups · stages)). Preserved as the
 /// executable specification for [`simulate_pipeline`]; tests assert the
 /// two produce identical reports.
-pub fn simulate_pipeline_naive(alloc: &Allocation, frames: usize) -> SimReport {
+pub(crate) fn simulate_pipeline_naive(alloc: &Allocation, frames: usize) -> SimReport {
     let mut st = SimState::new(alloc, frames);
     let n = st.n;
 
@@ -615,7 +628,7 @@ pub struct ScheduleSlice {
 }
 
 /// One tenant's sub-slice of a time-shared schedule period, as executed by
-/// [`simulate_schedule`] / [`simulate_timeshared`].
+/// the schedule engine behind [`Simulate`].
 #[derive(Debug, Clone)]
 pub struct TimeshareSlice {
     /// Tenant this sub-slice serves (index into the `allocs` array).
@@ -653,8 +666,8 @@ pub struct TimeshareSlice {
     pub sim: Option<SimReport>,
 }
 
-/// One simulated period of a time-shared schedule
-/// ([`simulate_schedule`] / [`simulate_timeshared`]).
+/// One simulated period of a time-shared schedule (the schedule engine
+/// behind [`Simulate`]; the serial PR-3 wrapper produces the same shape).
 #[derive(Debug, Clone)]
 pub struct TimeshareReport {
     /// Actual period in cycles:
@@ -724,7 +737,7 @@ pub struct TimeshareReport {
 /// time and idle tails are charged against every tenant's denominator,
 /// which is exactly the amortization trade the temporal sharder searches
 /// over.
-pub fn simulate_schedule(
+pub(crate) fn simulate_schedule(
     allocs: &[&Allocation],
     seq: &[ScheduleSlice],
     drain_overlap: bool,
@@ -828,7 +841,7 @@ pub fn simulate_schedule(
 /// tenant `i` with `frames[i]` frames in a `slice_cycles[i]` provision
 /// after `reconfig_cycles[i]` dead cycles. See [`simulate_schedule`] for
 /// the general (interleaved, drain-overlapped) form.
-pub fn simulate_timeshared(
+pub(crate) fn simulate_timeshared(
     allocs: &[&Allocation],
     frames: &[usize],
     slice_cycles: &[u64],
@@ -884,6 +897,135 @@ fn simulate_sequential(alloc: &Allocation, frames: usize) -> SimReport {
         // Sequential groups never overlap frames: the input side finishes
         // with the frame itself, so there is no drain window to overlap.
         input_done: (1..=frames as u64).map(|f| r.t_frame_cycles * f).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan execution: the one public multi-tenant entry point
+// ---------------------------------------------------------------------------
+
+/// Per-tenant DES measurements for one executed
+/// [`crate::plan::DeploymentPlan`].
+#[derive(Debug, Clone)]
+pub struct PlanSimReport {
+    /// One report per tenant, in plan tenant order. Temporal and overlay
+    /// plans report the effective over-the-period view (fps includes
+    /// reconfiguration dead time and idle tails); spatial plans report
+    /// each tenant's shared-port pipeline run.
+    pub tenants: Vec<SimReport>,
+}
+
+impl PlanSimReport {
+    /// Simulated effective fps per tenant (plan tenant order).
+    pub fn tenant_fps(&self) -> Vec<f64> {
+        self.tenants.iter().map(|r| r.fps).collect()
+    }
+}
+
+/// The one simulation entry point of the plan-centric API: anything that
+/// can execute a [`crate::plan::DeploymentPlan`] and report per-tenant
+/// measurements. [`Simulator`] is the cycle-accurate DES implementation;
+/// the trait is the seam for coarser or hardware-in-the-loop validators.
+pub trait Simulate {
+    /// Execute `plan` end to end: rehydrate every tenant's allocation
+    /// ([`crate::plan::DeploymentPlan::instantiate`]), then run the
+    /// regime-matched engine — the shared-port multi-pipeline wheel at
+    /// the plan's provisioned DDR shares for spatial plans, one full
+    /// drain-overlapped schedule period for temporal and overlay plans.
+    fn simulate(&self, plan: &crate::plan::DeploymentPlan) -> crate::Result<PlanSimReport>;
+}
+
+/// The cycle-accurate [`Simulate`] implementation, backed by the same DES
+/// engines [`crate::shard::Sharder::search`]'s validation pass runs — so
+/// a plan loaded from JSON re-simulates **bit-identically** to the
+/// in-process search (acceptance-pinned in `tests/plan_roundtrip.rs`).
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    /// Frames simulated per tenant for resident (spatial / solo) plans.
+    /// Temporal and overlay plans execute exactly one schedule period
+    /// regardless. Default 4 (matches `flexipipe simulate`).
+    pub frames: usize,
+}
+
+impl Default for Simulator {
+    fn default() -> Self {
+        Simulator { frames: 4 }
+    }
+}
+
+impl Simulate for Simulator {
+    fn simulate(&self, plan: &crate::plan::DeploymentPlan) -> crate::Result<PlanSimReport> {
+        let allocs = plan.instantiate()?;
+        let refs: Vec<&Allocation> = allocs.iter().collect();
+        let shares: Vec<f64> = plan.tenants.iter().map(|t| t.ddr_share).collect();
+        let tenants = crate::shard::confirm_plan(
+            &refs,
+            &shares,
+            &plan.board,
+            &plan.regime,
+            self.frames.max(1),
+        );
+        Ok(PlanSimReport { tenants })
+    }
+}
+
+/// Raw DES engines behind [`simulate`] and [`Simulate`], re-exported
+/// **only** for the crate's own property/golden test suites and benches.
+/// Hidden from rustdoc and carrying no stability promise — applications
+/// use [`simulate`] for one allocation and [`Simulate`] for a whole
+/// deployment plan.
+#[doc(hidden)]
+pub mod engines {
+    use super::*;
+
+    /// The ready-queue pipeline DES (see `sim::simulate_pipeline`).
+    pub fn simulate_pipeline(alloc: &Allocation, frames: usize) -> SimReport {
+        super::simulate_pipeline(alloc, frames)
+    }
+
+    /// The seed's full-rescan scheduler — the executable spec the
+    /// equivalence suites pin the fast path against.
+    pub fn simulate_pipeline_naive(alloc: &Allocation, frames: usize) -> SimReport {
+        super::simulate_pipeline_naive(alloc, frames)
+    }
+
+    /// Demand-converged shared-port multi-pipeline DES.
+    pub fn simulate_multi(
+        allocs: &[&Allocation],
+        board: &Board,
+        frames: usize,
+    ) -> Vec<SimReport> {
+        super::simulate_multi(allocs, board, frames)
+    }
+
+    /// Provisioned-share shared-port multi-pipeline DES.
+    pub fn simulate_multi_provisioned(
+        allocs: &[&Allocation],
+        shares: &[f64],
+        board: &Board,
+        frames: usize,
+    ) -> Vec<SimReport> {
+        super::simulate_multi_provisioned(allocs, shares, board, frames)
+    }
+
+    /// General (interleaved, optionally drain-overlapped) schedule
+    /// executor.
+    pub fn simulate_schedule(
+        allocs: &[&Allocation],
+        seq: &[ScheduleSlice],
+        drain_overlap: bool,
+    ) -> TimeshareReport {
+        super::simulate_schedule(allocs, seq, drain_overlap)
+    }
+
+    /// Serial one-slice-per-tenant schedule executor (the PR-3 baseline).
+    pub fn simulate_timeshared(
+        allocs: &[&Allocation],
+        frames: &[usize],
+        slice_cycles: &[u64],
+        reconfig_cycles: &[u64],
+    ) -> TimeshareReport {
+        super::simulate_timeshared(allocs, frames, slice_cycles, reconfig_cycles)
     }
 }
 
@@ -1212,6 +1354,30 @@ mod tests {
             assert!(overlapped.worst_sojourn[t] <= serial.worst_sojourn[t]);
             assert!(overlapped.tenant_fps[t] >= serial.tenant_fps[t]);
         }
+    }
+
+    #[test]
+    fn simulator_reproduces_the_search_validation_pass() {
+        // The Simulate trait runs the same confirm_plan engine the
+        // sharder's validation pass used, on the same rehydrated
+        // allocations — per-tenant fps must agree bit-for-bit.
+        use crate::plan::{Planner, Workload};
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).validate(2).plan(&w).unwrap();
+        let plan = &set.plans[set.frontier[0]];
+        let rep = Simulator { frames: 2 }.simulate(plan).unwrap();
+        assert_eq!(rep.tenants.len(), 2);
+        for (t, r) in rep.tenants.iter().enumerate() {
+            let recorded = plan.tenants[t]
+                .record
+                .as_ref()
+                .and_then(|rec| rec.sim_fps)
+                .expect("validated frontier plans record sim fps");
+            assert_eq!(r.fps.to_bits(), recorded.to_bits(), "tenant {t}");
+        }
+        assert_eq!(rep.tenant_fps().len(), 2);
     }
 
     #[test]

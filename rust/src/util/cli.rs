@@ -116,6 +116,16 @@ impl Args {
     }
 }
 
+/// Split a comma-separated CLI list, trimming entries and dropping empty
+/// segments (`"a, b,,c"` → `["a", "b", "c"]`). Shared by every
+/// list-valued flag of the `flexipipe` CLI.
+pub fn split_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect()
+}
+
 /// Render usage text for a spec set.
 pub fn usage(specs: &[Spec]) -> String {
     let mut s = String::from("options:\n");
@@ -164,6 +174,13 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&sv(&["--model"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn split_list_trims_and_drops_empties() {
+        assert_eq!(split_list("a, b,,c"), vec!["a", "b", "c"]);
+        assert!(split_list(" , ").is_empty());
+        assert_eq!(split_list("one"), vec!["one"]);
     }
 
     #[test]

@@ -104,6 +104,20 @@ impl Value {
             .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))
     }
 
+    /// Typed f64 field (accepts any JSON number).
+    pub fn f64_field(&self, key: &str) -> crate::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+    }
+
+    /// Typed bool field.
+    pub fn bool_field(&self, key: &str) -> crate::Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a boolean"))
+    }
+
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -462,9 +476,26 @@ mod tests {
 
     #[test]
     fn typed_getters() {
-        let v = parse(r#"{"n": 7, "s": "x"}"#).unwrap();
+        let v = parse(r#"{"n": 7, "s": "x", "f": 2.5, "b": true}"#).unwrap();
         assert_eq!(v.usize_field("n").unwrap(), 7);
         assert!(v.usize_field("s").is_err());
         assert!(v.usize_field("missing").is_err());
+        assert_eq!(v.f64_field("f").unwrap(), 2.5);
+        assert_eq!(v.f64_field("n").unwrap(), 7.0);
+        assert!(v.f64_field("s").is_err());
+        assert!(v.bool_field("b").unwrap());
+        assert!(v.bool_field("n").is_err());
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exactly() {
+        // The deployment-plan format leans on this: Rust's shortest
+        // round-trip float Display means serialize → parse is identity
+        // at the bit level for every finite f64.
+        for x in [0.1, 1.0 / 3.0, 12.8e9, 1e-12, 123456.789012345, 145e6] {
+            let text = Value::Num(x).to_string();
+            let back = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} → {text}");
+        }
     }
 }

@@ -1,0 +1,126 @@
+//! CLI-level acceptance for the plan-centric flow: the deprecated `shard`
+//! spelling is a byte-identical alias of `plan`, and a plan file emitted
+//! by `flexipipe plan --json` is accepted by `simulate --plan` and
+//! `serve --plan` — with the re-simulation matching the planning
+//! process's DES validation bit-for-bit across the process boundary.
+
+use flexipipe::plan::DeploymentPlan;
+use flexipipe::sim::{Simulate, Simulator};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_flexipipe")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("flexipipe_cli_plan").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin()).args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "flexipipe {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn shard_spelling_is_a_byte_identical_alias_of_plan() {
+    // The satellite-pinned back-compat case: the old `shard` spelling and
+    // the new `plan` spelling produce identical frontier JSON.
+    let dir = tmp_dir("alias");
+    let old = dir.join("old.json");
+    let new = dir.join("new.json");
+    let flags = |out: &Path| {
+        vec![
+            "--models".to_string(),
+            "vgg16,alexnet".to_string(),
+            "--board".to_string(),
+            "zc706".to_string(),
+            "--schedule".to_string(),
+            "auto".to_string(),
+            "--shard-steps".to_string(),
+            "4".to_string(),
+            "--max-period".to_string(),
+            "0.2".to_string(),
+            "--json".to_string(),
+            out.to_str().unwrap().to_string(),
+        ]
+    };
+    let mut shard_args = vec!["shard".to_string()];
+    shard_args.extend(flags(&old));
+    let mut plan_args = vec!["plan".to_string()];
+    plan_args.extend(flags(&new));
+    run_ok(&shard_args.iter().map(String::as_str).collect::<Vec<_>>());
+    run_ok(&plan_args.iter().map(String::as_str).collect::<Vec<_>>());
+    let old_text = std::fs::read_to_string(&old).unwrap();
+    let new_text = std::fs::read_to_string(&new).unwrap();
+    assert!(!old_text.is_empty());
+    assert_eq!(old_text, new_text, "shard and plan spellings diverged");
+    // The emitted document is a loadable deployment plan.
+    let plan = DeploymentPlan::load(&new).unwrap();
+    assert_eq!(plan.tenants.len(), 2);
+}
+
+#[test]
+fn planned_file_feeds_simulate_and_serve() {
+    // plan → simulate --plan → serve --plan, all through the binary, on
+    // an 8-bit workload the SimBackend can serve.
+    let dir = tmp_dir("flow");
+    let plan_path = dir.join("plan8.json");
+    run_ok(&[
+        "plan",
+        "--models",
+        "tinycnn,lenet",
+        "--board",
+        "zedboard",
+        "--bits",
+        "8",
+        "--shard-steps",
+        "8",
+        "--sim-frames",
+        "2",
+        "--json",
+        plan_path.to_str().unwrap(),
+    ]);
+
+    let sim_out = run_ok(&[
+        "simulate",
+        "--plan",
+        plan_path.to_str().unwrap(),
+        "--frames",
+        "2",
+    ]);
+    assert!(sim_out.contains("tinycnn"), "{sim_out}");
+    assert!(sim_out.contains("lenet"), "{sim_out}");
+
+    let serve_out = run_ok(&[
+        "serve",
+        "--plan",
+        plan_path.to_str().unwrap(),
+        "--frames",
+        "6",
+    ]);
+    assert!(serve_out.contains("served"), "{serve_out}");
+    assert!(serve_out.contains("tinycnn"), "{serve_out}");
+
+    // Cross-process bit-identity: re-simulating the file in this process
+    // reproduces the planning process's recorded DES validation exactly.
+    let plan = DeploymentPlan::load(&plan_path).unwrap();
+    let report = Simulator { frames: 2 }.simulate(&plan).unwrap();
+    for (t, r) in report.tenants.iter().enumerate() {
+        if let Some(recorded) = plan.tenants[t].record.as_ref().and_then(|rec| rec.sim_fps) {
+            assert_eq!(
+                r.fps.to_bits(),
+                recorded.to_bits(),
+                "tenant {t}: cross-process re-simulation diverged"
+            );
+        }
+    }
+}

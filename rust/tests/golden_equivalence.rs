@@ -51,8 +51,8 @@ fn vgg16_zc706_sim3_is_bit_identical_to_naive() {
     let alloc = FlexAllocator::default()
         .allocate(&zoo::vgg16(), &zc706(), QuantMode::W16A16)
         .unwrap();
-    let fast = sim::simulate_pipeline(&alloc, 3);
-    let slow = sim::simulate_pipeline_naive(&alloc, 3);
+    let fast = sim::engines::simulate_pipeline(&alloc, 3);
+    let slow = sim::engines::simulate_pipeline_naive(&alloc, 3);
     assert_eq!(fast.frames, slow.frames);
     assert_eq!(fast.makespan, slow.makespan);
     assert_eq!(

@@ -1,0 +1,223 @@
+//! The plan-centric acceptance suite: a [`DeploymentPlan`] produced by the
+//! planner round-trips through JSON and re-simulates **bit-identically**
+//! to the in-process search; unknown format versions are rejected; the
+//! checked-in example plan guards the on-disk format against drift; and
+//! fps floors prune SLO-optimal plans that starve a throughput tenant.
+
+use flexipipe::board::{zc706, zedboard};
+use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, TenantSpec, Workload, PLAN_VERSION};
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::ScheduleMode;
+use flexipipe::sim::{Simulate, Simulator};
+use flexipipe::util::json;
+
+fn two_tenant_workload() -> Workload {
+    Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet())
+}
+
+#[test]
+fn spatial_plan_file_resimulates_bit_identically() {
+    // Acceptance: plan → JSON file → load → Simulate reproduces the
+    // in-process search's DES validation bit-for-bit, for every
+    // validated frontier plan.
+    let set = Planner::on(zedboard())
+        .steps(8)
+        .validate(2)
+        .plan(&two_tenant_workload())
+        .unwrap();
+    let dir = std::env::temp_dir().join("flexipipe_plan_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    for &i in &set.frontier {
+        let plan = &set.plans[i];
+        let path = dir.join(format!("spatial_{i}.json"));
+        plan.save(&path).unwrap();
+        let loaded = DeploymentPlan::load(&path).unwrap();
+        // Byte-stable serialization.
+        assert_eq!(
+            plan.to_json().to_pretty(),
+            loaded.to_json().to_pretty(),
+            "plan {i} serialization not stable"
+        );
+        let sim = Simulator { frames: 2 };
+        let fresh = sim.simulate(plan).unwrap();
+        let reloaded = sim.simulate(&loaded).unwrap();
+        for (t, (a, b)) in fresh.tenants.iter().zip(&reloaded.tenants).enumerate() {
+            assert_eq!(a.fps.to_bits(), b.fps.to_bits(), "plan {i} tenant {t}");
+            assert_eq!(a.makespan, b.makespan, "plan {i} tenant {t}");
+            let recorded = plan.tenants[t]
+                .record
+                .as_ref()
+                .and_then(|r| r.sim_fps)
+                .expect("validated frontier plans record sim fps");
+            assert_eq!(
+                b.fps.to_bits(),
+                recorded.to_bits(),
+                "plan {i} tenant {t}: file-loaded plan diverged from the search DES"
+            );
+        }
+    }
+}
+
+#[test]
+fn temporal_plan_file_resimulates_bit_identically() {
+    // Same acceptance for a time-multiplexed plan: one executed schedule
+    // period, reconfiguration and all, identical through the file.
+    let set = Planner::on(zc706())
+        .steps(4)
+        .schedule(ScheduleMode::Temporal)
+        .max_period(0.1)
+        .validate(1)
+        .plan(&two_tenant_workload())
+        .unwrap();
+    let idx = set.frontier[0];
+    let plan = &set.plans[idx];
+    assert_eq!(plan.regime.label(), "temporal");
+    let dir = std::env::temp_dir().join("flexipipe_plan_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("temporal.json");
+    plan.save(&path).unwrap();
+    let loaded = DeploymentPlan::load(&path).unwrap();
+    assert_eq!(plan.to_json().to_pretty(), loaded.to_json().to_pretty());
+    let sim = Simulator { frames: 1 };
+    let fresh = sim.simulate(plan).unwrap();
+    let reloaded = sim.simulate(&loaded).unwrap();
+    for (t, (a, b)) in fresh.tenants.iter().zip(&reloaded.tenants).enumerate() {
+        assert_eq!(a.fps.to_bits(), b.fps.to_bits(), "tenant {t}");
+        let recorded = plan.tenants[t]
+            .record
+            .as_ref()
+            .and_then(|r| r.sim_fps)
+            .expect("validated frontier plans record sim fps");
+        assert_eq!(b.fps.to_bits(), recorded.to_bits(), "tenant {t}");
+    }
+}
+
+#[test]
+fn unknown_version_plan_files_are_rejected() {
+    let set = Planner::on(zedboard())
+        .steps(4)
+        .plan(&Workload::new(QuantMode::W8A8).tenant(zoo::lenet()))
+        .unwrap();
+    let text = set.plans[set.best].to_json().to_pretty();
+    // A future format version must be refused, not half-read.
+    let bumped = text.replacen(
+        &format!("\"version\": {PLAN_VERSION}"),
+        "\"version\": 99",
+        1,
+    );
+    assert_ne!(text, bumped, "fixture must actually bump the version");
+    let err = DeploymentPlan::from_json(&json::parse(&bumped).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("version 99"), "{err}");
+}
+
+#[test]
+fn checked_in_example_plan_parses_and_resimulates() {
+    // The format-drift guard: the repository ships a plan file
+    // (examples/plans/vgg16_alexnet_zc706.json, re-simulated by CI);
+    // this build must parse it, round-trip it stably, rehydrate its
+    // allocations, and execute it.
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/plans/vgg16_alexnet_zc706.json"
+    );
+    let plan = DeploymentPlan::load(path).unwrap();
+    assert_eq!(plan.version, PLAN_VERSION);
+    assert_eq!(plan.board.name, "zc706");
+    assert_eq!(plan.tenants.len(), 2);
+    assert_eq!(plan.tenants[0].net.name, "vgg16");
+    assert_eq!(plan.tenants[1].net.name, "alexnet");
+    assert_eq!(plan.regime.label(), "temporal");
+    // Semantic round-trip stability (the hand-authored file may order
+    // fields differently, but value → text → value is a fixed point).
+    let text = plan.to_json().to_pretty();
+    let back = DeploymentPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(text, back.to_json().to_pretty());
+    // The plan executes: full-board vgg16 + alexnet @16b on the zc706.
+    let allocs = plan.instantiate().unwrap();
+    assert_eq!(allocs.len(), 2);
+    let report = Simulator { frames: 1 }.simulate(&plan).unwrap();
+    assert_eq!(report.tenants.len(), 2);
+    assert!(
+        report.tenant_fps().iter().all(|&f| f > 0.0 && f.is_finite()),
+        "checked-in plan must serve both tenants: {:?}",
+        report.tenant_fps()
+    );
+}
+
+#[test]
+fn min_fps_floor_prunes_the_slo_only_pick() {
+    // Two lenet tenants, temporal with interleaving allowed: the
+    // latency-optimal plan for tenant 0 (what an SLO-only planner picks)
+    // interleaves its quanta and pays throughput for it. An fps floor on
+    // tenant 0 strictly between that plan's rate and the best rate must
+    // prune the SLO-only pick while keeping the workload feasible.
+    let planner = Planner {
+        calib_frames: 8,
+        ..Planner::on(zc706())
+            .steps(4)
+            .schedule(ScheduleMode::Temporal)
+            .interleave(2)
+            .max_period(0.1)
+    };
+    let free = planner
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant(zoo::lenet())
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    let obj: Vec<(f64, f64)> = free
+        .plans
+        .iter()
+        .map(|p| (p.fps_vec().unwrap()[0], p.latency_vec().unwrap()[0]))
+        .collect();
+    let (slo_pick_fps, slo_pick_lat) = obj
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    let best_fps = obj.iter().map(|&(f, _)| f).fold(f64::NEG_INFINITY, f64::max);
+    let worst_lat = obj.iter().map(|&(_, l)| l).fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        slo_pick_fps < best_fps,
+        "fixture: the latency-optimal plan must pay throughput \
+         ({slo_pick_fps} vs {best_fps})"
+    );
+    let floor = 0.5 * (slo_pick_fps + best_fps);
+
+    // Re-plan with a loose SLO (admits every plan) plus the floor on
+    // tenant 0: the SLO-only pick violates the floor and is pruned.
+    let constrained = planner
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant_spec(
+                    TenantSpec::new(zoo::lenet())
+                        .slo(worst_lat * 1.01)
+                        .min_fps(floor),
+                )
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    assert!(
+        constrained.plans.len() < free.plans.len(),
+        "the floor must prune at least the SLO-only pick"
+    );
+    for p in &constrained.plans {
+        assert!(
+            p.fps_vec().unwrap()[0] >= floor,
+            "a surviving plan starves the floored tenant"
+        );
+        assert!(p.latency_vec().unwrap()[0] <= worst_lat * 1.01);
+    }
+    // The pruned set no longer contains the SLO-only pick's objective
+    // point (its fps was below the floor by construction).
+    assert!(slo_pick_fps < floor);
+    let still_there = constrained.plans.iter().any(|p| {
+        p.fps_vec().unwrap()[0].to_bits() == slo_pick_fps.to_bits()
+            && p.latency_vec().unwrap()[0].to_bits() == slo_pick_lat.to_bits()
+    });
+    assert!(!still_there, "the SLO-only pick survived its floor");
+}

@@ -232,8 +232,8 @@ fn prop_event_wheel_sim_matches_naive_scheduler() {
             .allocate(&net, &board, QuantMode::W16A16)
             .unwrap();
         let frames = rng.urange(1, 5);
-        let fast = sim::simulate_pipeline(&alloc, frames);
-        let slow = sim::simulate_pipeline_naive(&alloc, frames);
+        let fast = sim::engines::simulate_pipeline(&alloc, frames);
+        let slow = sim::engines::simulate_pipeline_naive(&alloc, frames);
         assert_eq!(fast.makespan, slow.makespan, "{net:?}");
         assert_eq!(
             fast.cycles_per_frame.to_bits(),

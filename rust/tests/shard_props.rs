@@ -196,8 +196,8 @@ fn two_identical_tenants_on_doubled_board_match_solo_cycles() {
 
             // Both port models must agree here: equal tenants, equal
             // provisioned shares, equal demand.
-            let prov = sim::simulate_multi_provisioned(&[&a, &a], &[0.5, 0.5], &big, frames);
-            let sims = sim::simulate_multi(&[&a, &a], &big, frames);
+            let prov = sim::engines::simulate_multi_provisioned(&[&a, &a], &[0.5, 0.5], &big, frames);
+            let sims = sim::engines::simulate_multi(&[&a, &a], &big, frames);
             assert_eq!(sims.len(), 2);
             for (s, p) in sims.iter().zip(&prov) {
                 assert_eq!(s.makespan, p.makespan, "{}: port models disagree", net.name);
@@ -243,15 +243,15 @@ fn provisioned_shares_isolate_tenants_from_neighbors() {
     let heavy = FlexAllocator::default()
         .allocate(&zoo::vgg_micro(), &half, QuantMode::W8A8)
         .unwrap();
-    let with_light = sim::simulate_multi_provisioned(&[&a, &light], &[0.5, 0.5], &board, 3);
-    let with_heavy = sim::simulate_multi_provisioned(&[&a, &heavy], &[0.5, 0.5], &board, 3);
+    let with_light = sim::engines::simulate_multi_provisioned(&[&a, &light], &[0.5, 0.5], &board, 3);
+    let with_heavy = sim::engines::simulate_multi_provisioned(&[&a, &heavy], &[0.5, 0.5], &board, 3);
     assert_eq!(with_light[0].makespan, with_heavy[0].makespan);
     assert_eq!(
         with_light[0].cycles_per_frame.to_bits(),
         with_heavy[0].cycles_per_frame.to_bits()
     );
     // Solo with the full port at share 1.0 is the plain simulation.
-    let solo = sim::simulate_multi_provisioned(&[&a], &[1.0], &half, 3);
+    let solo = sim::engines::simulate_multi_provisioned(&[&a], &[1.0], &half, 3);
     let plain = sim::simulate(&a, 3);
     assert_eq!(solo[0].makespan, plain.makespan);
     assert_eq!(solo[0].stages, plain.stages);

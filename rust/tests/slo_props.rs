@@ -155,7 +155,7 @@ fn prop_drain_overlap_never_exceeds_serial_period() {
             .map(|&m| m * rng.urange(1, 3) as u64 / 2 + rng.urange(0, 20_000) as u64)
             .collect();
         let reconfig: Vec<u64> = (0..n).map(|_| rng.urange(0, 200_000) as u64).collect();
-        let serial = sim::simulate_timeshared(&allocs, &frames, &slices, &reconfig);
+        let serial = sim::engines::simulate_timeshared(&allocs, &frames, &slices, &reconfig);
         let seq: Vec<ScheduleSlice> = (0..n)
             .map(|i| ScheduleSlice {
                 tenant: i,
@@ -164,7 +164,7 @@ fn prop_drain_overlap_never_exceeds_serial_period() {
                 reconfig_cycles: reconfig[i],
             })
             .collect();
-        let overlapped = sim::simulate_schedule(&allocs, &seq, true);
+        let overlapped = sim::engines::simulate_schedule(&allocs, &seq, true);
         assert!(
             overlapped.period_cycles <= serial.period_cycles,
             "drain overlap stretched the period: {} > {}",
@@ -202,8 +202,8 @@ fn zero_depth_pipelines_degenerate_to_serial_cost() {
             reconfig_cycles: 40_000,
         })
         .collect();
-    let overlapped = sim::simulate_schedule(&[&alloc, &alloc], &seq, true);
-    let serial = sim::simulate_schedule(&[&alloc, &alloc], &seq, false);
+    let overlapped = sim::engines::simulate_schedule(&[&alloc, &alloc], &seq, true);
+    let serial = sim::engines::simulate_schedule(&[&alloc, &alloc], &seq, false);
     assert_eq!(overlapped.period_cycles, serial.period_cycles);
     assert_eq!(overlapped.dead_cycles, serial.dead_cycles);
     assert!(overlapped.slices.iter().all(|s| s.overlap_cycles == 0));
@@ -317,7 +317,7 @@ fn interleaving_admits_slo_infeasible_tenant_and_des_confirms_sojourn() {
     //    analytic side over-approximates makespans and under-credits
     //    drains by construction).
     let refs: Vec<&Allocation> = best.tenants.iter().map(|t| t.alloc.as_ref()).collect();
-    let ts = sim::simulate_schedule(&refs, &info.schedule_slices(), true);
+    let ts = sim::engines::simulate_schedule(&refs, &info.schedule_slices(), true);
     assert_eq!(
         ts.period_cycles, info.period_cycles,
         "exact in-window admission must not stretch the executed period"
@@ -452,7 +452,7 @@ fn overlay_two_identical_tenants_half_solo_fps_zero_reconfig_dead_cycles() {
         assert!(rel <= 0.01, "tenant {t}: {} vs {} fps", s.fps, plan.fps[t]);
     }
     let refs: Vec<&Allocation> = plan.tenants.iter().map(|t| t.alloc.as_ref()).collect();
-    let ts = sim::simulate_schedule(&refs, &info.schedule_slices(), true);
+    let ts = sim::engines::simulate_schedule(&refs, &info.schedule_slices(), true);
     assert!(ts.slices.iter().all(|s| s.reconfig_cycles == 0));
 }
 
