@@ -25,13 +25,13 @@
 use crate::model::Network;
 use crate::runtime::{Backend, PjrtBackend, SimBackend, SIM_BATCHES};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Batching policy.
+/// Batching and fault-handling policy.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     /// Max time the batcher waits to fill a larger batch before running a
@@ -40,6 +40,17 @@ pub struct BatchPolicy {
     /// Simulated host-link (PCIe) latency added per request (the demo
     /// system's transfer cost; 0 disables).
     pub link_latency: Duration,
+    /// Retries after a failed backend execute, with exponential backoff
+    /// (`retry_backoff × 2^attempt`), before the batch's requests are
+    /// failed. Default 2.
+    pub max_retries: usize,
+    /// Base backoff slept before the first retry. Default 1 ms.
+    pub retry_backoff: Duration,
+    /// Ceiling on how long [`Coordinator::infer`] waits for a result
+    /// before giving up with a timeout error (the request may still
+    /// complete in the background; its result is discarded). `None`
+    /// (the default) waits indefinitely.
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -47,6 +58,50 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_wait: Duration::from_millis(2),
             link_latency: Duration::ZERO,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            request_timeout: None,
+        }
+    }
+}
+
+/// Per-tenant serving health, driven by the worker's execute outcomes:
+/// any success restores `Healthy`; a batch that fails after all retries
+/// degrades the tenant; [`SHED_AFTER`] consecutive failed batches trip
+/// `Shedding`, where [`Coordinator::submit`] fails fast instead of
+/// queueing onto a dead backend. A shedding tenant is restored by
+/// applying a replanned deployment ([`PlannedService::apply`] restarts
+/// its worker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// The last batch executed successfully.
+    Healthy,
+    /// The last batch failed (after retries), but not yet persistently.
+    Degraded,
+    /// [`SHED_AFTER`] consecutive batches failed — new submissions are
+    /// refused until the tenant is restarted.
+    Shedding,
+}
+
+/// Consecutive failed batches (after per-batch retries) before a tenant
+/// transitions from [`Health::Degraded`] to [`Health::Shedding`].
+pub const SHED_AFTER: u32 = 3;
+
+impl Health {
+    /// Report label (`"healthy"` / `"degraded"` / `"shedding"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Shedding => "shedding",
+        }
+    }
+
+    fn from_u8(v: u8) -> Health {
+        match v {
+            0 => Health::Healthy,
+            1 => Health::Degraded,
+            _ => Health::Shedding,
         }
     }
 }
@@ -102,6 +157,8 @@ pub struct Coordinator {
     stats: Arc<Mutex<ServeStats>>,
     frame_elems: usize,
     running: Arc<AtomicBool>,
+    health: Arc<AtomicU8>,
+    request_timeout: Option<Duration>,
 }
 
 impl Coordinator {
@@ -167,7 +224,11 @@ impl Coordinator {
             let coord = Coordinator::start_sim(&t.net, SIM_BATCHES, policy.clone())?;
             tenants.push((t.net.name.clone(), coord));
         }
-        Ok(PlannedService { tenants })
+        Ok(PlannedService {
+            tenants,
+            plan: plan.clone(),
+            policy,
+        })
     }
 
     /// PJRT when `artifact_dir/manifest.json` exists, [`SimBackend`] on the
@@ -205,9 +266,12 @@ impl Coordinator {
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<usize>>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let running = Arc::new(AtomicBool::new(true));
+        let health = Arc::new(AtomicU8::new(Health::Healthy as u8));
+        let timeout = policy.request_timeout;
         let worker = {
             let stats = stats.clone();
             let running = running.clone();
+            let health = health.clone();
             std::thread::spawn(move || {
                 // Build + warm the backend inside the worker.
                 let be = match factory() {
@@ -235,7 +299,7 @@ impl Coordinator {
                     }
                 }
                 let _ = ready_tx.send(Ok(frame_elems));
-                worker_loop(be, policy, rx, stats, running)
+                worker_loop(be, policy, rx, stats, running, health)
             })
         };
         let frame_elems = ready_rx
@@ -247,11 +311,25 @@ impl Coordinator {
             stats,
             frame_elems,
             running,
+            health,
+            request_timeout: timeout,
         })
     }
 
-    /// Submit one frame; returns a receiver for the result.
+    /// Current serving health (see [`Health`] for the transitions).
+    pub fn health(&self) -> Health {
+        Health::from_u8(self.health.load(Ordering::SeqCst))
+    }
+
+    /// Submit one frame; returns a receiver for the result. A tenant in
+    /// [`Health::Shedding`] refuses new work up front — queueing onto a
+    /// persistently failing backend would only grow an unserved backlog.
     pub fn submit(&self, frame: Vec<i8>) -> crate::Result<Receiver<crate::Result<Vec<i8>>>> {
+        anyhow::ensure!(
+            self.health() != Health::Shedding,
+            "tenant is shedding load ({SHED_AFTER} consecutive batches failed) — apply a \
+             replanned deployment to restore service"
+        );
         anyhow::ensure!(
             frame.len() == self.frame_elems,
             "frame must have {} elements, got {}",
@@ -271,11 +349,23 @@ impl Coordinator {
         Ok(rrx)
     }
 
-    /// Submit and wait.
+    /// Submit and wait, honoring [`BatchPolicy::request_timeout`].
     pub fn infer(&self, frame: Vec<i8>) -> crate::Result<Vec<i8>> {
-        self.submit(frame)?
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+        let rx = self.submit(frame)?;
+        match self.request_timeout {
+            None => rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?,
+            Some(t) => match rx.recv_timeout(t) {
+                Ok(result) => result,
+                Err(RecvTimeoutError::Timeout) => {
+                    anyhow::bail!("request timed out after {t:?}")
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("coordinator dropped request")
+                }
+            },
+        }
     }
 
     /// Snapshot the stats.
@@ -298,12 +388,105 @@ impl Coordinator {
 /// A serving fleet executing one deployment plan: one [`Coordinator`] per
 /// tenant, created by [`Coordinator::start_planned`]. Tenants are
 /// addressed by plan index (names may repeat — two `lenet` tenants are
-/// two queues).
+/// two queues). The service keeps its plan, so a failover delta
+/// ([`crate::fault::PlanDiff`]) can be executed live with
+/// [`PlannedService::apply`].
 pub struct PlannedService {
     tenants: Vec<(String, Coordinator)>,
+    plan: crate::plan::DeploymentPlan,
+    policy: BatchPolicy,
+}
+
+/// What [`PlannedService::apply`] did to each tenant, by model name.
+#[derive(Debug, Clone, Default)]
+pub struct ApplyReport {
+    /// Tenants carried over untouched (their queues and stats survive).
+    pub kept: Vec<String>,
+    /// Tenants whose slice changed — worker restarted on the new config.
+    pub restarted: Vec<String>,
+    /// Tenants newly admitted by the target plan.
+    pub added: Vec<String>,
+    /// Tenants the target plan dropped — workers shut down.
+    pub removed: Vec<String>,
 }
 
 impl PlannedService {
+    /// The deployment plan this service is currently executing.
+    pub fn plan(&self) -> &crate::plan::DeploymentPlan {
+        &self.plan
+    }
+
+    /// Execute a plan diff live: the service transitions to
+    /// `self.plan().apply(diff)` with minimal disruption — kept tenants'
+    /// coordinators (queues, stats, health) survive untouched; changed
+    /// and added tenants get freshly started workers; removed tenants
+    /// are shut down. All incoming workers are started (and the target
+    /// plan fully validated) **before** anything is torn down, so a
+    /// failed apply leaves the service exactly as it was.
+    pub fn apply(&mut self, diff: &crate::fault::PlanDiff) -> crate::Result<ApplyReport> {
+        use crate::fault::TenantOp;
+        let new_plan = self.plan.apply(diff)?;
+        anyhow::ensure!(
+            new_plan.mode.bits() == 8,
+            "the applied plan must stay 8-bit (the in-process SimBackend is the i8 \
+             reference datapath)"
+        );
+        new_plan.instantiate()?;
+        // Pre-start every incoming worker; nothing is committed yet, so
+        // an error here (backend refuses the network, say) aborts with
+        // the service untouched — the started workers just drop.
+        let mut incoming: Vec<Coordinator> = Vec::new();
+        for op in &diff.ops {
+            if let TenantOp::Change { tenant, .. } | TenantOp::Add { tenant, .. } = op {
+                incoming.push(Coordinator::start_sim(
+                    &tenant.net,
+                    SIM_BATCHES,
+                    self.policy.clone(),
+                )?);
+            }
+        }
+        // Commit: rebuild the tenant list in target-plan order.
+        // `DeploymentPlan::apply` already validated that each source
+        // index is in range and claimed at most once.
+        let mut old: Vec<Option<(String, Coordinator)>> =
+            self.tenants.drain(..).map(Some).collect();
+        let mut incoming = incoming.into_iter();
+        let mut report = ApplyReport::default();
+        let mut next = Vec::with_capacity(diff.ops.len());
+        for op in &diff.ops {
+            match op {
+                TenantOp::Keep { from } => {
+                    let (name, coord) = old[*from].take().expect("apply validated ops");
+                    report.kept.push(name.clone());
+                    next.push((name, coord));
+                }
+                TenantOp::Change { from, tenant, .. } => {
+                    let (name, coord) = old[*from].take().expect("apply validated ops");
+                    coord.shutdown();
+                    report.restarted.push(name);
+                    next.push((
+                        tenant.net.name.clone(),
+                        incoming.next().expect("one incoming worker per change/add"),
+                    ));
+                }
+                TenantOp::Add { tenant, .. } => {
+                    report.added.push(tenant.net.name.clone());
+                    next.push((
+                        tenant.net.name.clone(),
+                        incoming.next().expect("one incoming worker per change/add"),
+                    ));
+                }
+            }
+        }
+        for slot in old.into_iter().flatten() {
+            let (name, coord) = slot;
+            coord.shutdown();
+            report.removed.push(name);
+        }
+        self.tenants = next;
+        self.plan = new_plan;
+        Ok(report)
+    }
     /// Number of tenants being served.
     pub fn len(&self) -> usize {
         self.tenants.len()
@@ -359,11 +542,13 @@ fn worker_loop(
     rx: Receiver<Request>,
     stats: Arc<Mutex<ServeStats>>,
     running: Arc<AtomicBool>,
+    health: Arc<AtomicU8>,
 ) {
     let variants = be.variants(); // sorted by batch ascending
     let frame_elems = be.frame_elems();
     let max_batch = variants.last().map(|v| v.1).unwrap_or(1);
     let mut queue: Vec<Request> = Vec::new();
+    let mut consecutive_failures: u32 = 0;
     'serve: loop {
         // Fill the queue up to max_batch or until max_wait expires.
         let deadline = Instant::now() + policy.max_wait;
@@ -406,11 +591,27 @@ fn worker_loop(
         if !policy.link_latency.is_zero() {
             std::thread::sleep(policy.link_latency); // PCIe transfer model
         }
-        let result = be.execute_i8(&name, &input);
+        // Bounded retry with exponential backoff: transient backend
+        // errors (a dropped PJRT execution, a glitching link) must not
+        // fail a whole batch of requests.
+        let mut attempts = 1;
+        let mut result = be.execute_i8(&name, &input);
+        while result.is_err() && attempts <= policy.max_retries {
+            let backoff = policy
+                .retry_backoff
+                .saturating_mul(1u32 << (attempts - 1).min(16) as u32);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            result = be.execute_i8(&name, &input);
+            attempts += 1;
+        }
 
         let now = Instant::now();
         match result {
             Ok(out) => {
+                consecutive_failures = 0;
+                health.store(Health::Healthy as u8, Ordering::SeqCst);
                 let out_elems = out.len() / batch;
                 let mut st = stats.lock().unwrap();
                 st.record_batch(batch, used);
@@ -424,7 +625,14 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                let msg = e.to_string();
+                consecutive_failures += 1;
+                let next = if consecutive_failures >= SHED_AFTER {
+                    Health::Shedding
+                } else {
+                    Health::Degraded
+                };
+                health.store(next as u8, Ordering::SeqCst);
+                let msg = format!("backend failed after {attempts} attempts: {e}");
                 for r in take {
                     let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
                 }
@@ -508,5 +716,202 @@ mod tests {
         assert!(!out.is_empty());
         // 16-bit has no sim fallback.
         assert!(Coordinator::start_auto(&dir, "lenet", 16, BatchPolicy::default()).is_err());
+    }
+
+    /// A [`SimBackend`] whose execute calls in `fail_from ..
+    /// fail_from + fail_count` (0-based call index, warm-up included)
+    /// fail with a transient error. The single worker thread makes the
+    /// `Cell` counter safe.
+    struct FlakyBackend {
+        inner: SimBackend,
+        calls: std::cell::Cell<usize>,
+        fail_from: usize,
+        fail_count: usize,
+        delay: Duration,
+    }
+
+    impl FlakyBackend {
+        fn start(
+            fail_from: usize,
+            fail_count: usize,
+            delay: Duration,
+            policy: BatchPolicy,
+        ) -> Coordinator {
+            use crate::model::zoo;
+            Coordinator::start_with(
+                move || {
+                    Ok(Box::new(FlakyBackend {
+                        inner: SimBackend::new(&zoo::tinycnn(), &[1])?,
+                        calls: std::cell::Cell::new(0),
+                        fail_from,
+                        fail_count,
+                        delay,
+                    }) as Box<dyn Backend>)
+                },
+                policy,
+            )
+            .unwrap()
+        }
+    }
+
+    impl Backend for FlakyBackend {
+        fn platform(&self) -> String {
+            "flaky-sim".to_string()
+        }
+        fn variants(&self) -> Vec<(String, usize)> {
+            self.inner.variants()
+        }
+        fn frame_elems(&self) -> usize {
+            self.inner.frame_elems()
+        }
+        fn out_elems(&self) -> usize {
+            self.inner.out_elems()
+        }
+        fn execute_i8(&self, name: &str, frames: &[i8]) -> crate::Result<Vec<i8>> {
+            let n = self.calls.get();
+            self.calls.set(n + 1);
+            if !self.delay.is_zero() && n >= 1 {
+                std::thread::sleep(self.delay);
+            }
+            if n >= self.fail_from && n < self.fail_from.saturating_add(self.fail_count) {
+                anyhow::bail!("transient backend fault (call {n})");
+            }
+            self.inner.execute_i8(name, frames)
+        }
+    }
+
+    #[test]
+    fn bounded_retry_recovers_from_a_transient_burst() {
+        use crate::model::zoo;
+        // Warm-up is call 0; the burst hits calls 1-2, so the first real
+        // batch needs two retries to land.
+        let policy = BatchPolicy {
+            max_retries: 3,
+            retry_backoff: Duration::from_micros(100),
+            ..BatchPolicy::default()
+        };
+        let coord = FlakyBackend::start(1, 2, Duration::ZERO, policy);
+        let oracle = SimBackend::new(&zoo::tinycnn(), &[1]).unwrap();
+        let frame = vec![1i8; oracle.frame_elems()];
+        let want = oracle.forward_frame(&frame).unwrap();
+        assert_eq!(coord.infer(frame).unwrap(), want);
+        assert_eq!(coord.health(), Health::Healthy);
+        assert_eq!(coord.stats().requests, 1);
+    }
+
+    #[test]
+    fn persistent_failures_degrade_then_shed() {
+        // Every post-warm-up call fails and retries are disabled: each
+        // batch fails once, so health walks Healthy → Degraded →
+        // Shedding in SHED_AFTER batches, after which submissions are
+        // refused fast.
+        let policy = BatchPolicy {
+            max_retries: 0,
+            retry_backoff: Duration::ZERO,
+            ..BatchPolicy::default()
+        };
+        let coord = FlakyBackend::start(1, usize::MAX, Duration::ZERO, policy);
+        let frame = vec![0i8; coord.frame_elems];
+        assert_eq!(coord.health(), Health::Healthy);
+        for i in 1..=SHED_AFTER {
+            let err = coord.infer(frame.clone()).unwrap_err();
+            assert!(
+                err.to_string().contains("after 1 attempts"),
+                "attempt count missing: {err}"
+            );
+            let want = if i < SHED_AFTER {
+                Health::Degraded
+            } else {
+                Health::Shedding
+            };
+            assert_eq!(coord.health(), want, "after {i} failed batches");
+        }
+        let err = coord.infer(frame).unwrap_err();
+        assert!(err.to_string().contains("shedding"), "{err}");
+    }
+
+    #[test]
+    fn request_timeout_bounds_the_wait() {
+        // The backend stalls 200 ms per post-warm-up call; a 5 ms
+        // request timeout must surface as a timeout error instead of
+        // blocking the caller.
+        let policy = BatchPolicy {
+            max_retries: 0,
+            request_timeout: Some(Duration::from_millis(5)),
+            ..BatchPolicy::default()
+        };
+        let coord = FlakyBackend::start(usize::MAX, 0, Duration::from_millis(200), policy);
+        let err = coord.infer(vec![0i8; coord.frame_elems]).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn apply_executes_a_plan_diff_live() {
+        use crate::board::zedboard;
+        use crate::model::zoo;
+        use crate::plan::{Planner, Workload};
+        use crate::quant::QuantMode;
+        let planner = Planner::on(zedboard()).steps(8);
+        let a = {
+            let w = Workload::new(QuantMode::W8A8)
+                .tenant(zoo::tinycnn())
+                .tenant(zoo::lenet());
+            let set = planner.plan(&w).unwrap();
+            set.plans[set.best].clone()
+        };
+        let b = {
+            let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn());
+            let set = planner.plan(&w).unwrap();
+            set.plans[set.best].clone()
+        };
+        let mut svc = Coordinator::start_planned(&a, BatchPolicy::default()).unwrap();
+        assert_eq!(svc.names(), vec!["tinycnn", "lenet"]);
+        let diff = a.diff(&b).unwrap();
+        let report = svc.apply(&diff).unwrap();
+        // tinycnn's slice changed (solo plan → different θ and record):
+        // restarted; lenet is gone: removed.
+        assert_eq!(report.removed, vec!["lenet".to_string()]);
+        assert_eq!(report.kept.len() + report.restarted.len(), 1);
+        assert_eq!(svc.names(), vec!["tinycnn"]);
+        // The live service now executes exactly plan b.
+        assert_eq!(
+            svc.plan().to_json().to_pretty(),
+            b.to_json().to_pretty(),
+            "apply must land byte-identically on the target plan"
+        );
+        let (c, h, w) = b.tenants[0].net.input;
+        assert!(!svc.infer(0, vec![0i8; c * h * w]).unwrap().is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn apply_rejects_a_bad_diff_and_leaves_the_service_running() {
+        use crate::board::zedboard;
+        use crate::fault::{PlanDiff, TenantOp};
+        use crate::model::zoo;
+        use crate::plan::{Planner, Workload};
+        use crate::quant::QuantMode;
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let plan = set.plans[set.best].clone();
+        let mut svc = Coordinator::start_planned(&plan, BatchPolicy::default()).unwrap();
+        let bad = PlanDiff {
+            ops: vec![TenantOp::Keep { from: 7 }],
+            removed: Vec::new(),
+            board: None,
+            mode: None,
+            steps: None,
+            regime: None,
+            reconfig_model: None,
+        };
+        let err = svc.apply(&bad).unwrap_err();
+        assert!(err.to_string().contains("source tenant 7"), "{err}");
+        // Untouched: both tenants still serve.
+        assert_eq!(svc.len(), 2);
+        let (c, h, w) = plan.tenants[0].net.input;
+        assert!(!svc.infer(0, vec![0i8; c * h * w]).unwrap().is_empty());
+        svc.shutdown();
     }
 }

@@ -1,0 +1,924 @@
+//! Fault modeling and failover machinery: seeded [`FaultPlan`]s, plan
+//! diffing ([`PlanDiff`]), and the degradation arithmetic behind
+//! [`crate::plan::Planner::replan`].
+//!
+//! The paper's layer-wise pipeline keeps >90% of the DSPs busy precisely
+//! because every resource is committed — which means a board loss, a DDR
+//! brownout, or a failed partial reconfiguration takes out whole tenants
+//! unless the system can re-plan and degrade gracefully. This module is
+//! the typed fault model the rest of the crate consumes:
+//!
+//! - [`FaultPlan`] — a versioned, JSON-serializable, **seeded** fault
+//!   scenario: board loss at time *t* with a surviving capacity fraction,
+//!   DDR bandwidth degradation, reconfiguration overrun/failure, and a
+//!   transient backend error burst for the serving path. Every stochastic
+//!   choice derives from [`FaultPlan::seed`] through the crate's
+//!   deterministic xorshift PRNG, so the same fault file produces
+//!   byte-identical reports on every run (CI diffs them).
+//! - [`crate::sim::Simulator::simulate_faulted`] — executes a deployment
+//!   plan *under* a fault plan and reports per-tenant fps/sojourn with the
+//!   faults injected into the DES engines.
+//! - [`PlanDiff`] — the typed delta between two [`DeploymentPlan`]s:
+//!   per-tenant θ/α/schedule changes plus the minimal drain-overlapped
+//!   reconfiguration sequence to execute the transition (reusing the PR-4
+//!   drain-credit machinery of [`crate::shard`]). `apply(a, diff(a, b))`
+//!   reconstructs `b` byte-identically (property-pinned), and the diff's
+//!   reconfiguration cost is bounded by the full-swap cost in both
+//!   directions.
+//!
+//! # Fault semantics (what is injected where)
+//!
+//! | Fault | Simulation ([`crate::sim::Simulator::simulate_faulted`]) | Re-planning ([`crate::plan::Planner::replan`]) |
+//! |---|---|---|
+//! | `board_loss.at_s` | The deployed fabric serves until *t*, then stops: per-tenant effective fps is scaled by the fraction of the simulated horizon served. | Ignored (re-planning is about *capacity*). |
+//! | `board_loss.survive_frac` | Ignored — a committed pipeline cannot partially survive; until failover the deployed bitstream is all-or-nothing. | Scales the board's DSP/LUT/FF/BRAM budgets; tenants are re-admitted against the surviving fabric. |
+//! | `ddr_factor` | Scales the DDR port rate the running pipelines stream against (brownout: the fabric runs, the port slows). | Scales the surviving board's port rate. |
+//! | `reconfig` | Rewrites each schedule slice's swap cost: `overrun_factor` multiplies it, and a seeded per-slice coin with `failure_prob` doubles it (a failed swap is retried — streamed again). Overruns stretch the period; frames are never dropped. | Inherited by the re-planned schedule through the board it is planned on. |
+//! | `backend_errors` | Not a DES fault — consumed by the serving path (the coordinator's retry/backoff hardening is tested against exactly this burst shape). | Ignored. |
+
+use crate::board::Board;
+use crate::plan::{DeploymentPlan, PlanTenant};
+use crate::sim::ScheduleSlice;
+use crate::util::json::{self, num, obj, Value};
+use crate::util::prop::Rng;
+use std::path::Path;
+
+/// The fault-plan format version this build reads and writes.
+/// [`FaultPlan::from_json`] rejects any other value with the version it
+/// found and the supported range.
+pub const FAULT_VERSION: usize = 1;
+
+/// Loss of (part of) the board at a point in time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoardLoss {
+    /// When the loss happens, in seconds from the start of the simulated
+    /// horizon. The fault simulator serves frames up to this instant and
+    /// reports the truncated effective rate.
+    pub at_s: f64,
+    /// Fraction of every fabric resource (DSP, LUT, FF, BRAM) that
+    /// survives, in `(0, 1]` — the capacity [`crate::plan::Planner::replan`]
+    /// re-admits displaced tenants against. `1.0` models a transient
+    /// outage with full capacity after recovery.
+    pub survive_frac: f64,
+}
+
+/// Partial-reconfiguration misbehavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigFault {
+    /// Multiplier (`≥ 1`) on every slice's partial-bitstream swap cost —
+    /// a congested or throttled configuration port.
+    pub overrun_factor: f64,
+    /// Per-slice probability in `[0, 1]` that a swap fails verification
+    /// and is streamed again (doubling that slice's cost). Drawn from the
+    /// fault plan's seeded PRNG — deterministic per seed.
+    pub failure_prob: f64,
+}
+
+/// A transient backend error burst on the serving path: execute calls
+/// `start .. start+length` (0-based, counted after warm-up) fail once
+/// each. The coordinator's bounded-retry hardening is tested against
+/// exactly this shape; the DES ignores it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorBurst {
+    /// Index of the first failing backend call.
+    pub start: usize,
+    /// Number of consecutive failing calls.
+    pub length: usize,
+}
+
+/// A typed, seeded, serializable fault scenario. All fields are optional —
+/// an empty fault plan ([`FaultPlan::none`]) injects nothing and the
+/// faulted simulation reproduces the healthy one exactly
+/// (regression-pinned).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every stochastic choice (reconfiguration failure coins).
+    /// The same seed always produces the same injected fault sequence.
+    pub seed: u64,
+    /// Board loss at a point in time (see [`BoardLoss`]).
+    pub board_loss: Option<BoardLoss>,
+    /// DDR bandwidth degradation factor in `(0, 1]`: the port runs at
+    /// `factor ×` its rated bytes/second.
+    pub ddr_factor: Option<f64>,
+    /// Reconfiguration overrun/failure (see [`ReconfigFault`]).
+    pub reconfig: Option<ReconfigFault>,
+    /// Transient backend error burst for the serving path (see
+    /// [`ErrorBurst`]).
+    pub backend_errors: Option<ErrorBurst>,
+}
+
+impl FaultPlan {
+    /// The neutral fault plan: nothing is injected.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            board_loss: None,
+            ddr_factor: None,
+            reconfig: None,
+            backend_errors: None,
+        }
+    }
+
+    /// Reject nonphysical fault parameters with the real cause.
+    pub fn validate(&self) -> crate::Result<()> {
+        if let Some(l) = &self.board_loss {
+            anyhow::ensure!(
+                l.at_s >= 0.0 && l.at_s.is_finite(),
+                "board_loss.at_s must be a finite non-negative time, got {}",
+                l.at_s
+            );
+            anyhow::ensure!(
+                l.survive_frac > 0.0 && l.survive_frac <= 1.0,
+                "board_loss.survive_frac must be in (0, 1], got {}",
+                l.survive_frac
+            );
+        }
+        if let Some(f) = self.ddr_factor {
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "ddr_factor must be in (0, 1], got {f}"
+            );
+        }
+        if let Some(r) = &self.reconfig {
+            anyhow::ensure!(
+                r.overrun_factor >= 1.0 && r.overrun_factor.is_finite(),
+                "reconfig.overrun_factor must be ≥ 1 (an overrun never shortens a swap), got {}",
+                r.overrun_factor
+            );
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&r.failure_prob),
+                "reconfig.failure_prob must be in [0, 1], got {}",
+                r.failure_prob
+            );
+        }
+        Ok(())
+    }
+
+    /// The board capacity that survives this fault: fabric resources
+    /// scaled by [`BoardLoss::survive_frac`] (rounded down), the DDR port
+    /// by [`FaultPlan::ddr_factor`]. This is what
+    /// [`crate::plan::Planner::replan`] re-admits tenants against.
+    pub fn surviving_board(&self, board: &Board) -> Board {
+        let frac = self.board_loss.map_or(1.0, |l| l.survive_frac);
+        let scale = |x: usize| (x as f64 * frac).floor() as usize;
+        Board {
+            name: board.name.clone(),
+            dsps: scale(board.dsps),
+            luts: scale(board.luts),
+            ffs: scale(board.ffs),
+            bram36: scale(board.bram36),
+            ddr_bytes_per_sec: board.ddr_bytes_per_sec * self.ddr_factor.unwrap_or(1.0),
+            freq_hz: board.freq_hz,
+        }
+    }
+
+    /// The board the *deployed* bitstream keeps running on under this
+    /// fault: full fabric (a committed pipeline cannot partially survive
+    /// — loss is handled as an outage in time, not a capacity cut), DDR
+    /// port scaled by the brownout factor.
+    pub fn degraded_port(&self, board: &Board) -> Board {
+        let mut b = board.clone();
+        b.ddr_bytes_per_sec *= self.ddr_factor.unwrap_or(1.0);
+        b
+    }
+
+    /// Inject the reconfiguration fault into a schedule: every slice's
+    /// swap cost is multiplied by the overrun factor, then a seeded
+    /// per-slice coin with `failure_prob` doubles it (failed swap →
+    /// streamed again). Deterministic per [`FaultPlan::seed`]; with no
+    /// reconfiguration fault the schedule is returned unchanged.
+    pub fn degraded_schedule(&self, seq: &[ScheduleSlice]) -> Vec<ScheduleSlice> {
+        let Some(rf) = &self.reconfig else {
+            return seq.to_vec();
+        };
+        let mut rng = Rng::new(self.seed);
+        seq.iter()
+            .map(|s| {
+                let mut rc = (s.reconfig_cycles as f64 * rf.overrun_factor).ceil() as u64;
+                // One coin per slice, drawn even for zero-cost slices so
+                // the stream stays aligned across schedule variants.
+                if unit(rng.next_u64()) < rf.failure_prob {
+                    rc *= 2;
+                }
+                ScheduleSlice {
+                    tenant: s.tenant,
+                    frames: s.frames,
+                    slice_cycles: s.slice_cycles,
+                    reconfig_cycles: rc,
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize to the versioned JSON fault format (deterministic field
+    /// order, bit-exact floats).
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("version", num(FAULT_VERSION)),
+            ("seed", Value::Num(self.seed as f64)),
+        ];
+        if let Some(l) = &self.board_loss {
+            pairs.push((
+                "board_loss",
+                obj(vec![
+                    ("at_s", Value::Num(l.at_s)),
+                    ("survive_frac", Value::Num(l.survive_frac)),
+                ]),
+            ));
+        }
+        if let Some(f) = self.ddr_factor {
+            pairs.push(("ddr_factor", Value::Num(f)));
+        }
+        if let Some(r) = &self.reconfig {
+            pairs.push((
+                "reconfig",
+                obj(vec![
+                    ("overrun_factor", Value::Num(r.overrun_factor)),
+                    ("failure_prob", Value::Num(r.failure_prob)),
+                ]),
+            ));
+        }
+        if let Some(b) = &self.backend_errors {
+            pairs.push((
+                "backend_errors",
+                obj(vec![("start", num(b.start)), ("length", num(b.length))]),
+            ));
+        }
+        obj(pairs)
+    }
+
+    /// Deserialize from the versioned JSON fault format. Unknown versions
+    /// are rejected with the version found and the supported range.
+    pub fn from_json(v: &Value) -> crate::Result<FaultPlan> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(
+            version == FAULT_VERSION,
+            "unsupported fault-plan version {version}: this build reads versions \
+             {FAULT_VERSION}..={FAULT_VERSION}"
+        );
+        let seed = v
+            .req("seed")?
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as u64)
+            .ok_or_else(|| anyhow::anyhow!("'seed' must be a non-negative integer"))?;
+        let board_loss = match v.get("board_loss") {
+            None => None,
+            Some(l) => Some(BoardLoss {
+                at_s: l.f64_field("at_s")?,
+                survive_frac: l.f64_field("survive_frac")?,
+            }),
+        };
+        let ddr_factor = match v.get("ddr_factor") {
+            None => None,
+            Some(f) => Some(
+                f.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("'ddr_factor' must be a number"))?,
+            ),
+        };
+        let reconfig = match v.get("reconfig") {
+            None => None,
+            Some(r) => Some(ReconfigFault {
+                overrun_factor: r.f64_field("overrun_factor")?,
+                failure_prob: r.f64_field("failure_prob")?,
+            }),
+        };
+        let backend_errors = match v.get("backend_errors") {
+            None => None,
+            Some(b) => Some(ErrorBurst {
+                start: b.usize_field("start")?,
+                length: b.usize_field("length")?,
+            }),
+        };
+        let plan = FaultPlan {
+            seed,
+            board_loss,
+            ddr_factor,
+            reconfig,
+            backend_errors,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Write the fault plan to a file (pretty-printed JSON).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a fault plan from a file; errors carry the path.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<FaultPlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+        FaultPlan::from_json(&v).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+    }
+}
+
+/// Map a raw PRNG draw to the unit interval `[0, 1)` (53 mantissa bits).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injected simulation report
+// ---------------------------------------------------------------------------
+
+/// One tenant's measurements under a fault scenario.
+#[derive(Debug, Clone)]
+pub struct FaultTenantReport {
+    /// Tenant model name (plan order preserved in the parent report).
+    pub net: String,
+    /// Effective fps of the healthy plan (no faults) — the baseline the
+    /// degradation is measured against.
+    pub healthy_fps: f64,
+    /// Effective fps of the *running* faulted fabric: DDR brownout and
+    /// reconfiguration overruns applied, outage truncation not yet.
+    pub degraded_fps: f64,
+    /// Effective fps over the whole horizon: `degraded_fps ×
+    /// served_frac` — what the tenant actually gets when the board dies
+    /// at [`BoardLoss::at_s`].
+    pub fps: f64,
+    /// Worst-case frame sojourn of the faulted fabric in seconds
+    /// (measured by the DES: schedule worst sojourn for temporal plans,
+    /// first-frame completion for resident pipelines).
+    pub sojourn_s: f64,
+    /// Fraction of the simulated horizon the board served before the
+    /// loss (`1.0` with no board loss or a loss beyond the horizon).
+    pub served_frac: f64,
+}
+
+/// Per-tenant fps/sojourn under a [`FaultPlan`] — the output of
+/// [`crate::sim::Simulator::simulate_faulted`]. Serializes to
+/// deterministic JSON: the same plan, faults, and seed produce
+/// byte-identical reports (CI runs the simulation twice and diffs them).
+#[derive(Debug, Clone)]
+pub struct FaultSimReport {
+    /// The fault plan's seed (echoed for reproduction).
+    pub seed: u64,
+    /// The executed plan's sharing regime label.
+    pub regime: String,
+    /// Simulated horizon in seconds: the executed window the loss instant
+    /// is interpreted against (one schedule period for temporal plans,
+    /// the longest tenant makespan for resident plans).
+    pub horizon_s: f64,
+    /// One entry per tenant, in plan order.
+    pub tenants: Vec<FaultTenantReport>,
+}
+
+impl FaultSimReport {
+    /// Deterministic JSON document (sorted keys, bit-exact floats).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", num(FAULT_VERSION)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("regime", Value::Str(self.regime.clone())),
+            ("horizon_s", Value::Num(self.horizon_s)),
+            (
+                "tenants",
+                Value::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("net", Value::Str(t.net.clone())),
+                                ("healthy_fps", Value::Num(t.healthy_fps)),
+                                ("degraded_fps", Value::Num(t.degraded_fps)),
+                                ("fps", Value::Num(t.fps)),
+                                ("sojourn_s", Value::Num(t.sojourn_s)),
+                                ("served_frac", Value::Num(t.served_frac)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan diffing: the typed delta between two deployments
+// ---------------------------------------------------------------------------
+
+/// One reconfiguration action of a [`PlanDiff`]: stream the target
+/// tenant's partial bitstream, crediting what hides under the outgoing
+/// pipeline's drain tail (the PR-4 drain-credit machinery,
+/// [`crate::shard::drain_credit`]).
+#[derive(Debug, Clone)]
+pub struct ReconfigStep {
+    /// Incoming tenant's model name.
+    pub net: String,
+    /// Full partial-bitstream swap cost in cycles (no credit).
+    pub full_cycles: u64,
+    /// Cycles hidden under the outgoing tenant's drain tail
+    /// (`min(full, measured drain)`; 0 for added tenants — there is no
+    /// outgoing pipeline to drain).
+    pub overlap_cycles: u64,
+}
+
+impl ReconfigStep {
+    /// Dead cycles actually charged: `full − overlap`.
+    pub fn charged_cycles(&self) -> u64 {
+        self.full_cycles - self.overlap_cycles
+    }
+}
+
+/// One target-plan tenant's relationship to the source plan, in target
+/// plan order.
+#[derive(Debug, Clone)]
+pub enum TenantOp {
+    /// Byte-identical tenant carried over from source index `from` — no
+    /// reconfiguration.
+    Keep {
+        /// Index of this tenant in the source plan.
+        from: usize,
+    },
+    /// Same model, different θ/α/share/record — the region is swapped
+    /// with a drain-overlapped reconfiguration.
+    Change {
+        /// Index of the outgoing tenant in the source plan.
+        from: usize,
+        /// The tenant as the target plan declares it (authoritative —
+        /// [`DeploymentPlan::apply`] reproduces the target byte-for-byte
+        /// from these payloads).
+        tenant: PlanTenant,
+        /// The swap executing this change.
+        reconfig: ReconfigStep,
+    },
+    /// Tenant present only in the target plan — a full, uncredited swap.
+    Add {
+        /// The tenant as the target plan declares it.
+        tenant: PlanTenant,
+        /// The swap bringing the tenant in (no drain credit).
+        reconfig: ReconfigStep,
+    },
+}
+
+/// A source-plan tenant absent from the target plan. Dropping a region
+/// costs no reconfiguration (nothing is streamed in).
+#[derive(Debug, Clone)]
+pub struct RemovedTenant {
+    /// Index of the dropped tenant in the source plan.
+    pub from: usize,
+    /// Its model name.
+    pub net: String,
+}
+
+/// The typed delta between two [`DeploymentPlan`]s: per-tenant operations
+/// in target order, dropped tenants, and whichever plan-level fields
+/// changed. Produced by [`DeploymentPlan::diff`]; executed (in data) by
+/// [`DeploymentPlan::apply`] and (live) by
+/// [`crate::coordinator::PlannedService::apply`].
+///
+/// Algebra (property-pinned in `tests/plan_diff.rs`):
+/// `diff(a, a).is_empty()`; `a.apply(&a.diff(&b)?)?` serializes
+/// byte-identically to `b`; and [`PlanDiff::cost_cycles`] is bounded by
+/// the target plan's full-swap cost in both directions.
+#[derive(Debug, Clone)]
+pub struct PlanDiff {
+    /// One op per target-plan tenant, in target plan order.
+    pub ops: Vec<TenantOp>,
+    /// Source tenants absent from the target, in source order.
+    pub removed: Vec<RemovedTenant>,
+    /// Target board when it differs from the source's.
+    pub board: Option<Board>,
+    /// Target quantization mode when it differs.
+    pub mode: Option<crate::quant::QuantMode>,
+    /// Target split granularity when it differs.
+    pub steps: Option<usize>,
+    /// Target sharing regime (with its full temporal layout) when it
+    /// differs.
+    pub regime: Option<crate::shard::Regime>,
+    /// Target reconfiguration cost model when it differs.
+    pub reconfig_model: Option<crate::shard::ReconfigModel>,
+}
+
+impl PlanDiff {
+    /// No tenant changed, moved, or was added/removed, and every
+    /// plan-level field is identical.
+    pub fn is_empty(&self) -> bool {
+        self.removed.is_empty()
+            && self.board.is_none()
+            && self.mode.is_none()
+            && self.steps.is_none()
+            && self.regime.is_none()
+            && self.reconfig_model.is_none()
+            && self
+                .ops
+                .iter()
+                .enumerate()
+                .all(|(j, op)| matches!(op, TenantOp::Keep { from } if *from == j))
+    }
+
+    /// Total reconfiguration dead cycles the transition charges: the sum
+    /// of every change/add swap's `full − overlap`. Kept tenants and
+    /// removed tenants cost nothing.
+    pub fn cost_cycles(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                TenantOp::Keep { .. } => 0,
+                TenantOp::Change { reconfig, .. } | TenantOp::Add { reconfig, .. } => {
+                    reconfig.charged_cycles()
+                }
+            })
+            .sum()
+    }
+
+    /// Summary JSON for `flexipipe plan --diff` (deterministic field
+    /// order). Carries op kinds, per-swap costs, and which plan-level
+    /// fields changed — not the full tenant payloads (those live in the
+    /// target plan file itself).
+    pub fn to_json(&self) -> Value {
+        let ops: Vec<Value> = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                TenantOp::Keep { from } => obj(vec![
+                    ("op", Value::Str("keep".to_string())),
+                    ("from", num(*from)),
+                ]),
+                TenantOp::Change {
+                    from,
+                    tenant,
+                    reconfig,
+                } => obj(vec![
+                    ("op", Value::Str("change".to_string())),
+                    ("from", num(*from)),
+                    ("net", Value::Str(tenant.net.name.clone())),
+                    ("full_cycles", Value::Num(reconfig.full_cycles as f64)),
+                    ("overlap_cycles", Value::Num(reconfig.overlap_cycles as f64)),
+                    ("charged_cycles", Value::Num(reconfig.charged_cycles() as f64)),
+                ]),
+                TenantOp::Add { tenant, reconfig } => obj(vec![
+                    ("op", Value::Str("add".to_string())),
+                    ("net", Value::Str(tenant.net.name.clone())),
+                    ("full_cycles", Value::Num(reconfig.full_cycles as f64)),
+                    ("overlap_cycles", Value::Num(reconfig.overlap_cycles as f64)),
+                    ("charged_cycles", Value::Num(reconfig.charged_cycles() as f64)),
+                ]),
+            })
+            .collect();
+        let removed: Vec<Value> = self
+            .removed
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("from", num(r.from)),
+                    ("net", Value::Str(r.net.clone())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("empty", Value::Bool(self.is_empty())),
+            ("cost_cycles", Value::Num(self.cost_cycles() as f64)),
+            ("ops", Value::Arr(ops)),
+            ("removed", Value::Arr(removed)),
+            ("board_changed", Value::Bool(self.board.is_some())),
+            ("mode_changed", Value::Bool(self.mode.is_some())),
+            ("steps_changed", Value::Bool(self.steps.is_some())),
+            ("regime_changed", Value::Bool(self.regime.is_some())),
+            (
+                "reconfig_model_changed",
+                Value::Bool(self.reconfig_model.is_some()),
+            ),
+        ])
+    }
+}
+
+/// Frames of the short solo DES run that measures an outgoing pipeline's
+/// drain tail for the diff's overlap credit — the same conservative
+/// minimum-over-window rule the temporal planner calibrates with.
+const DIFF_DRAIN_FRAMES: usize = 2;
+
+/// Compute the typed delta from `from` to `to` (see [`PlanDiff`]).
+///
+/// Tenants are matched by model name and occurrence (the `k`-th `lenet`
+/// of the source pairs with the `k`-th `lenet` of the target), so
+/// workloads with repeated models diff stably. When any tenant changes or
+/// is added, both plans are instantiated to price the swaps: the target
+/// tenant's allocation gives the partial-bitstream cost under the target
+/// plan's [`crate::shard::ReconfigModel`], and the outgoing tenant's
+/// measured drain tail gives the overlap credit.
+pub fn diff(from: &DeploymentPlan, to: &DeploymentPlan) -> crate::Result<PlanDiff> {
+    anyhow::ensure!(
+        from.version == to.version,
+        "cannot diff plans of different format versions ({} vs {})",
+        from.version,
+        to.version
+    );
+    let tenant_text = |t: &PlanTenant| crate::plan::tenant_to_json(t).to_pretty();
+    let from_text: Vec<String> = from.tenants.iter().map(tenant_text).collect();
+    let to_text: Vec<String> = to.tenants.iter().map(tenant_text).collect();
+
+    // Match target tenants to source tenants by (name, occurrence).
+    let mut matched = vec![false; from.tenants.len()];
+    let mut pairing: Vec<Option<usize>> = Vec::with_capacity(to.tenants.len());
+    for (j, t) in to.tenants.iter().enumerate() {
+        let occ = to.tenants[..j]
+            .iter()
+            .filter(|x| x.net.name == t.net.name)
+            .count();
+        let src = from
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.net.name == t.net.name)
+            .nth(occ)
+            .map(|(i, _)| i);
+        if let Some(i) = src {
+            matched[i] = true;
+        }
+        pairing.push(src);
+    }
+
+    // Price the swaps only when something actually changes (identical
+    // plans diff without rehydrating anything).
+    let needs_cost = pairing.iter().enumerate().any(|(j, src)| match src {
+        Some(i) => from_text[*i] != to_text[j],
+        None => true,
+    });
+    let (from_allocs, to_allocs) = if needs_cost {
+        (from.instantiate()?, to.instantiate()?)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let mut ops = Vec::with_capacity(to.tenants.len());
+    for (j, src) in pairing.iter().enumerate() {
+        match src {
+            Some(i) if from_text[*i] == to_text[j] => ops.push(TenantOp::Keep { from: *i }),
+            Some(i) => {
+                let full = to
+                    .reconfig
+                    .cycles(&to_allocs[j].evaluate(), to.board.freq_hz);
+                let drain = crate::shard::drain_credit(&from_allocs[*i], DIFF_DRAIN_FRAMES);
+                ops.push(TenantOp::Change {
+                    from: *i,
+                    tenant: to.tenants[j].clone(),
+                    reconfig: ReconfigStep {
+                        net: to.tenants[j].net.name.clone(),
+                        full_cycles: full,
+                        overlap_cycles: full.min(drain),
+                    },
+                });
+            }
+            None => {
+                let full = to
+                    .reconfig
+                    .cycles(&to_allocs[j].evaluate(), to.board.freq_hz);
+                ops.push(TenantOp::Add {
+                    tenant: to.tenants[j].clone(),
+                    reconfig: ReconfigStep {
+                        net: to.tenants[j].net.name.clone(),
+                        full_cycles: full,
+                        overlap_cycles: 0,
+                    },
+                });
+            }
+        }
+    }
+    let removed = (0..from.tenants.len())
+        .filter(|&i| !matched[i])
+        .map(|i| RemovedTenant {
+            from: i,
+            net: from.tenants[i].net.name.clone(),
+        })
+        .collect();
+
+    // Plan-level deltas, detected on the serialized form so the
+    // comparison can never drift from what apply() reconstructs.
+    let changed = |a: Value, b: Value| (a.to_pretty() != b.to_pretty());
+    let board = changed(
+        crate::plan::board_to_json(&from.board),
+        crate::plan::board_to_json(&to.board),
+    )
+    .then(|| to.board.clone());
+    let mode = (from.mode != to.mode).then_some(to.mode);
+    let steps = (from.steps != to.steps).then_some(to.steps);
+    let regime = changed(regime_value(from), regime_value(to)).then(|| to.regime.clone());
+    let reconfig_model = changed(
+        crate::plan::reconfig_to_json(&from.reconfig),
+        crate::plan::reconfig_to_json(&to.reconfig),
+    )
+    .then(|| to.reconfig.clone());
+
+    Ok(PlanDiff {
+        ops,
+        removed,
+        board,
+        mode,
+        steps,
+        regime,
+        reconfig_model,
+    })
+}
+
+/// Serialized regime identity (label + full temporal layout when present).
+fn regime_value(p: &DeploymentPlan) -> Value {
+    let mut pairs = vec![("label", Value::Str(p.regime.label().to_string()))];
+    if let crate::shard::Regime::Temporal(info) = &p.regime {
+        pairs.push(("temporal", crate::plan::temporal_to_json(info)));
+    }
+    obj(pairs)
+}
+
+impl DeploymentPlan {
+    /// Typed delta from `self` to `target` — see [`diff`].
+    pub fn diff(&self, target: &DeploymentPlan) -> crate::Result<PlanDiff> {
+        diff(self, target)
+    }
+
+    /// Reconstruct the target plan a diff describes: kept tenants are
+    /// copied from `self`, changed/added tenants come from the diff's
+    /// payloads, and changed plan-level fields override `self`'s.
+    /// `a.apply(&a.diff(&b)?)?` serializes byte-identically to `b`
+    /// (property-pinned).
+    pub fn apply(&self, diff: &PlanDiff) -> crate::Result<DeploymentPlan> {
+        let mut used = vec![false; self.tenants.len()];
+        let mut claim = |from: usize| -> crate::Result<()> {
+            anyhow::ensure!(
+                from < self.tenants.len(),
+                "diff references source tenant {from} but the plan has {}",
+                self.tenants.len()
+            );
+            anyhow::ensure!(
+                !used[from],
+                "diff references source tenant {from} more than once"
+            );
+            used[from] = true;
+            Ok(())
+        };
+        let mut tenants = Vec::with_capacity(diff.ops.len());
+        for op in &diff.ops {
+            match op {
+                TenantOp::Keep { from } => {
+                    claim(*from)?;
+                    tenants.push(self.tenants[*from].clone());
+                }
+                TenantOp::Change { from, tenant, .. } => {
+                    claim(*from)?;
+                    tenants.push(tenant.clone());
+                }
+                TenantOp::Add { tenant, .. } => tenants.push(tenant.clone()),
+            }
+        }
+        anyhow::ensure!(!tenants.is_empty(), "applying the diff leaves no tenants");
+        Ok(DeploymentPlan {
+            version: self.version,
+            board: diff.board.clone().unwrap_or_else(|| self.board.clone()),
+            mode: diff.mode.unwrap_or(self.mode),
+            steps: diff.steps.unwrap_or(self.steps),
+            tenants,
+            regime: diff.regime.clone().unwrap_or_else(|| self.regime.clone()),
+            reconfig: diff
+                .reconfig_model
+                .clone()
+                .unwrap_or_else(|| self.reconfig.clone()),
+        })
+    }
+
+    /// The full-swap reconfiguration cost of this plan in cycles: stream
+    /// every tenant's partial bitstream with no drain credit — the upper
+    /// bound any diff *into* this plan is charged under (property-pinned:
+    /// `diff(a, b).cost_cycles() ≤ b.full_swap_cycles()` and
+    /// symmetrically).
+    pub fn full_swap_cycles(&self) -> crate::Result<u64> {
+        let allocs = self.instantiate()?;
+        Ok(allocs
+            .iter()
+            .map(|a| self.reconfig.cycles(&a.evaluate(), self.board.freq_hz))
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zc706;
+
+    fn full_fault() -> FaultPlan {
+        FaultPlan {
+            seed: 42,
+            board_loss: Some(BoardLoss {
+                at_s: 0.25,
+                survive_frac: 0.875,
+            }),
+            ddr_factor: Some(0.9),
+            reconfig: Some(ReconfigFault {
+                overrun_factor: 2.0,
+                failure_prob: 0.25,
+            }),
+            backend_errors: Some(ErrorBurst {
+                start: 1,
+                length: 2,
+            }),
+        }
+    }
+
+    #[test]
+    fn fault_plan_json_round_trips_byte_stably() {
+        for plan in [FaultPlan::none(), full_fault()] {
+            let text = plan.to_json().to_pretty();
+            let back = FaultPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(plan, back);
+            assert_eq!(text, back.to_json().to_pretty(), "serialization not stable");
+        }
+    }
+
+    #[test]
+    fn fault_plan_versions_and_ranges_are_enforced() {
+        let text = full_fault().to_json().to_pretty();
+        let bumped = text.replacen("\"version\": 1", "\"version\": 9", 1);
+        assert_ne!(text, bumped);
+        let err = FaultPlan::from_json(&json::parse(&bumped).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 9"), "{err}");
+        assert!(err.to_string().contains("1..=1"), "{err}");
+
+        let bad = |mutate: fn(&mut FaultPlan)| {
+            let mut f = full_fault();
+            mutate(&mut f);
+            f.validate().unwrap_err()
+        };
+        bad(|f| f.board_loss.as_mut().unwrap().survive_frac = 0.0);
+        bad(|f| f.board_loss.as_mut().unwrap().survive_frac = 1.5);
+        bad(|f| f.board_loss.as_mut().unwrap().at_s = -1.0);
+        bad(|f| f.ddr_factor = Some(0.0));
+        bad(|f| f.ddr_factor = Some(2.0));
+        bad(|f| f.reconfig.as_mut().unwrap().overrun_factor = 0.5);
+        bad(|f| f.reconfig.as_mut().unwrap().failure_prob = 1.5);
+        full_fault().validate().unwrap();
+    }
+
+    #[test]
+    fn surviving_board_scales_fabric_and_port() {
+        let b = zc706();
+        let f = full_fault();
+        let s = f.surviving_board(&b);
+        assert_eq!(s.dsps, (b.dsps as f64 * 0.875).floor() as usize);
+        assert_eq!(s.bram36, (b.bram36 as f64 * 0.875).floor() as usize);
+        assert_eq!(s.luts, (b.luts as f64 * 0.875).floor() as usize);
+        assert!((s.ddr_bytes_per_sec - b.ddr_bytes_per_sec * 0.9).abs() < 1e-3);
+        assert_eq!(s.freq_hz, b.freq_hz);
+        // The deployed bitstream keeps its fabric; only the port browns out.
+        let d = f.degraded_port(&b);
+        assert_eq!(d.dsps, b.dsps);
+        assert!((d.ddr_bytes_per_sec - b.ddr_bytes_per_sec * 0.9).abs() < 1e-3);
+        // The neutral fault changes nothing.
+        let n = FaultPlan::none().surviving_board(&b);
+        assert_eq!(n.dsps, b.dsps);
+        assert_eq!(n.ddr_bytes_per_sec.to_bits(), b.ddr_bytes_per_sec.to_bits());
+    }
+
+    #[test]
+    fn degraded_schedule_is_seeded_and_monotone() {
+        let seq: Vec<ScheduleSlice> = (0..6)
+            .map(|i| ScheduleSlice {
+                tenant: i % 2,
+                frames: 1 + i,
+                slice_cycles: 1000,
+                reconfig_cycles: 100 * i as u64,
+            })
+            .collect();
+        // No reconfiguration fault: unchanged.
+        let same = FaultPlan::none().degraded_schedule(&seq);
+        for (a, b) in seq.iter().zip(&same) {
+            assert_eq!(a.reconfig_cycles, b.reconfig_cycles);
+            assert_eq!(a.frames, b.frames);
+        }
+        // Deterministic per seed; never below the overrun floor; failure
+        // probability 1 exactly doubles the overrun cost.
+        let fault = |prob: f64, seed: u64| FaultPlan {
+            seed,
+            reconfig: Some(ReconfigFault {
+                overrun_factor: 3.0,
+                failure_prob: prob,
+            }),
+            ..FaultPlan::none()
+        };
+        let a = fault(0.5, 7).degraded_schedule(&seq);
+        let b = fault(0.5, 7).degraded_schedule(&seq);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.reconfig_cycles, y.reconfig_cycles, "same seed must agree");
+        }
+        for (s, d) in seq.iter().zip(&a) {
+            let floor = s.reconfig_cycles * 3;
+            assert!(d.reconfig_cycles == floor || d.reconfig_cycles == 2 * floor);
+        }
+        let doubled = fault(1.0, 7).degraded_schedule(&seq);
+        for (s, d) in seq.iter().zip(&doubled) {
+            assert_eq!(d.reconfig_cycles, s.reconfig_cycles * 6);
+        }
+    }
+
+    #[test]
+    fn unit_draws_stay_in_the_unit_interval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let u = unit(rng.next_u64());
+            assert!((0.0..1.0).contains(&u), "{u}");
+        }
+    }
+}

@@ -40,7 +40,12 @@
 //! - [`engine`] — convolution-layer-engine micro-model: cycle counts,
 //!   line-buffer geometry, BRAM/LUT/FF cost, address generation.
 //! - [`plan`] — the public spine: `Workload` → `Planner` →
-//!   serializable `DeploymentPlan`.
+//!   serializable `DeploymentPlan`, plus failover re-planning
+//!   ([`plan::Planner::replan`]).
+//! - [`fault`] — fault tolerance: seeded [`fault::FaultPlan`] scenarios
+//!   injected into the DES ([`sim::Simulator::simulate_faulted`]) and
+//!   typed plan deltas ([`fault::PlanDiff`]) with drain-overlapped
+//!   reconfiguration costs.
 //! - [`sim`] — event-driven pipeline simulator (stall-accurate);
 //!   [`sim::Simulate`] executes whole deployment plans.
 //! - [`search`] — parallel design-space search: boards × models × modes ×
@@ -115,6 +120,7 @@ pub mod alloc;
 pub mod board;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod model;
 pub mod plan;
 pub mod power;

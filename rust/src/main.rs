@@ -8,8 +8,10 @@
 //!                    [--shard-steps 16] [--weights 1,1] [--sim-frames 0] \
 //!                    [--max-period 0.5] [--slo vgg16=33ms] [--min-fps alexnet=120] \
 //!                    [--interleave 2] [--objective min-fps] [--json plan.json]
-//! flexipipe simulate --plan plan.json [--frames 4]
+//! flexipipe simulate --plan plan.json [--frames 4] [--faults faults.json]
 //! flexipipe serve    --plan plan.json [--frames 256]
+//! flexipipe plan     --diff a.json b.json           # typed plan delta
+//! flexipipe replan   --plan plan.json --faults faults.json [--json out.json]
 //! flexipipe allocate --model vgg16 --board zc706 --bits 16 [--arch flex]
 //! flexipipe simulate --model vgg16 --board zc706 --frames 4
 //! flexipipe report   [--no-paper]          # regenerate Table I
@@ -24,6 +26,7 @@
 
 use flexipipe::alloc::{allocator_for, ArchKind};
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
+use flexipipe::fault::FaultPlan;
 use flexipipe::model::{config, Network};
 use flexipipe::plan::{Constraint, DeploymentPlan, Objective, Planner, TenantSpec, Workload};
 use flexipipe::power::PowerModel;
@@ -110,6 +113,17 @@ fn specs() -> Vec<Spec> {
             None,
         ),
         opt(
+            "faults",
+            "fault-plan JSON: inject seeded faults into `simulate --plan` or \
+             drive `replan` (see examples/faults/)",
+            None,
+        ),
+        flag(
+            "diff",
+            "plan: diff two deployment-plan files (positional: a.json b.json) \
+             into a minimal drain-overlapped reconfiguration sequence",
+        ),
+        opt(
             "interleave",
             "max sub-slices per tenant per period; k>1 trades switches for \
              latency (plan/search)",
@@ -154,6 +168,7 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "sweep" => cmd_sweep(&args),
         "search" => cmd_search(&args),
         "plan" => cmd_plan(&args),
+        "replan" => cmd_replan(&args),
         "shard" => {
             // Thin deprecated alias: same flags, same output, one spine.
             eprintln!(
@@ -174,12 +189,17 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: plan simulate serve allocate report e2e sweep search help\n\
+         commands: plan replan simulate serve allocate report e2e sweep search help\n\
          (shard is a deprecated alias of plan)\n\n\
          the plan-centric flow: `flexipipe plan … --json plan.json` emits a\n\
          deployment plan; `flexipipe simulate --plan plan.json` executes it in\n\
          the cycle-accurate DES; `flexipipe serve --plan plan.json` serves every\n\
-         tenant on the in-process SimBackend.\n\n{}",
+         tenant on the in-process SimBackend.\n\n\
+         fault tolerance: `simulate --plan P --faults F` replays a seeded fault\n\
+         scenario through the DES; `plan --diff a.json b.json` emits the minimal\n\
+         drain-overlapped reconfiguration sequence between two plans; `replan\n\
+         --plan P --faults F` re-plans the workload onto the surviving capacity\n\
+         with an explicit shed report.\n\n{}",
         usage(&specs())
     );
 }
@@ -288,6 +308,14 @@ fn cmd_simulate(args: &Args) -> flexipipe::Result<()> {
 fn cmd_simulate_plan(args: &Args, path: &str) -> flexipipe::Result<()> {
     let plan = DeploymentPlan::load(path)?;
     let frames = args.get_parse("frames", 4usize)?;
+    if let Some(fpath) = args.get("faults") {
+        // Fault-injected run: emit ONLY the report JSON, byte-stable per
+        // seed, so CI can diff two runs of the same scenario verbatim.
+        let faults = FaultPlan::load(fpath)?;
+        let report = Simulator { frames }.simulate_faulted(&plan, &faults)?;
+        println!("{}", report.to_json().to_pretty());
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let report = Simulator { frames }.simulate(&plan)?;
     println!(
@@ -707,6 +735,9 @@ fn cmd_search_shards(
 /// the objective picks — as JSON (stdout, or `--json FILE`, which
 /// `simulate --plan` / `serve --plan` consume directly).
 fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
+    if args.has("diff") {
+        return cmd_plan_diff(args);
+    }
     let models = split_list(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
     anyhow::ensure!(!models.is_empty(), "--models needs at least one model");
     let boards = split_list(args.get("boards").unwrap_or(args.get_or("board", "zc706")))
@@ -880,6 +911,57 @@ fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
             println!("deployment plans (frontier + objective picks) written to {path}");
         }
         None => println!("{json}"),
+    }
+    Ok(())
+}
+
+/// `plan --diff a.json b.json`: load two deployment plans and print the
+/// typed delta — per-tenant keep/change/add/remove ops with drain-overlapped
+/// reconfiguration cost — as JSON.
+fn cmd_plan_diff(args: &Args) -> flexipipe::Result<()> {
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.len() == 2,
+        "plan --diff takes exactly two plan files (got {}): \
+         flexipipe plan --diff a.json b.json",
+        pos.len()
+    );
+    let from = DeploymentPlan::load(&pos[0])?;
+    let to = DeploymentPlan::load(&pos[1])?;
+    let diff = from.diff(&to)?;
+    println!("{}", diff.to_json().to_pretty());
+    Ok(())
+}
+
+/// `replan --plan plan.json --faults faults.json`: re-plan the incumbent
+/// workload onto the fault plan's surviving capacity. Prints the outcome —
+/// shed report, plan delta, and (when feasible) the replacement plan — and
+/// optionally writes the new plan to `--json`.
+fn cmd_replan(args: &Args) -> flexipipe::Result<()> {
+    let ppath = args
+        .get("plan")
+        .ok_or_else(|| anyhow::anyhow!("replan needs --plan plan.json"))?;
+    let fpath = args
+        .get("faults")
+        .ok_or_else(|| anyhow::anyhow!("replan needs --faults faults.json"))?;
+    let incumbent = DeploymentPlan::load(ppath)?;
+    let faults = FaultPlan::load(fpath)?;
+    let planner = Planner::on(incumbent.board.clone())
+        .steps(args.get_parse("shard-steps", 16usize)?)
+        .schedule(parse_schedule(args)?)
+        .max_period(args.get_parse("max-period", 0.5f64)?)
+        .interleave(args.get_parse("interleave", 1usize)?)
+        .validate(args.get_parse("sim-frames", 0usize)?);
+    let outcome = planner.replan(&incumbent, &faults)?;
+    println!("{}", outcome.to_json().to_pretty());
+    if let Some(path) = args.get("json") {
+        match &outcome.plan {
+            Some(plan) => {
+                plan.save(path)?;
+                eprintln!("replanned deployment plan written to {path}");
+            }
+            None => eprintln!("no feasible plan on surviving capacity: {path} not written"),
+        }
     }
     Ok(())
 }

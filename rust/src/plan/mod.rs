@@ -53,9 +53,16 @@ use crate::util::json::{self, num, obj, Value};
 use std::path::Path;
 
 /// The deployment-plan format version this build reads and writes.
-/// [`DeploymentPlan::from_json`] rejects any other value, so a plan file
-/// can never be silently misinterpreted across format changes.
+/// [`DeploymentPlan::from_json`] rejects values outside
+/// [`PLAN_VERSION_MIN`]`..=`[`PLAN_VERSION`], so a plan file can never be
+/// silently misinterpreted across format changes.
 pub const PLAN_VERSION: usize = 1;
+
+/// Oldest deployment-plan format version this build still reads. Rejection
+/// errors report the version found, this supported range, and (through
+/// [`DeploymentPlan::load`]) the plan path — the groundwork for a
+/// version-2 migration story.
+pub const PLAN_VERSION_MIN: usize = 1;
 
 // ---------------------------------------------------------------------------
 // Workload
@@ -504,6 +511,248 @@ impl PlanSet {
 }
 
 // ---------------------------------------------------------------------------
+// Failover re-planning
+// ---------------------------------------------------------------------------
+
+/// One tenant dropped by failover re-planning, with the planner's reason.
+/// Shedding is always explicit: a tenant either appears in the replanned
+/// deployment or in this report — never silently vanishes.
+#[derive(Debug, Clone)]
+pub struct ShedEntry {
+    /// The dropped tenant's model name.
+    pub net: String,
+    /// Why it was dropped (the planner's infeasibility cause).
+    pub reason: String,
+}
+
+/// Outcome of [`Planner::replan`]: the failover deployment (if any
+/// tenant set was admissible on the surviving capacity), the explicit
+/// shed report, the surviving board the decision was made against, and
+/// the reconfiguration delta from the incumbent.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    /// The replanned deployment; `None` when no tenant subset was
+    /// feasible on the surviving capacity (every tenant is then in
+    /// `shed`).
+    pub plan: Option<DeploymentPlan>,
+    /// Tenants dropped to make the rest fit, in shedding order.
+    pub shed: Vec<ShedEntry>,
+    /// The surviving board capacity the re-plan was computed against.
+    pub board: Board,
+    /// Delta from the incumbent to the replanned deployment (the
+    /// drain-overlapped reconfiguration sequence a live service executes
+    /// via [`crate::coordinator::PlannedService::apply`]); `None` when
+    /// `plan` is `None`.
+    pub diff: Option<crate::fault::PlanDiff>,
+}
+
+impl ReplanOutcome {
+    /// JSON document for `flexipipe replan` (deterministic field order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("replanned", Value::Bool(self.plan.is_some())),
+            ("board", board_to_json(&self.board)),
+            (
+                "shed",
+                Value::Arr(
+                    self.shed
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("net", Value::Str(s.net.clone())),
+                                ("reason", Value::Str(s.reason.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diff",
+                self.diff.as_ref().map_or(Value::Null, |d| d.to_json()),
+            ),
+            (
+                "plan",
+                self.plan.as_ref().map_or(Value::Null, |p| p.to_json()),
+            ),
+        ])
+    }
+}
+
+/// Tightest fps floor among a tenant's constraints.
+fn fps_floor(cs: &[Constraint]) -> Option<f64> {
+    cs.iter()
+        .filter_map(|c| match c {
+            Constraint::MinFps(f) => Some(*f),
+            Constraint::Slo(_) => None,
+        })
+        .fold(None, |acc, f| Some(acc.map_or(f, |a: f64| a.max(f))))
+}
+
+/// Tightest latency ceiling among a tenant's constraints.
+fn slo_ceiling(cs: &[Constraint]) -> Option<f64> {
+    cs.iter()
+        .filter_map(|c| match c {
+            Constraint::Slo(s) => Some(*s),
+            Constraint::MinFps(_) => None,
+        })
+        .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.min(s))))
+}
+
+impl Planner {
+    /// Failover re-planning: given the incumbent deployment and a fault
+    /// event, produce a plan for the **surviving** capacity
+    /// ([`crate::fault::FaultPlan::surviving_board`]) that honors every
+    /// tenant's `min_fps` floors and SLOs — or an explicit shed report
+    /// for the tenants that had to be dropped (no silent drops, ever).
+    ///
+    /// Two phases:
+    ///
+    /// 1. **Warm start.** The incumbent's θ/α vectors and schedule are
+    ///    kept; only the board is swapped for the surviving one (recorded
+    ///    stage configs are cleared so the allocator re-derives each
+    ///    pipeline on the degraded fabric). If the warm-started plan still
+    ///    instantiates and a DES run meets every floor and SLO, it is the
+    ///    answer — no search, minimal disruption.
+    /// 2. **Full re-plan with graceful degradation.** Otherwise the
+    ///    planner searches the surviving board for the whole tenant set;
+    ///    while the workload is infeasible, the lowest-weight tenant
+    ///    (ties: latest in plan order) is shed with the planner's reason,
+    ///    and the search repeats on the remainder. A successful search
+    ///    meets every admitted tenant's floors by construction
+    ///    ([`Planner::plan`] enforces constraints as admission filters).
+    ///
+    /// The outcome carries the reconfiguration delta from the incumbent
+    /// ([`crate::fault::PlanDiff`]) so a live service can execute the
+    /// failover with drain-overlapped swaps.
+    pub fn replan(
+        &self,
+        incumbent: &DeploymentPlan,
+        faults: &crate::fault::FaultPlan,
+    ) -> crate::Result<ReplanOutcome> {
+        faults.validate()?;
+        let board = faults.surviving_board(&incumbent.board);
+        let frames = self.sim_frames.max(2);
+
+        // Phase 1: warm start from the incumbent's θ vectors.
+        let mut cand = incumbent.clone();
+        cand.board = board.clone();
+        for t in &mut cand.tenants {
+            // The allocator re-derives stage configs on the degraded
+            // fabric; stale records would trip the drift check.
+            t.stages.clear();
+            t.record = None;
+        }
+        if let Ok(allocs) = cand.instantiate() {
+            let refs: Vec<&Allocation> = allocs.iter().collect();
+            let freq = cand.board.freq_hz;
+            let (fps, sojourn_s): (Vec<f64>, Vec<f64>) = match &cand.regime {
+                Regime::Temporal(info) if info.period_cycles > 0 => {
+                    let ts = crate::sim::simulate_schedule(&refs, &info.schedule_slices(), true);
+                    let soj = ts.worst_sojourn.iter().map(|&c| c as f64 / freq).collect();
+                    (ts.tenant_fps, soj)
+                }
+                regime => {
+                    let shares: Vec<f64> = match regime {
+                        Regime::Spatial => cand.tenants.iter().map(|t| t.ddr_share).collect(),
+                        Regime::Temporal(_) => vec![1.0],
+                    };
+                    let reports =
+                        crate::sim::simulate_multi_provisioned(&refs, &shares, &cand.board, frames);
+                    let fps = reports.iter().map(|r| r.fps).collect();
+                    let soj = reports
+                        .iter()
+                        .map(|r| r.frame_done.first().copied().unwrap_or(r.makespan) as f64 / freq)
+                        .collect();
+                    (fps, soj)
+                }
+            };
+            let meets = cand.tenants.iter().enumerate().all(|(i, t)| {
+                fps_floor(&t.constraints).map_or(true, |floor| fps[i] >= floor)
+                    && slo_ceiling(&t.constraints).map_or(true, |slo| sojourn_s[i] <= slo)
+            });
+            if meets {
+                for (i, t) in cand.tenants.iter_mut().enumerate() {
+                    let report = allocs[i].evaluate();
+                    t.stages = allocs[i].stages.iter().map(|s| s.cfg).collect();
+                    t.record = Some(TenantRecord {
+                        fps: fps[i],
+                        latency_s: sojourn_s[i],
+                        dsps: report.dsps,
+                        bram18: report.bram18,
+                        sim_fps: None,
+                    });
+                }
+                let diff = incumbent.diff(&cand)?;
+                return Ok(ReplanOutcome {
+                    plan: Some(cand),
+                    shed: Vec::new(),
+                    board,
+                    diff: Some(diff),
+                });
+            }
+        }
+
+        // Phase 2: full re-plan on the surviving board, shedding the
+        // lowest-weight tenant each time the remainder is infeasible.
+        let planner = Planner {
+            boards: vec![board.clone()],
+            ..self.clone()
+        };
+        let mut active: Vec<TenantSpec> = incumbent
+            .tenants
+            .iter()
+            .map(|t| TenantSpec {
+                net: t.net.clone(),
+                weight: t.weight,
+                constraints: t.constraints.clone(),
+            })
+            .collect();
+        let mut shed = Vec::new();
+        while !active.is_empty() {
+            let workload = Workload {
+                tenants: active.clone(),
+                mode: incumbent.mode,
+                objective: Objective::MaxMinFps,
+            };
+            match planner.plan(&workload) {
+                Ok(set) => {
+                    let new_plan = set.plans[set.best].clone();
+                    let diff = incumbent.diff(&new_plan)?;
+                    return Ok(ReplanOutcome {
+                        plan: Some(new_plan),
+                        shed,
+                        board,
+                        diff: Some(diff),
+                    });
+                }
+                Err(e) => {
+                    // Shed the lowest-weight tenant; `<=` picks the last
+                    // of equal weights, so earlier (higher-priority by
+                    // plan order) tenants survive ties.
+                    let mut victim = 0;
+                    for i in 1..active.len() {
+                        if active[i].weight <= active[victim].weight {
+                            victim = i;
+                        }
+                    }
+                    let t = active.remove(victim);
+                    shed.push(ShedEntry {
+                        net: t.net.name.clone(),
+                        reason: format!("infeasible on surviving capacity: {e}"),
+                    });
+                }
+            }
+        }
+        Ok(ReplanOutcome {
+            plan: None,
+            shed,
+            board,
+            diff: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // DeploymentPlan
 // ---------------------------------------------------------------------------
 
@@ -683,8 +932,9 @@ impl DeploymentPlan {
     /// [`crate::coordinator::Coordinator::start_planned`].
     pub fn instantiate(&self) -> crate::Result<Vec<Allocation>> {
         anyhow::ensure!(
-            self.version == PLAN_VERSION,
-            "unsupported deployment-plan version {} (this build reads version {PLAN_VERSION})",
+            (PLAN_VERSION_MIN..=PLAN_VERSION).contains(&self.version),
+            "unsupported deployment-plan version {}: this build reads versions \
+             {PLAN_VERSION_MIN}..={PLAN_VERSION}",
             self.version
         );
         anyhow::ensure!(!self.tenants.is_empty(), "deployment plan has no tenants");
@@ -835,9 +1085,9 @@ impl DeploymentPlan {
     pub fn from_json(v: &Value) -> crate::Result<DeploymentPlan> {
         let version = v.usize_field("version")?;
         anyhow::ensure!(
-            version == PLAN_VERSION,
-            "unsupported deployment-plan version {version} (this build reads version \
-             {PLAN_VERSION}) — regenerate the plan with `flexipipe plan`"
+            (PLAN_VERSION_MIN..=PLAN_VERSION).contains(&version),
+            "unsupported deployment-plan version {version}: this build reads versions \
+             {PLAN_VERSION_MIN}..={PLAN_VERSION} — regenerate the plan with `flexipipe plan`"
         );
         let board = board_from_json(v.req("board")?)?;
         let mode = QuantMode::from_bits(v.usize_field("bits")?)?;
@@ -890,15 +1140,19 @@ impl DeploymentPlan {
     /// Load a plan from a file. Accepts either a bare plan object or a
     /// whole `flexipipe plan --json` document (a [`PlanSet`] dump), in
     /// which case the `best` plan is read — so the planner's output file
-    /// feeds `simulate --plan` / `serve --plan` directly.
+    /// feeds `simulate --plan` / `serve --plan` directly. Every failure —
+    /// unreadable file, malformed JSON, unsupported format version —
+    /// carries the plan path.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<DeploymentPlan> {
         let text = std::fs::read_to_string(path.as_ref())
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
-        let v = json::parse(&text)?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
         match v.get("best") {
             Some(best) => DeploymentPlan::from_json(best),
             None => DeploymentPlan::from_json(&v),
         }
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
     }
 }
 
@@ -906,7 +1160,7 @@ impl DeploymentPlan {
 // JSON field codecs
 // ---------------------------------------------------------------------------
 
-fn board_to_json(b: &Board) -> Value {
+pub(crate) fn board_to_json(b: &Board) -> Value {
     obj(vec![
         ("name", Value::Str(b.name.clone())),
         ("dsps", num(b.dsps)),
@@ -930,7 +1184,7 @@ fn board_from_json(v: &Value) -> crate::Result<Board> {
     })
 }
 
-fn reconfig_to_json(m: &ReconfigModel) -> Value {
+pub(crate) fn reconfig_to_json(m: &ReconfigModel) -> Value {
     obj(vec![
         ("bytes_per_lut", Value::Num(m.bytes_per_lut)),
         ("bytes_per_dsp", Value::Num(m.bytes_per_dsp)),
@@ -973,7 +1227,7 @@ fn constraint_from_json(v: &Value) -> crate::Result<Constraint> {
     }
 }
 
-fn tenant_to_json(t: &PlanTenant) -> Value {
+pub(crate) fn tenant_to_json(t: &PlanTenant) -> Value {
     let mut pairs = vec![
         ("model", config::to_json(&t.net)),
         ("weight", Value::Num(t.weight)),
@@ -1065,7 +1319,7 @@ fn tenant_from_json(v: &Value) -> crate::Result<PlanTenant> {
     })
 }
 
-fn temporal_to_json(info: &TemporalInfo) -> Value {
+pub(crate) fn temporal_to_json(info: &TemporalInfo) -> Value {
     let usizes = |v: &[usize]| Value::Arr(v.iter().map(|&x| num(x)).collect());
     let u64s = |v: &[u64]| Value::Arr(v.iter().map(|&x| Value::Num(x as f64)).collect());
     obj(vec![

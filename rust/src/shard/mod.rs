@@ -60,7 +60,7 @@
 
 pub mod schedule;
 
-pub use schedule::{ReconfigModel, SliceSpec, TemporalInfo};
+pub use schedule::{drain_credit, ReconfigModel, SliceSpec, TemporalInfo};
 
 use crate::alloc::flex::{FlexAllocator, NetTables};
 use crate::alloc::{AllocReport, Allocation};

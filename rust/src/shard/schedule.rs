@@ -372,6 +372,30 @@ impl SoloTenant {
 /// board even alone). The calibration DES dominates temporal planning
 /// cost, so [`crate::shard::Sharder::search`] runs this once and hands
 /// the result to every regime enumeration.
+/// Conservative drain-overlap credit of one calibrated batch: the
+/// smallest `frame_done − input_done` tail observed — the window in which
+/// the pipeline's input-side stages are already idle and its region can
+/// be rewritten while the rest drains. Taking the minimum over the whole
+/// batch keeps the credit safe for any admitted frame count.
+pub(crate) fn min_drain_tail(r: &sim::SimReport) -> u64 {
+    r.frame_done
+        .iter()
+        .zip(&r.input_done)
+        .map(|(&f, &i)| f - i)
+        .min()
+        .unwrap_or(0)
+}
+
+/// Measure one pipeline's drain-overlap credit in cycles with a short
+/// (`window_frames`, minimum 2) solo DES run — the same conservative
+/// minimum-over-window rule the temporal planner calibrates admission
+/// with. This is the cost model behind a [`crate::fault::PlanDiff`]'s
+/// reconfiguration sequence: swapping a region in can hide up to this
+/// many cycles under the *outgoing* pipeline's drain.
+pub fn drain_credit(alloc: &Allocation, window_frames: usize) -> u64 {
+    min_drain_tail(&sim::simulate(alloc, window_frames.max(2)))
+}
+
 pub(crate) fn solo_tenants(
     sh: &Sharder,
     tables: &[NetTables],
@@ -396,13 +420,7 @@ pub(crate) fn solo_tenants(
             .max()
             .unwrap_or(1)
             .max(1);
-        let drain_min = calib
-            .frame_done
-            .iter()
-            .zip(&calib.input_done)
-            .map(|(&f, &i)| f - i)
-            .min()
-            .unwrap_or(0);
+        let drain_min = min_drain_tail(&calib);
         // A lone tenant never switches, so it pays no reconfiguration.
         let reconfig = if n == 1 {
             0

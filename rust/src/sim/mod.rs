@@ -969,6 +969,106 @@ impl Simulate for Simulator {
     }
 }
 
+impl Simulator {
+    /// Execute `plan` under a seeded [`crate::fault::FaultPlan`] and
+    /// report per-tenant fps/sojourn with the faults injected into the
+    /// DES engines (see the fault-semantics table in [`crate::fault`]):
+    ///
+    /// - the DDR brownout factor slows the port every pipeline streams
+    ///   against,
+    /// - reconfiguration overruns/failures rewrite the temporal
+    ///   schedule's swap costs (stretching the period — frames are never
+    ///   dropped),
+    /// - a board loss truncates service at
+    ///   [`crate::fault::BoardLoss::at_s`]: effective fps is the degraded
+    ///   rate scaled by the fraction of the executed horizon served.
+    ///
+    /// Every stochastic choice derives from the fault plan's seed, so the
+    /// report is byte-identical across runs (CI diffs two invocations of
+    /// `flexipipe simulate --plan … --faults …`).
+    pub fn simulate_faulted(
+        &self,
+        plan: &crate::plan::DeploymentPlan,
+        faults: &crate::fault::FaultPlan,
+    ) -> crate::Result<crate::fault::FaultSimReport> {
+        use crate::fault::{FaultSimReport, FaultTenantReport};
+        use crate::shard::Regime;
+        faults.validate()?;
+        let frames = self.frames.max(1);
+        let freq = plan.board.freq_hz;
+        let allocs = plan.instantiate()?;
+        let shares: Vec<f64> = plan.tenants.iter().map(|t| t.ddr_share).collect();
+
+        // Healthy baseline on the rated board — the reference the
+        // degradation is measured against.
+        let refs: Vec<&Allocation> = allocs.iter().collect();
+        let healthy =
+            crate::shard::confirm_plan(&refs, &shares, &plan.board, &plan.regime, frames);
+
+        // The running fabric under the brownout: the committed pipelines
+        // keep their resources but stream against the degraded port.
+        let dboard = faults.degraded_port(&plan.board);
+        let mut degraded = allocs.clone();
+        for a in &mut degraded {
+            a.board.ddr_bytes_per_sec = dboard.ddr_bytes_per_sec;
+        }
+        let drefs: Vec<&Allocation> = degraded.iter().collect();
+
+        // Per-tenant (fps, sojourn) of the faulted fabric plus the
+        // executed horizon the loss instant is interpreted against.
+        let (deg_fps, sojourn_s, horizon_s) = match &plan.regime {
+            Regime::Temporal(info) if info.period_cycles > 0 => {
+                let seq = faults.degraded_schedule(&info.schedule_slices());
+                let ts = simulate_schedule(&drefs, &seq, true);
+                let soj: Vec<f64> = ts.worst_sojourn.iter().map(|&c| c as f64 / freq).collect();
+                (ts.tenant_fps, soj, ts.period_cycles as f64 / freq)
+            }
+            regime => {
+                let sh: Vec<f64> = match regime {
+                    Regime::Spatial => shares.clone(),
+                    // Degenerate lone-tenant temporal: continuous solo run.
+                    Regime::Temporal(_) => vec![1.0],
+                };
+                let reports = simulate_multi_provisioned(&drefs, &sh, &dboard, frames);
+                let fps: Vec<f64> = reports.iter().map(|r| r.fps).collect();
+                let soj: Vec<f64> = reports
+                    .iter()
+                    .map(|r| {
+                        r.frame_done.first().copied().unwrap_or(r.makespan) as f64 / freq
+                    })
+                    .collect();
+                let horizon =
+                    reports.iter().map(|r| r.makespan).max().unwrap_or(0) as f64 / freq;
+                (fps, soj, horizon)
+            }
+        };
+
+        let served_frac = match &faults.board_loss {
+            Some(l) if horizon_s > 0.0 => (l.at_s / horizon_s).min(1.0),
+            _ => 1.0,
+        };
+        let tenants = plan
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, pt)| FaultTenantReport {
+                net: pt.net.name.clone(),
+                healthy_fps: healthy[t].fps,
+                degraded_fps: deg_fps[t],
+                fps: deg_fps[t] * served_frac,
+                sojourn_s: sojourn_s[t],
+                served_frac,
+            })
+            .collect();
+        Ok(FaultSimReport {
+            seed: faults.seed,
+            regime: plan.regime.label().to_string(),
+            horizon_s,
+            tenants,
+        })
+    }
+}
+
 /// Raw DES engines behind [`simulate`] and [`Simulate`], re-exported
 /// **only** for the crate's own property/golden test suites and benches.
 /// Hidden from rustdoc and carrying no stability promise — applications

@@ -1,0 +1,125 @@
+//! CLI-level fault tolerance: `simulate --plan … --faults …` emits a pure
+//! JSON report that is byte-identical across process runs (the
+//! determinism CI re-runs it and diffs); `plan --diff` reports identical
+//! plans as empty; and `replan --plan … --faults …` writes a loadable
+//! failover plan with an explicit outcome document.
+
+use flexipipe::fault::FaultPlan;
+use flexipipe::plan::DeploymentPlan;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_flexipipe")
+}
+
+fn plan_fixture() -> &'static str {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/plans/vgg16_alexnet_zc706.json"
+    )
+}
+
+fn fault_fixture() -> &'static str {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/faults/board_loss.json"
+    )
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("flexipipe_cli_fault").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin()).args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "flexipipe {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn fault_simulation_is_byte_deterministic_across_runs() {
+    // The same seeded scenario, two separate processes, identical bytes —
+    // the property the CI determinism step enforces with cmp(1).
+    let args = [
+        "simulate",
+        "--plan",
+        plan_fixture(),
+        "--faults",
+        fault_fixture(),
+        "--frames",
+        "1",
+    ];
+    let first = run_ok(&args);
+    let second = run_ok(&args);
+    assert_eq!(first, second, "fault-injected simulation must be deterministic");
+    // Pure JSON (machine-diffable): parses whole, no prose around it.
+    let v = flexipipe::util::json::parse(first.trim()).unwrap();
+    assert_eq!(v.req("seed").unwrap().as_f64(), Some(7.0));
+    let tenants = v.req("tenants").unwrap().as_arr().unwrap();
+    assert_eq!(tenants.len(), 2);
+    assert_eq!(
+        tenants[0].req("net").unwrap().as_str(),
+        Some("vgg16"),
+        "{first}"
+    );
+    // The checked-in scenario injects a mid-horizon loss: service is
+    // truncated, not free.
+    let frac = tenants[0].req("served_frac").unwrap().as_f64().unwrap();
+    assert!(frac > 0.0 && frac < 1.0, "served_frac {frac}");
+}
+
+#[test]
+fn plan_diff_cli_reports_identical_plans_as_empty() {
+    let out = run_ok(&["plan", "--diff", plan_fixture(), plan_fixture()]);
+    let v = flexipipe::util::json::parse(out.trim()).unwrap();
+    assert!(v.bool_field("empty").unwrap());
+    assert_eq!(v.f64_field("cost_cycles").unwrap(), 0.0);
+    // Wrong arity is a usage error, not a crash.
+    let bad = Command::new(bin())
+        .args(["plan", "--diff", plan_fixture()])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("two plan files"),
+        "{}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+}
+
+#[test]
+fn replan_cli_writes_a_loadable_failover_plan() {
+    let dir = tmp_dir("replan");
+    let out_path = dir.join("failover.json");
+    let stdout = run_ok(&[
+        "replan",
+        "--plan",
+        plan_fixture(),
+        "--faults",
+        fault_fixture(),
+        "--shard-steps",
+        "4",
+        "--json",
+        out_path.to_str().unwrap(),
+    ]);
+    let v = flexipipe::util::json::parse(stdout.trim()).unwrap();
+    assert!(v.bool_field("replanned").unwrap());
+    assert_eq!(v.req("shed").unwrap().as_arr().unwrap().len(), 0);
+    // The written plan is a loadable deployment plan on the surviving
+    // board (87.5% fabric, browned-out port).
+    let plan = DeploymentPlan::load(&out_path).unwrap();
+    assert_eq!(plan.tenants.len(), 2);
+    let faults = FaultPlan::load(fault_fixture()).unwrap();
+    let incumbent = DeploymentPlan::load(plan_fixture()).unwrap();
+    let surviving = faults.surviving_board(&incumbent.board);
+    assert_eq!(plan.board.dsps, surviving.dsps);
+    assert!((plan.board.ddr_bytes_per_sec - surviving.ddr_bytes_per_sec).abs() < 1.0);
+}

@@ -1,0 +1,299 @@
+//! Fault-injection properties: seeded fault plans round-trip their JSON
+//! format byte-stably and reject unknown versions with the full context;
+//! a neutral fault plan reproduces the healthy simulation bit-for-bit;
+//! each injected fault moves the report the way its physics says it must
+//! (DDR brownout and reconfiguration overruns cut throughput, board loss
+//! truncates effective service); and the same seed always produces the
+//! same report (the determinism CI diffs across process runs).
+
+use flexipipe::board::{zc706, zedboard};
+use flexipipe::fault::{BoardLoss, ErrorBurst, FaultPlan, ReconfigFault};
+use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, Workload};
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{Regime, ScheduleMode};
+use flexipipe::sim::{Simulate, Simulator};
+use flexipipe::util::json;
+use flexipipe::util::prop::check;
+
+fn spatial_plan() -> DeploymentPlan {
+    let set = Planner::on(zedboard())
+        .steps(8)
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant(zoo::tinycnn())
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    set.plans[set.best].clone()
+}
+
+/// A time-multiplexed plan whose schedule pays real reconfiguration
+/// cycles — the surface the reconfiguration faults rewrite.
+fn temporal_plan() -> DeploymentPlan {
+    let set = Planner::on(zc706())
+        .steps(4)
+        .schedule(ScheduleMode::Temporal)
+        .max_period(0.1)
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant(zoo::tinycnn())
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    set.plans
+        .iter()
+        .find(|p| match &p.regime {
+            Regime::Temporal(i) => {
+                i.period_cycles > 0 && i.reconfig_cycles.iter().any(|&c| c > 0)
+            }
+            _ => false,
+        })
+        .expect("temporal search must yield a reconfiguring schedule")
+        .clone()
+}
+
+fn full_fault() -> FaultPlan {
+    FaultPlan {
+        seed: 42,
+        board_loss: Some(BoardLoss {
+            at_s: 0.25,
+            survive_frac: 0.875,
+        }),
+        ddr_factor: Some(0.9),
+        reconfig: Some(ReconfigFault {
+            overrun_factor: 2.0,
+            failure_prob: 0.5,
+        }),
+        backend_errors: Some(ErrorBurst {
+            start: 1,
+            length: 2,
+        }),
+    }
+}
+
+#[test]
+fn fault_plan_file_round_trips_and_load_errors_carry_the_path() {
+    let dir = std::env::temp_dir().join("flexipipe_fault_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("faults.json");
+    let plan = full_fault();
+    plan.save(&path).unwrap();
+    let back = FaultPlan::load(&path).unwrap();
+    assert_eq!(plan, back);
+    assert_eq!(
+        plan.to_json().to_pretty(),
+        back.to_json().to_pretty(),
+        "file round trip must be byte-stable"
+    );
+
+    // An unknown version is refused with the version found, the supported
+    // range, and (through load) the offending path — never half-read.
+    let bumped = plan
+        .to_json()
+        .to_pretty()
+        .replacen("\"version\": 1", "\"version\": 9", 1);
+    let bad = dir.join("future.json");
+    std::fs::write(&bad, &bumped).unwrap();
+    let err = FaultPlan::load(&bad).unwrap_err().to_string();
+    assert!(err.contains("version 9"), "{err}");
+    assert!(err.contains("1..=1"), "{err}");
+    assert!(err.contains(bad.display().to_string().as_str()), "{err}");
+}
+
+#[test]
+fn prop_random_fault_plans_round_trip_byte_stably() {
+    check("fault-plan-roundtrip", 32, |rng| {
+        let f = FaultPlan {
+            // Seeds stay below 2^53 so the JSON number representation is
+            // exact (the format stores one numeric type).
+            seed: rng.urange(0, 1 << 30) as u64,
+            board_loss: rng.flip().then(|| BoardLoss {
+                at_s: rng.urange(0, 1000) as f64 / 100.0,
+                survive_frac: rng.urange(1, 100) as f64 / 100.0,
+            }),
+            ddr_factor: rng.flip().then(|| rng.urange(1, 100) as f64 / 100.0),
+            reconfig: rng.flip().then(|| ReconfigFault {
+                overrun_factor: 1.0 + rng.urange(0, 300) as f64 / 100.0,
+                failure_prob: rng.urange(0, 100) as f64 / 100.0,
+            }),
+            backend_errors: rng.flip().then(|| ErrorBurst {
+                start: rng.urange(0, 16),
+                length: rng.urange(0, 16),
+            }),
+        };
+        f.validate().unwrap();
+        let text = f.to_json().to_pretty();
+        let back = FaultPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(f, back, "round trip changed the fault plan");
+        assert_eq!(text, back.to_json().to_pretty(), "serialization not stable");
+    });
+}
+
+#[test]
+fn neutral_faults_reproduce_the_healthy_simulation() {
+    // The regression pin behind every other fault property: injecting
+    // nothing changes nothing, for both resident (spatial) and
+    // time-multiplexed regimes — and the "healthy" baseline inside the
+    // fault report is exactly what the plain plan simulation reports.
+    let sim = Simulator { frames: 2 };
+    for plan in [spatial_plan(), temporal_plan()] {
+        let faulted = sim.simulate_faulted(&plan, &FaultPlan::none()).unwrap();
+        let healthy = sim.simulate(&plan).unwrap();
+        assert_eq!(faulted.tenants.len(), plan.tenants.len());
+        for (t, ft) in faulted.tenants.iter().enumerate() {
+            assert_eq!(
+                ft.healthy_fps.to_bits(),
+                healthy.tenants[t].fps.to_bits(),
+                "tenant {t}: baseline diverged from the plain simulation"
+            );
+            assert_eq!(
+                ft.degraded_fps.to_bits(),
+                ft.healthy_fps.to_bits(),
+                "tenant {t}: a neutral fault degraded the fabric"
+            );
+            assert_eq!(ft.fps.to_bits(), ft.degraded_fps.to_bits());
+            assert_eq!(ft.served_frac.to_bits(), 1.0f64.to_bits());
+        }
+    }
+}
+
+#[test]
+fn same_seed_fault_reports_are_byte_identical() {
+    // The in-process half of the CI determinism gate: the same plan and
+    // the same seeded fault scenario serialize to the same bytes, run
+    // after run — including the stochastic reconfiguration-failure coins.
+    let plan = temporal_plan();
+    let sim = Simulator { frames: 1 };
+    let a = sim.simulate_faulted(&plan, &full_fault()).unwrap();
+    let b = sim.simulate_faulted(&plan, &full_fault()).unwrap();
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    assert_eq!(a.seed, 42);
+}
+
+#[test]
+fn ddr_brownout_strictly_reduces_throughput() {
+    // A port at 5% of its rated bandwidth starves the weight streams of
+    // every pipeline: each tenant's degraded rate must fall strictly
+    // below its healthy baseline (fabric resources untouched).
+    let plan = spatial_plan();
+    let faults = FaultPlan {
+        ddr_factor: Some(0.05),
+        ..FaultPlan::none()
+    };
+    let report = Simulator { frames: 2 }.simulate_faulted(&plan, &faults).unwrap();
+    for (t, ft) in report.tenants.iter().enumerate() {
+        assert!(
+            ft.degraded_fps < ft.healthy_fps,
+            "tenant {t}: a 20x port brownout must cut throughput \
+             ({} vs {})",
+            ft.degraded_fps,
+            ft.healthy_fps
+        );
+        assert_eq!(ft.served_frac.to_bits(), 1.0f64.to_bits());
+    }
+}
+
+#[test]
+fn board_loss_truncates_effective_fps() {
+    // Board loss is an outage in time, not a slowdown: the degraded rate
+    // is untouched and the effective rate scales by the served fraction
+    // of the horizon — 0 at t=0, the full rate past the horizon, and
+    // exactly the ratio in between.
+    let plan = spatial_plan();
+    let sim = Simulator { frames: 2 };
+    let loss_at = |at_s: f64| FaultPlan {
+        board_loss: Some(BoardLoss {
+            at_s,
+            survive_frac: 0.5,
+        }),
+        ..FaultPlan::none()
+    };
+    let horizon = sim.simulate_faulted(&plan, &FaultPlan::none()).unwrap().horizon_s;
+    assert!(horizon > 0.0);
+
+    let at_zero = sim.simulate_faulted(&plan, &loss_at(0.0)).unwrap();
+    for ft in &at_zero.tenants {
+        assert_eq!(ft.served_frac.to_bits(), 0.0f64.to_bits());
+        assert_eq!(ft.fps.to_bits(), 0.0f64.to_bits());
+        assert!(ft.degraded_fps > 0.0, "the rate itself is not the casualty");
+    }
+
+    let beyond = sim.simulate_faulted(&plan, &loss_at(horizon * 10.0)).unwrap();
+    for ft in &beyond.tenants {
+        assert_eq!(ft.served_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(ft.fps.to_bits(), ft.degraded_fps.to_bits());
+    }
+
+    let half = sim.simulate_faulted(&plan, &loss_at(horizon * 0.5)).unwrap();
+    for (t, ft) in half.tenants.iter().enumerate() {
+        assert!(
+            (ft.served_frac - 0.5).abs() < 1e-12,
+            "tenant {t}: served_frac {} for a mid-horizon loss",
+            ft.served_frac
+        );
+        assert_eq!(
+            ft.fps.to_bits(),
+            (ft.degraded_fps * ft.served_frac).to_bits(),
+            "tenant {t}: effective fps must be the truncation identity"
+        );
+    }
+}
+
+#[test]
+fn reconfig_overrun_stretches_the_period_and_cuts_fps() {
+    // A 50x configuration-port overrun turns the swap cost into the
+    // period's dominant term: the executed horizon grows and every
+    // tenant's effective rate drops — but no frame is ever dropped (the
+    // DES stretches the period instead).
+    let plan = temporal_plan();
+    let sim = Simulator { frames: 1 };
+    let healthy = sim.simulate_faulted(&plan, &FaultPlan::none()).unwrap();
+    let faults = FaultPlan {
+        reconfig: Some(ReconfigFault {
+            overrun_factor: 50.0,
+            failure_prob: 0.0,
+        }),
+        ..FaultPlan::none()
+    };
+    let slow = sim.simulate_faulted(&plan, &faults).unwrap();
+    assert!(
+        slow.horizon_s > healthy.horizon_s,
+        "a 50x swap overrun must stretch the executed period \
+         ({} vs {})",
+        slow.horizon_s,
+        healthy.horizon_s
+    );
+    for (t, (h, s)) in healthy.tenants.iter().zip(&slow.tenants).enumerate() {
+        assert!(
+            s.degraded_fps < h.degraded_fps,
+            "tenant {t}: overrun must cut the effective rate"
+        );
+    }
+}
+
+#[test]
+fn reconfig_failures_only_add_cost() {
+    // Certain failure (every swap streamed twice) can never beat the
+    // overrun-only schedule: per-tenant rates are at most the
+    // failure-free ones and the executed horizon is at least as long.
+    let plan = temporal_plan();
+    let sim = Simulator { frames: 1 };
+    let fault = |prob: f64| FaultPlan {
+        seed: 7,
+        reconfig: Some(ReconfigFault {
+            overrun_factor: 2.0,
+            failure_prob: prob,
+        }),
+        ..FaultPlan::none()
+    };
+    let clean = sim.simulate_faulted(&plan, &fault(0.0)).unwrap();
+    let failing = sim.simulate_faulted(&plan, &fault(1.0)).unwrap();
+    assert!(failing.horizon_s >= clean.horizon_s);
+    for (t, (c, f)) in clean.tenants.iter().zip(&failing.tenants).enumerate() {
+        assert!(
+            f.degraded_fps <= c.degraded_fps,
+            "tenant {t}: retried swaps cannot raise throughput"
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Plan-diff algebra: `diff(a, a)` is empty; `apply(a, diff(a, b))`
+//! reconstructs `b` byte-identically; a diff's drain-overlapped
+//! reconfiguration cost is bounded by the target's full-swap cost in both
+//! directions; removals are free and explicit; and corrupt diffs are
+//! rejected without touching the source plan.
+
+use flexipipe::board::zedboard;
+use flexipipe::fault::{PlanDiff, TenantOp};
+use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, Workload, PLAN_VERSION};
+use flexipipe::quant::QuantMode;
+
+fn fixture_path() -> &'static str {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/plans/vgg16_alexnet_zc706.json"
+    )
+}
+
+/// Two feasible plans for the *same* workload with different θ splits —
+/// every tenant pairs up but both payloads differ, so the diff must
+/// price two drain-overlapped swaps.
+fn plan_pair() -> (DeploymentPlan, DeploymentPlan) {
+    let set = Planner::on(zedboard())
+        .steps(8)
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant(zoo::tinycnn())
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    let a = set.plans[set.best].clone();
+    let b = set
+        .plans
+        .iter()
+        .find(|p| p.tenants[0].dsp_parts != a.tenants[0].dsp_parts)
+        .expect("an 8-step spatial search holds more than one split")
+        .clone();
+    (a, b)
+}
+
+#[test]
+fn identical_plans_diff_empty_with_zero_cost() {
+    let (a, _) = plan_pair();
+    let fixture = DeploymentPlan::load(fixture_path()).unwrap();
+    for plan in [&a, &fixture] {
+        let d = plan.diff(plan).unwrap();
+        assert!(d.is_empty(), "self-diff must be empty");
+        assert_eq!(d.cost_cycles(), 0);
+        assert!(d.removed.is_empty());
+        for (j, op) in d.ops.iter().enumerate() {
+            assert!(
+                matches!(op, TenantOp::Keep { from } if *from == j),
+                "self-diff op {j} is not an in-place keep"
+            );
+        }
+        // Applying the empty diff is the identity, byte for byte.
+        let same = plan.apply(&d).unwrap();
+        assert_eq!(plan.to_json().to_pretty(), same.to_json().to_pretty());
+    }
+}
+
+#[test]
+fn apply_round_trips_byte_identically_both_directions() {
+    // The algebra the failover path stands on: a.apply(diff(a → b))
+    // serializes exactly as b, whichever direction the transition runs.
+    let (a, b) = plan_pair();
+    let ab = a.diff(&b).unwrap();
+    assert!(!ab.is_empty(), "distinct splits must produce a real diff");
+    assert_eq!(
+        a.apply(&ab).unwrap().to_json().to_pretty(),
+        b.to_json().to_pretty(),
+        "apply(a, diff(a, b)) diverged from b"
+    );
+    let ba = b.diff(&a).unwrap();
+    assert_eq!(
+        b.apply(&ba).unwrap().to_json().to_pretty(),
+        a.to_json().to_pretty(),
+        "apply(b, diff(b, a)) diverged from a"
+    );
+}
+
+#[test]
+fn diff_cost_bounded_by_full_swap_both_directions() {
+    // Drain overlap can only hide cycles: each swap charges at most its
+    // full partial-bitstream cost, so the whole transition is bounded by
+    // streaming the target plan from scratch — in both directions.
+    let (a, b) = plan_pair();
+    for (from, to) in [(&a, &b), (&b, &a)] {
+        let d = from.diff(to).unwrap();
+        for op in &d.ops {
+            if let TenantOp::Change { reconfig, .. } | TenantOp::Add { reconfig, .. } = op {
+                assert!(
+                    reconfig.overlap_cycles <= reconfig.full_cycles,
+                    "overlap credit exceeds the swap it hides under"
+                );
+                assert_eq!(
+                    reconfig.charged_cycles(),
+                    reconfig.full_cycles - reconfig.overlap_cycles
+                );
+            }
+        }
+        let full = to.full_swap_cycles().unwrap();
+        assert!(
+            d.cost_cycles() <= full,
+            "diff cost {} exceeds the full-swap bound {full}",
+            d.cost_cycles()
+        );
+    }
+}
+
+#[test]
+fn removed_tenants_are_explicit_and_cost_nothing() {
+    // Dropping a region streams nothing in: a target that keeps tenant 0
+    // byte-identical and drops tenant 1 diffs to one in-place keep plus
+    // one explicit removal, at zero reconfiguration cost — and the diff
+    // still apply-round-trips.
+    let (a, _) = plan_pair();
+    let mut b = a.clone();
+    b.tenants.truncate(1);
+    let d = a.diff(&b).unwrap();
+    assert!(!d.is_empty(), "a removal is a real transition");
+    assert_eq!(d.cost_cycles(), 0);
+    assert_eq!(d.ops.len(), 1);
+    assert!(matches!(&d.ops[0], TenantOp::Keep { from: 0 }));
+    assert_eq!(d.removed.len(), 1);
+    assert_eq!(d.removed[0].from, 1);
+    assert_eq!(d.removed[0].net, a.tenants[1].net.name);
+    assert_eq!(
+        a.apply(&d).unwrap().to_json().to_pretty(),
+        b.to_json().to_pretty()
+    );
+}
+
+#[test]
+fn added_tenants_pay_the_full_uncredited_swap() {
+    // The reverse transition: bringing a tenant in has no outgoing
+    // pipeline to drain under, so its swap is charged in full.
+    let (a, _) = plan_pair();
+    let mut solo = a.clone();
+    solo.tenants.truncate(1);
+    let d = solo.diff(&a).unwrap();
+    assert_eq!(d.ops.len(), 2);
+    assert!(matches!(&d.ops[0], TenantOp::Keep { from: 0 }));
+    let TenantOp::Add { tenant, reconfig } = &d.ops[1] else {
+        panic!("re-admitting a tenant must be an add, got {:?}", d.ops[1]);
+    };
+    assert_eq!(tenant.net.name, a.tenants[1].net.name);
+    assert_eq!(reconfig.overlap_cycles, 0, "an add has no drain to hide under");
+    assert!(reconfig.full_cycles > 0);
+    assert_eq!(d.cost_cycles(), reconfig.full_cycles);
+    assert!(d.cost_cycles() <= a.full_swap_cycles().unwrap());
+    assert_eq!(
+        solo.apply(&d).unwrap().to_json().to_pretty(),
+        a.to_json().to_pretty()
+    );
+}
+
+#[test]
+fn plan_level_changes_are_detected_and_applied() {
+    // A transition that only retunes a plan-level knob (here the split
+    // granularity) is not empty, costs no swap, and apply reproduces it.
+    let (a, _) = plan_pair();
+    let mut b = a.clone();
+    b.steps *= 2;
+    let d = a.diff(&b).unwrap();
+    assert!(!d.is_empty());
+    assert_eq!(d.cost_cycles(), 0, "a knob change streams no bitstream");
+    assert_eq!(d.steps, Some(b.steps));
+    assert!(d.board.is_none() && d.mode.is_none());
+    assert_eq!(
+        a.apply(&d).unwrap().to_json().to_pretty(),
+        b.to_json().to_pretty()
+    );
+}
+
+#[test]
+fn apply_rejects_corrupt_diffs() {
+    let (a, _) = plan_pair();
+    let empty_diff = |ops: Vec<TenantOp>| PlanDiff {
+        ops,
+        removed: Vec::new(),
+        board: None,
+        mode: None,
+        steps: None,
+        regime: None,
+        reconfig_model: None,
+    };
+    // Out-of-range source index.
+    let err = a.apply(&empty_diff(vec![TenantOp::Keep { from: 7 }])).unwrap_err();
+    assert!(err.to_string().contains("source tenant 7"), "{err}");
+    // The same source claimed twice.
+    let err = a
+        .apply(&empty_diff(vec![
+            TenantOp::Keep { from: 0 },
+            TenantOp::Keep { from: 0 },
+        ]))
+        .unwrap_err();
+    assert!(err.to_string().contains("more than once"), "{err}");
+    // A diff that leaves no tenants at all.
+    let err = a.apply(&empty_diff(Vec::new())).unwrap_err();
+    assert!(err.to_string().contains("no tenants"), "{err}");
+    // Version mismatches refuse to diff rather than mis-pair tenants.
+    let mut other = a.clone();
+    other.version = PLAN_VERSION + 1;
+    let err = a.diff(&other).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}

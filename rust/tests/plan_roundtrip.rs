@@ -114,6 +114,36 @@ fn unknown_version_plan_files_are_rejected() {
 }
 
 #[test]
+fn version_rejection_names_the_path_and_supported_range() {
+    // The actionable half of the version gate: loading a future-versioned
+    // *file* must say which file, which version it found, which range
+    // this build reads, and how to fix it — not just "unsupported".
+    let set = Planner::on(zedboard())
+        .steps(4)
+        .plan(&Workload::new(QuantMode::W8A8).tenant(zoo::lenet()))
+        .unwrap();
+    let text = set.plans[set.best].to_json().to_pretty();
+    let bumped = text.replacen(
+        &format!("\"version\": {PLAN_VERSION}"),
+        "\"version\": 99",
+        1,
+    );
+    assert_ne!(text, bumped);
+    let dir = std::env::temp_dir().join("flexipipe_plan_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("future_version.json");
+    std::fs::write(&path, &bumped).unwrap();
+    let err = DeploymentPlan::load(&path).unwrap_err().to_string();
+    assert!(err.contains("version 99"), "{err}");
+    assert!(err.contains("1..=1"), "{err}");
+    assert!(err.contains("regenerate"), "{err}");
+    assert!(
+        err.contains(path.display().to_string().as_str()),
+        "the error must name the offending file: {err}"
+    );
+}
+
+#[test]
 fn checked_in_example_plan_parses_and_resimulates() {
     // The format-drift guard: the repository ships a plan file
     // (examples/plans/vgg16_alexnet_zc706.json, re-simulated by CI);
