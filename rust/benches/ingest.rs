@@ -1,0 +1,125 @@
+//! Bench: the ingestion layer's hot paths, for the §Perf trajectory.
+//!
+//! - seeded arrival generation (three processes, 60 s horizon),
+//! - deterministic trace replay (`ingest::serve_trace`) of a Poisson
+//!   workload against a temporal vgg16+alexnet plan,
+//! - the log-bucketed latency histogram's record path,
+//! - the slice gate (`ingest::slice_open`) the live dispatcher polls.
+//!
+//! Emits machine-readable `BENCH_ingest.json` at the repository root,
+//! alongside `BENCH_timeshare.json` / `BENCH_shard.json`.
+
+use flexipipe::board::zc706;
+use flexipipe::ingest::{self, ArrivalProcess, LatencyHistogram, TenantTrace, TraceSpec};
+use flexipipe::model::zoo;
+use flexipipe::plan::{Planner, Workload};
+use flexipipe::quant::QuantMode;
+use flexipipe::shard::{Regime, ScheduleMode};
+use flexipipe::util::bench::Bench;
+use flexipipe::util::json::{obj, Value};
+use std::path::Path;
+
+fn spec(duration_s: f64) -> TraceSpec {
+    TraceSpec {
+        seed: 0xFEED,
+        duration_s,
+        queue_capacity: 0,
+        tenants: vec![
+            TenantTrace {
+                tenant: "vgg16".into(),
+                process: ArrivalProcess::Diurnal {
+                    base_fps: 0.5,
+                    peak_fps: 1.8,
+                    period_s: 5.0,
+                },
+            },
+            TenantTrace {
+                tenant: "alexnet".into(),
+                process: ArrivalProcess::Poisson { rate_fps: 3.0 },
+            },
+        ],
+    }
+}
+
+fn main() {
+    let mut b = Bench::with_budget_secs(2.0);
+    let mut out: Vec<(&str, Value)> = Vec::new();
+
+    // Arrival generation: three processes over a long horizon.
+    let gen_spec = spec(60.0);
+    let s = b
+        .bench("ingest/arrivals 60s", || {
+            gen_spec.arrivals(zc706().freq_hz).unwrap()
+        })
+        .clone();
+    out.push(("arrivals_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let arr = gen_spec.arrivals(zc706().freq_hz).unwrap();
+    println!("  -> {} + {} arrivals over 60 s", arr[0].len(), arr[1].len());
+
+    // Deterministic replay against a real temporal plan.
+    let workload = Workload::new(QuantMode::W8A8).tenant(zoo::vgg16()).tenant(zoo::alexnet());
+    let set = Planner::on(zc706())
+        .steps(8)
+        .schedule(ScheduleMode::Temporal)
+        .plan(&workload)
+        .unwrap();
+    let plan = set.plans[set.best_min].clone();
+    assert!(matches!(plan.regime, Regime::Temporal(_)));
+    let replay_spec = spec(20.0);
+    let s = b
+        .bench("ingest/serve_trace 20s", || {
+            ingest::serve_trace(&plan, &replay_spec).unwrap()
+        })
+        .clone();
+    out.push(("serve_trace_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let report = ingest::serve_trace(&plan, &replay_spec).unwrap();
+    for t in &report.tenants {
+        println!(
+            "  -> {}: {} offered, {} admitted, p100 {} cycles (bound {:?})",
+            t.net, t.offered, t.admitted, t.p100_cycles, t.worst_sojourn_cycles
+        );
+    }
+    out.push((
+        "replay_admitted",
+        Value::Num(report.tenants.iter().map(|t| t.admitted as f64).sum()),
+    ));
+
+    // Histogram record path (the live dispatcher's per-completion cost).
+    let samples: Vec<u64> = (0..100_000u64).map(|i| i.wrapping_mul(2654435761) >> 16).collect();
+    let s = b
+        .bench("ingest/hist record 100k", || {
+            let mut h = LatencyHistogram::new();
+            for &v in &samples {
+                h.record(v);
+            }
+            h.quantile(99.0)
+        })
+        .clone();
+    out.push(("hist_100k_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+
+    // Slice gate: what the dispatcher polls per tenant per loop.
+    if let Regime::Temporal(info) = &plan.regime {
+        let period = info.period_cycles.max(1);
+        let s = b
+            .bench("ingest/slice_open 10k", || {
+                let mut open = 0u32;
+                for i in 0..10_000u64 {
+                    if ingest::slice_open(info, (i % 2) as usize, (i * 997) % period) {
+                        open += 1;
+                    }
+                }
+                open
+            })
+            .clone();
+        out.push(("slice_open_10k_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    }
+
+    b.finish();
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ingest.json");
+    let json = obj(out).to_pretty();
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

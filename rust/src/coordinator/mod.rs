@@ -113,6 +113,23 @@ struct Request {
     resp: Sender<crate::Result<Vec<i8>>>,
 }
 
+/// Receive with a deadline, draining a message that arrived exactly at
+/// expiry: `recv_timeout` with a zero (or already-elapsed) timeout
+/// reports `Timeout` even when a message is sitting in the channel, so
+/// the expiry path must `try_recv` once before declaring the deadline
+/// missed. Shared by [`Coordinator::infer`]'s request-timeout path and
+/// the worker's batch-fill loop — both had the race.
+pub(crate) fn recv_deadline<T>(rx: &Receiver<T>, timeout: Duration) -> Result<T, RecvTimeoutError> {
+    match rx.recv_timeout(timeout) {
+        Err(RecvTimeoutError::Timeout) => match rx.try_recv() {
+            Ok(v) => Ok(v),
+            Err(mpsc::TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+            Err(mpsc::TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+        },
+        other => other,
+    }
+}
+
 /// Aggregated serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
@@ -356,7 +373,7 @@ impl Coordinator {
             None => rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("coordinator dropped request"))?,
-            Some(t) => match rx.recv_timeout(t) {
+            Some(t) => match recv_deadline(&rx, t) {
                 Ok(result) => result,
                 Err(RecvTimeoutError::Timeout) => {
                     anyhow::bail!("request timed out after {t:?}")
@@ -550,11 +567,14 @@ fn worker_loop(
     let mut queue: Vec<Request> = Vec::new();
     let mut consecutive_failures: u32 = 0;
     'serve: loop {
-        // Fill the queue up to max_batch or until max_wait expires.
+        // Fill the queue up to max_batch or until max_wait expires. The
+        // deadline read goes through `recv_deadline`: a request that
+        // landed exactly as the window closed still joins this batch
+        // instead of waiting a whole extra fill cycle.
         let deadline = Instant::now() + policy.max_wait;
         while queue.len() < max_batch {
             let timeout = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(timeout) {
+            match recv_deadline(&rx, timeout) {
                 Ok(r) => queue.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
@@ -828,6 +848,70 @@ mod tests {
         }
         let err = coord.infer(frame).unwrap_err();
         assert!(err.to_string().contains("shedding"), "{err}");
+    }
+
+    #[test]
+    fn recv_deadline_drains_a_result_arriving_exactly_at_the_deadline() {
+        // The exact-at-the-deadline limit: the deadline has fully elapsed
+        // (zero remaining timeout) but the result is already in the
+        // channel. The raw `recv_timeout(ZERO)` reports Timeout here;
+        // `recv_deadline` must hand the message over instead.
+        let (tx, rx) = mpsc::channel();
+        tx.send(42u32).unwrap();
+        assert_eq!(recv_deadline(&rx, Duration::ZERO), Ok(42));
+        // An empty channel at expiry is still a real timeout…
+        assert_eq!(
+            recv_deadline(&rx, Duration::ZERO),
+            Err(RecvTimeoutError::Timeout)
+        );
+        // …and a hung-up channel surfaces as Disconnected, drained
+        // messages first.
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(recv_deadline(&rx, Duration::ZERO), Ok(7));
+        assert_eq!(
+            recv_deadline(&rx, Duration::ZERO),
+            Err(RecvTimeoutError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn completed_request_at_deadline_is_not_a_timeout() {
+        // Regression for the infer() race: the worker completes the
+        // request and sends the result, then the caller's deadline
+        // expires before it observes the message. With a zero request
+        // timeout every recv_timeout returns Timeout immediately, so
+        // only the try_recv drain can ever deliver — pre-fix this
+        // reported "timed out" for work that had already finished.
+        use crate::model::zoo;
+        use crate::runtime::SimBackend;
+        let policy = BatchPolicy {
+            request_timeout: Some(Duration::ZERO),
+            ..BatchPolicy::default()
+        };
+        let coord = Coordinator::start_sim(&zoo::tinycnn(), &[1], policy).unwrap();
+        let oracle = SimBackend::new(&zoo::tinycnn(), &[1]).unwrap();
+        let frame = vec![1i8; oracle.frame_elems()];
+        let want = oracle.forward_frame(&frame).unwrap();
+        let rx = coord.submit(frame).unwrap();
+        // Wait until the result is definitely in the channel, then take
+        // the zero-remaining-timeout path infer() takes.
+        let result = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("worker must answer")
+            .unwrap();
+        assert_eq!(result, want);
+        // And end-to-end: a zero max_wait exercises the worker fill
+        // loop's expired-deadline drain on every batch; requests must
+        // still be served, never dropped as spurious fill timeouts.
+        let policy = BatchPolicy {
+            max_wait: Duration::ZERO,
+            ..BatchPolicy::default()
+        };
+        let coord = Coordinator::start_sim(&zoo::tinycnn(), &[1], policy).unwrap();
+        for _ in 0..3 {
+            assert_eq!(coord.infer(vec![1i8; oracle.frame_elems()]).unwrap(), want);
+        }
     }
 
     #[test]

@@ -46,6 +46,11 @@
 //!   injected into the DES ([`sim::Simulator::simulate_faulted`]) and
 //!   typed plan deltas ([`fault::PlanDiff`]) with drain-overlapped
 //!   reconfiguration costs.
+//! - [`ingest`] — traffic-driven serving: seeded open-loop workloads
+//!   ([`ingest::TraceSpec`]), deterministic trace replay against a plan's
+//!   timeline ([`ingest::serve_trace`] → measured latency tails vs. the
+//!   analytic sojourn bound), and the live bounded-queue front-end
+//!   ([`ingest::IngestService`]) with typed admission control.
 //! - [`sim`] — event-driven pipeline simulator (stall-accurate);
 //!   [`sim::Simulate`] executes whole deployment plans.
 //! - [`search`] — parallel design-space search: boards × models × modes ×
@@ -121,6 +126,7 @@ pub mod board;
 pub mod coordinator;
 pub mod engine;
 pub mod fault;
+pub mod ingest;
 pub mod model;
 pub mod plan;
 pub mod power;

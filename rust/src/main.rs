@@ -10,6 +10,9 @@
 //!                    [--interleave 2] [--objective min-fps] [--json plan.json]
 //! flexipipe simulate --plan plan.json [--frames 4] [--faults faults.json]
 //! flexipipe serve    --plan plan.json [--frames 256]
+//! flexipipe serve    --plan plan.json --trace trace.json   # seeded replay
+//! flexipipe trace    gen --arrivals vgg16=poisson:2,alexnet=diurnal:0.5:2:5s \
+//!                    [--seed 1] [--duration 20s] [--queue-cap 0] [--out trace.json]
 //! flexipipe plan     --diff a.json b.json           # typed plan delta
 //! flexipipe replan   --plan plan.json --faults faults.json [--json out.json]
 //! flexipipe allocate --model vgg16 --board zc706 --bits 16 [--arch flex]
@@ -27,6 +30,7 @@
 use flexipipe::alloc::{allocator_for, ArchKind};
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
 use flexipipe::fault::FaultPlan;
+use flexipipe::ingest::{self, TraceSpec};
 use flexipipe::model::{config, Network};
 use flexipipe::plan::{Constraint, DeploymentPlan, Objective, Planner, TenantSpec, Workload};
 use flexipipe::power::PowerModel;
@@ -35,7 +39,7 @@ use flexipipe::runtime::{default_artifact_dir, Runtime};
 use flexipipe::search::{self, DesignSpace};
 use flexipipe::shard::{self, Regime, ScheduleMode};
 use flexipipe::sim::{Simulate, Simulator};
-use flexipipe::util::cli::{flag, opt, split_list, usage, Args, Spec};
+use flexipipe::util::cli::{flag, opt, parse_duration_s, split_list, usage, Args, Spec};
 use flexipipe::util::json::Value;
 use flexipipe::{board, report, sim};
 
@@ -64,7 +68,31 @@ fn specs() -> Vec<Spec> {
         opt("from", "sweep start", Some("128")),
         opt("to", "sweep end", Some("1024")),
         opt("steps", "sweep steps", Some("8")),
-        opt("trace", "write per-stage CSV trace to this path (simulate)", None),
+        opt(
+            "trace",
+            "per-stage CSV trace output path (simulate); trace-spec JSON to \
+             replay deterministically (serve --plan)",
+            None,
+        ),
+        opt("seed", "trace-spec PRNG seed (trace gen)", Some("1")),
+        opt(
+            "duration",
+            "trace horizon, duration with s/ms/us suffix: 20s (trace gen)",
+            Some("10s"),
+        ),
+        opt(
+            "queue-cap",
+            "per-tenant admission capacity; 0 derives the slice-admissible \
+             depth from the plan (trace gen)",
+            Some("0"),
+        ),
+        opt(
+            "arrivals",
+            "per-tenant arrival processes, model=process: vgg16=poisson:2, \
+             alexnet=diurnal:0.5:2:5s, zf=bursty:3:10:10ms (trace gen)",
+            None,
+        ),
+        opt("out", "write the generated trace spec to this path (trace gen)", None),
         opt("models", "comma-separated model list (plan/search)", None),
         opt("boards", "comma-separated board list (plan/search)", None),
         opt("archs", "comma-separated arch list (search)", Some("flex")),
@@ -169,6 +197,7 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "search" => cmd_search(&args),
         "plan" => cmd_plan(&args),
         "replan" => cmd_replan(&args),
+        "trace" => cmd_trace(&args),
         "shard" => {
             // Thin deprecated alias: same flags, same output, one spine.
             eprintln!(
@@ -189,12 +218,17 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: plan replan simulate serve allocate report e2e sweep search help\n\
+         commands: plan replan simulate serve trace allocate report e2e sweep search help\n\
          (shard is a deprecated alias of plan)\n\n\
          the plan-centric flow: `flexipipe plan … --json plan.json` emits a\n\
          deployment plan; `flexipipe simulate --plan plan.json` executes it in\n\
          the cycle-accurate DES; `flexipipe serve --plan plan.json` serves every\n\
          tenant on the in-process SimBackend.\n\n\
+         traffic: `trace gen --arrivals …` authors a seeded open-loop workload;\n\
+         `serve --plan P --trace T` replays it deterministically against the\n\
+         plan's timeline and prints measured latency tails (p50/p99/p99.9/p100)\n\
+         vs. the plan's analytic worst-case sojourn, with typed queue-full\n\
+         rejects once offered load exceeds the plan's admitted rate.\n\n\
          fault tolerance: `simulate --plan P --faults F` replays a seeded fault\n\
          scenario through the DES; `plan --diff a.json b.json` emits the minimal\n\
          drain-overlapped reconfiguration sequence between two plans; `replan\n\
@@ -365,8 +399,16 @@ fn cmd_report(args: &Args) -> flexipipe::Result<()> {
 
 fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
     if let Some(path) = args.get("plan") {
+        if let Some(tpath) = args.get("trace") {
+            return cmd_serve_trace(path, tpath);
+        }
         return cmd_serve_plan(args, path);
     }
+    anyhow::ensure!(
+        args.get("trace").is_none(),
+        "serve --trace needs --plan plan.json (deterministic trace replay runs \
+         against a deployment plan)"
+    );
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let frames: usize = args.get_parse("frames", 256)?;
     let net = args.get_or("net", "tinycnn");
@@ -479,6 +521,50 @@ fn cmd_serve_plan(args: &Args, path: &str) -> flexipipe::Result<()> {
             s.batches,
             s.padded_frames
         );
+    }
+    Ok(())
+}
+
+/// `serve --plan plan.json --trace trace.json`: deterministic trace
+/// replay through [`ingest::serve_trace`]. Stdout carries ONLY the
+/// [`ingest::ServeReport`] JSON — byte-stable per (plan, trace) pair, so
+/// CI diffs two runs verbatim (the fault path's convention); the human
+/// p99-vs-bound table goes to stderr.
+fn cmd_serve_trace(path: &str, tpath: &str) -> flexipipe::Result<()> {
+    let plan = DeploymentPlan::load(path)?;
+    let spec = TraceSpec::load(tpath)?;
+    let report = ingest::serve_trace(&plan, &spec)?;
+    eprintln!("{}", report::render_serve(&report));
+    println!("{}", report.to_json().to_pretty());
+    Ok(())
+}
+
+/// `trace gen --arrivals …`: author a seeded trace spec. Stdout is the
+/// spec JSON (or `--out FILE`); `serve --plan P --trace F` replays it.
+fn cmd_trace(args: &Args) -> flexipipe::Result<()> {
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.first().map(String::as_str) == Some("gen") && pos.len() == 1,
+        "usage: flexipipe trace gen --arrivals vgg16=poisson:2,alexnet=diurnal:0.5:2:5s \
+         [--seed N] [--duration 20s] [--queue-cap N] [--out trace.json]"
+    );
+    let arrivals = args
+        .get("arrivals")
+        .ok_or_else(|| anyhow::anyhow!("trace gen needs --arrivals model=process,…"))?;
+    let spec = TraceSpec {
+        seed: args.get_parse("seed", 1u64)?,
+        duration_s: parse_duration_s(args.get_or("duration", "10s"))
+            .map_err(|e| anyhow::anyhow!("--duration: {e}"))?,
+        queue_capacity: args.get_parse("queue-cap", 0usize)?,
+        tenants: ingest::parse_arrivals(arrivals)?,
+    };
+    spec.validate()?;
+    match args.get("out") {
+        Some(p) => {
+            spec.save(p)?;
+            eprintln!("trace spec written to {p}");
+        }
+        None => println!("{}", spec.to_json().to_pretty()),
     }
     Ok(())
 }

@@ -906,6 +906,26 @@ impl DeploymentPlan {
             .collect()
     }
 
+    /// Analytic worst-case frame sojourn per tenant in **cycles** — the
+    /// bound measured serving tails ([`crate::ingest::serve_trace`]) are
+    /// validated against. Temporal and overlay plans carry it in the
+    /// schedule itself
+    /// ([`crate::shard::TemporalInfo::latency_cycles`] — present even in
+    /// hand-authored plans); spatial plans fall back to the
+    /// planning-time record (`latency_s` at the board clock), so the
+    /// result is `None` for a hand-authored spatial plan without
+    /// records.
+    pub fn worst_sojourn_cycles(&self) -> Option<Vec<u64>> {
+        match &self.regime {
+            Regime::Temporal(info) => Some(info.latency_cycles.clone()),
+            Regime::Spatial => self.latency_vec().map(|v| {
+                v.iter()
+                    .map(|s| (s * self.board.freq_hz).ceil() as u64)
+                    .collect()
+            }),
+        }
+    }
+
     /// Recorded min-fps objective.
     pub fn min_fps(&self) -> Option<f64> {
         self.fps_vec()

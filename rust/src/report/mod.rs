@@ -193,6 +193,50 @@ pub fn vgg16_speedups(rows: &[Row]) -> Option<(f64, f64, f64)> {
     ))
 }
 
+/// Render a [`crate::ingest::ServeReport`] as an aligned text table: one
+/// row per tenant with offered vs. plan-admitted load, admission
+/// outcomes, the measured latency tail, and the p100-vs-analytic-bound
+/// verdict (the human-facing companion of the machine-read JSON the
+/// `serve --trace` command prints to stdout).
+pub fn render_serve(report: &crate::ingest::ServeReport) -> String {
+    let ms = |c: u64| c as f64 / report.freq_hz * 1e3;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace replay: seed {} | {} regime | {:.1} s at {:.0} MHz\n",
+        report.seed,
+        report.regime,
+        report.duration_s,
+        report.freq_hz / 1e6
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+        "tenant", "off/s", "plan/s", "admit", "reject", "p50 ms", "p99 ms", "p99.9 ms",
+        "p100 ms", "bound ms", "in-SLO"
+    ));
+    out.push_str(&"-".repeat(103));
+    out.push('\n');
+    for t in &report.tenants {
+        out.push_str(&format!(
+            "{:<10} {:>8.2} {:>8.2} {:>8} {:>8} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9} {:>7}\n",
+            t.net,
+            t.offered_fps,
+            t.plan_fps,
+            t.admitted,
+            t.rejected_full,
+            ms(t.p50_cycles),
+            ms(t.p99_cycles),
+            ms(t.p999_cycles),
+            ms(t.p100_cycles),
+            t.worst_sojourn_cycles
+                .map_or("/".into(), |b| format!("{:.2}", ms(b))),
+            t.within_bound.map_or("/".into(), |ok| {
+                if ok { "yes".to_string() } else { "NO".to_string() }
+            }),
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -132,31 +132,19 @@ pub(crate) fn meets_floors(tenants: &[Tenant], fps: &[f64]) -> bool {
 }
 
 /// Parse a CLI `--slo` list: comma-separated `model=duration` entries
-/// where the duration accepts `s`, `ms`, or `us` suffixes (bare numbers
-/// are seconds) — e.g. `vgg16=33ms,zf=0.05s`. Returns
-/// `(model name, seconds)` pairs.
+/// where the duration **requires** an explicit `s`, `ms`, or `us` suffix
+/// — e.g. `vgg16=33ms,zf=0.05s`. A bare `vgg16=33` is rejected: it used
+/// to silently mean 33 *seconds*, a 1000× footgun when the author meant
+/// 33 ms. Returns `(model name, seconds)` pairs.
 pub fn parse_slos(s: &str) -> crate::Result<Vec<(String, f64)>> {
     let mut out = Vec::new();
     for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
         let Some((model, dur)) = entry.split_once('=') else {
             anyhow::bail!("--slo entry '{entry}' is not model=duration");
         };
-        let dur = dur.trim();
-        let (num, scale) = if let Some(v) = dur.strip_suffix("ms") {
-            (v, 1e-3)
-        } else if let Some(v) = dur.strip_suffix("us") {
-            (v, 1e-6)
-        } else if let Some(v) = dur.strip_suffix('s') {
-            (v, 1.0)
-        } else {
-            (dur, 1.0)
-        };
-        let v: f64 = num
-            .trim()
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--slo entry '{entry}': bad duration '{dur}'"))?;
-        anyhow::ensure!(v > 0.0, "--slo entry '{entry}': duration must be positive");
-        out.push((model.trim().to_string(), v * scale));
+        let secs = crate::util::cli::parse_duration_s(dur)
+            .map_err(|e| anyhow::anyhow!("--slo entry '{entry}': {e}"))?;
+        out.push((model.trim().to_string(), secs));
     }
     anyhow::ensure!(!out.is_empty(), "--slo given but names no tenants");
     Ok(out)
@@ -1155,8 +1143,12 @@ mod tests {
         assert_eq!(slos[1].0, "zf");
         assert!((slos[1].1 - 0.05).abs() < 1e-12);
         assert!((slos[2].1 - 0.002).abs() < 1e-12);
-        // Bare numbers are seconds.
-        assert!((parse_slos("x=0.25").unwrap()[0].1 - 0.25).abs() < 1e-12);
+        // Unitless durations are rejected — a bare `33` silently meaning
+        // 33 seconds was a 1000× footgun — and the error names the
+        // accepted suffixes.
+        let err = parse_slos("x=0.25").unwrap_err().to_string();
+        assert!(err.contains("s, ms, or us"), "{err}");
+        assert!(parse_slos("vgg16=33").is_err());
         assert!(parse_slos("vgg16").is_err());
         assert!(parse_slos("vgg16=-3ms").is_err());
         assert!(parse_slos("vgg16=soon").is_err());

@@ -200,6 +200,18 @@ pub struct SliceSpec {
     pub overlap_cycles: u64,
 }
 
+impl SliceSpec {
+    /// Dead cycles actually charged at this sub-slice's start boundary
+    /// (`reconfig_cycles − overlap_cycles`): the window between the
+    /// slice's start and the first cycle its tenant's pipeline can ingest
+    /// a frame. The ingestion dispatcher ([`crate::ingest`]) charges this
+    /// before draining the tenant's queue, mirroring the analytic sojourn
+    /// bound term by term.
+    pub fn charged_cycles(&self) -> u64 {
+        self.reconfig_cycles - self.overlap_cycles
+    }
+}
+
 /// The temporal half of a [`ShardPlan`]: how the period is cut and what
 /// the analytic schedule admits.
 ///
@@ -269,6 +281,41 @@ impl TemporalInfo {
                 reconfig_cycles: s.reconfig_cycles,
             })
             .collect()
+    }
+
+    /// Start offset of every sub-slice within the planned period, in
+    /// cycles (the running sum of `parts × quantum` — the *planned*
+    /// timeline the analytic sojourn bound is computed on, before any
+    /// executed-schedule overrun). Indexed like [`TemporalInfo::slices`].
+    /// The slice-aware ingestion dispatcher ([`crate::ingest`]) maps
+    /// arrival times onto these boundaries; for the degenerate solo
+    /// schedule (`period_cycles == 0`) the single start is `0`.
+    pub fn slice_starts(&self) -> Vec<u64> {
+        self.slices
+            .iter()
+            .scan(0u64, |cum, s| {
+                let here = *cum;
+                *cum += s.parts as u64 * self.quantum_cycles;
+                Some(here)
+            })
+            .collect()
+    }
+
+    /// Slice-admissible queue depth for `tenant`: the smallest admitted
+    /// frame count over the tenant's sub-slices. Bounding a tenant's
+    /// waiting requests at this depth guarantees the queue fully drains
+    /// at the tenant's *next* sub-slice occurrence, which is exactly the
+    /// single-gap premise of the analytic [`TemporalInfo::latency_cycles`]
+    /// bound — it is the default admission capacity of the ingestion
+    /// layer. `None` when the schedule admits no frames for the tenant
+    /// (the degenerate solo schedule, or an index the schedule does not
+    /// serve).
+    pub fn slice_admissible_depth(&self, tenant: usize) -> Option<usize> {
+        self.slices
+            .iter()
+            .filter(|s| s.tenant == tenant && s.frames > 0)
+            .map(|s| s.frames)
+            .min()
     }
 }
 

@@ -861,6 +861,96 @@ pub(crate) fn simulate_timeshared(
     simulate_schedule(allocs, &seq, false)
 }
 
+/// One tenant's replayed request stream from [`engines::replay_arrivals`]:
+/// closed-loop arrival injection against an executed schedule period.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayTenant {
+    /// Sojourn (completion − arrival) per admitted request, in cycles,
+    /// in admission order.
+    pub sojourns: Vec<u64>,
+    /// Arrivals refused because the tenant's queue already held its
+    /// capacity of waiting requests.
+    pub rejected: u64,
+}
+
+/// Replay per-tenant arrival streams against an **executed** schedule
+/// period — closed-loop arrival injection into the DES. The executed
+/// [`TimeshareReport`] timeline (slice start offsets, charged
+/// reconfiguration windows, per-batch [`SimReport::frame_done`] offsets)
+/// is extended periodically; each tenant's queue admits at most
+/// `capacity[t]` waiting requests (`0` = unbounded) and drains only at
+/// that tenant's sub-slice starts, serving at most the slice's admitted
+/// frame count per occurrence — the k-th request of an occurrence's
+/// batch completes at the executed `frame_done[k]` offset after the
+/// charged window. `arrivals[t]` must be sorted ascending (absolute
+/// cycles). The independent model in [`crate::ingest::serve_trace`]
+/// computes the same quantities from the *planned* timeline; the
+/// acceptance tests pin the two against each other and against the
+/// analytic `TemporalInfo::latency_cycles` bound.
+///
+/// [`TemporalInfo::latency_cycles`]: crate::shard::TemporalInfo::latency_cycles
+pub(crate) fn replay_arrivals(
+    report: &TimeshareReport,
+    arrivals: &[Vec<u64>],
+    capacity: &[usize],
+) -> Vec<ReplayTenant> {
+    assert_eq!(arrivals.len(), capacity.len(), "one capacity per tenant");
+    let period = report.period_cycles;
+    assert!(period > 0, "replay needs an executed period");
+    let mut out = Vec::with_capacity(arrivals.len());
+    for (t, arr) in arrivals.iter().enumerate() {
+        // This tenant's serving occurrences within one period.
+        let occ: Vec<&TimeshareSlice> = report
+            .slices
+            .iter()
+            .filter(|s| s.tenant == t && s.frames > 0)
+            .collect();
+        let mut rep = ReplayTenant::default();
+        if arr.is_empty() {
+            out.push(rep);
+            continue;
+        }
+        assert!(
+            !occ.is_empty(),
+            "replay: tenant {t} has arrivals but the schedule admits no frames for it"
+        );
+        debug_assert!(arr.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
+        let cap = capacity[t];
+        let mut next = 0; // index of the first unprocessed arrival
+        let mut queue: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+        // Walk occurrences in time order (periodic extension) until every
+        // arrival is admitted-or-rejected and the queue has drained.
+        let mut k = 0u64;
+        while next < arr.len() || !queue.is_empty() {
+            let s = occ[(k as usize) % occ.len()];
+            let start = (k / occ.len() as u64) * period + s.start_cycles;
+            // Admit arrivals up to (and at) this occurrence's start; the
+            // waiting-depth bound is exact because the queue only drains
+            // at occurrence starts.
+            while next < arr.len() && arr[next] <= start {
+                if cap == 0 || queue.len() < cap {
+                    queue.push_back(arr[next]);
+                } else {
+                    rep.rejected += 1;
+                }
+                next += 1;
+            }
+            // Drain up to the slice's admitted batch: request j of the
+            // batch completes frame_done[j] after the charged window.
+            let charged = s.reconfig_cycles - s.overlap_cycles;
+            let done = s.sim.as_ref().map(|r| r.frame_done.as_slice()).unwrap_or(&[]);
+            let served = s.frames.min(queue.len()).min(done.len());
+            for j in 0..served {
+                let a = queue.pop_front().expect("served <= queue depth");
+                rep.sojourns.push(start + charged + done[j] - a);
+            }
+            k += 1;
+        }
+        out.push(rep);
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // Sequential-group architectures: analytic makespan
 // ---------------------------------------------------------------------------
@@ -1116,6 +1206,16 @@ pub mod engines {
         drain_overlap: bool,
     ) -> TimeshareReport {
         super::simulate_schedule(allocs, seq, drain_overlap)
+    }
+
+    /// Closed-loop arrival replay against an executed schedule period
+    /// (see `sim::replay_arrivals`).
+    pub fn replay_arrivals(
+        report: &TimeshareReport,
+        arrivals: &[Vec<u64>],
+        capacity: &[usize],
+    ) -> Vec<ReplayTenant> {
+        super::replay_arrivals(report, arrivals, capacity)
     }
 
     /// Serial one-slice-per-tenant schedule executor (the PR-3 baseline).

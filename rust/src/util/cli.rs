@@ -126,6 +126,36 @@ pub fn split_list(s: &str) -> Vec<String> {
         .collect()
 }
 
+/// Parse a duration with a **required** unit suffix (`s`, `ms`, or `us`)
+/// into seconds — `"33ms"` → `0.033`. Bare numbers are rejected: a
+/// unitless `33` silently read as seconds when the author meant
+/// milliseconds is a 1000× error, so the unit must be spelled. Shared by
+/// every duration-valued surface of the `flexipipe` CLI (`--slo`,
+/// `serve --trace` durations, `trace gen` flags).
+pub fn parse_duration_s(s: &str) -> crate::Result<f64> {
+    let s = s.trim();
+    let (num, scale) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        anyhow::bail!(
+            "duration '{s}' has no unit — write an explicit suffix: s, ms, or us (e.g. 33ms)"
+        );
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration '{s}' (expected e.g. 0.05s, 33ms, 250us)"))?;
+    anyhow::ensure!(
+        v > 0.0 && v.is_finite(),
+        "duration '{s}' must be positive and finite"
+    );
+    Ok(v * scale)
+}
+
 /// Render usage text for a spec set.
 pub fn usage(specs: &[Spec]) -> String {
     let mut s = String::from("options:\n");
@@ -188,5 +218,32 @@ mod tests {
         let a = Args::parse(&sv(&[]), &specs()).unwrap();
         assert_eq!(a.get_or("model", "vgg16"), "vgg16");
         assert_eq!(a.get_parse::<usize>("bits", 16).unwrap(), 16);
+    }
+
+    #[test]
+    fn duration_suffixes_scale_to_seconds() {
+        assert!((parse_duration_s("33ms").unwrap() - 0.033).abs() < 1e-12);
+        assert!((parse_duration_s("250us").unwrap() - 250e-6).abs() < 1e-15);
+        assert!((parse_duration_s("0.05s").unwrap() - 0.05).abs() < 1e-12);
+        assert!((parse_duration_s(" 2s ").unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unitless_duration_is_rejected_naming_suffixes() {
+        let err = parse_duration_s("33").unwrap_err().to_string();
+        assert!(err.contains("no unit"), "{err}");
+        assert!(
+            err.contains("s, ms, or us"),
+            "error must name the accepted suffixes: {err}"
+        );
+    }
+
+    #[test]
+    fn nonpositive_and_garbage_durations_are_rejected() {
+        assert!(parse_duration_s("0s").is_err());
+        assert!(parse_duration_s("-5ms").is_err());
+        assert!(parse_duration_s("infs").is_err());
+        assert!(parse_duration_s("abcms").is_err());
+        assert!(parse_duration_s("ms").is_err());
     }
 }

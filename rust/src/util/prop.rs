@@ -39,8 +39,14 @@ impl Rng {
         self.range(lo as i64, hi as i64) as usize
     }
 
-    /// Pick one element.
+    /// Pick one element. Panics with an explicit message on an empty
+    /// slice (the bare `len() - 1` indexing used to underflow, which
+    /// surfaced as a cryptic `attempt to subtract with overflow`).
     pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(
+            !items.is_empty(),
+            "Rng::pick on an empty slice — the generator must supply at least one candidate"
+        );
         &items[self.urange(0, items.len() - 1)]
     }
 
@@ -106,5 +112,25 @@ mod tests {
     #[should_panic(expected = "failed at case")]
     fn check_reports_failing_case() {
         check("always-fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::pick on an empty slice")]
+    fn pick_empty_slice_panics_with_explicit_message() {
+        let mut r = Rng::new(1);
+        let empty: &[u8] = &[];
+        r.pick(empty);
+    }
+
+    #[test]
+    fn pick_covers_all_elements() {
+        let mut r = Rng::new(9);
+        let items = [10usize, 20, 30];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let v = *r.pick(&items);
+            seen[v / 10 - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 }
