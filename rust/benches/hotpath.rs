@@ -22,12 +22,16 @@ use flexipipe::quant::QuantMode;
 use flexipipe::runtime::{default_artifact_dir, Runtime};
 use flexipipe::search::DesignSpace;
 use flexipipe::sim;
-use flexipipe::util::bench::Bench;
+use flexipipe::util::bench::BenchOpts;
 use flexipipe::util::json::{self, obj, Value};
 use std::path::Path;
 
 fn main() {
-    let mut b = Bench::with_budget_secs(1.5);
+    let opts = BenchOpts::parse(
+        1.5,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json"),
+    );
+    let mut b = opts.bench();
     let board = zc706();
     let mut out: Vec<(&str, Value)> = Vec::new();
 
@@ -151,11 +155,7 @@ fn main() {
     }
     b.finish();
 
-    // Perf trajectory: machine-readable dump at the repository root.
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
-    let json = obj(out).to_pretty();
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    // Perf trajectory: machine-readable dump (repository root by default,
+    // `--json PATH` to redirect).
+    opts.write(&obj(out).to_pretty());
 }

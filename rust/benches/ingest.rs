@@ -15,7 +15,7 @@ use flexipipe::model::zoo;
 use flexipipe::plan::{Planner, Workload};
 use flexipipe::quant::QuantMode;
 use flexipipe::shard::{Regime, ScheduleMode};
-use flexipipe::util::bench::Bench;
+use flexipipe::util::bench::BenchOpts;
 use flexipipe::util::json::{obj, Value};
 use std::path::Path;
 
@@ -42,7 +42,11 @@ fn spec(duration_s: f64) -> TraceSpec {
 }
 
 fn main() {
-    let mut b = Bench::with_budget_secs(2.0);
+    let opts = BenchOpts::parse(
+        2.0,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ingest.json"),
+    );
+    let mut b = opts.bench();
     let mut out: Vec<(&str, Value)> = Vec::new();
 
     // Arrival generation: three processes over a long horizon.
@@ -116,10 +120,5 @@ fn main() {
 
     b.finish();
 
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ingest.json");
-    let json = obj(out).to_pretty();
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    opts.write(&obj(out).to_pretty());
 }

@@ -18,12 +18,16 @@ use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::shard::{Sharder, Tenant};
 use flexipipe::sim;
-use flexipipe::util::bench::Bench;
+use flexipipe::util::bench::BenchOpts;
 use flexipipe::util::json::{obj, Value};
 use std::path::Path;
 
 fn main() {
-    let mut b = Bench::with_budget_secs(2.0);
+    let opts = BenchOpts::parse(
+        2.0,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_shard.json"),
+    );
+    let mut b = opts.bench();
     let mut out: Vec<(&str, Value)> = Vec::new();
 
     // Two-tenant split search: the tentpole workload.
@@ -50,6 +54,36 @@ fn main() {
     out.push(("shard_search_ms", Value::Num(search_ms)));
     out.push(("shard_plans", Value::Num(result.plans.len() as f64)));
     out.push(("shard_frontier", Value::Num(result.frontier.len() as f64)));
+
+    // Same search with branch-and-bound pruning: identical frontier, fewer
+    // lattice nodes expanded.
+    let pruned_sharder = || Sharder {
+        prune: true,
+        ..two_tenant()
+    };
+    let s = b
+        .bench("shard/vgg16+alexnet/8steps/pruned", || {
+            pruned_sharder().search().unwrap()
+        })
+        .clone();
+    let pruned_ms = s.mean.as_secs_f64() * 1e3;
+    let pruned = pruned_sharder().search().unwrap();
+    assert_eq!(
+        pruned.frontier.iter().map(|&i| &pruned.plans[i].fps).collect::<Vec<_>>(),
+        result.frontier.iter().map(|&i| &result.plans[i].fps).collect::<Vec<_>>(),
+        "pruned search must keep the frontier"
+    );
+    println!(
+        "  -> pruned: {}/{} lattice nodes skipped, {} allocator runs ({:.2}x vs exhaustive)",
+        pruned.stats.pruned_nodes,
+        pruned.stats.lattice_nodes,
+        pruned.stats.alloc_calls,
+        search_ms / pruned_ms
+    );
+    out.push(("shard_search_pruned_ms", Value::Num(pruned_ms)));
+    out.push(("shard_lattice_nodes", Value::Num(pruned.stats.lattice_nodes as f64)));
+    out.push(("shard_pruned_nodes", Value::Num(pruned.stats.pruned_nodes as f64)));
+    out.push(("shard_alloc_calls", Value::Num(pruned.stats.alloc_calls as f64)));
 
     // Single-tenant overhead: the sharder collapses to one plan.
     let s = b
@@ -99,10 +133,5 @@ fn main() {
 
     b.finish();
 
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_shard.json");
-    let json = obj(out).to_pretty();
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    opts.write(&obj(out).to_pretty());
 }

@@ -20,7 +20,7 @@ use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::shard::{Regime, ScheduleMode, Sharder, Tenant};
 use flexipipe::sim;
-use flexipipe::util::bench::Bench;
+use flexipipe::util::bench::BenchOpts;
 use flexipipe::util::json::{obj, Value};
 use std::path::Path;
 
@@ -56,7 +56,11 @@ fn overlay_sharder() -> Sharder {
 }
 
 fn main() {
-    let mut b = Bench::with_budget_secs(2.0);
+    let opts = BenchOpts::parse(
+        2.0,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_slo.json"),
+    );
+    let mut b = opts.bench();
     let mut out: Vec<(&str, Value)> = Vec::new();
 
     // SLO-constrained interleaved plan search.
@@ -136,10 +140,5 @@ fn main() {
 
     b.finish();
 
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_slo.json");
-    let json = obj(out).to_pretty();
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    opts.write(&obj(out).to_pretty());
 }

@@ -19,7 +19,7 @@ use flexipipe::model::zoo;
 use flexipipe::quant::QuantMode;
 use flexipipe::shard::{Regime, ScheduleMode, Sharder, Tenant};
 use flexipipe::sim;
-use flexipipe::util::bench::Bench;
+use flexipipe::util::bench::BenchOpts;
 use flexipipe::util::json::{obj, Value};
 use std::path::Path;
 
@@ -38,7 +38,11 @@ fn sharder(schedule: ScheduleMode) -> Sharder {
 }
 
 fn main() {
-    let mut b = Bench::with_budget_secs(2.0);
+    let opts = BenchOpts::parse(
+        2.0,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_timeshare.json"),
+    );
+    let mut b = opts.bench();
     let mut out: Vec<(&str, Value)> = Vec::new();
 
     // Temporal-only plan search.
@@ -112,10 +116,5 @@ fn main() {
 
     b.finish();
 
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_timeshare.json");
-    let json = obj(out).to_pretty();
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    opts.write(&obj(out).to_pretty());
 }

@@ -319,6 +319,51 @@ impl NetTables {
                 .collect(),
         }
     }
+
+    /// Number of compute-layer tables.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Admissible lower bound on any allocation's pipeline beat at a total
+    /// multiplier budget Θ: the slowest layer when each layer is
+    /// (optimistically) handed the *entire* budget alone. Any real split
+    /// gives every layer `θ_j ≤ Θ`, and [`LayerTable::cycles_at`] is
+    /// non-increasing in θ, so every layer's real cycles are `≥
+    /// cycles_at(Θ)` — and raising `K` (Algorithm 2) only adds ragged-tail
+    /// cycles on top. This is the staircase bound the branch-and-bound
+    /// search prunes on: `fps ≤ freq / bottleneck_cycles_lb(Θ)`.
+    pub fn bottleneck_cycles_lb(&self, theta_total: usize) -> u64 {
+        self.layers
+            .iter()
+            .map(|lt| lt.cycles_at(theta_total))
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// Admissible lower bound on the *sum* of compute-stage cycles at a
+    /// total budget Θ (same per-layer argument as
+    /// [`NetTables::bottleneck_cycles_lb`], summed) — the compute half of
+    /// the latency lower bound; pool stages are costed separately (their
+    /// cycles are `H·W`, independent of the allocation).
+    pub fn stage_cycle_sum_lb(&self, theta_total: usize) -> u64 {
+        self.layers.iter().map(|lt| lt.cycles_at(theta_total)).sum()
+    }
+}
+
+/// Outcome flags of one allocator run, reported by
+/// [`FlexAllocator::allocate_outcome`].
+#[derive(Debug, Clone, Copy)]
+pub struct AllocOutcome {
+    /// Did Algorithm 2 finish without ever rejecting a candidate K-jump on
+    /// the BRAM budget α? When `true`, the whole run's decision sequence
+    /// was independent of α: every accepted jump fit with room to spare and
+    /// every rejection was an fps rejection (which compares compute/DDR
+    /// rates only). A clean allocation is therefore **bit-identical** on
+    /// any board with the same Θ/β and a *larger* α — the reuse rule the
+    /// shard search's α-saturation cache exploits.
+    pub bram_clean: bool,
 }
 
 /// Grow the bottleneck stage until the budget is exhausted or it can no
@@ -493,6 +538,21 @@ impl FlexAllocator {
     /// comes from the geometry-free `evaluate_perf`. Decision-for-decision
     /// identical to [`naive::raise_k`] (golden-tested).
     pub fn raise_k(&self, net: &Network, board: &Board, mode: QuantMode, alloc: &mut Allocation) {
+        self.raise_k_tracked(net, board, mode, alloc);
+    }
+
+    /// [`FlexAllocator::raise_k`] that additionally reports whether the run
+    /// was BRAM-clean (see [`AllocOutcome::bram_clean`]): returns `true`
+    /// iff no candidate K-jump was ever rejected because the new BRAM sum
+    /// exceeded α.
+    fn raise_k_tracked(
+        &self,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        alloc: &mut Allocation,
+    ) -> bool {
+        let mut bram_clean = true;
         let beta = board.ddr_bytes_per_sec * self.bw_margin;
         let alpha = board.bram18();
         let n = alloc.stages.len();
@@ -546,7 +606,16 @@ impl FlexAllocator {
                     (0, 0)
                 };
                 let new_sum = bram_sum - stage_bram[idx] - ob_next + nb_self + nb_next;
-                if new_sum <= alpha && alloc.evaluate_perf().fps > cur_fps * (1.0 + 1e-9) {
+                if new_sum > alpha {
+                    // Over BRAM: the only α-dependent decision in the whole
+                    // allocator — record it so callers know this run's
+                    // output is NOT reusable on a smaller-α board.
+                    bram_clean = false;
+                    alloc.stages[idx].cfg.k = old_k;
+                    alloc.stages[idx].figures = old_fig;
+                    continue;
+                }
+                if alloc.evaluate_perf().fps > cur_fps * (1.0 + 1e-9) {
                     stage_bram[idx] = nb_self;
                     if idx + 1 < n {
                         stage_bram[idx + 1] = nb_next;
@@ -555,7 +624,7 @@ impl FlexAllocator {
                     accepted = true;
                     break;
                 }
-                // Rejected (over BRAM, or fps did not improve): revert.
+                // fps did not improve (an α-independent rejection): revert.
                 alloc.stages[idx].cfg.k = old_k;
                 alloc.stages[idx].figures = old_fig;
             }
@@ -563,6 +632,7 @@ impl FlexAllocator {
                 break;
             }
         }
+        bram_clean
     }
 
     /// Allocate with caller-provided [`NetTables`] — the design-space
@@ -590,6 +660,59 @@ impl FlexAllocator {
         tables: &NetTables,
         seed: Option<&ThetaSeed>,
     ) -> crate::Result<(Allocation, ThetaSeed)> {
+        let (alloc, seed_out, _) = self.allocate_outcome(net, board, mode, tables, seed)?;
+        Ok((alloc, seed_out))
+    }
+
+    /// The Θ multiplier budget [`FlexAllocator::allocate_seeded`] derives
+    /// for a board/mode pair with `n_compute` compute layers — exposed so
+    /// the branch-and-bound search can evaluate staircase bounds for a
+    /// candidate sub-board *without* running the allocator.
+    pub fn theta_budget(&self, n_compute: usize, board: &Board, mode: QuantMode) -> usize {
+        let pack = mode.mults_per_dsp();
+        let slack = (pack - 1) * n_compute;
+        ((board.dsps.saturating_sub(self.dsp_reserve)) * pack).saturating_sub(slack)
+    }
+
+    /// Settle Algorithm 1's θ vector only — the cheap prefix of
+    /// [`FlexAllocator::allocate_seeded`], with no stage figures, no
+    /// Algorithm 2 and no evaluation. The budget-sweep plateau skip runs
+    /// this first: along a DSP-budget chain only the budget varies, and
+    /// every downstream quantity (figures, K-raising, fps, power, DES) is
+    /// a pure function of the settled θ vector — so when the vector equals
+    /// the previous budget's, the previous design point can be reused
+    /// verbatim (bit-identical; regression-tested).
+    pub fn settle_thetas(
+        &self,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        tables: &NetTables,
+        seed: Option<&ThetaSeed>,
+    ) -> crate::Result<ThetaSeed> {
+        net.validate()?;
+        anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
+        anyhow::ensure!(
+            tables.layers.len() == net.compute_layers().len(),
+            "NetTables were built for a different network ({} compute layers vs {})",
+            tables.layers.len(),
+            net.compute_layers().len()
+        );
+        let theta_total = self.theta_budget(net.compute_layers().len(), board, mode);
+        Ok(self.algorithm1_seeded(net, theta_total, tables, seed).1)
+    }
+
+    /// [`FlexAllocator::allocate_seeded`] plus the [`AllocOutcome`] flags —
+    /// the α-saturation cache in [`crate::shard`] uses `bram_clean` to
+    /// reuse one allocator run across every larger BRAM slice.
+    pub fn allocate_outcome(
+        &self,
+        net: &Network,
+        board: &Board,
+        mode: QuantMode,
+        tables: &NetTables,
+        seed: Option<&ThetaSeed>,
+    ) -> crate::Result<(Allocation, ThetaSeed, AllocOutcome)> {
         net.validate()?;
         anyhow::ensure!(board.dsps > self.dsp_reserve, "no DSPs available");
         anyhow::ensure!(
@@ -603,9 +726,7 @@ impl FlexAllocator {
         // with an odd multiplier count strands half a slice. Reserving
         // (mults_per_dsp − 1) per compute stage guarantees
         // Σ ceil(mults_i / pack) ≤ DSPs for any split Algorithm 1 picks.
-        let pack = mode.mults_per_dsp();
-        let slack = (pack - 1) * net.compute_layers().len();
-        let theta_total = ((board.dsps - self.dsp_reserve) * pack).saturating_sub(slack);
+        let theta_total = self.theta_budget(net.compute_layers().len(), board, mode);
         let (cfgs, seed_out) = self.algorithm1_seeded(net, theta_total, tables, seed);
 
         let stages = cfgs
@@ -631,8 +752,8 @@ impl FlexAllocator {
             extra_cycles: 0,
             shared_array: false,
         };
-        self.raise_k(net, board, mode, &mut alloc);
-        Ok((alloc, seed_out))
+        let bram_clean = self.raise_k_tracked(net, board, mode, &mut alloc);
+        Ok((alloc, seed_out, AllocOutcome { bram_clean }))
     }
 }
 

@@ -162,6 +162,13 @@ fn specs() -> Vec<Spec> {
             "static-region overlay regime: shared superset datapath, \
              zero-reconfig switches (= --schedule overlay)",
         ),
+        flag(
+            "prune",
+            "branch-and-bound pruning of the split lattice (plan/search/replan): \
+             frontier and objective picks are identical to the exhaustive \
+             search, but dominated plans may be omitted from the full listing",
+        ),
+        flag("no-prune", "force the exhaustive lattice sweep (overrides --prune)"),
         opt("weights", "comma-separated tenant weights (plan)", None),
         opt("threads", "search worker threads, 0 = all cores", Some("0")),
         opt(
@@ -632,6 +639,13 @@ fn parse_schedule(args: &Args) -> flexipipe::Result<ScheduleMode> {
     ScheduleMode::parse(args.get_or("schedule", "spatial"))
 }
 
+/// Resolve the `--prune` / `--no-prune` pair. Pruning is off by default;
+/// `--no-prune` wins when both are given so scripts can append it to force
+/// the exhaustive sweep.
+fn prune_requested(args: &Args) -> bool {
+    args.has("prune") && !args.has("no-prune")
+}
+
 /// `search`: parallel boards × models × modes × budgets sweep with a
 /// Pareto frontier per (model, bits) workload. With `--tenants`, the sweep
 /// instead shards each board across every co-resident group.
@@ -778,6 +792,7 @@ fn cmd_search_shards(
         },
         sim_frames: args.get_parse("sim-frames", 0usize)?,
         threads: args.get_parse("threads", 0usize)?,
+        prune: prune_requested(args),
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -807,6 +822,14 @@ fn cmd_search_shards(
             fps.join(" | ")
         );
     }
+    let (nodes, pruned, calls) = points.iter().fold((0usize, 0usize, 0usize), |acc, p| {
+        let s = &p.result.stats;
+        (acc.0 + s.lattice_nodes, acc.1 + s.pruned_nodes, acc.2 + s.alloc_calls)
+    });
+    println!(
+        "search effort: {pruned}/{nodes} lattice nodes skipped, {calls} allocator runs{}",
+        if prune_requested(args) { " (pruning on)" } else { "" }
+    );
     println!("{} shard points in {:.2?}", points.len(), dt);
     if let Some(path) = args.get("json") {
         let arr = Value::Arr(points.iter().map(|p| p.to_json(shard_steps)).collect());
@@ -871,7 +894,8 @@ fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
         .schedule(schedule)
         .max_period(args.get_parse("max-period", 0.5f64)?)
         .interleave(args.get_parse("interleave", 1usize)?)
-        .validate(args.get_parse("sim-frames", 0usize)?);
+        .validate(args.get_parse("sim-frames", 0usize)?)
+        .prune(prune_requested(args));
     let t0 = std::time::Instant::now();
     let set = planner.plan(&workload)?;
     println!(
@@ -1037,7 +1061,8 @@ fn cmd_replan(args: &Args) -> flexipipe::Result<()> {
         .schedule(parse_schedule(args)?)
         .max_period(args.get_parse("max-period", 0.5f64)?)
         .interleave(args.get_parse("interleave", 1usize)?)
-        .validate(args.get_parse("sim-frames", 0usize)?);
+        .validate(args.get_parse("sim-frames", 0usize)?)
+        .prune(prune_requested(args));
     let outcome = planner.replan(&incumbent, &faults)?;
     println!("{}", outcome.to_json().to_pretty());
     if let Some(path) = args.get("json") {

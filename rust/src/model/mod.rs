@@ -198,14 +198,38 @@ impl Network {
             .collect()
     }
 
-    /// Structural validation: channel/spatial continuity between stages.
+    /// Structural validation: channel/spatial continuity between stages,
+    /// and rejection of zero-extent layers (any dimension of 0 rows, 0
+    /// columns, 0 channels, 0 features, a 0-size kernel or a 0 stride).
+    /// Downstream cycle models index `need_rows - 1` style tables, so a
+    /// degenerate stage must be a typed error here, not a panic there.
     pub fn validate(&self) -> crate::Result<()> {
         let (mut c, mut h, mut w) = self.input;
+        anyhow::ensure!(
+            c > 0 && h > 0 && w > 0,
+            "network {}: zero-extent input {}x{}x{}",
+            self.name,
+            c,
+            h,
+            w
+        );
         let mut flat: Option<usize> = None;
         for (i, l) in self.layers.iter().enumerate() {
             match l {
                 Layer::Conv(cv) => {
                     anyhow::ensure!(flat.is_none(), "layer {i}: conv after fc");
+                    anyhow::ensure!(
+                        cv.c > 0
+                            && cv.m > 0
+                            && cv.h > 0
+                            && cv.w > 0
+                            && cv.r > 0
+                            && cv.s > 0
+                            && cv.stride > 0
+                            && cv.groups > 0,
+                        "layer {i} ({}): zero-extent conv dimension",
+                        l.label()
+                    );
                     anyhow::ensure!(
                         cv.c == c,
                         "layer {i} ({}): expects C={} but previous stage produces {c}",
@@ -229,6 +253,10 @@ impl Network {
                 }
                 Layer::Pool(p) => {
                     anyhow::ensure!(flat.is_none(), "layer {i}: pool after fc");
+                    anyhow::ensure!(
+                        p.c > 0 && p.h > 0 && p.w > 0 && p.r > 0 && p.stride > 0,
+                        "layer {i} (pool): zero-extent pool dimension"
+                    );
                     anyhow::ensure!(p.c == c, "layer {i}: pool channels {} != {c}", p.c);
                     let eh = (h - p.r) / p.stride + 1;
                     let ew = (w - p.r) / p.stride + 1;
@@ -242,6 +270,10 @@ impl Network {
                     w = p.w;
                 }
                 Layer::Fc(f) => {
+                    anyhow::ensure!(
+                        f.n_in > 0 && f.n_out > 0,
+                        "layer {i} (fc): zero-extent fc dimension"
+                    );
                     let n = flat.unwrap_or(c * h * w);
                     anyhow::ensure!(
                         f.n_in == n,
@@ -353,6 +385,71 @@ mod tests {
         // floor() in the forward direction makes inversion minimal, not
         // unique: a 112-row stride-2 output needs at least 223 input rows.
         assert_eq!(c.in_h(), 223);
+    }
+
+    #[test]
+    fn validate_rejects_zero_extent_layers() {
+        // Zero output height: previously this panicked deep in the cycle
+        // model (`need_rows - 1` underflow); now it is a typed error here.
+        let net = Network {
+            name: "degenerate".into(),
+            input: (3, 8, 8),
+            layers: vec![Layer::Conv(ConvShape {
+                c: 3,
+                m: 8,
+                h: 0,
+                w: 8,
+                r: 3,
+                s: 3,
+                stride: 1,
+                pad: 1,
+                groups: 1,
+            })],
+        };
+        let err = net.validate().unwrap_err().to_string();
+        assert!(err.contains("zero-extent"), "got: {err}");
+
+        // Zero stride would divide by zero in the geometry check.
+        let net = Network {
+            name: "degenerate".into(),
+            input: (3, 8, 8),
+            layers: vec![Layer::Conv(ConvShape {
+                c: 3,
+                m: 8,
+                h: 8,
+                w: 8,
+                r: 3,
+                s: 3,
+                stride: 0,
+                pad: 1,
+                groups: 1,
+            })],
+        };
+        assert!(net.validate().unwrap_err().to_string().contains("zero-extent"));
+
+        // Zero-feature FC.
+        let net = Network {
+            name: "degenerate".into(),
+            input: (1, 2, 2),
+            layers: vec![fc(4, 0)],
+        };
+        assert!(net.validate().unwrap_err().to_string().contains("zero-extent"));
+
+        // Zero-extent input.
+        let net = Network {
+            name: "degenerate".into(),
+            input: (3, 0, 8),
+            layers: vec![],
+        };
+        assert!(net.validate().unwrap_err().to_string().contains("zero-extent"));
+
+        // Zero-window pool.
+        let net = Network {
+            name: "degenerate".into(),
+            input: (3, 8, 8),
+            layers: vec![pool(3, 8, 8, 0, 1)],
+        };
+        assert!(net.validate().unwrap_err().to_string().contains("zero-extent"));
     }
 
     #[test]

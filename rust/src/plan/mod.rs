@@ -299,6 +299,11 @@ pub struct Planner {
     /// only). Validated plans record their simulated fps in the plan
     /// artifact ([`TenantRecord::sim_fps`]).
     pub sim_frames: usize,
+    /// Branch-and-bound pruning inside each board's [`Sharder`] search
+    /// ([`Sharder::prune`]): frontier and objective-pick plan contents are
+    /// identical to the exhaustive search, but the exhaustive `plans`
+    /// listing may shrink. Default `false`.
+    pub prune: bool,
 }
 
 impl Planner {
@@ -320,6 +325,7 @@ impl Planner {
             calib_frames: 6,
             max_slice_frames: 4096,
             sim_frames: 0,
+            prune: false,
         }
     }
 
@@ -360,6 +366,13 @@ impl Planner {
         self
     }
 
+    /// Enable branch-and-bound pruning in each board's search (the CLI's
+    /// `--prune`).
+    pub fn prune(mut self, on: bool) -> Planner {
+        self.prune = on;
+        self
+    }
+
     /// Enumerate the workload's plan space on every board, keep the
     /// feasible (constraint-satisfying) plans, and reduce them to the
     /// merged Pareto frontier over per-tenant (fps ↑, worst-case
@@ -385,6 +398,7 @@ impl Planner {
                 max_period_s: self.max_period_s,
                 calib_frames: self.calib_frames,
                 max_slice_frames: self.max_slice_frames,
+                prune: self.prune,
                 ..Sharder::new(board.clone(), workload.to_tenants())
             };
             match sharder.search() {
@@ -419,6 +433,9 @@ impl Planner {
                 )
             })
             .collect();
+        // Same reduction as [`crate::shard::frontier`]: strict dominance
+        // plus exact-tie dedup (first representative wins) — crate-shared
+        // predicates keep the two in lockstep on a single board.
         let frontier: Vec<usize> = (0..plans.len())
             .filter(|&i| {
                 !(0..plans.len()).any(|j| {
@@ -429,7 +446,7 @@ impl Planner {
                             &objectives[i].0,
                             &objectives[i].1,
                         )
-                })
+                }) && !(0..i).any(|j| objectives[j] == objectives[i])
             })
             .collect();
         let argmax = |key: &dyn Fn(&DeploymentPlan) -> f64| -> usize {
@@ -578,6 +595,120 @@ impl ReplanOutcome {
     }
 }
 
+/// Instantiate one warm re-plan candidate and DES-check it against every
+/// tenant's fps floors and latency SLOs. On success the candidate's stage
+/// configs and planning records are filled in and `true` is returned;
+/// any failure (the pipeline no longer fits, or a bound is missed) leaves
+/// the candidate unusable and returns `false`. Shared by
+/// [`Planner::replan`]'s warm-start and delta-admission phases.
+fn warm_candidate_meets(cand: &mut DeploymentPlan, frames: usize) -> bool {
+    let Ok(allocs) = cand.instantiate() else {
+        return false;
+    };
+    let refs: Vec<&Allocation> = allocs.iter().collect();
+    let freq = cand.board.freq_hz;
+    let (fps, sojourn_s): (Vec<f64>, Vec<f64>) = match &cand.regime {
+        Regime::Temporal(info) if info.period_cycles > 0 => {
+            let ts = crate::sim::simulate_schedule(&refs, &info.schedule_slices(), true);
+            let soj = ts.worst_sojourn.iter().map(|&c| c as f64 / freq).collect();
+            (ts.tenant_fps, soj)
+        }
+        regime => {
+            let shares: Vec<f64> = match regime {
+                Regime::Spatial => cand.tenants.iter().map(|t| t.ddr_share).collect(),
+                Regime::Temporal(_) => vec![1.0],
+            };
+            let reports =
+                crate::sim::simulate_multi_provisioned(&refs, &shares, &cand.board, frames);
+            let fps = reports.iter().map(|r| r.fps).collect();
+            let soj = reports
+                .iter()
+                .map(|r| r.frame_done.first().copied().unwrap_or(r.makespan) as f64 / freq)
+                .collect();
+            (fps, soj)
+        }
+    };
+    let meets = cand.tenants.iter().enumerate().all(|(i, t)| {
+        fps_floor(&t.constraints).map_or(true, |floor| fps[i] >= floor)
+            && slo_ceiling(&t.constraints).map_or(true, |slo| sojourn_s[i] <= slo)
+    });
+    if !meets {
+        return false;
+    }
+    for (i, t) in cand.tenants.iter_mut().enumerate() {
+        let report = allocs[i].evaluate();
+        t.stages = allocs[i].stages.iter().map(|s| s.cfg).collect();
+        t.record = Some(TenantRecord {
+            fps: fps[i],
+            latency_s: sojourn_s[i],
+            dsps: report.dsps,
+            bram18: report.bram18,
+            sim_fps: None,
+        });
+    }
+    true
+}
+
+/// The incumbent's θ/α neighborhood for delta admission: every per-tenant
+/// `(dsp_parts, bram_parts)` assignment within ±1 quantum of the
+/// incumbent's on each coordinate, keeping every slice non-empty and each
+/// axis within the plan's `steps`. Ordered smallest total perturbation
+/// first (ties in generation order), with the unperturbed incumbent
+/// excluded — Phase 1 already checked it. Empty for many-tenant plans
+/// whose 9ⁿ combination space stops being a "neighborhood".
+fn quanta_neighborhood(plan: &DeploymentPlan) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let n = plan.tenants.len();
+    match 9usize.checked_pow(n as u32) {
+        Some(space) if space <= 1_000 => {}
+        _ => return Vec::new(),
+    }
+    let deltas = [0isize, -1, 1];
+    let mut out: Vec<(usize, (Vec<usize>, Vec<usize>))> = Vec::new();
+    // Base-3 counter over 2n digits: digit i perturbs tenant i's DSP
+    // quanta, digit n+i its BRAM quanta.
+    let mut digits = vec![0usize; 2 * n];
+    loop {
+        let mut dsp = Vec::with_capacity(n);
+        let mut bram = Vec::with_capacity(n);
+        let mut dist = 0usize;
+        let mut valid = true;
+        for (i, t) in plan.tenants.iter().enumerate() {
+            let dd = deltas[digits[i]];
+            let bd = deltas[digits[n + i]];
+            dist += dd.unsigned_abs() + bd.unsigned_abs();
+            let d = t.dsp_parts as isize + dd;
+            let b = t.bram_parts as isize + bd;
+            if d < 1 || b < 1 {
+                valid = false;
+                break;
+            }
+            dsp.push(d as usize);
+            bram.push(b as usize);
+        }
+        if valid
+            && dist > 0
+            && dsp.iter().sum::<usize>() <= plan.steps
+            && bram.iter().sum::<usize>() <= plan.steps
+        {
+            out.push((dist, (dsp, bram)));
+        }
+        // Increment the counter; done once it wraps.
+        let mut pos = 0;
+        loop {
+            if pos == 2 * n {
+                out.sort_by_key(|&(dist, _)| dist);
+                return out.into_iter().map(|(_, v)| v).collect();
+            }
+            digits[pos] += 1;
+            if digits[pos] < 3 {
+                break;
+            }
+            digits[pos] = 0;
+            pos += 1;
+        }
+    }
+}
+
 /// Tightest fps floor among a tenant's constraints.
 fn fps_floor(cs: &[Constraint]) -> Option<f64> {
     cs.iter()
@@ -605,7 +736,7 @@ impl Planner {
     /// tenant's `min_fps` floors and SLOs — or an explicit shed report
     /// for the tenants that had to be dropped (no silent drops, ever).
     ///
-    /// Two phases:
+    /// Three phases:
     ///
     /// 1. **Warm start.** The incumbent's θ/α vectors and schedule are
     ///    kept; only the board is swapped for the surviving one (recorded
@@ -613,6 +744,15 @@ impl Planner {
     ///    pipeline on the degraded fabric). If the warm-started plan still
     ///    instantiates and a DES run meets every floor and SLO, it is the
     ///    answer — no search, minimal disruption.
+    /// 1b. **Delta admission.** For spatial incumbents whose warm start
+    ///    missed a bound, the θ/α *neighborhood* is probed next: every
+    ///    per-tenant quanta assignment within ±1 of the incumbent's,
+    ///    smallest total perturbation first, each checked exactly like the
+    ///    warm start. Workload drift or a modest capacity loss is usually
+    ///    absorbed by shifting one quantum between tenants — the full
+    ///    search below only runs when the whole warm region is infeasible.
+    ///    (Temporal schedules re-derive admission from scratch anyway, so
+    ///    they go straight to the search.)
     /// 2. **Full re-plan with graceful degradation.** Otherwise the
     ///    planner searches the surviving board for the whole tenant set;
     ///    while the workload is infeasible, the lowest-weight tenant
@@ -642,53 +782,42 @@ impl Planner {
             t.stages.clear();
             t.record = None;
         }
-        if let Ok(allocs) = cand.instantiate() {
-            let refs: Vec<&Allocation> = allocs.iter().collect();
-            let freq = cand.board.freq_hz;
-            let (fps, sojourn_s): (Vec<f64>, Vec<f64>) = match &cand.regime {
-                Regime::Temporal(info) if info.period_cycles > 0 => {
-                    let ts = crate::sim::simulate_schedule(&refs, &info.schedule_slices(), true);
-                    let soj = ts.worst_sojourn.iter().map(|&c| c as f64 / freq).collect();
-                    (ts.tenant_fps, soj)
-                }
-                regime => {
-                    let shares: Vec<f64> = match regime {
-                        Regime::Spatial => cand.tenants.iter().map(|t| t.ddr_share).collect(),
-                        Regime::Temporal(_) => vec![1.0],
-                    };
-                    let reports =
-                        crate::sim::simulate_multi_provisioned(&refs, &shares, &cand.board, frames);
-                    let fps = reports.iter().map(|r| r.fps).collect();
-                    let soj = reports
-                        .iter()
-                        .map(|r| r.frame_done.first().copied().unwrap_or(r.makespan) as f64 / freq)
-                        .collect();
-                    (fps, soj)
-                }
-            };
-            let meets = cand.tenants.iter().enumerate().all(|(i, t)| {
-                fps_floor(&t.constraints).map_or(true, |floor| fps[i] >= floor)
-                    && slo_ceiling(&t.constraints).map_or(true, |slo| sojourn_s[i] <= slo)
+        if warm_candidate_meets(&mut cand, frames) {
+            let diff = incumbent.diff(&cand)?;
+            return Ok(ReplanOutcome {
+                plan: Some(cand),
+                shed: Vec::new(),
+                board,
+                diff: Some(diff),
             });
-            if meets {
+        }
+
+        // Phase 1b: delta admission — probe the incumbent's θ/α
+        // neighborhood (±1 quantum per tenant, smallest perturbation
+        // first) with the same instantiate-and-DES check before paying
+        // for the full search.
+        if matches!(incumbent.regime, Regime::Spatial) {
+            for (dsp, bram) in quanta_neighborhood(incumbent) {
+                let mut cand = incumbent.clone();
+                cand.board = board.clone();
                 for (i, t) in cand.tenants.iter_mut().enumerate() {
-                    let report = allocs[i].evaluate();
-                    t.stages = allocs[i].stages.iter().map(|s| s.cfg).collect();
-                    t.record = Some(TenantRecord {
-                        fps: fps[i],
-                        latency_s: sojourn_s[i],
-                        dsps: report.dsps,
-                        bram18: report.bram18,
-                        sim_fps: None,
+                    t.stages.clear();
+                    t.record = None;
+                    t.dsp_parts = dsp[i];
+                    t.bram_parts = bram[i];
+                    // β follows Θ, exactly as the spatial search
+                    // provisions it.
+                    t.ddr_share = dsp[i] as f64 / cand.steps as f64;
+                }
+                if warm_candidate_meets(&mut cand, frames) {
+                    let diff = incumbent.diff(&cand)?;
+                    return Ok(ReplanOutcome {
+                        plan: Some(cand),
+                        shed: Vec::new(),
+                        board,
+                        diff: Some(diff),
                     });
                 }
-                let diff = incumbent.diff(&cand)?;
-                return Ok(ReplanOutcome {
-                    plan: Some(cand),
-                    shed: Vec::new(),
-                    board,
-                    diff: Some(diff),
-                });
             }
         }
 
@@ -1522,6 +1651,77 @@ mod tests {
             for (a, b) in fps.iter().zip(&sp.fps) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn planner_prune_preserves_frontier_and_picks() {
+        // The facade-level mirror of the Sharder exactness property:
+        // pruning may shrink the exhaustive listing but the frontier and
+        // the objective picks keep their contents bit for bit.
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let mk = |prune: bool| {
+            Planner::on(zedboard()).steps(8).prune(prune).plan(&w).unwrap()
+        };
+        let full = mk(false);
+        let pruned = mk(true);
+        let key = |s: &PlanSet, i: usize| -> (Vec<u64>, Vec<u64>) {
+            (
+                s.plans[i].fps_vec().unwrap().iter().map(|f| f.to_bits()).collect(),
+                s.plans[i].latency_vec().unwrap().iter().map(|l| l.to_bits()).collect(),
+            )
+        };
+        let frontier_keys = |s: &PlanSet| -> Vec<(Vec<u64>, Vec<u64>)> {
+            s.frontier.iter().map(|&i| key(s, i)).collect()
+        };
+        assert_eq!(frontier_keys(&full), frontier_keys(&pruned));
+        assert_eq!(key(&full, full.best_min), key(&pruned, pruned.best_min));
+        assert_eq!(
+            key(&full, full.best_weighted),
+            key(&pruned, pruned.best_weighted)
+        );
+    }
+
+    #[test]
+    fn replan_neighborhood_is_bounded_sorted_and_valid() {
+        // The warm re-admission region around a spatial incumbent:
+        // every candidate is a valid quanta assignment, the incumbent
+        // itself is excluded, and candidates come nearest-first.
+        let w = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::tinycnn())
+            .tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let plan = set.plans[set.best_min].clone();
+        assert!(matches!(plan.regime, Regime::Spatial));
+        let hood = quanta_neighborhood(&plan);
+        assert!(!hood.is_empty());
+        assert!(hood.len() <= 80, "2 tenants → at most 9² − 1 candidates");
+
+        let dist = |dsp: &[usize], bram: &[usize]| -> usize {
+            plan.tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    t.dsp_parts.abs_diff(dsp[i]) + t.bram_parts.abs_diff(bram[i])
+                })
+                .sum()
+        };
+        let mut last = 0usize;
+        for (dsp, bram) in &hood {
+            assert!(dsp.iter().all(|&p| p >= 1) && bram.iter().all(|&p| p >= 1));
+            assert!(dsp.iter().sum::<usize>() <= plan.steps);
+            assert!(bram.iter().sum::<usize>() <= plan.steps);
+            let d = dist(dsp, bram);
+            assert!(d >= 1, "the unperturbed incumbent must be excluded");
+            assert!(d >= last, "candidates must be ordered nearest-first");
+            last = d;
+        }
+        // No duplicate candidates.
+        let mut seen = std::collections::HashSet::new();
+        for c in &hood {
+            assert!(seen.insert(c.clone()), "duplicate candidate {c:?}");
         }
     }
 

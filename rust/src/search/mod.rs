@@ -31,8 +31,8 @@ use crate::quant::QuantMode;
 use crate::shard::{self, ScheduleMode, Sharder, Tenant};
 use crate::sim::{self, SimReport};
 use crate::util::json::{self, Value};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 /// One evaluated point of the design space.
 #[derive(Debug, Clone)]
@@ -137,6 +137,12 @@ pub struct DesignSpace {
     /// carrying the settled Algorithm 1 θ vector forward (flex arch only;
     /// regression-tested bit-identical to cold starts). Default on.
     pub warm_start: bool,
+    /// Branch-and-bound pruning inside each shard job's [`Sharder`]
+    /// search (`--prune`): skip quantum-lattice subtrees whose admissible
+    /// fps upper bound is dominated by the incumbent frontier. Exact —
+    /// the frontier and objective picks are pinned bit-identical to the
+    /// exhaustive search. Default off.
+    pub prune: bool,
 }
 
 impl Default for DesignSpace {
@@ -157,8 +163,20 @@ impl Default for DesignSpace {
             slos: Vec::new(),
             min_fps: Vec::new(),
             warm_start: true,
+            prune: false,
         }
     }
+}
+
+/// Work-saved statistics of one [`DesignSpace::sweep`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Design points the sweep covers (the product of its axes).
+    pub points: usize,
+    /// Points reused verbatim from their budget-chain predecessor because
+    /// Algorithm 1's settled θ vector plateaued — no figures, Algorithm 2,
+    /// evaluation, power model or DES ran for them.
+    pub plateau_reused: usize,
 }
 
 /// One enumerated job (indices into the `DesignSpace` vectors).
@@ -352,27 +370,70 @@ impl DesignSpace {
     /// `warm_start: false`, single-budget chains, non-flex architectures)
     /// fans out per job.
     pub fn sweep(&self) -> crate::Result<Vec<DesignPoint>> {
+        Ok(self.sweep_counted()?.0)
+    }
+
+    /// [`DesignSpace::sweep`] plus its [`SweepStats`]: how many points the
+    /// θ-plateau skip served from their chain predecessor. Along a budget
+    /// chain only `board.dsps` varies, so once Algorithm 1's settled θ
+    /// vector stops growing every downstream quantity is unchanged — the
+    /// chain runs [`FlexAllocator::settle_thetas`] (cheap) first and
+    /// reuses the previous [`DesignPoint`] verbatim on a plateau, patching
+    /// only `dsps_avail`. Bit-identical to the unskipped sweep
+    /// (regression-tested).
+    pub fn sweep_counted(&self) -> crate::Result<(Vec<DesignPoint>, SweepStats)> {
         anyhow::ensure!(!self.is_empty(), "empty design space (no boards or models?)");
         // Shared precomputation: decomposition staircases once per model.
         let tables: Vec<NetTables> = self.models.iter().map(NetTables::build).collect();
         let jobs = self.jobs();
         let chain_len = self.dsp_budgets.len().max(1);
         let units = self.sweep_units(&jobs);
+        let plateaus = AtomicUsize::new(0);
         let results = fan_out(units.len(), self.worker_count(units.len()), |u| match units[u] {
             Unit::Job(i) => Ok(vec![self.run_job(&jobs[i], &tables, None)?.0]),
             Unit::Chain(c) => {
-                let mut out = Vec::with_capacity(chain_len);
+                let mut out: Vec<DesignPoint> = Vec::with_capacity(chain_len);
                 let mut seed: Option<ThetaSeed> = None;
                 for k in 0..chain_len {
-                    let (point, next) =
-                        self.run_job(&jobs[c * chain_len + k], &tables, seed.as_ref())?;
+                    let job = &jobs[c * chain_len + k];
+                    // Plateau skip: settle θ cheaply first; when the
+                    // vector equals the predecessor's, the rest of the
+                    // job is a pure function of θ (only the DSP budget
+                    // varies along a chain) — reuse the previous point.
+                    if let (Some(prev), Some(s)) = (out.last(), seed.as_ref()) {
+                        let net = &self.models[job.model];
+                        let mut board = self.boards[job.board].clone();
+                        if let Some(d) = job.dsps {
+                            board.dsps = d;
+                        }
+                        let settled = FlexAllocator::default().settle_thetas(
+                            net,
+                            &board,
+                            job.mode,
+                            &tables[job.model],
+                            Some(s),
+                        )?;
+                        if settled.theta == s.theta {
+                            let mut point = prev.clone();
+                            point.dsps_avail = board.dsps;
+                            out.push(point);
+                            seed = Some(settled);
+                            plateaus.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                    let (point, next) = self.run_job(job, &tables, seed.as_ref())?;
                     seed = next;
                     out.push(point);
                 }
                 Ok(out)
             }
         })?;
-        Ok(results.into_iter().flatten().collect())
+        let stats = SweepStats {
+            points: jobs.len(),
+            plateau_reused: plateaus.load(Ordering::Relaxed),
+        };
+        Ok((results.into_iter().flatten().collect(), stats))
     }
 
     /// Evaluate every shard job of the sweep: boards × tenant groups ×
@@ -445,6 +506,7 @@ impl DesignSpace {
                 schedule: self.schedule,
                 max_period_s: self.max_period_s,
                 max_interleave: self.max_interleave,
+                prune: self.prune,
                 ..Sharder::new(board.clone(), tenants)
             };
             sharder.search().map(|result| ShardPoint {
@@ -461,29 +523,75 @@ impl DesignSpace {
 /// an atomic cursor hands out job indices, results land in per-index
 /// slots, so output order is the enumeration order regardless of thread
 /// count or scheduling.
+///
+/// Failure semantics: the first job to fail (or panic — panics are caught
+/// and mapped to typed errors) raises an atomic cancellation flag, so
+/// workers stop claiming new jobs instead of running the rest of the
+/// sweep to completion. Because the cursor hands indices out in ascending
+/// order and every *claimed* job fills its slot (panics included),
+/// unfilled slots form a suffix above the failure — the join path scans
+/// slots in order and deterministically surfaces the lowest-index error.
+/// Slot mutexes are read through [`PoisonError::into_inner`], so a
+/// panicking worker can never turn into a second, unrelated panic at
+/// join time.
+///
+/// [`PoisonError::into_inner`]: std::sync::PoisonError::into_inner
 fn fan_out<T: Send>(
     n_jobs: usize,
     workers: usize,
     run: impl Fn(usize) -> crate::Result<T> + Sync,
 ) -> crate::Result<Vec<T>> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
     let cursor = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
     let slots: Vec<Mutex<Option<crate::Result<T>>>> =
         (0..n_jobs).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break; // an earlier job failed: cancel outstanding work
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n_jobs {
                     break;
                 }
-                *slots[i].lock().unwrap() = Some(run(i));
+                let result = catch_unwind(AssertUnwindSafe(|| run(i))).unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!("sweep job {i} panicked: {}", panic_message(&p)))
+                });
+                if result.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(result);
             });
         }
     });
-    slots
-        .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
-        .collect()
+    let mut out = Vec::with_capacity(n_jobs);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap_or_else(PoisonError::into_inner) {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            // Cancelled by a lower-index failure — but that failure's slot
+            // precedes this one, so this arm is unreachable unless the
+            // cancellation flag itself raced ahead of the error landing;
+            // surface a typed error rather than panicking either way.
+            None => anyhow::bail!("sweep job {i} was cancelled by an earlier failure"),
+        }
+    }
+    Ok(out)
+}
+
+/// Best-effort text of a caught panic payload (the `&str`/`String` cases
+/// `panic!` produces; anything else gets a placeholder).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Dominance under (maximize fps, minimize power, minimize DSPs used).
@@ -625,6 +733,79 @@ mod tests {
         for (a, b) in warm.iter().zip(&parallel) {
             assert_eq!(a.report.fps.to_bits(), b.report.fps.to_bits());
         }
+    }
+
+    #[test]
+    fn fan_out_surfaces_typed_errors_and_cancels() {
+        // Error path: the failing job's error surfaces (lowest index wins
+        // deterministically) and outstanding jobs are cancelled instead of
+        // running the whole sweep to completion.
+        let ran = AtomicUsize::new(0);
+        let err = fan_out(256, 2, |i| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if i == 3 {
+                anyhow::bail!("job {i} exploded");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            Ok(i)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("exploded"), "got: {err}");
+        assert!(
+            ran.load(Ordering::Relaxed) < 256,
+            "first failure must cancel outstanding jobs"
+        );
+
+        // Panic path: a panicking worker becomes a typed error on the
+        // caller — no poisoned-mutex panic at join time.
+        let err = fan_out(8, 2, |i: usize| {
+            if i == 0 {
+                panic!("worker panicked on purpose");
+            }
+            Ok(i)
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("panicked") && msg.contains("on purpose"), "got: {msg}");
+
+        // Success path: deterministic enumeration order.
+        let ok: Vec<usize> = fan_out(5, 3, Ok).unwrap();
+        assert_eq!(ok, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn plateau_skip_is_bit_identical_and_engages() {
+        // A dense budget chain over vgg16 has long θ plateaus (a +1 DSP
+        // budget rarely moves the settled vector). The warm chain's
+        // plateau skip must engage and stay bit-identical to the cold
+        // (unskipped, per-job) sweep.
+        let mk = |warm: bool| DesignSpace {
+            boards: vec![zc706()],
+            models: vec![zoo::vgg16()],
+            modes: vec![QuantMode::W16A16],
+            dsp_budgets: (880..=900).map(Some).collect(),
+            warm_start: warm,
+            threads: 1,
+            ..Default::default()
+        };
+        let (warm, stats) = mk(true).sweep_counted().unwrap();
+        let cold = mk(false).sweep().unwrap();
+        assert_eq!(warm.len(), cold.len());
+        for (a, b) in warm.iter().zip(&cold) {
+            let ctx = format!("dsps={}", b.dsps_avail);
+            assert_eq!(a.dsps_avail, b.dsps_avail, "{ctx}");
+            assert_eq!(a.report.fps.to_bits(), b.report.fps.to_bits(), "{ctx}");
+            assert_eq!(a.report.t_frame_cycles, b.report.t_frame_cycles, "{ctx}");
+            assert_eq!(a.report.dsps, b.report.dsps, "{ctx}");
+            assert_eq!(a.report.bram18, b.report.bram18, "{ctx}");
+            assert_eq!(a.report.stage_cycles, b.report.stage_cycles, "{ctx}");
+            assert_eq!(a.max_k, b.max_k, "{ctx}");
+        }
+        assert_eq!(stats.points, 21);
+        assert_eq!(
+            stats.plateau_reused, 17,
+            "θ plateaus on the dense 880..=900 chain must be skipped"
+        );
     }
 
     #[test]

@@ -63,9 +63,10 @@ pub mod schedule;
 pub use schedule::{drain_credit, ReconfigModel, SliceSpec, TemporalInfo};
 
 use crate::alloc::flex::{FlexAllocator, NetTables};
-use crate::alloc::{AllocReport, Allocation};
+use crate::alloc::{AllocReport, Allocation, TOP_BRAM18};
 use crate::board::Board;
-use crate::model::Network;
+use crate::engine::{self, EngineConfig};
+use crate::model::{Layer, Network};
 use crate::quant::QuantMode;
 use crate::sim::{self, SimReport};
 use crate::util::json::{num, obj, Value};
@@ -403,6 +404,38 @@ pub struct Sharder {
     /// depth a tenant needs and the DES validation cost for very fast
     /// models). Default 4096.
     pub max_slice_frames: usize,
+    /// Branch-and-bound pruning (the CLI's `--prune`). When set, whole
+    /// DSP-composition subtrees whose admissible per-tenant bound vector
+    /// (fps upper bound from the staircase tables, latency lower bound
+    /// from the stage-cycle sums) already violates a floor/SLO or is
+    /// weakly dominated by an incumbent frontier plan are skipped without
+    /// assembling their plans. The frontier, `best_min`, and
+    /// `best_weighted` plan *contents* are provably identical to the
+    /// exhaustive search (property-tested); only the exhaustive `plans`
+    /// listing may shrink, so the default is `false`.
+    pub prune: bool,
+}
+
+/// Search-effort counters for one [`Sharder::search`] run: how much of
+/// the quantum lattice was enumerated, and how much of it the exact cell
+/// rules and (with [`Sharder::prune`]) the branch-and-bound assembly
+/// bound skipped without a full evaluation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Quantum-lattice nodes visited: allocator cells (tenant × DSP parts
+    /// × BRAM parts) plus plan assemblies (DSP × BRAM compositions).
+    pub lattice_nodes: usize,
+    /// Lattice nodes skipped without a full evaluation — the always-on
+    /// exact cell rules (zero-resource slices, the min-DSP / min-BRAM
+    /// admissible bounds, the α-saturation reuse cache) plus, with
+    /// pruning on, the bound-skipped assemblies.
+    pub pruned_nodes: usize,
+    /// Assemblies skipped by the branch-and-bound bound specifically
+    /// (always 0 when [`Sharder::prune`] is off) — the counter the CLI
+    /// prints to show `--prune` engaged.
+    pub bound_skipped: usize,
+    /// Full allocator runs actually performed (the dominant search cost).
+    pub alloc_calls: usize,
 }
 
 /// Search output: every feasible plan plus the interesting subsets.
@@ -413,12 +446,16 @@ pub struct ShardResult {
     /// temporal plans follow, quantum descending).
     pub plans: Vec<ShardPlan>,
     /// Indices of the non-dominated plans under the merged per-tenant
-    /// (fps ↑, worst-case latency ↓) objective ([`plan_dominates`]).
+    /// (fps ↑, worst-case latency ↓) objective ([`plan_dominates`]),
+    /// exact-tie deduplicated (first representative wins — see
+    /// [`frontier`]).
     pub frontier: Vec<usize>,
     /// Index of the plan maximizing `min_fps` (first wins ties).
     pub best_min: usize,
     /// Index of the plan maximizing `weighted_fps` (first wins ties).
     pub best_weighted: usize,
+    /// Lattice/pruning/allocator-call counters for this search.
+    pub stats: ShardStats,
 }
 
 impl Sharder {
@@ -436,6 +473,7 @@ impl Sharder {
             max_period_s: 0.5,
             calib_frames: 6,
             max_slice_frames: 4096,
+            prune: false,
         }
     }
 
@@ -501,9 +539,15 @@ impl Sharder {
         // warm-start every allocator run of either regime.
         let tables: Vec<NetTables> = self.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
 
+        // Every regime appends into one shared plan list and offers each
+        // survivor to one shared incremental frontier ([`FrontierMerge`]),
+        // so the cross-regime reduction happens as plans are born — the
+        // incumbents double as the branch-and-bound pruning reference.
         let mut plans: Vec<ShardPlan> = Vec::new();
+        let mut merge = FrontierMerge::default();
+        let mut stats = ShardStats::default();
         if matches!(self.schedule, ScheduleMode::Spatial | ScheduleMode::Auto) {
-            plans.extend(self.spatial_plans(&tables)?);
+            self.spatial_plans(&tables, &mut plans, &mut merge, &mut stats)?;
         }
         if self.schedule != ScheduleMode::Spatial {
             // One full-board allocation + DES calibration per tenant,
@@ -511,10 +555,10 @@ impl Sharder {
             // some tenant's pipeline doesn't fit the board even alone).
             if let Some(solos) = schedule::solo_tenants(self, &tables)? {
                 if matches!(self.schedule, ScheduleMode::Temporal | ScheduleMode::Auto) {
-                    plans.extend(schedule::temporal_plans(self, &solos, false)?);
+                    schedule::temporal_plans(self, &solos, false, &mut plans, &mut merge, &mut stats)?;
                 }
                 if matches!(self.schedule, ScheduleMode::Overlay | ScheduleMode::Auto) {
-                    plans.extend(schedule::temporal_plans(self, &solos, true)?);
+                    schedule::temporal_plans(self, &solos, true, &mut plans, &mut merge, &mut stats)?;
                 }
             }
         }
@@ -531,7 +575,12 @@ impl Sharder {
             self.steps
         );
 
-        let frontier = frontier(&plans);
+        let frontier = merge.into_indices();
+        debug_assert_eq!(
+            frontier,
+            crate::shard::frontier(&plans),
+            "incremental frontier merge diverged from the reference reduction"
+        );
         let best_min = argmax(&plans, |p| p.min_fps);
         let best_weighted = argmax(&plans, |p| p.weighted_fps);
 
@@ -540,6 +589,7 @@ impl Sharder {
             frontier,
             best_min,
             best_weighted,
+            stats,
         };
         if self.sim_frames > 0 {
             for idx in result.frontier.clone() {
@@ -562,9 +612,43 @@ impl Sharder {
         confirm_plan(&refs, &shares, &self.board, &plan.regime, self.sim_frames)
     }
 
-    /// Enumerate the spatial split space and keep the feasible plans (the
-    /// PR-2 search, factored out of [`Sharder::search`]).
-    fn spatial_plans(&self, tables: &[NetTables]) -> crate::Result<Vec<ShardPlan>> {
+    /// Enumerate the spatial split space and append the feasible plans
+    /// (the PR-2 search, factored out of [`Sharder::search`]), offering
+    /// each survivor to the shared incremental frontier.
+    ///
+    /// Four **exact** cell rules are always on — they can never change
+    /// the cell table, only skip allocator runs whose outcome is already
+    /// known (each is individually mirror-verified cell-by-cell):
+    ///
+    /// - **Rule 0** (zero slice): a slice with 0 DSPs or 0 BRAM36 cannot
+    ///   host a pipeline.
+    /// - **Rule 1** (min-DSP bound): a pipeline needs at least
+    ///   `Σ ceil(granule_l / pack)` DSPs (one minimal `(C',M')` engine per
+    ///   compute stage); a DSP slice below that is infeasible at *every*
+    ///   BRAM split, so the whole `p` row is skipped.
+    /// - **Rule 1b** (min-BRAM bound): every stage's BRAM18 cost is
+    ///   minimized at `cp = mp = k = 1` with a minimal producer (activation,
+    ///   weight, and psum words all grow monotonically in the geometry),
+    ///   so a BRAM slice below `TOP_BRAM18 + Σ stage_bram18(minimal)` is
+    ///   infeasible regardless of what Algorithm 1 picks.
+    /// - **Rule 3** (α-saturation): the allocator's only α-dependent
+    ///   decisions are `raise_k`'s BRAM rejections
+    ///   ([`crate::alloc::flex::AllocOutcome`]'s `bram_clean`). A run that never hit the BRAM wall at `(p, q)` is
+    ///   bit-identical at every `q' > q` (Θ and the β share depend only on
+    ///   `p`), so the first clean run per `(tenant, p)` is reused for all
+    ///   larger BRAM slices — only the per-`q` fit check is re-evaluated.
+    ///
+    /// With [`Sharder::prune`] set, the **branch-and-bound** assembly rule
+    /// additionally skips whole DSP-composition subtrees whose admissible
+    /// bound vector is floor/SLO-infeasible or weakly dominated by an
+    /// incumbent frontier plan (see [`Sharder::assembly_bound_prunes`]).
+    fn spatial_plans(
+        &self,
+        tables: &[NetTables],
+        plans: &mut Vec<ShardPlan>,
+        merge: &mut FrontierMerge,
+        stats: &mut ShardStats,
+    ) -> crate::Result<()> {
         let n = self.tenants.len();
         // The plan space is C(steps−1, n−1)² and the frontier reduction is
         // O(plans²): bound it so a 4-tenant run at fine granularity fails
@@ -592,21 +676,53 @@ impl Sharder {
         } else {
             (1..=max_parts).collect()
         };
+        let min_dsps: Vec<usize> =
+            self.tenants.iter().map(|t| min_dsps_bound(&t.net, t.mode)).collect();
+        let min_bram: Vec<usize> =
+            self.tenants.iter().map(|t| min_bram_bound(&t.net, t.mode)).collect();
+        stats.lattice_nodes += n * parts_range.len() * parts_range.len();
         let mut cells: Vec<Vec<Option<TenantAlloc>>> = Vec::with_capacity(n);
         for (i, t) in self.tenants.iter().enumerate() {
             let mut row: Vec<Option<TenantAlloc>> = vec![None; max_parts * max_parts];
             for &p in &parts_range {
+                // Rule 1: the DSP share depends only on p — below the
+                // min-DSP bound the whole row is infeasible.
+                if min_dsps[i] > sub_board(&self.board, p, 1, self.steps).dsps {
+                    stats.pruned_nodes += parts_range.len();
+                    continue;
+                }
+                // Rule 3 cache: the first clean allocator run at this
+                // (tenant, p), reused verbatim for every larger q.
+                let mut cached: Option<(Arc<Allocation>, Arc<AllocReport>)> = None;
                 for &q in &parts_range {
                     let sub = sub_board(&self.board, p, q, self.steps);
+                    // Rule 0: empty slice.
                     if sub.dsps == 0 || sub.bram36 == 0 {
+                        stats.pruned_nodes += 1;
                         continue;
                     }
-                    let Ok(alloc) =
-                        FlexAllocator::default().allocate_with(&t.net, &sub, t.mode, &tables[i])
-                    else {
+                    // Rule 1b: below the minimal-geometry BRAM footprint.
+                    if min_bram[i] > sub.bram18() {
+                        stats.pruned_nodes += 1;
                         continue;
+                    }
+                    let (alloc, report) = if let Some((a, r)) = &cached {
+                        stats.pruned_nodes += 1; // Rule 3 reuse
+                        (Arc::clone(a), Arc::clone(r))
+                    } else {
+                        stats.alloc_calls += 1;
+                        let Ok((alloc, _, outcome)) = FlexAllocator::default()
+                            .allocate_outcome(&t.net, &sub, t.mode, &tables[i], None)
+                        else {
+                            continue;
+                        };
+                        let report = alloc.evaluate();
+                        let pair = (Arc::new(alloc), Arc::new(report));
+                        if outcome.bram_clean {
+                            cached = Some((Arc::clone(&pair.0), Arc::clone(&pair.1)));
+                        }
+                        pair
                     };
-                    let report = alloc.evaluate();
                     // Feasible iff the pipeline fits the slice's Θ and α
                     // (the paper's partitioned budgets; LUT/FF are reported
                     // but interconnect-dominated, not partition-enforced).
@@ -616,8 +732,8 @@ impl Sharder {
                     row[slot(p, q)] = Some(TenantAlloc {
                         dsp_parts: p,
                         bram_parts: q,
-                        alloc: Arc::new(alloc),
-                        report: Arc::new(report),
+                        alloc,
+                        report,
                     });
                 }
             }
@@ -628,8 +744,15 @@ impl Sharder {
         // tenant cells all exist is a feasible plan.
         let dsp_splits = compositions(self.steps, n);
         let bram_splits = compositions(self.steps, n);
-        let mut plans: Vec<ShardPlan> = Vec::new();
+        stats.lattice_nodes += dsp_splits.len() * bram_splits.len();
         for dsp in &dsp_splits {
+            // Branch-and-bound (opt-in): one admissible bound evaluation
+            // against the incumbent frontier retires the whole BRAM axis.
+            if self.prune && self.assembly_bound_prunes(dsp, tables, plans, merge) {
+                stats.pruned_nodes += bram_splits.len();
+                stats.bound_skipped += bram_splits.len();
+                continue;
+            }
             for bram in &bram_splits {
                 let mut slices = Vec::with_capacity(n);
                 for i in 0..n {
@@ -688,10 +811,103 @@ impl Sharder {
                     sim: None,
                     regime: Regime::Spatial,
                 });
+                merge.offer(plans, plans.len() - 1);
             }
         }
-        Ok(plans)
+        Ok(())
     }
+
+    /// The branch-and-bound test behind [`Sharder::prune`]: an admissible
+    /// per-tenant *(fps upper bound, latency lower bound)* vector for
+    /// every plan in the DSP composition `dsp`'s subtree, from the
+    /// staircase tables alone — no allocator run.
+    ///
+    /// Admissibility: `cycles_at(θ)` is non-increasing in θ and a slice's
+    /// Θ budget depends only on its DSP parts, so the bottleneck stage at
+    /// the *full* per-tenant budget lower-bounds every real plan's frame
+    /// interval (K-raising only adds cycles per weight reload, the DDR
+    /// cap only lowers fps, and BRAM never raises it). Likewise the
+    /// latency `1/fps + Σ stage_cycles / f` is bounded below by the
+    /// optimistic interval plus the per-stage staircase minima (pool
+    /// stages contribute their fixed `h·w` row scans). A subtree whose
+    /// bound vector already violates a tenant's fps floor or latency SLO
+    /// contains no admissible plan; one whose bound vector is weakly
+    /// dominated by an incumbent frontier plan contains only plans the
+    /// tie-deduplicating frontier would reject — either way the frontier
+    /// and the scalarized picks are unchanged (property-tested).
+    fn assembly_bound_prunes(
+        &self,
+        dsp: &[usize],
+        tables: &[NetTables],
+        plans: &[ShardPlan],
+        merge: &FrontierMerge,
+    ) -> bool {
+        let n = self.tenants.len();
+        let mut fps_ub = Vec::with_capacity(n);
+        let mut lat_lb = Vec::with_capacity(n);
+        for (i, t) in self.tenants.iter().enumerate() {
+            // BRAM parts never enter the bound — any q gives the same Θ/β.
+            let sub = sub_board(&self.board, dsp[i], dsp[i], self.steps);
+            let tt = FlexAllocator::default()
+                .theta_budget(tables[i].n_layers(), &sub, t.mode)
+                .max(1);
+            let ub = self.board.freq_hz / tables[i].bottleneck_cycles_lb(tt).max(1) as f64;
+            let pool_rows: u64 = t
+                .net
+                .layers
+                .iter()
+                .map(|l| match l {
+                    Layer::Pool(p) => (p.h * p.w) as u64,
+                    _ => 0,
+                })
+                .sum();
+            let lb = 1.0 / ub
+                + (tables[i].stage_cycle_sum_lb(tt) + pool_rows) as f64 / self.board.freq_hz;
+            if t.min_fps.is_some_and(|floor| ub < floor) {
+                return true;
+            }
+            if t.slo_s.is_some_and(|slo| lb > slo) {
+                return true;
+            }
+            fps_ub.push(ub);
+            lat_lb.push(lb);
+        }
+        merge
+            .members()
+            .iter()
+            .any(|&k| vec_weakly_dominates(&plans[k].fps, &plans[k].latency_s, &fps_ub, &lat_lb))
+    }
+}
+
+/// Fewest DSPs any allocation of `net` can use: one minimal engine per
+/// compute stage (`ceil(granule / pack)` — a conv stage's multiplier count
+/// is a multiple of `r·s`, an FC stage's of 1). Exact lower bound behind
+/// spatial cell Rule 1.
+fn min_dsps_bound(net: &Network, mode: QuantMode) -> usize {
+    net.compute_layers()
+        .iter()
+        .map(|&i| {
+            let granule = match &net.layers[i] {
+                Layer::Conv(cv) => cv.r * cv.s,
+                _ => 1,
+            };
+            engine::div_ceil(granule, mode.mults_per_dsp())
+        })
+        .sum()
+}
+
+/// Fewest BRAM18s any allocation of `net` can use: the top-level streaming
+/// buffers plus every stage at minimal geometry (`cp = mp = k = 1`,
+/// minimal producer) — each buffer's word count grows monotonically in all
+/// of those knobs. Exact lower bound behind spatial cell Rule 1b.
+fn min_bram_bound(net: &Network, mode: QuantMode) -> usize {
+    let minimal = EngineConfig { cp: 1, mp: 1, k: 1 };
+    TOP_BRAM18
+        + net
+            .layers
+            .iter()
+            .map(|l| engine::stage_bram18(l, &minimal, 1, 1, mode))
+            .sum::<usize>()
 }
 
 /// Regime-matched DES confirmation of one plan's per-tenant rates — the
@@ -819,12 +1035,78 @@ pub(crate) fn vec_dominates(a_fps: &[f64], a_lat: &[f64], b_fps: &[f64], b_lat: 
             || a_lat.iter().zip(b_lat).any(|(x, y)| x < y))
 }
 
+/// Weak dominance: `a` is at least as good as `b` on *every* coordinate,
+/// ties allowed everywhere — so an exact objective tie weakly dominates
+/// in both directions. The predicate behind [`FrontierMerge`]'s reject
+/// and evict steps (rejecting on weak dominance is what deduplicates
+/// exact ties: the earlier representative is already a member).
+pub(crate) fn vec_weakly_dominates(
+    a_fps: &[f64],
+    a_lat: &[f64],
+    b_fps: &[f64],
+    b_lat: &[f64],
+) -> bool {
+    a_fps.iter().zip(b_fps).all(|(x, y)| x >= y) && a_lat.iter().zip(b_lat).all(|(x, y)| x <= y)
+}
+
+/// Incremental Pareto-frontier accumulator over per-tenant
+/// *(fps ↑, worst-case latency ↓)* vectors, replacing the old
+/// collect-then-filter reduction. Offer every plan as it is born:
+/// a candidate weakly dominated by an incumbent is rejected (this
+/// subsumes exact-tie deduplication — the first representative wins),
+/// otherwise it evicts every incumbent it weakly dominates and joins.
+/// Offering plans in enumeration order keeps the member list sorted and
+/// makes the result identical to the reference [`frontier`] reduction
+/// (debug-asserted in [`Sharder::search`], property-tested in the
+/// suite). The live incumbent set doubles as the branch-and-bound
+/// pruning reference: a subtree bound weakly dominated by a member can
+/// only produce rejected plans.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct FrontierMerge {
+    members: Vec<usize>,
+}
+
+impl FrontierMerge {
+    /// Offer `plans[idx]`; returns whether it was admitted.
+    pub(crate) fn offer(&mut self, plans: &[ShardPlan], idx: usize) -> bool {
+        let p = &plans[idx];
+        if self.members.iter().any(|&m| {
+            vec_weakly_dominates(&plans[m].fps, &plans[m].latency_s, &p.fps, &p.latency_s)
+        }) {
+            return false;
+        }
+        self.members.retain(|&m| {
+            !vec_weakly_dominates(&p.fps, &p.latency_s, &plans[m].fps, &plans[m].latency_s)
+        });
+        self.members.push(idx);
+        true
+    }
+
+    /// Current incumbent plan indices, ascending.
+    pub(crate) fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Consume the accumulator into the final frontier index list.
+    pub(crate) fn into_indices(self) -> Vec<usize> {
+        self.members
+    }
+}
+
 /// Indices of the non-dominated plans under [`plan_dominates`] — the
-/// merged (fps ↑, worst-case latency ↓) Pareto frontier.
+/// merged (fps ↑, worst-case latency ↓) Pareto frontier, with exact
+/// objective ties deduplicated (only the first of a tie group survives;
+/// duplicate plans told no one anything the first didn't). This is the
+/// O(n²) *reference* reduction; [`Sharder::search`] builds the same set
+/// incrementally with [`FrontierMerge`] and debug-asserts the two agree.
 pub fn frontier(plans: &[ShardPlan]) -> Vec<usize> {
+    let ties = |a: &ShardPlan, b: &ShardPlan| {
+        a.fps == b.fps && a.latency_s == b.latency_s
+    };
     (0..plans.len())
         .filter(|&i| {
             !(0..plans.len()).any(|j| j != i && plan_dominates(&plans[j], &plans[i]))
+                && !(0..i).any(|j| ties(&plans[j], &plans[i]))
         })
         .collect()
 }
@@ -948,6 +1230,15 @@ pub fn result_to_json(r: &ShardResult, steps: usize) -> Value {
     obj(vec![
         ("steps", num(steps)),
         ("feasible_plans", num(r.plans.len())),
+        (
+            "search",
+            obj(vec![
+                ("lattice_nodes", num(r.stats.lattice_nodes)),
+                ("pruned_nodes", num(r.stats.pruned_nodes)),
+                ("bound_skipped", num(r.stats.bound_skipped)),
+                ("alloc_calls", num(r.stats.alloc_calls)),
+            ]),
+        ),
         (
             "frontier",
             Value::Arr(r.frontier.iter().map(|&i| plan_to_json(&r.plans[i])).collect()),
@@ -1250,6 +1541,166 @@ mod tests {
             let Regime::Temporal(info) = &p.regime else { unreachable!() };
             assert!(info.overlay);
             assert!(info.slices.iter().all(|s| s.reconfig_cycles == 0));
+        }
+    }
+
+    /// Bitwise (fps, latency) signature of the indexed plans — the
+    /// content-identity currency for pruned-vs-exhaustive comparisons
+    /// (plan *indices* may shift when pruning shrinks the listing).
+    fn plan_keys(r: &ShardResult, idx: &[usize]) -> Vec<(Vec<u64>, Vec<u64>)> {
+        idx.iter()
+            .map(|&i| {
+                (
+                    r.plans[i].fps.iter().map(|f| f.to_bits()).collect(),
+                    r.plans[i].latency_s.iter().map(|l| l.to_bits()).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prune_is_exact_and_engages_on_the_paper_workload() {
+        // The tentpole workload: vgg16 + alexnet on a ZC706 at 16 bit,
+        // 1/16 quanta. All counts are pinned against an independent
+        // Python mirror of the staircase sweep.
+        let mk = |prune: bool| Sharder {
+            prune,
+            ..Sharder::new(
+                zc706(),
+                vec![
+                    Tenant::new(zoo::vgg16(), QuantMode::W16A16),
+                    Tenant::new(zoo::alexnet(), QuantMode::W16A16),
+                ],
+            )
+        };
+        let full = mk(false).search().unwrap();
+        let pruned = mk(true).search().unwrap();
+
+        assert_eq!(full.plans.len(), 29);
+        assert_eq!(full.frontier.len(), 11);
+        // 2 tenants × 15² staircase cells + 15² assemblies.
+        assert_eq!(full.stats.lattice_nodes, 675);
+        // Monotone staircase reuse keeps the allocator-call count far
+        // below the 450 cells.
+        assert_eq!(full.stats.alloc_calls, 35);
+        // Rule-based skipping alone covers 415/675 = 61.5% of the
+        // lattice — comfortably above the 20% acceptance bar.
+        assert_eq!(full.stats.pruned_nodes, 415);
+        assert!(full.stats.pruned_nodes * 5 >= full.stats.lattice_nodes);
+
+        // Unconstrained, the optimistic assembly bounds are never
+        // dominated by a real incumbent: pruning is a no-op and the
+        // listing survives verbatim.
+        assert_eq!(pruned.stats.bound_skipped, 0);
+        assert_eq!(pruned.plans.len(), full.plans.len());
+        let all: Vec<usize> = (0..full.plans.len()).collect();
+        assert_eq!(plan_keys(&full, &all), plan_keys(&pruned, &all));
+        assert_eq!(full.frontier, pruned.frontier);
+
+        // Tie-dedup regression: the frontier carries no duplicate
+        // objective vectors.
+        let keys = plan_keys(&full, &full.frontier);
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b, "frontier carries an exact objective tie");
+            }
+        }
+    }
+
+    #[test]
+    fn floor_bound_prunes_assemblies_without_changing_results() {
+        // A 6 fps floor on vgg16 lets the admissible per-tenant fps
+        // upper bound reject whole dsp-compositions before any BRAM
+        // split is scored; the exhaustive path instead instantiates
+        // them and drops them at the Rule-2 floor check. Same plans,
+        // same frontier. Counts pinned against the Python mirror.
+        let mk = |prune: bool| Sharder {
+            prune,
+            ..Sharder::new(
+                zc706(),
+                vec![
+                    Tenant::new(zoo::vgg16(), QuantMode::W16A16).with_min_fps(6.0),
+                    Tenant::new(zoo::alexnet(), QuantMode::W16A16),
+                ],
+            )
+        };
+        let full = mk(false).search().unwrap();
+        let pruned = mk(true).search().unwrap();
+
+        assert_eq!(full.plans.len(), 9);
+        assert_eq!(full.stats.bound_skipped, 0);
+        // One dsp composition fails the optimistic floor bound → all 15
+        // of its BRAM splits are skipped unscored.
+        assert_eq!(pruned.stats.bound_skipped, 15);
+        assert_eq!(pruned.stats.pruned_nodes, full.stats.pruned_nodes + 15);
+        assert_eq!(pruned.plans.len(), 9);
+        let all: Vec<usize> = (0..full.plans.len()).collect();
+        assert_eq!(plan_keys(&full, &all), plan_keys(&pruned, &all));
+        assert_eq!(full.frontier, pruned.frontier);
+        assert_eq!(full.frontier.len(), 3);
+    }
+
+    #[test]
+    fn pruned_search_is_exact_across_regimes() {
+        // Property: for every sharing regime, with and without fps
+        // floors, the pruned search reproduces the exhaustive search's
+        // frontier and objective-pick contents bit for bit.
+        for schedule in [
+            ScheduleMode::Spatial,
+            ScheduleMode::Temporal,
+            ScheduleMode::Overlay,
+            ScheduleMode::Auto,
+        ] {
+            let mk = |prune: bool, floor: Option<f64>| Sharder {
+                steps: 8,
+                schedule,
+                max_period_s: 0.2,
+                prune,
+                ..Sharder::new(
+                    zedboard(),
+                    vec![
+                        Tenant::new(zoo::tinycnn(), QuantMode::W8A8),
+                        Tenant {
+                            min_fps: floor,
+                            ..Tenant::new(zoo::lenet(), QuantMode::W8A8)
+                        },
+                    ],
+                )
+            };
+            let check = |floor: Option<f64>| {
+                let full = mk(false, floor).search().unwrap();
+                let pruned = mk(true, floor).search().unwrap();
+                assert_eq!(
+                    plan_keys(&full, &full.frontier),
+                    plan_keys(&pruned, &pruned.frontier),
+                    "{schedule:?} floor {floor:?}: frontier diverged under pruning"
+                );
+                for (a, b) in [
+                    (full.best_min, pruned.best_min),
+                    (full.best_weighted, pruned.best_weighted),
+                ] {
+                    assert_eq!(
+                        plan_keys(&full, &[a]),
+                        plan_keys(&pruned, &[b]),
+                        "{schedule:?} floor {floor:?}: objective pick diverged"
+                    );
+                }
+                assert_eq!(full.stats.lattice_nodes, pruned.stats.lattice_nodes);
+                assert!(pruned.stats.pruned_nodes >= full.stats.pruned_nodes);
+                full
+            };
+            let free = check(None);
+            // A floor strictly inside tenant 1's fps spread exercises the
+            // bound against a binding constraint.
+            let lo = free.plans.iter().map(|p| p.fps[1]).fold(f64::INFINITY, f64::min);
+            let hi = free
+                .plans
+                .iter()
+                .map(|p| p.fps[1])
+                .fold(f64::NEG_INFINITY, f64::max);
+            if lo < hi {
+                check(Some(0.5 * (lo + hi)));
+            }
         }
     }
 

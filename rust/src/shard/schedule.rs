@@ -555,15 +555,35 @@ fn interleave_choices(comp: &[usize], max_k: usize) -> Vec<Vec<usize>> {
 /// plan space for a sharder over the calibrated [`solo_tenants`]: slice
 /// quantum (halvings of the period bound) × slice compositions ×
 /// per-tenant interleave factors, each scored by the analytic schedule
-/// and filtered against the tenants' latency SLOs. Returns an empty vec
-/// when the regime is infeasible (no composition gives every sub-slice at
-/// least one frame per period, or no SLO-satisfying schedule exists).
+/// and filtered against the tenants' latency SLOs. Survivors are appended
+/// to the caller's shared plan list and offered to the shared incremental
+/// frontier; nothing is appended when the regime is infeasible (no
+/// composition gives every sub-slice at least one frame per period, or no
+/// SLO-satisfying schedule exists).
+///
+/// An always-on **exact** skip retires a (quantum, composition) pair
+/// before touching its interleave layouts when some tenant admits zero
+/// frames even into its *undivided, reconfiguration-free* slice
+/// (admission is monotone in the cycle budget, every sub-slice's budget
+/// is smaller, and charged swap cycles only shrink it further — so every
+/// layout of that pair would have failed the progress check). With
+/// [`Sharder::prune`] set, [`temporal_bound_prunes`] additionally applies
+/// the branch-and-bound frontier test to the pair's admissible bound
+/// vector.
 pub(crate) fn temporal_plans(
     sh: &Sharder,
     solos: &[SoloTenant],
     overlay: bool,
-) -> crate::Result<Vec<ShardPlan>> {
+    plans: &mut Vec<ShardPlan>,
+    merge: &mut crate::shard::FrontierMerge,
+    stats: &mut crate::shard::ShardStats,
+) -> crate::Result<()> {
     let n = sh.tenants.len();
+    // Objective-duplicate scan window: this call's appended range only —
+    // the regimes' plan lists must not dedup against each other (a
+    // temporal plan landing on a spatial plan's objective point is still
+    // a distinct plan in the exhaustive listing).
+    let base = plans.len();
     let freq = sh.board.freq_hz;
     let tenant_alloc = |s: &SoloTenant| TenantAlloc {
         // Each tenant owns the whole board during its slice.
@@ -577,7 +597,7 @@ pub(crate) fn temporal_plans(
         // A lone tenant has nothing to share an overlay with; the plain
         // temporal degenerate covers that case.
         if n == 1 {
-            return Ok(vec![]);
+            return Ok(());
         }
         // The static region hosts the superset datapath: size it at the
         // element-wise maximum of the tenants' footprints scaled by the
@@ -591,7 +611,7 @@ pub(crate) fn temporal_plans(
         let need_dsps = (max_dsps as f64 * oh).ceil() as usize;
         let need_bram = (max_bram as f64 * oh).ceil() as usize;
         if need_dsps > sh.board.dsps || need_bram > sh.board.bram18() {
-            return Ok(vec![]);
+            return Ok(());
         }
     }
 
@@ -604,13 +624,13 @@ pub(crate) fn temporal_plans(
         let latency = solos[0].frame_done[0] + solos[0].beat;
         if let Some(slo) = sh.tenants[0].slo_s {
             if latency as f64 > slo * freq {
-                return Ok(vec![]);
+                return Ok(());
             }
         }
         if sh.tenants[0].min_fps.is_some_and(|floor| fps < floor) {
-            return Ok(vec![]);
+            return Ok(());
         }
-        return Ok(vec![ShardPlan {
+        plans.push(ShardPlan {
             tenants: vec![tenant_alloc(&solos[0])],
             fps: vec![fps],
             min_fps: fps,
@@ -637,7 +657,9 @@ pub(crate) fn temporal_plans(
                 overlay: false,
                 dead_frac: 0.0,
             }),
-        }]);
+        });
+        merge.offer(plans, plans.len() - 1);
+        return Ok(());
     }
 
     anyhow::ensure!(
@@ -670,10 +692,31 @@ pub(crate) fn temporal_plans(
     quanta.dedup();
 
     let comps = compositions(sh.steps, n);
-    let mut plans: Vec<ShardPlan> = Vec::new();
     for &quantum in &quanta {
         let period = quantum * sh.steps as u64;
         for comp in &comps {
+            let n_layouts: usize = comp
+                .iter()
+                .map(|&p| sh.max_interleave.max(1).min(p))
+                .product();
+            stats.lattice_nodes += n_layouts;
+            // Always-on zero-admission skip (exact — see the function
+            // docs): the whole undivided slice with no swap charge is the
+            // most any layout can offer a tenant.
+            let full_admit: Vec<usize> = (0..n)
+                .map(|t| solos[t].admit(comp[t] as u64 * quantum, 0, sh.max_slice_frames))
+                .collect();
+            if full_admit.iter().any(|&f| f == 0) {
+                stats.pruned_nodes += n_layouts;
+                continue;
+            }
+            if sh.prune
+                && temporal_bound_prunes(sh, solos, comp, &full_admit, period, plans, merge)
+            {
+                stats.pruned_nodes += n_layouts;
+                stats.bound_skipped += n_layouts;
+                continue;
+            }
             for ks in interleave_choices(comp, sh.max_interleave) {
                 let layout = interleave_layout(comp, &ks);
                 let m = layout.len();
@@ -762,8 +805,9 @@ pub(crate) fn temporal_plans(
                 // Dedup on the full objective vector: a shorter quantum or
                 // higher interleave often lands on the same (fps, latency)
                 // point; keep the first (largest-quantum, lowest-k)
-                // representative.
-                if plans.iter().any(|p| {
+                // representative. Scan only this call's appended range —
+                // see `base` above.
+                if plans[base..].iter().any(|p| {
                     p.fps.len() == fps.len()
                         && p.fps.iter().zip(&fps).all(|(a, b)| a.to_bits() == b.to_bits())
                         && p.latency_s
@@ -813,10 +857,59 @@ pub(crate) fn temporal_plans(
                         dead_frac: 1.0 - useful.min(period) as f64 / period as f64,
                     }),
                 });
+                merge.offer(plans, plans.len() - 1);
             }
         }
     }
-    Ok(plans)
+    Ok(())
+}
+
+/// The temporal branch-and-bound test behind [`Sharder::prune`]: an
+/// admissible per-tenant *(fps upper bound, latency lower bound)* for
+/// every schedule in one (quantum, composition) subtree.
+///
+/// Admissibility: a tenant with `comp[t]` quanta gets at most
+/// `k_cap = min(max_interleave, comp[t])` sub-slices, each no larger than
+/// its undivided slice and each paying a non-negative swap charge, so its
+/// period frame total is at most `k_cap · admit(comp[t]·quantum, 0, ·)`
+/// (admission is monotone in the budget — makespans are *not*
+/// subadditive, so the per-sub-slice bound must be multiplied out, never
+/// split). On the latency axis, `k` sub-slices leave some start-to-start
+/// gap of at least `period / k ≥ period / k_cap`, and the serving
+/// sub-slice charges at least one frame fill — a sojourn floor no layout
+/// of the pair can beat. A subtree whose bound vector violates a floor or
+/// SLO contains no admissible schedule; one weakly dominated by an
+/// incumbent frontier plan contains only plans the tie-deduplicating
+/// frontier would reject.
+fn temporal_bound_prunes(
+    sh: &Sharder,
+    solos: &[SoloTenant],
+    comp: &[usize],
+    full_admit: &[usize],
+    period: u64,
+    plans: &[ShardPlan],
+    merge: &crate::shard::FrontierMerge,
+) -> bool {
+    let freq = sh.board.freq_hz;
+    let n = comp.len();
+    let mut fps_ub = Vec::with_capacity(n);
+    let mut lat_lb = Vec::with_capacity(n);
+    for t in 0..n {
+        let k_cap = sh.max_interleave.max(1).min(comp[t]) as u64;
+        let ub = (k_cap as usize * full_admit[t]) as f64 * freq / period as f64;
+        let lb = (period / k_cap + solos[t].frame_done[0]) as f64 / freq;
+        if sh.tenants[t].min_fps.is_some_and(|floor| ub < floor) {
+            return true;
+        }
+        if sh.tenants[t].slo_s.is_some_and(|slo| lb > slo) {
+            return true;
+        }
+        fps_ub.push(ub);
+        lat_lb.push(lb);
+    }
+    merge.members().iter().any(|&k| {
+        crate::shard::vec_weakly_dominates(&plans[k].fps, &plans[k].latency_s, &fps_ub, &lat_lb)
+    })
 }
 
 #[cfg(test)]
@@ -967,6 +1060,14 @@ mod tests {
         assert_eq!(choices.len(), 3);
     }
 
+    fn run_temporal(sh: &Sharder, solos: &[SoloTenant], overlay: bool) -> Vec<ShardPlan> {
+        let mut plans = Vec::new();
+        let mut merge = crate::shard::FrontierMerge::default();
+        let mut stats = crate::shard::ShardStats::default();
+        temporal_plans(sh, solos, overlay, &mut plans, &mut merge, &mut stats).unwrap();
+        plans
+    }
+
     #[test]
     fn temporal_plans_respect_the_latency_bound() {
         let sh = Sharder {
@@ -983,7 +1084,7 @@ mod tests {
         let tables: Vec<NetTables> =
             sh.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
         let solos = solo_tenants(&sh, &tables).unwrap().expect("tenants fit solo");
-        let plans = temporal_plans(&sh, &solos, false).unwrap();
+        let plans = run_temporal(&sh, &solos, false);
         assert!(!plans.is_empty());
         let bound = (0.1 * sh.board.freq_hz) as u64;
         for p in &plans {
@@ -1082,7 +1183,7 @@ mod tests {
         let tables: Vec<NetTables> =
             sh.tenants.iter().map(|t| NetTables::build(&t.net)).collect();
         let solos = solo_tenants(&sh, &tables).unwrap().expect("tenants fit solo");
-        let plans = temporal_plans(&sh, &solos, true).unwrap();
+        let plans = run_temporal(&sh, &solos, true);
         assert!(!plans.is_empty());
         for p in &plans {
             let Regime::Temporal(info) = &p.regime else {
@@ -1095,7 +1196,7 @@ mod tests {
         // An overlay schedule with the same shape never admits fewer
         // frames than the reconfiguring one (zero swap can only widen
         // budgets).
-        let plain = temporal_plans(&sh, &solos, false).unwrap();
+        let plain = run_temporal(&sh, &solos, false);
         let best_overlay = plans
             .iter()
             .map(|p| p.min_fps)

@@ -44,6 +44,19 @@
 //! identical reports. Tie-breaking matches too: the heap orders
 //! `(start, stage)` ascending, which is the naive scan's
 //! first-lowest-index-wins rule.
+//!
+//! # Event-skip invariant
+//!
+//! Neither DES ever advances time by polling: the pipeline wheel pops the
+//! next *start event* off its heap (idle windows between events cost
+//! nothing — time leaps to the next startable group), and the arrival
+//! replay wheel leaps over occurrences that provably admit and serve
+//! nothing (empty queue, next arrival beyond their start). A skipped
+//! window is exactly one in which every stage's `start_of` is `None` or
+//! every occurrence is a no-op, so skipping is *exact*: the skipping and
+//! stepping schedulers are pinned byte-identical by the equivalence
+//! suites (`event_wheel_matches_naive_scheduler`,
+//! `replay_event_skip_matches_stepping`).
 
 use crate::alloc::{AllocReport, Allocation};
 use crate::board::Board;
@@ -344,7 +357,13 @@ impl SimState {
         if (self.row_ready[i][f].len() as u64) < need_rows {
             return None; // producer progress will enable this stage
         }
-        let t_rows = self.row_ready[i][f][need_rows as usize - 1];
+        // `need_rows == 0` can only arise from a zero-extent layer, which
+        // `Network::validate` rejects with a typed error; guard the index
+        // anyway so a degenerate state can never underflow `need_rows - 1`.
+        let t_rows = match need_rows {
+            0 => 0,
+            n => self.row_ready[i][f][n as usize - 1],
+        };
         // (b) downstream space.
         if i + 1 < self.n {
             let occupied = self.row_ready[i + 1][f].len() as u64 - self.retired[i + 1][f];
@@ -888,15 +907,41 @@ pub struct ReplayTenant {
 /// acceptance tests pin the two against each other and against the
 /// analytic `TemporalInfo::latency_cycles` bound.
 ///
+/// **Event-skip:** occurrence starts
+/// `start(k) = (k / L)·period + occ[k mod L].start_cycles` are
+/// non-decreasing in `k` (slice start offsets are prefix sums within a
+/// period, each `< period`). When the queue is empty and the next arrival
+/// lies beyond the current occurrence's start, every occurrence strictly
+/// before the arrival admits nothing (arrivals are sorted ascending) and
+/// serves nothing (empty queue) — so the wheel leaps `k` directly to the
+/// first occurrence whose start covers the arrival instead of beating
+/// through the idle window one occurrence at a time. The stepping walk is
+/// kept as the executable spec (`engines::replay_arrivals_stepping`) and
+/// the equivalence suite pins the two byte-identical.
+///
 /// [`TemporalInfo::latency_cycles`]: crate::shard::TemporalInfo::latency_cycles
 pub(crate) fn replay_arrivals(
     report: &TimeshareReport,
     arrivals: &[Vec<u64>],
     capacity: &[usize],
 ) -> Vec<ReplayTenant> {
+    replay_arrivals_impl(report, arrivals, capacity, true).0
+}
+
+/// Shared walker behind [`replay_arrivals`]: `skip` selects the
+/// event-skipping wheel or the stepping reference; the second return is
+/// the number of occurrence visits (the wheel's iteration count), which
+/// the engagement tests use to prove the skip actually fires.
+fn replay_arrivals_impl(
+    report: &TimeshareReport,
+    arrivals: &[Vec<u64>],
+    capacity: &[usize],
+    skip: bool,
+) -> (Vec<ReplayTenant>, u64) {
     assert_eq!(arrivals.len(), capacity.len(), "one capacity per tenant");
     let period = report.period_cycles;
     assert!(period > 0, "replay needs an executed period");
+    let mut visits = 0u64;
     let mut out = Vec::with_capacity(arrivals.len());
     for (t, arr) in arrivals.iter().enumerate() {
         // This tenant's serving occurrences within one period.
@@ -922,6 +967,26 @@ pub(crate) fn replay_arrivals(
         // arrival is admitted-or-rejected and the queue has drained.
         let mut k = 0u64;
         while next < arr.len() || !queue.is_empty() {
+            if skip && queue.is_empty() {
+                // Event-skip: with an empty queue nothing can be served
+                // before the next arrival, and every occurrence starting
+                // strictly before it admits nothing (arrivals are sorted),
+                // so leap to the first occurrence whose start covers it.
+                let target = arr[next];
+                let l = occ.len() as u64;
+                let p = target / period; // period index holding the target
+                let k_target = match occ
+                    .iter()
+                    .position(|s| p * period + s.start_cycles >= target)
+                {
+                    Some(j) => p * l + j as u64,
+                    // Every occurrence of period `p` starts too early; the
+                    // first of period `p+1` starts at ≥ (p+1)·period > target.
+                    None => (p + 1) * l,
+                };
+                k = k.max(k_target);
+            }
+            visits += 1;
             let s = occ[(k as usize) % occ.len()];
             let start = (k / occ.len() as u64) * period + s.start_cycles;
             // Admit arrivals up to (and at) this occurrence's start; the
@@ -948,7 +1013,7 @@ pub(crate) fn replay_arrivals(
         }
         out.push(rep);
     }
-    out
+    (out, visits)
 }
 
 // ---------------------------------------------------------------------------
@@ -1216,6 +1281,28 @@ pub mod engines {
         capacity: &[usize],
     ) -> Vec<ReplayTenant> {
         super::replay_arrivals(report, arrivals, capacity)
+    }
+
+    /// The stepping replay wheel — the executable spec the event-skipping
+    /// [`replay_arrivals`] is property-pinned byte-identical to. Returns
+    /// the per-tenant reports plus the occurrence-visit count.
+    pub fn replay_arrivals_stepping(
+        report: &TimeshareReport,
+        arrivals: &[Vec<u64>],
+        capacity: &[usize],
+    ) -> (Vec<ReplayTenant>, u64) {
+        super::replay_arrivals_impl(report, arrivals, capacity, false)
+    }
+
+    /// The event-skipping replay wheel with its occurrence-visit count
+    /// exposed, so engagement tests can prove the skip fires (fewer
+    /// visits than [`replay_arrivals_stepping`] on sparse arrivals).
+    pub fn replay_arrivals_counted(
+        report: &TimeshareReport,
+        arrivals: &[Vec<u64>],
+        capacity: &[usize],
+    ) -> (Vec<ReplayTenant>, u64) {
+        super::replay_arrivals_impl(report, arrivals, capacity, true)
     }
 
     /// Serial one-slice-per-tenant schedule executor (the PR-3 baseline).
@@ -1578,6 +1665,49 @@ mod tests {
             assert_eq!(r.fps.to_bits(), recorded.to_bits(), "tenant {t}");
         }
         assert_eq!(rep.tenant_fps().len(), 2);
+    }
+
+    #[test]
+    fn replay_event_skip_matches_stepping() {
+        use super::engines::{replay_arrivals_counted, replay_arrivals_stepping};
+        let alloc = FlexAllocator::default()
+            .allocate(&zoo::lenet(), &zc706(), QuantMode::W8A8)
+            .unwrap();
+        let solo = simulate(&alloc, 2);
+        let slice = solo.makespan + 5_000;
+        let ts =
+            simulate_timeshared(&[&alloc, &alloc], &[2, 2], &[slice, slice], &[3_000, 3_000]);
+        let period = ts.period_cycles;
+
+        // Sparse arrivals with huge provably-idle gaps: the skipping wheel
+        // must produce byte-identical reports in far fewer visits.
+        let arrivals = vec![
+            vec![0, 50 * period, 50 * period + 1, 903 * period],
+            vec![7 * period + 123, 400 * period],
+        ];
+        let capacity = [0usize, 1];
+        let (fast, fast_visits) = replay_arrivals_counted(&ts, &arrivals, &capacity);
+        let (slow, slow_visits) = replay_arrivals_stepping(&ts, &arrivals, &capacity);
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.sojourns, s.sojourns);
+            assert_eq!(f.rejected, s.rejected);
+        }
+        assert!(
+            fast_visits < slow_visits / 10,
+            "event-skip must engage on sparse arrivals ({fast_visits} vs {slow_visits} visits)"
+        );
+
+        // Dense arrivals (queue rarely empty, rejections exercised): the
+        // two wheels still agree exactly.
+        let dense: Vec<Vec<u64>> =
+            (0..2u64).map(|t| (0..200u64).map(|i| i * 37 + t).collect()).collect();
+        let (f2, _) = replay_arrivals_counted(&ts, &dense, &[3usize, 0]);
+        let (s2, _) = replay_arrivals_stepping(&ts, &dense, &[3usize, 0]);
+        for (f, s) in f2.iter().zip(&s2) {
+            assert_eq!(f.sojourns, s.sojourns);
+            assert_eq!(f.rejected, s.rejected);
+        }
     }
 
     #[test]

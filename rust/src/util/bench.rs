@@ -5,7 +5,80 @@
 //! Measures wall time with warmup, adaptive iteration count, and reports
 //! mean / p50 / p95 per iteration plus a user-supplied throughput unit.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Command-line options shared by the `harness = false` bench targets.
+///
+/// Every bench binary accepts the same two options after `cargo bench
+/// --bench NAME --`:
+///
+/// - `--budget SECS` — per-benchmark time budget (CI smoke runs pass a
+///   tiny value so the binaries finish in seconds),
+/// - `--json PATH` — where to write the machine-readable summary; the
+///   default is `BENCH_<name>.json` at the repository root.
+///
+/// Unknown arguments are ignored so harness pass-throughs stay harmless.
+pub struct BenchOpts {
+    /// Per-benchmark time budget in seconds.
+    pub budget_secs: f64,
+    /// Resolved output path for the machine-readable summary.
+    pub json: PathBuf,
+}
+
+impl BenchOpts {
+    /// Parse `std::env::args`, falling back to the given defaults.
+    pub fn parse(default_budget_secs: f64, default_json: PathBuf) -> BenchOpts {
+        Self::from_args(std::env::args().skip(1), default_budget_secs, default_json)
+    }
+
+    fn from_args<I: Iterator<Item = String>>(
+        args: I,
+        default_budget_secs: f64,
+        default_json: PathBuf,
+    ) -> BenchOpts {
+        let mut opts = BenchOpts {
+            budget_secs: default_budget_secs,
+            json: default_json,
+        };
+        let argv: Vec<String> = args.collect();
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--budget" => {
+                    if let Some(v) = argv.get(i + 1).and_then(|s| s.parse::<f64>().ok()) {
+                        if v > 0.0 {
+                            opts.budget_secs = v;
+                        }
+                    }
+                    i += 2;
+                }
+                "--json" => {
+                    if let Some(p) = argv.get(i + 1) {
+                        opts.json = PathBuf::from(p);
+                    }
+                    i += 2;
+                }
+                _ => i += 1,
+            }
+        }
+        opts
+    }
+
+    /// Build the runner with the parsed budget.
+    pub fn bench(&self) -> Bench {
+        Bench::with_budget_secs(self.budget_secs)
+    }
+
+    /// Write the machine-readable summary to the resolved path, reporting
+    /// the outcome on stdout/stderr.
+    pub fn write(&self, json: &str) {
+        match std::fs::write(&self.json, json) {
+            Ok(()) => println!("wrote {}", self.json.display()),
+            Err(e) => eprintln!("could not write {}: {e}", self.json.display()),
+        }
+    }
+}
 
 /// One benchmark's timing summary.
 #[derive(Debug, Clone)]
@@ -128,6 +201,27 @@ mod tests {
         });
         assert!(s.iters >= 1);
         assert!(s.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_opts_parse_overrides_and_ignores_unknowns() {
+        let argv = ["--verbose", "--budget", "0.25", "--json", "out.json", "extra"];
+        let o = BenchOpts::from_args(
+            argv.iter().map(|s| s.to_string()),
+            2.0,
+            PathBuf::from("BENCH_default.json"),
+        );
+        assert_eq!(o.budget_secs, 0.25);
+        assert_eq!(o.json, PathBuf::from("out.json"));
+
+        // Defaults survive absent / malformed values.
+        let o = BenchOpts::from_args(
+            ["--budget", "nope"].iter().map(|s| s.to_string()),
+            1.5,
+            PathBuf::from("BENCH_default.json"),
+        );
+        assert_eq!(o.budget_secs, 1.5);
+        assert_eq!(o.json, PathBuf::from("BENCH_default.json"));
     }
 
     #[test]
