@@ -1,0 +1,107 @@
+//! Bench: fleet-scale placement, for the §Perf trajectory.
+//!
+//! - exhaustive tenant→board-subset enumeration on a twin-zedboard
+//!   fleet (the exactness baseline),
+//! - the same placement with branch-and-bound assignment pruning
+//!   (`--prune`), byte-equal result asserted in-process,
+//! - fleet failover (`FleetPlanner::replan`) migrating a displaced
+//!   tenant onto the surviving twin.
+//!
+//! Emits machine-readable `BENCH_fleet.json` at the repository root,
+//! recording pruned-vs-exhaustive node counts (assignments, bound
+//! skips, board solves, cache hits) alongside the timings.
+
+use flexipipe::board::zedboard;
+use flexipipe::fault::{BoardLoss, FaultPlan};
+use flexipipe::fleet::{FleetPlanner, FleetSpec};
+use flexipipe::model::zoo;
+use flexipipe::plan::Workload;
+use flexipipe::quant::QuantMode;
+use flexipipe::util::bench::BenchOpts;
+use flexipipe::util::json::{num, obj, Value};
+use std::path::Path;
+
+fn fleet() -> FleetSpec {
+    FleetSpec::new()
+        .board("twin-a", zedboard(), 1.0)
+        .board("twin-b", zedboard(), 1.0)
+}
+
+fn main() {
+    let opts = BenchOpts::parse(
+        2.0,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fleet.json"),
+    );
+    let mut b = opts.bench();
+    let mut out: Vec<(&str, Value)> = Vec::new();
+
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let exhaustive_planner = FleetPlanner::over(fleet()).steps(6);
+    let pruned_planner = FleetPlanner::over(fleet()).steps(6).prune(true);
+
+    let s = b
+        .bench("fleet/place 2x2 exhaustive", || {
+            exhaustive_planner.plan(&workload).unwrap()
+        })
+        .clone();
+    out.push(("place_exhaustive_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+
+    let s = b.bench("fleet/place 2x2 pruned", || pruned_planner.plan(&workload).unwrap()).clone();
+    out.push(("place_pruned_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+
+    // Pruning is an optimization, never an approximation: byte-equal.
+    let exhaustive = exhaustive_planner.plan(&workload).unwrap();
+    let pruned = pruned_planner.plan(&workload).unwrap();
+    let dump = |s: &flexipipe::fleet::FleetPlanSet| -> Vec<String> {
+        s.plans.iter().map(|p| p.to_json().to_pretty()).collect()
+    };
+    assert_eq!(dump(&exhaustive), dump(&pruned), "pruned != exhaustive");
+    println!(
+        "  -> {} assignments: {} solved / {} infeasible / {} bound-skipped (pruned)",
+        pruned.stats.assignments,
+        pruned.stats.solved,
+        pruned.stats.infeasible,
+        pruned.stats.bound_skipped
+    );
+    out.push(("frontier", num(exhaustive.plans.len())));
+    out.push(("assignments", num(exhaustive.stats.assignments)));
+    out.push(("exhaustive_board_solves", num(exhaustive.stats.board_solves)));
+    out.push(("exhaustive_cache_hits", num(exhaustive.stats.cache_hits)));
+    out.push(("pruned_bound_skipped", num(pruned.stats.bound_skipped)));
+    out.push(("pruned_board_solves", num(pruned.stats.board_solves)));
+    out.push(("pruned_cache_hits", num(pruned.stats.cache_hits)));
+
+    // Failover: annihilate one twin, migrate its tenant onto the other.
+    let incumbent = exhaustive
+        .plans
+        .iter()
+        .find(|p| p.boards.len() == 2 && p.boards.iter().all(|pl| pl.plan.tenants.len() == 1))
+        .expect("one-tenant-per-board split on the frontier")
+        .clone();
+    let faults = FaultPlan {
+        board_loss: Some(BoardLoss {
+            at_s: 0.25,
+            survive_frac: 0.01,
+        }),
+        ..FaultPlan::none()
+    };
+    let lost = incumbent.boards[0].id.clone();
+    let s = b
+        .bench("fleet/replan board loss", || {
+            exhaustive_planner.replan(&incumbent, &faults, &lost).unwrap()
+        })
+        .clone();
+    out.push(("replan_ms", Value::Num(s.mean.as_secs_f64() * 1e3)));
+    let outcome = exhaustive_planner.replan(&incumbent, &faults, &lost).unwrap();
+    println!(
+        "  -> lost {lost}: {} migrated, {} shed",
+        outcome.migrated.len(),
+        outcome.shed.len()
+    );
+
+    b.finish();
+
+    opts.write(&obj(out).to_pretty());
+}

@@ -1,0 +1,1911 @@
+//! Fleet-scale planning: place N tenants across M heterogeneous boards.
+//!
+//! The [`crate::plan::Planner`] spine optimizes one board; this module
+//! lifts it to a *fleet* — a set of named boards with per-board cost
+//! ([`FleetSpec`]) — and solves placement as one optimization
+//! ([`FleetPlanner::plan`]):
+//!
+//! - **Replication** of a hot tenant across several boards: its fps is
+//!   the *sum* over replicas, recorded in a [`RoutingTable`] whose
+//!   per-tenant weights are the fps fractions each board serves.
+//! - **Spill** of cold tenants onto shared boards: a board hosting
+//!   several tenants is solved by the existing single-board planner
+//!   (spatial / temporal / overlay regimes, branch-and-bound pruning),
+//!   so a cheap board can absorb the long tail.
+//! - A global Pareto frontier over **(fleet cost ↓, per-tenant fps ↑,
+//!   worst-case latency ↓)**: the cost axis is what makes "leave a
+//!   board idle" a first-class answer — a placement using fewer boards
+//!   survives the reduction unless the extra hardware buys throughput
+//!   or latency.
+//!
+//! The result is a versioned [`FleetPlan`] ([`FLEET_VERSION`], unknown
+//! versions rejected like the plan/fault/trace formats): one
+//! [`crate::plan::DeploymentPlan`] per used board plus the routing
+//! table. [`crate::sim::Simulator::simulate_fleet`] executes every
+//! board's pinned engine and merges per-tenant reports through the
+//! routing weights; [`FleetPlanner::replan`] handles a board loss by
+//! migrating displaced tenants onto surviving peers (explicit
+//! migration / dropped-replica / shed report — nothing vanishes
+//! silently).
+//!
+//! Exactness is part of the contract (property-pinned in
+//! `tests/fleet_props.rs`): a single-board fleet reproduces
+//! [`crate::plan::Planner::plan`]'s frontier bit-identically, the
+//! placement search restricted to per-board frontier sub-plans loses
+//! nothing (a dominated sub-plan can only produce a dominated fleet
+//! combination), and branch-and-bound assignment pruning
+//! ([`FleetPlanner::prune`]) uses admissible solo-probe bounds — with
+//! incumbents found on earlier assignments bounding later ones — so
+//! the pruned frontier equals the exhaustive one.
+//!
+//! ```
+//! use flexipipe::board::zedboard;
+//! use flexipipe::fleet::{FleetPlanner, FleetSpec};
+//! use flexipipe::model::zoo;
+//! use flexipipe::plan::Workload;
+//! use flexipipe::quant::QuantMode;
+//!
+//! let fleet = FleetSpec::new().board("edge-a", zedboard(), 1.0);
+//! let workload = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+//! let set = FleetPlanner::over(fleet).steps(4).plan(&workload).unwrap();
+//! let best = &set.plans[set.best];
+//! assert_eq!(best.boards.len(), 1);
+//! // A solo tenant routes all of its traffic to its one board.
+//! assert_eq!(best.routing.tenants[0].routes[0].weight, 1.0);
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::board::{self, Board};
+use crate::plan::{
+    self, Constraint, DeploymentPlan, Objective, Planner, ReplanPhase, TenantSpec, Workload,
+};
+use crate::shard::{
+    vec_dominates, vec_weakly_dominates, FrontierMerge, ReconfigModel, ScheduleMode,
+};
+use crate::util::json::{self, num, obj, Value};
+
+/// Fleet-format version this build writes.
+pub const FLEET_VERSION: usize = 1;
+/// Oldest fleet-format version this build reads.
+pub const FLEET_VERSION_MIN: usize = 1;
+
+/// Board-count ceiling: tenant→board subsets are `u32` bitmasks and the
+/// assignment space is exponential in practice well before this.
+const MAX_BOARDS: usize = 16;
+/// Ceiling on the tenant→board-subset assignment space one
+/// [`FleetPlanner::plan`] call will enumerate.
+const MAX_ASSIGNMENTS: u128 = 20_000;
+/// Ceiling on per-assignment sub-plan combinations (the cross product of
+/// the used boards' frontier sizes).
+const MAX_COMBOS: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// FleetSpec
+// ---------------------------------------------------------------------------
+
+/// One board of a fleet: a stable identifier (routing and failover are
+/// keyed by it), the physical resource model, and its cost share in the
+/// fleet-frontier cost axis (arbitrary consistent units — price, power,
+/// rack slots).
+#[derive(Debug, Clone)]
+pub struct FleetBoard {
+    /// Fleet-unique board identifier (e.g. `"zc706-a"`).
+    pub id: String,
+    /// The physical board model.
+    pub board: Board,
+    /// Cost charged to a placement that uses this board.
+    pub cost: f64,
+}
+
+/// The fleet a [`FleetPlanner`] places onto: named heterogeneous boards
+/// with per-board cost, in a deterministic order (assignment enumeration,
+/// routing, and failover first-fit all follow it).
+#[derive(Debug, Clone, Default)]
+pub struct FleetSpec {
+    /// The boards, in fleet order.
+    pub boards: Vec<FleetBoard>,
+}
+
+impl FleetSpec {
+    /// Empty fleet.
+    pub fn new() -> FleetSpec {
+        FleetSpec::default()
+    }
+
+    /// Add a board (builder style).
+    pub fn board(mut self, id: &str, board: Board, cost: f64) -> FleetSpec {
+        self.boards.push(FleetBoard {
+            id: id.to_string(),
+            board,
+            cost,
+        });
+        self
+    }
+
+    /// Check the spec is usable: at least one board, at most
+    /// [`MAX_BOARDS`], unique non-empty ids, positive finite costs.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.boards.is_empty(), "fleet has no boards");
+        anyhow::ensure!(
+            self.boards.len() <= MAX_BOARDS,
+            "fleet has {} boards; the placement search supports at most {MAX_BOARDS}",
+            self.boards.len()
+        );
+        for (i, b) in self.boards.iter().enumerate() {
+            anyhow::ensure!(!b.id.is_empty(), "fleet board {i} has an empty id");
+            anyhow::ensure!(
+                b.cost.is_finite() && b.cost > 0.0,
+                "fleet board '{}': cost must be positive and finite (got {})",
+                b.id,
+                b.cost
+            );
+            for prev in &self.boards[..i] {
+                anyhow::ensure!(prev.id != b.id, "duplicate fleet board id '{}'", b.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON document (deterministic field order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", num(FLEET_VERSION)),
+            (
+                "boards",
+                Value::Arr(
+                    self.boards
+                        .iter()
+                        .map(|b| {
+                            obj(vec![
+                                ("id", Value::Str(b.id.clone())),
+                                ("cost", Value::Num(b.cost)),
+                                ("board", plan::board_to_json(&b.board)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize from the versioned fleet-spec format. The `board`
+    /// field of each entry is either a known board name (resolved via
+    /// [`crate::board::by_name`]) or a full embedded board object;
+    /// `cost` defaults to 1.0. Unknown `version` values are rejected
+    /// outright.
+    pub fn from_json(v: &Value) -> crate::Result<FleetSpec> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(
+            (FLEET_VERSION_MIN..=FLEET_VERSION).contains(&version),
+            "unsupported fleet-spec version {version}: this build reads versions \
+             {FLEET_VERSION_MIN}..={FLEET_VERSION}"
+        );
+        let entries = v
+            .req("boards")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'boards' must be an array"))?;
+        let mut boards = Vec::with_capacity(entries.len());
+        for e in entries {
+            let id = e.str_field("id")?.to_string();
+            let cost = match e.get("cost") {
+                Some(c) => c
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("board '{id}': 'cost' is not a number"))?,
+                None => 1.0,
+            };
+            let board = match e.req("board")? {
+                Value::Str(name) => board::by_name(name)?,
+                other => plan::board_from_json(other)?,
+            };
+            boards.push(FleetBoard { id, board, cost });
+        }
+        let spec = FleetSpec { boards };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Write the spec to a file (pretty-printed JSON).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a spec from a file; every failure carries the path.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<FleetSpec> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+        FleetSpec::from_json(&v).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoutingTable
+// ---------------------------------------------------------------------------
+
+/// One board's share of a tenant's traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    /// Fleet board id serving this share.
+    pub board: String,
+    /// Fraction of the tenant's traffic routed here — the board's share
+    /// of the tenant's planned fps. In `(0, 1]`; a tenant's weights sum
+    /// to 1 (conservation, [`FleetPlan::validate`]-pinned).
+    pub weight: f64,
+}
+
+/// Where one tenant's traffic goes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRoute {
+    /// Tenant model name (fleet-unique; routing is keyed by it).
+    pub net: String,
+    /// The boards serving this tenant, in fleet order.
+    pub routes: Vec<Route>,
+}
+
+/// The fleet's traffic split: for every tenant, which boards serve it
+/// and with what fraction of its traffic. Invariants (pinned by
+/// [`FleetPlan::validate`]): weights per tenant sum to 1, every route
+/// points at a board whose plan actually hosts the tenant, and every
+/// hosted tenant is routed — no silent strays in either direction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoutingTable {
+    /// Per-tenant routes, in workload tenant order.
+    pub tenants: Vec<TenantRoute>,
+}
+
+// ---------------------------------------------------------------------------
+// FleetPlan
+// ---------------------------------------------------------------------------
+
+/// One used board inside a [`FleetPlan`]: its fleet id, the cost it
+/// charges, and the single-board deployment serving its sub-workload.
+#[derive(Debug, Clone)]
+pub struct FleetPlacement {
+    /// Fleet board id.
+    pub id: String,
+    /// Cost this board contributes to [`FleetPlan::cost`].
+    pub cost: f64,
+    /// The board's deployment (the same artifact `flexipipe simulate
+    /// --plan` executes).
+    pub plan: DeploymentPlan,
+}
+
+/// A versioned fleet deployment: per-board [`DeploymentPlan`]s plus the
+/// [`RoutingTable`] — the only currency between the fleet planner, the
+/// fleet simulator, and fleet failover. Serializable; a plan on disk
+/// re-simulates bit-identically ([`crate::sim::Simulator::simulate_fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Format version ([`FLEET_VERSION`] when produced by this build).
+    pub version: usize,
+    /// The used boards, in fleet order (unused boards are absent — they
+    /// charge no cost).
+    pub boards: Vec<FleetPlacement>,
+    /// The traffic split across those boards.
+    pub routing: RoutingTable,
+}
+
+impl FleetPlan {
+    /// Total fleet cost: the sum over used boards.
+    pub fn cost(&self) -> f64 {
+        self.boards.iter().map(|p| p.cost).sum()
+    }
+
+    /// Planning record for `net` on board `board_id`, if both exist.
+    fn record_on(&self, board_id: &str, net: &str) -> Option<&plan::TenantRecord> {
+        let p = self.boards.iter().find(|p| p.id == board_id)?;
+        let t = p.plan.tenants.iter().find(|t| t.net.name == net)?;
+        t.record.as_ref()
+    }
+
+    /// Per-tenant planned fps (routing order): the **sum** over the
+    /// tenant's replicas. `None` when any hosting plan lacks planning
+    /// records (hand-authored plans).
+    pub fn fps_vec(&self) -> Option<Vec<f64>> {
+        self.routing
+            .tenants
+            .iter()
+            .map(|tr| {
+                tr.routes.iter().try_fold(0.0, |acc, r| {
+                    self.record_on(&r.board, &tr.net).map(|rec| acc + rec.fps)
+                })
+            })
+            .collect()
+    }
+
+    /// Per-tenant planned worst-case latency in seconds (routing order):
+    /// the **max** over the tenant's replicas — a frame is only as safe
+    /// as its slowest route. `None` without planning records.
+    pub fn latency_vec(&self) -> Option<Vec<f64>> {
+        self.routing
+            .tenants
+            .iter()
+            .map(|tr| {
+                tr.routes.iter().try_fold(0.0f64, |acc, r| {
+                    self.record_on(&r.board, &tr.net).map(|rec| acc.max(rec.latency_s))
+                })
+            })
+            .collect()
+    }
+
+    /// Planned min-fps objective over all tenants.
+    pub fn min_fps(&self) -> Option<f64> {
+        self.fps_vec().map(|v| v.into_iter().fold(f64::INFINITY, f64::min))
+    }
+
+    /// Planned weighted-fps objective (weights from the hosting plans).
+    pub fn weighted_fps(&self) -> Option<f64> {
+        let fps = self.fps_vec()?;
+        let mut total = 0.0;
+        for (i, tr) in self.routing.tenants.iter().enumerate() {
+            let first = tr.routes.first()?;
+            let p = self.boards.iter().find(|p| p.id == first.board)?;
+            let w = p.plan.tenants.iter().find(|t| t.net.name == tr.net)?.weight;
+            total += fps[i] * w;
+        }
+        Some(total)
+    }
+
+    /// The [`FleetSpec`] this plan occupies (used boards only, with the
+    /// embedded board models) — what [`FleetPlanner::replan`] plans
+    /// against.
+    pub fn spec(&self) -> FleetSpec {
+        FleetSpec {
+            boards: self
+                .boards
+                .iter()
+                .map(|p| FleetBoard {
+                    id: p.id.clone(),
+                    board: p.plan.board.clone(),
+                    cost: p.cost,
+                })
+                .collect(),
+        }
+    }
+
+    /// Check the plan's structural invariants: supported version, unique
+    /// board ids, and bidirectional routing↔hosting conservation — every
+    /// route points at a board whose plan hosts the tenant with a weight
+    /// in `(0, 1]`, per-tenant weights sum to 1 (±1e-9), and every
+    /// tenant hosted by any board appears in the routing table with a
+    /// route to that board.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (FLEET_VERSION_MIN..=FLEET_VERSION).contains(&self.version),
+            "unsupported fleet-plan version {}: this build reads versions \
+             {FLEET_VERSION_MIN}..={FLEET_VERSION} — regenerate with `flexipipe plan --fleet`",
+            self.version
+        );
+        anyhow::ensure!(!self.boards.is_empty(), "fleet plan uses no boards");
+        for (i, p) in self.boards.iter().enumerate() {
+            anyhow::ensure!(!p.id.is_empty(), "fleet placement {i} has an empty board id");
+            for prev in &self.boards[..i] {
+                anyhow::ensure!(prev.id != p.id, "duplicate fleet board id '{}'", p.id);
+            }
+        }
+        anyhow::ensure!(!self.routing.tenants.is_empty(), "fleet plan routes no tenants");
+        for (i, tr) in self.routing.tenants.iter().enumerate() {
+            for prev in &self.routing.tenants[..i] {
+                anyhow::ensure!(prev.net != tr.net, "tenant '{}' routed twice", tr.net);
+            }
+            anyhow::ensure!(!tr.routes.is_empty(), "tenant '{}' has no routes", tr.net);
+            let mut sum = 0.0;
+            for (j, r) in tr.routes.iter().enumerate() {
+                for prev in &tr.routes[..j] {
+                    anyhow::ensure!(
+                        prev.board != r.board,
+                        "tenant '{}' routed to board '{}' twice",
+                        tr.net,
+                        r.board
+                    );
+                }
+                anyhow::ensure!(
+                    r.weight > 0.0 && r.weight <= 1.0,
+                    "tenant '{}' route to '{}': weight {} outside (0, 1]",
+                    tr.net,
+                    r.board,
+                    r.weight
+                );
+                sum += r.weight;
+                let hosts = self
+                    .boards
+                    .iter()
+                    .find(|p| p.id == r.board)
+                    .map(|p| p.plan.tenants.iter().any(|t| t.net.name == tr.net));
+                match hosts {
+                    Some(true) => {}
+                    Some(false) => anyhow::bail!(
+                        "tenant '{}' routed to board '{}', whose plan does not host it",
+                        tr.net,
+                        r.board
+                    ),
+                    None => anyhow::bail!(
+                        "tenant '{}' routed to unknown board '{}'",
+                        tr.net,
+                        r.board
+                    ),
+                }
+            }
+            anyhow::ensure!(
+                (sum - 1.0).abs() <= 1e-9,
+                "tenant '{}': route weights sum to {sum}, not 1",
+                tr.net
+            );
+        }
+        for p in &self.boards {
+            for t in &p.plan.tenants {
+                let routed = self.routing.tenants.iter().any(|tr| {
+                    tr.net == t.net.name && tr.routes.iter().any(|r| r.board == p.id)
+                });
+                anyhow::ensure!(
+                    routed,
+                    "board '{}' hosts tenant '{}' but the routing table never routes it there",
+                    p.id,
+                    t.net.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON document (deterministic field order; `cost` is derived but
+    /// serialized for human consumers).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", num(self.version)),
+            ("cost", Value::Num(self.cost())),
+            (
+                "boards",
+                Value::Arr(
+                    self.boards
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("id", Value::Str(p.id.clone())),
+                                ("cost", Value::Num(p.cost)),
+                                ("plan", p.plan.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "routing",
+                Value::Arr(
+                    self.routing
+                        .tenants
+                        .iter()
+                        .map(|tr| {
+                            obj(vec![
+                                ("net", Value::Str(tr.net.clone())),
+                                (
+                                    "routes",
+                                    Value::Arr(
+                                        tr.routes
+                                            .iter()
+                                            .map(|r| {
+                                                obj(vec![
+                                                    ("board", Value::Str(r.board.clone())),
+                                                    ("weight", Value::Num(r.weight)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize from the versioned fleet-plan format (unknown
+    /// versions rejected; the derived `cost` field is ignored) and
+    /// validate the routing invariants.
+    pub fn from_json(v: &Value) -> crate::Result<FleetPlan> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(
+            (FLEET_VERSION_MIN..=FLEET_VERSION).contains(&version),
+            "unsupported fleet-plan version {version}: this build reads versions \
+             {FLEET_VERSION_MIN}..={FLEET_VERSION} — regenerate with `flexipipe plan --fleet`"
+        );
+        let mut boards = Vec::new();
+        for e in v
+            .req("boards")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'boards' must be an array"))?
+        {
+            boards.push(FleetPlacement {
+                id: e.str_field("id")?.to_string(),
+                cost: e.f64_field("cost")?,
+                plan: DeploymentPlan::from_json(e.req("plan")?)?,
+            });
+        }
+        let mut tenants = Vec::new();
+        for e in v
+            .req("routing")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'routing' must be an array"))?
+        {
+            let mut routes = Vec::new();
+            for r in e
+                .req("routes")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'routes' must be an array"))?
+            {
+                routes.push(Route {
+                    board: r.str_field("board")?.to_string(),
+                    weight: r.f64_field("weight")?,
+                });
+            }
+            tenants.push(TenantRoute {
+                net: e.str_field("net")?.to_string(),
+                routes,
+            });
+        }
+        let plan = FleetPlan {
+            version,
+            boards,
+            routing: RoutingTable { tenants },
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Write the plan to a file (pretty-printed JSON).
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a plan from a file. Accepts either a bare fleet-plan object
+    /// or a whole `flexipipe plan --fleet --json` document (a
+    /// [`FleetPlanSet`] dump), in which case the `best` plan is read.
+    /// Every failure carries the path.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<FleetPlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+        match v.get("best") {
+            Some(best) => FleetPlan::from_json(best),
+            None => FleetPlan::from_json(&v),
+        }
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+    }
+
+    /// The plan's fleet-frontier objective vectors:
+    /// `(fps per tenant ↑, [cost, latency per tenant] ↓)`. Errors when
+    /// planning records are missing (hand-authored plans must be
+    /// regenerated before frontier arithmetic).
+    pub fn objectives(&self) -> crate::Result<(Vec<f64>, Vec<f64>)> {
+        let ups = self
+            .fps_vec()
+            .ok_or_else(|| anyhow::anyhow!("fleet plan lacks planning records"))?;
+        let lat = self
+            .latency_vec()
+            .ok_or_else(|| anyhow::anyhow!("fleet plan lacks planning records"))?;
+        let mut downs = Vec::with_capacity(lat.len() + 1);
+        downs.push(self.cost());
+        downs.extend_from_slice(&lat);
+        Ok((ups, downs))
+    }
+}
+
+/// Reference Pareto reduction over pre-extracted objective vectors:
+/// non-dominated under strict vector dominance, exact ties keeping the
+/// first representative. O(n²) — the executable spec the incremental
+/// [`FrontierMerge`] accumulator is pinned against.
+fn reference_frontier(objs: &[(Vec<f64>, Vec<f64>)]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| {
+            !(0..objs.len())
+                .any(|j| j != i && vec_dominates(&objs[j].0, &objs[j].1, &objs[i].0, &objs[i].1))
+                && !(0..i).any(|j| objs[j] == objs[i])
+        })
+        .collect()
+}
+
+/// Indices of the non-dominated plans under the fleet objective
+/// (fleet cost ↓, per-tenant fps ↑, per-tenant worst-case latency ↓),
+/// exact ties deduplicated to the first representative — the reference
+/// reduction fleet property tests compare [`FleetPlanner::plan`]'s
+/// incremental frontier against. All plans must route the same tenant
+/// set in the same order and carry planning records.
+pub fn frontier(plans: &[FleetPlan]) -> crate::Result<Vec<usize>> {
+    let objs = plans.iter().map(|p| p.objectives()).collect::<crate::Result<Vec<_>>>()?;
+    for (i, (ups, downs)) in objs.iter().enumerate() {
+        anyhow::ensure!(
+            ups.len() == objs[0].0.len() && downs.len() == objs[0].1.len(),
+            "fleet plan {i} routes a different tenant set than plan 0"
+        );
+    }
+    Ok(reference_frontier(&objs))
+}
+
+// ---------------------------------------------------------------------------
+// FleetPlanSet + stats
+// ---------------------------------------------------------------------------
+
+/// Effort counters for one [`FleetPlanner::plan`] call — the
+/// fleet-level analogue of `ShardStats`, surfaced in the CLI and the
+/// result JSON so pruning efficacy is observable (and bench-recorded in
+/// `BENCH_fleet.json`).
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Tenant→board-subset assignments in the enumerated space.
+    pub assignments: usize,
+    /// Assignments skipped because a (tenant, board) pair is
+    /// solo-infeasible, or a used board rejected its sub-workload —
+    /// exact skips, taken with or without pruning.
+    pub infeasible: usize,
+    /// Assignments skipped by the admissible solo-probe bound against
+    /// the incumbent frontier (only with [`FleetPlanner::prune`]).
+    pub bound_skipped: usize,
+    /// Assignments fully expanded into sub-plan combinations.
+    pub solved: usize,
+    /// Feasible fleet combinations offered to the frontier.
+    pub combos: usize,
+    /// Single-board planner invocations (sub-solve cache misses).
+    pub board_solves: usize,
+    /// Sub-solves answered from the cache.
+    pub cache_hits: usize,
+    /// Solo (tenant, board) probe solves for bounds and exact skips.
+    pub solo_probes: usize,
+}
+
+impl FleetStats {
+    /// JSON object (deterministic field order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("assignments", num(self.assignments)),
+            ("infeasible", num(self.infeasible)),
+            ("bound_skipped", num(self.bound_skipped)),
+            ("solved", num(self.solved)),
+            ("combos", num(self.combos)),
+            ("board_solves", num(self.board_solves)),
+            ("cache_hits", num(self.cache_hits)),
+            ("solo_probes", num(self.solo_probes)),
+        ])
+    }
+}
+
+/// What [`FleetPlanner::plan`] returns: the fleet Pareto frontier (every
+/// kept plan is non-dominated — unlike [`crate::plan::PlanSet`], the
+/// exhaustive listing is not retained at fleet scale), the scalar
+/// objective picks, and the search effort counters.
+#[derive(Debug, Clone)]
+pub struct FleetPlanSet {
+    /// The non-dominated fleet plans, in enumeration order.
+    pub plans: Vec<FleetPlan>,
+    /// Indices of the frontier plans — always `0..plans.len()`, kept for
+    /// shape parity with [`crate::plan::PlanSet`].
+    pub frontier: Vec<usize>,
+    /// Index of the plan maximizing min-fps (first wins ties).
+    pub best_min: usize,
+    /// Index of the plan maximizing weighted fps (first wins ties).
+    pub best_weighted: usize,
+    /// Index of the workload-objective pick.
+    pub best: usize,
+    /// The objective that selected `best`.
+    pub objective: Objective,
+    /// Search effort counters.
+    pub stats: FleetStats,
+}
+
+impl FleetPlanSet {
+    /// JSON document for `flexipipe plan --fleet --json`: the frontier
+    /// plans, the objective pick inline under `best` (what
+    /// [`FleetPlan::load`] reads), the scalar picks as frontier indices,
+    /// and the effort counters.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("version", num(FLEET_VERSION)),
+            ("objective", Value::Str(self.objective.label().to_string())),
+            (
+                "frontier",
+                Value::Arr(self.frontier.iter().map(|&i| self.plans[i].to_json()).collect()),
+            ),
+            ("best_min_fps_frontier_index", num(self.best_min)),
+            ("best_weighted_fps_frontier_index", num(self.best_weighted)),
+            ("best_frontier_index", num(self.best)),
+            ("best", self.plans[self.best].to_json()),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetPlanner
+// ---------------------------------------------------------------------------
+
+/// A sub-workload solved on one board: which workload tenants it hosts
+/// (ascending) and the board's frontier sub-plans with their per-tenant
+/// objective vectors. Cached and shared across assignments — the same
+/// (board, tenant set) subproblem recurs in many assignments, and
+/// restricting to frontier sub-plans is exact: a dominated sub-plan can
+/// only produce a dominated fleet combination (fps sums, latency maxes,
+/// and cost are all monotone in the sub-plan's coordinates).
+struct SubSolve {
+    /// Workload tenant indices hosted here, ascending.
+    tenant_idx: Vec<usize>,
+    /// The board's frontier sub-plans.
+    plans: Vec<SubPlan>,
+}
+
+/// One frontier sub-plan with its objective vectors pre-extracted.
+struct SubPlan {
+    plan: DeploymentPlan,
+    /// Per-tenant planned fps, parallel to [`SubSolve::tenant_idx`].
+    fps: Vec<f64>,
+    /// Per-tenant planned worst-case latency (seconds), same order.
+    lat: Vec<f64>,
+}
+
+/// Sub-solve cache key: (board index, hosted-tenant bitmask,
+/// replicated-tenant bitmask restricted to the hosted set — replication
+/// changes which constraints the sub-workload enforces, so it is part of
+/// the identity).
+type SubSolveKey = (usize, u64, u64);
+type SubSolveCache = HashMap<SubSolveKey, Result<Arc<SubSolve>, String>>;
+
+/// Places N tenants across the fleet's M boards as one optimization.
+///
+/// The search enumerates, per tenant, every non-empty board subset of
+/// size ≤ [`FleetPlanner::replicas`] (assignments, tenant 0 outermost,
+/// subsets ordered smallest-first); solves each used board's
+/// sub-workload with the single-board [`Planner`] (sub-solves cached
+/// across assignments); and combines per-board frontier sub-plans into
+/// fleet plans — fps summing over a tenant's replicas, latency maxing,
+/// cost summing over used boards — reduced incrementally to the
+/// (cost ↓, fps ↑, latency ↓) frontier by the shared [`FrontierMerge`].
+///
+/// With [`FleetPlanner::prune`], assignments are bound-skipped against
+/// the incumbent frontier using admissible solo-probe bounds (per-tenant
+/// fps upper = sum of solo fps over the assigned boards; latency lower =
+/// max of solo latencies; cost exact) — incumbents found on earlier
+/// assignments prune later ones, and the pruned frontier is bit-equal to
+/// the exhaustive one (property-pinned). Solo-infeasible (tenant, board)
+/// pairs are skipped exactly in both modes: a model that cannot fit a
+/// board alone cannot fit it with company.
+///
+/// Constraint semantics under replication: a replicated tenant's
+/// [`Constraint::MinFps`] floor applies to its *summed* fleet fps (the
+/// per-board sub-workload drops the floor); [`Constraint::Slo`] ceilings
+/// stay per-board, because fleet latency is the max over replicas —
+/// every replica must meet the ceiling on its own.
+#[derive(Debug, Clone)]
+pub struct FleetPlanner {
+    /// The fleet to place onto.
+    pub fleet: FleetSpec,
+    /// Split granularity forwarded to every per-board [`Planner`].
+    pub steps: usize,
+    /// Sharing regimes forwarded to every per-board [`Planner`].
+    pub schedule: ScheduleMode,
+    /// Temporal period bound (seconds) forwarded per board.
+    pub max_period_s: f64,
+    /// Interleave factor bound forwarded per board.
+    pub max_interleave: usize,
+    /// Reconfiguration cost model forwarded per board.
+    pub reconfig: ReconfigModel,
+    /// Solo DES calibration frames forwarded per board.
+    pub calib_frames: usize,
+    /// Admission ceiling on frames per slice, forwarded per board.
+    pub max_slice_frames: usize,
+    /// DES validation frames forwarded per board (0 = closed-form only).
+    pub sim_frames: usize,
+    /// Branch-and-bound: prune inside each board's search *and*
+    /// bound-skip whole assignments against the incumbent fleet
+    /// frontier. Frontier contents are identical either way.
+    pub prune: bool,
+    /// Largest number of boards one tenant may be replicated across.
+    /// Default 2.
+    pub max_replicas: usize,
+}
+
+impl FleetPlanner {
+    /// Plan onto a fleet (defaults match [`Planner::across`];
+    /// `max_replicas` defaults to 2).
+    pub fn over(fleet: FleetSpec) -> FleetPlanner {
+        FleetPlanner {
+            fleet,
+            steps: 16,
+            schedule: ScheduleMode::Spatial,
+            max_period_s: 0.5,
+            max_interleave: 1,
+            reconfig: ReconfigModel::default(),
+            calib_frames: 6,
+            max_slice_frames: 4096,
+            sim_frames: 0,
+            prune: false,
+            max_replicas: 2,
+        }
+    }
+
+    /// Set the split granularity.
+    pub fn steps(mut self, steps: usize) -> FleetPlanner {
+        self.steps = steps;
+        self
+    }
+
+    /// Set the sharing regime(s) every board enumerates.
+    pub fn schedule(mut self, mode: ScheduleMode) -> FleetPlanner {
+        self.schedule = mode;
+        self
+    }
+
+    /// Set the temporal period bound (seconds).
+    pub fn max_period(mut self, seconds: f64) -> FleetPlanner {
+        self.max_period_s = seconds;
+        self
+    }
+
+    /// Set the largest per-tenant interleave factor.
+    pub fn interleave(mut self, k: usize) -> FleetPlanner {
+        self.max_interleave = k;
+        self
+    }
+
+    /// Set the reconfiguration cost model.
+    pub fn reconfig(mut self, model: ReconfigModel) -> FleetPlanner {
+        self.reconfig = model;
+        self
+    }
+
+    /// Enable the DES validation pass on per-board frontier plans.
+    pub fn validate(mut self, frames: usize) -> FleetPlanner {
+        self.sim_frames = frames;
+        self
+    }
+
+    /// Enable branch-and-bound pruning (per-board and fleet-level).
+    pub fn prune(mut self, on: bool) -> FleetPlanner {
+        self.prune = on;
+        self
+    }
+
+    /// Set the replication cap (boards per tenant).
+    pub fn replicas(mut self, k: usize) -> FleetPlanner {
+        self.max_replicas = k;
+        self
+    }
+
+    /// The single-board [`Planner`] this fleet planner runs on `board`
+    /// (every knob forwarded).
+    pub fn board_planner(&self, board: &Board) -> Planner {
+        Planner {
+            boards: vec![board.clone()],
+            steps: self.steps,
+            schedule: self.schedule,
+            max_period_s: self.max_period_s,
+            max_interleave: self.max_interleave,
+            reconfig: self.reconfig.clone(),
+            calib_frames: self.calib_frames,
+            max_slice_frames: self.max_slice_frames,
+            sim_frames: self.sim_frames,
+            prune: self.prune,
+        }
+    }
+
+    /// Solve one board's sub-workload (memoized). `replicated` marks the
+    /// workload tenants whose fps floor is lifted to the fleet level.
+    fn solve_board(
+        &self,
+        workload: &Workload,
+        board_idx: usize,
+        tenant_idx: &[usize],
+        replicated: u64,
+        cache: &mut SubSolveCache,
+        stats: &mut FleetStats,
+    ) -> Result<Arc<SubSolve>, String> {
+        let tmask: u64 = tenant_idx.iter().fold(0, |acc, &t| acc | (1 << t));
+        let key = (board_idx, tmask, replicated & tmask);
+        if let Some(hit) = cache.get(&key) {
+            stats.cache_hits += 1;
+            return hit.clone();
+        }
+        stats.board_solves += 1;
+        let specs: Vec<TenantSpec> = tenant_idx
+            .iter()
+            .map(|&t| {
+                let spec = &workload.tenants[t];
+                let constraints = if replicated & (1 << t) != 0 {
+                    // Replicated tenant: the fps floor is checked against
+                    // the *summed* fleet rate, so the per-board solve
+                    // drops it; SLO ceilings stay (latency maxes over
+                    // replicas, so each replica must meet them alone).
+                    spec.constraints
+                        .iter()
+                        .filter(|c| matches!(c, Constraint::Slo(_)))
+                        .cloned()
+                        .collect()
+                } else {
+                    spec.constraints.clone()
+                };
+                TenantSpec {
+                    net: spec.net.clone(),
+                    weight: spec.weight,
+                    constraints,
+                }
+            })
+            .collect();
+        let sub = Workload {
+            tenants: specs,
+            mode: workload.mode,
+            objective: workload.objective,
+        };
+        let planner = self.board_planner(&self.fleet.boards[board_idx].board);
+        let result = match planner.plan(&sub) {
+            Ok(set) => {
+                let mut plans = Vec::with_capacity(set.frontier.len());
+                let mut broken = None;
+                for &i in &set.frontier {
+                    let plan = set.plans[i].clone();
+                    match (plan.fps_vec(), plan.latency_vec()) {
+                        (Some(fps), Some(lat)) => plans.push(SubPlan { plan, fps, lat }),
+                        _ => broken = Some("planner produced a plan without records".to_string()),
+                    }
+                }
+                match broken {
+                    Some(e) => Err(e),
+                    None => Ok(Arc::new(SubSolve {
+                        tenant_idx: tenant_idx.to_vec(),
+                        plans,
+                    })),
+                }
+            }
+            Err(e) => Err(e.to_string()),
+        };
+        cache.insert(key, result.clone());
+        result
+    }
+
+    /// Place the workload across the fleet and reduce every feasible
+    /// placement to the (fleet cost ↓, per-tenant fps ↑, worst-case
+    /// latency ↓) Pareto frontier. See the type-level docs for the
+    /// search structure and exactness argument. Errors when the fleet or
+    /// workload is invalid, when tenant model names collide (routing is
+    /// keyed by them), when the assignment space exceeds the enumeration
+    /// cap, or when no placement is feasible.
+    pub fn plan(&self, workload: &Workload) -> crate::Result<FleetPlanSet> {
+        workload.validate()?;
+        self.fleet.validate()?;
+        let n = workload.tenants.len();
+        let m = self.fleet.boards.len();
+        anyhow::ensure!(n <= 64, "fleet placement supports at most 64 tenants (got {n})");
+        for i in 0..n {
+            for j in 0..i {
+                anyhow::ensure!(
+                    workload.tenants[i].net.name != workload.tenants[j].net.name,
+                    "duplicate tenant model '{}': fleet routing is keyed by model name",
+                    workload.tenants[i].net.name
+                );
+            }
+        }
+
+        // Candidate board subsets per tenant: non-empty, at most
+        // max_replicas boards, smallest subsets first (so the
+        // cheap/simple placements seed the frontier and bound the rest).
+        let cap = self.max_replicas.clamp(1, m);
+        let mut subsets: Vec<u32> = (1u32..(1u32 << m))
+            .filter(|s| (s.count_ones() as usize) <= cap)
+            .collect();
+        subsets.sort_by_key(|s| (s.count_ones(), *s));
+        let base = subsets.len();
+        let space = (base as u128)
+            .checked_pow(n as u32)
+            .filter(|&s| s <= MAX_ASSIGNMENTS)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fleet assignment space {base}^{n} exceeds the enumeration cap \
+                     ({MAX_ASSIGNMENTS}): reduce boards, tenants, or --max-replicas"
+                )
+            })?;
+        let total = space as usize;
+
+        let mut stats = FleetStats {
+            assignments: total,
+            ..FleetStats::default()
+        };
+
+        // Solo probes: one unconstrained single-tenant solve per
+        // (tenant, board). An Err is an *exact* skip for every
+        // assignment placing that tenant there (a model that cannot fit
+        // the board alone cannot fit it with company); an Ok yields the
+        // admissible bounds (solo fps is an upper bound on the tenant's
+        // fps under any sharing, solo latency a lower bound on its
+        // worst-case latency). Overlay needs two tenants, so its probes
+        // run temporal (same full-board solo pipeline).
+        let probe_schedule = match self.schedule {
+            ScheduleMode::Temporal | ScheduleMode::Overlay => ScheduleMode::Temporal,
+            _ => ScheduleMode::Spatial,
+        };
+        let mut solo: Vec<Vec<Result<(f64, f64), String>>> = Vec::with_capacity(n);
+        for spec in &workload.tenants {
+            let mut row = Vec::with_capacity(m);
+            for fb in &self.fleet.boards {
+                stats.solo_probes += 1;
+                let probe = Workload {
+                    tenants: vec![TenantSpec {
+                        net: spec.net.clone(),
+                        weight: spec.weight,
+                        constraints: Vec::new(),
+                    }],
+                    mode: workload.mode,
+                    objective: Objective::MaxMinFps,
+                };
+                let planner = self.board_planner(&fb.board).schedule(probe_schedule);
+                row.push(match planner.plan(&probe) {
+                    Ok(set) => {
+                        let fps_ub = set
+                            .plans
+                            .iter()
+                            .filter_map(|p| p.min_fps())
+                            .fold(0.0f64, f64::max);
+                        let lat_lb = set
+                            .plans
+                            .iter()
+                            .filter_map(|p| p.latency_vec())
+                            .map(|v| v[0])
+                            .fold(f64::INFINITY, f64::min);
+                        Ok((fps_ub, lat_lb))
+                    }
+                    Err(e) => Err(e.to_string()),
+                });
+            }
+            solo.push(row);
+        }
+
+        let mut cache: SubSolveCache = HashMap::new();
+        let mut merge = FrontierMerge::default();
+        // Live frontier members: candidate index → (plan, ups, downs).
+        // Only survivors are retained (fleet plans embed whole networks;
+        // keeping every offered candidate would not scale).
+        let mut live: HashMap<usize, (FleetPlan, Vec<f64>, Vec<f64>)> = HashMap::new();
+        let mut next_idx = 0usize;
+        let mut digits = vec![0usize; n];
+
+        for a in 0..total {
+            // Mixed-radix decode, tenant 0 outermost (deterministic
+            // enumeration order → stable frontier representatives).
+            let mut rem = a;
+            for t in (0..n).rev() {
+                digits[t] = rem % base;
+                rem /= base;
+            }
+            let masks: Vec<u32> = digits.iter().map(|&d| subsets[d]).collect();
+
+            // Exact skip: solo-infeasible (tenant, board) pair.
+            let pair_infeasible = (0..n).any(|t| {
+                (0..m).any(|b| masks[t] & (1 << b) != 0 && solo[t][b].is_err())
+            });
+            if pair_infeasible {
+                stats.infeasible += 1;
+                continue;
+            }
+
+            let used: u32 = masks.iter().fold(0, |acc, &mk| acc | mk);
+            let cost: f64 = (0..m)
+                .filter(|&b| used & (1 << b) != 0)
+                .map(|b| self.fleet.boards[b].cost)
+                .sum();
+
+            if self.prune {
+                // Admissible assignment bound: fps can only sum to the
+                // solo upper bounds, latency can only max to at least
+                // the solo lower bounds, cost is exact. If an incumbent
+                // weakly dominates the bound, it weakly dominates every
+                // combination of this assignment — skip it whole. (The
+                // incumbent was enumerated earlier, so exact-tie
+                // representatives are unchanged: pruned ≡ exhaustive.)
+                let ups_bound: Vec<f64> = (0..n)
+                    .map(|t| {
+                        (0..m)
+                            .filter(|&b| masks[t] & (1 << b) != 0)
+                            .map(|b| solo[t][b].as_ref().map(|s| s.0).unwrap_or(0.0))
+                            .sum()
+                    })
+                    .collect();
+                let mut downs_bound = Vec::with_capacity(n + 1);
+                downs_bound.push(cost);
+                for t in 0..n {
+                    downs_bound.push(
+                        (0..m)
+                            .filter(|&b| masks[t] & (1 << b) != 0)
+                            .map(|b| solo[t][b].as_ref().map(|s| s.1).unwrap_or(0.0))
+                            .fold(0.0f64, f64::max),
+                    );
+                }
+                let floor_unreachable = workload.tenants.iter().enumerate().any(|(t, spec)| {
+                    plan::fps_floor(&spec.constraints).map_or(false, |f| ups_bound[t] < f)
+                });
+                let dominated = live.values().any(|(_, u, d)| {
+                    vec_weakly_dominates(u, d, &ups_bound, &downs_bound)
+                });
+                if floor_unreachable || dominated {
+                    stats.bound_skipped += 1;
+                    continue;
+                }
+            }
+
+            // Solve every used board's sub-workload (cached).
+            let replicated: u64 = (0..n)
+                .filter(|&t| masks[t].count_ones() > 1)
+                .fold(0, |acc, t| acc | (1 << t));
+            let used_boards: Vec<usize> = (0..m).filter(|&b| used & (1 << b) != 0).collect();
+            let mut solves: Vec<Arc<SubSolve>> = Vec::with_capacity(used_boards.len());
+            let mut board_failed = false;
+            for &b in &used_boards {
+                let tenant_idx: Vec<usize> =
+                    (0..n).filter(|&t| masks[t] & (1 << b) != 0).collect();
+                match self.solve_board(workload, b, &tenant_idx, replicated, &mut cache, &mut stats)
+                {
+                    Ok(s) => solves.push(s),
+                    Err(_) => {
+                        board_failed = true;
+                        break;
+                    }
+                }
+            }
+            if board_failed {
+                stats.infeasible += 1;
+                continue;
+            }
+            stats.solved += 1;
+
+            // Cross product over per-board frontier sub-plans (first
+            // used board outermost).
+            let combo_count: usize = solves.iter().map(|s| s.plans.len()).product();
+            anyhow::ensure!(
+                combo_count <= MAX_COMBOS,
+                "assignment expands to {combo_count} sub-plan combinations (cap {MAX_COMBOS}): \
+                 reduce boards or --shard-steps"
+            );
+            let mut choice = vec![0usize; solves.len()];
+            for c in 0..combo_count {
+                let mut rem = c;
+                for i in (0..solves.len()).rev() {
+                    choice[i] = rem % solves[i].plans.len();
+                    rem /= solves[i].plans.len();
+                }
+                let mut fps = vec![0.0f64; n];
+                let mut lat = vec![0.0f64; n];
+                for (i, s) in solves.iter().enumerate() {
+                    let sp = &s.plans[choice[i]];
+                    for (pos, &t) in s.tenant_idx.iter().enumerate() {
+                        fps[t] += sp.fps[pos];
+                        lat[t] = lat[t].max(sp.lat[pos]);
+                    }
+                }
+                // Fleet-level fps floors (replicated tenants' per-board
+                // floors were lifted here).
+                let meets = workload.tenants.iter().enumerate().all(|(t, spec)| {
+                    plan::fps_floor(&spec.constraints).map_or(true, |f| fps[t] >= f)
+                });
+                if !meets {
+                    continue;
+                }
+                stats.combos += 1;
+                let ups = fps.clone();
+                let mut downs = Vec::with_capacity(n + 1);
+                downs.push(cost);
+                downs.extend_from_slice(&lat);
+                let idx = next_idx;
+                next_idx += 1;
+                let before: Vec<usize> = merge.members().to_vec();
+                if merge.offer_vec(&ups, &downs, idx) {
+                    // Build the plan only once it survived the offer.
+                    let boards_out: Vec<FleetPlacement> = used_boards
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| FleetPlacement {
+                            id: self.fleet.boards[b].id.clone(),
+                            cost: self.fleet.boards[b].cost,
+                            plan: solves[i].plans[choice[i]].plan.clone(),
+                        })
+                        .collect();
+                    let tenants_out: Vec<TenantRoute> = (0..n)
+                        .map(|t| TenantRoute {
+                            net: workload.tenants[t].net.name.clone(),
+                            routes: used_boards
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, &b)| masks[t] & (1 << b) != 0)
+                                .map(|(i, &b)| {
+                                    let s = &solves[i];
+                                    let pos = s
+                                        .tenant_idx
+                                        .iter()
+                                        .position(|&x| x == t)
+                                        .expect("assigned board hosts the tenant");
+                                    Route {
+                                        board: self.fleet.boards[b].id.clone(),
+                                        weight: s.plans[choice[i]].fps[pos] / fps[t],
+                                    }
+                                })
+                                .collect(),
+                        })
+                        .collect();
+                    let plan = FleetPlan {
+                        version: FLEET_VERSION,
+                        boards: boards_out,
+                        routing: RoutingTable {
+                            tenants: tenants_out,
+                        },
+                    };
+                    for dropped in &before {
+                        if !merge.members().contains(dropped) {
+                            live.remove(dropped);
+                        }
+                    }
+                    live.insert(idx, (plan, ups, downs));
+                }
+            }
+        }
+
+        let frontier_idx = merge.into_indices();
+        let mut plans = Vec::with_capacity(frontier_idx.len());
+        let mut objs = Vec::with_capacity(frontier_idx.len());
+        for idx in frontier_idx {
+            let (p, u, d) = live.remove(&idx).expect("frontier member retained");
+            plans.push(p);
+            objs.push((u, d));
+        }
+        if plans.is_empty() {
+            let mut reasons = Vec::new();
+            for (t, row) in solo.iter().enumerate() {
+                for (b, r) in row.iter().enumerate() {
+                    if let Err(e) = r {
+                        reasons.push(format!(
+                            "{} on {}: {e}",
+                            workload.tenants[t].net.name, self.fleet.boards[b].id
+                        ));
+                    }
+                }
+            }
+            anyhow::bail!(
+                "no feasible fleet placement ({} of {} assignments infeasible){}",
+                stats.infeasible,
+                stats.assignments,
+                if reasons.is_empty() {
+                    String::new()
+                } else {
+                    format!("; solo-infeasible pairs: {}", reasons.join("; "))
+                }
+            );
+        }
+        // The survivors are mutually non-dominated and tie-free by
+        // construction; the reference reduction must keep all of them.
+        debug_assert_eq!(reference_frontier(&objs).len(), objs.len());
+
+        let argmax = |score: &dyn Fn(usize) -> f64| -> usize {
+            let mut best = 0;
+            for i in 1..plans.len() {
+                if score(i) > score(best) {
+                    best = i;
+                }
+            }
+            best
+        };
+        let min_of = |i: usize| objs[i].0.iter().copied().fold(f64::INFINITY, f64::min);
+        let weighted_of = |i: usize| -> f64 {
+            objs[i]
+                .0
+                .iter()
+                .zip(&workload.tenants)
+                .map(|(f, t)| f * t.weight)
+                .sum()
+        };
+        let best_min = argmax(&min_of);
+        let best_weighted = argmax(&weighted_of);
+        let best = match workload.objective {
+            Objective::MaxMinFps => best_min,
+            Objective::MaxWeightedFps => best_weighted,
+        };
+        let frontier = (0..plans.len()).collect();
+        Ok(FleetPlanSet {
+            plans,
+            frontier,
+            best_min,
+            best_weighted,
+            best,
+            objective: workload.objective,
+            stats,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet failover
+// ---------------------------------------------------------------------------
+
+/// One tenant moved off a lost board onto a surviving peer.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    /// The migrated tenant's model name.
+    pub net: String,
+    /// The lost board it was displaced from.
+    pub from: String,
+    /// The surviving board now hosting it.
+    pub to: String,
+}
+
+/// One replica dropped from a lost board whose tenant is still served by
+/// replicas on surviving boards — degraded throughput, not an outage.
+#[derive(Debug, Clone)]
+pub struct DroppedReplica {
+    /// The tenant's model name.
+    pub net: String,
+    /// The lost board the replica ran on.
+    pub board: String,
+}
+
+/// One tenant dropped from the fleet entirely, with every reason the
+/// failover tried and failed (lost board first, then each peer).
+#[derive(Debug, Clone)]
+pub struct FleetShedEntry {
+    /// The dropped tenant's model name.
+    pub net: String,
+    /// The lost board it was displaced from.
+    pub board: String,
+    /// Why no surviving board could admit it (joined per-board reasons).
+    pub reason: String,
+}
+
+/// Outcome of [`FleetPlanner::replan`]: the degraded fleet plan (if any
+/// board still serves anything) and the explicit fate of every displaced
+/// tenant — migrated, dropped replica, or shed. Never-silent shedding is
+/// the fleet-level contract, same as [`crate::plan::ReplanOutcome`].
+#[derive(Debug, Clone)]
+pub struct FleetReplanOutcome {
+    /// The degraded fleet plan; `None` when nothing survives.
+    pub plan: Option<FleetPlan>,
+    /// Id of the lost board the fault was applied to.
+    pub lost: String,
+    /// The lost board's surviving capacity the single-board re-plan was
+    /// computed against.
+    pub board: Board,
+    /// Which [`crate::plan::Planner::replan`] phase decided the lost
+    /// board's own re-plan (warm start / delta admission / full search).
+    pub phase: ReplanPhase,
+    /// Tenants migrated onto surviving peers, in displacement order.
+    pub migrated: Vec<Migration>,
+    /// Replicas dropped without an outage (surviving replicas remain).
+    pub dropped_replicas: Vec<DroppedReplica>,
+    /// Tenants dropped from the fleet entirely, with reasons.
+    pub shed: Vec<FleetShedEntry>,
+}
+
+impl FleetReplanOutcome {
+    /// JSON document for `flexipipe replan --fleet-plan` (deterministic
+    /// field order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("replanned", Value::Bool(self.plan.is_some())),
+            ("lost", Value::Str(self.lost.clone())),
+            ("phase", Value::Str(self.phase.label().to_string())),
+            ("board", plan::board_to_json(&self.board)),
+            (
+                "migrated",
+                Value::Arr(
+                    self.migrated
+                        .iter()
+                        .map(|mig| {
+                            obj(vec![
+                                ("net", Value::Str(mig.net.clone())),
+                                ("from", Value::Str(mig.from.clone())),
+                                ("to", Value::Str(mig.to.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "dropped_replicas",
+                Value::Arr(
+                    self.dropped_replicas
+                        .iter()
+                        .map(|d| {
+                            obj(vec![
+                                ("net", Value::Str(d.net.clone())),
+                                ("board", Value::Str(d.board.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "shed",
+                Value::Arr(
+                    self.shed
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                ("net", Value::Str(s.net.clone())),
+                                ("board", Value::Str(s.board.clone())),
+                                ("reason", Value::Str(s.reason.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "plan",
+                self.plan.as_ref().map_or(Value::Null, |p| p.to_json()),
+            ),
+        ])
+    }
+}
+
+impl FleetPlanner {
+    /// Fleet-level failover: apply `faults` to the board named `lost`
+    /// and migrate whatever it can no longer serve onto surviving peers.
+    ///
+    /// 1. The lost board re-plans its own sub-workload on its surviving
+    ///    capacity via the single-board [`Planner::replan`] (warm start
+    ///    → delta admission → full search with graceful degradation).
+    /// 2. Every tenant that board shed is offered to the surviving peers
+    ///    **first-fit in fleet order** (boards already hosting a replica
+    ///    of it are skipped): the peer's sub-workload plus the displaced
+    ///    tenant is re-planned whole; the first peer that admits it
+    ///    takes it ([`Migration`]).
+    /// 3. A displaced tenant no peer admits is a [`DroppedReplica`] if
+    ///    surviving boards still host it, otherwise a [`FleetShedEntry`]
+    ///    with every reason collected — never a silent drop.
+    ///
+    /// The returned plan's routing table is rebuilt from the surviving
+    /// plans' planning records (fps-proportional weights, same
+    /// arithmetic as [`FleetPlanner::plan`]); hand-authored plans
+    /// without records must be regenerated first.
+    pub fn replan(
+        &self,
+        incumbent: &FleetPlan,
+        faults: &crate::fault::FaultPlan,
+        lost: &str,
+    ) -> crate::Result<FleetReplanOutcome> {
+        incumbent.validate()?;
+        faults.validate()?;
+        let lost_pos = incumbent.boards.iter().position(|p| p.id == lost).ok_or_else(|| {
+            anyhow::anyhow!(
+                "fleet plan has no board '{lost}' (boards: {})",
+                incumbent
+                    .boards
+                    .iter()
+                    .map(|p| p.id.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let lost_plan = &incumbent.boards[lost_pos].plan;
+        let planner = self.board_planner(&lost_plan.board);
+        let outcome = planner.replan(lost_plan, faults)?;
+
+        let mut new_plans: Vec<Option<DeploymentPlan>> =
+            incumbent.boards.iter().map(|p| Some(p.plan.clone())).collect();
+        new_plans[lost_pos] = outcome.plan.clone();
+
+        let mut migrated = Vec::new();
+        let mut dropped_replicas = Vec::new();
+        let mut shed = Vec::new();
+        for e in &outcome.shed {
+            let pt = lost_plan
+                .tenants
+                .iter()
+                .find(|t| t.net.name == e.net)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("shed tenant '{}' is not on the lost board's plan", e.net)
+                })?;
+            let spec = TenantSpec {
+                net: pt.net.clone(),
+                weight: pt.weight,
+                constraints: pt.constraints.clone(),
+            };
+            let mut reasons = vec![format!("{lost}: {}", e.reason)];
+            let mut landed: Option<String> = None;
+            for (i, peer) in incumbent.boards.iter().enumerate() {
+                if i == lost_pos {
+                    continue;
+                }
+                let Some(current) = new_plans[i].as_ref() else {
+                    continue;
+                };
+                if current.tenants.iter().any(|t| t.net.name == e.net) {
+                    // Already a replica host; migrating here would
+                    // double-place the tenant on one board.
+                    continue;
+                }
+                let mut tenants: Vec<TenantSpec> = current
+                    .tenants
+                    .iter()
+                    .map(|t| TenantSpec {
+                        net: t.net.clone(),
+                        weight: t.weight,
+                        constraints: t.constraints.clone(),
+                    })
+                    .collect();
+                tenants.push(spec.clone());
+                let workload = Workload {
+                    tenants,
+                    mode: current.mode,
+                    objective: Objective::MaxMinFps,
+                };
+                match self.board_planner(&current.board).plan(&workload) {
+                    Ok(set) => {
+                        new_plans[i] = Some(set.plans[set.best].clone());
+                        landed = Some(peer.id.clone());
+                        break;
+                    }
+                    Err(err) => reasons.push(format!("{}: {err}", peer.id)),
+                }
+            }
+            match landed {
+                Some(to) => migrated.push(Migration {
+                    net: e.net.clone(),
+                    from: lost.to_string(),
+                    to,
+                }),
+                None => {
+                    let replica_survives = incumbent
+                        .routing
+                        .tenants
+                        .iter()
+                        .find(|tr| tr.net == e.net)
+                        .map_or(false, |tr| tr.routes.iter().any(|r| r.board != lost));
+                    if replica_survives {
+                        dropped_replicas.push(DroppedReplica {
+                            net: e.net.clone(),
+                            board: lost.to_string(),
+                        });
+                    } else {
+                        shed.push(FleetShedEntry {
+                            net: e.net.clone(),
+                            board: lost.to_string(),
+                            reason: reasons.join("; "),
+                        });
+                    }
+                }
+            }
+        }
+
+        let mut placements = Vec::new();
+        for (i, p) in incumbent.boards.iter().enumerate() {
+            if let Some(pl) = new_plans[i].take() {
+                placements.push(FleetPlacement {
+                    id: p.id.clone(),
+                    cost: p.cost,
+                    plan: pl,
+                });
+            }
+        }
+        let plan = if placements.is_empty() {
+            None
+        } else {
+            Some(reroute(incumbent, placements)?)
+        };
+        Ok(FleetReplanOutcome {
+            plan,
+            lost: lost.to_string(),
+            board: outcome.board,
+            phase: outcome.phase,
+            migrated,
+            dropped_replicas,
+            shed,
+        })
+    }
+}
+
+/// Rebuild a degraded fleet plan's routing table from the surviving
+/// placements' planning records: weights are fps-proportional over each
+/// tenant's surviving hosts (the same arithmetic [`FleetPlanner::plan`]
+/// routes with), tenant order preserved from the incumbent, fully-shed
+/// tenants absent.
+fn reroute(incumbent: &FleetPlan, placements: Vec<FleetPlacement>) -> crate::Result<FleetPlan> {
+    let mut tenants = Vec::new();
+    for tr in &incumbent.routing.tenants {
+        let mut hosted: Vec<(String, f64)> = Vec::new();
+        for p in &placements {
+            if let Some(t) = p.plan.tenants.iter().find(|t| t.net.name == tr.net) {
+                let rec = t.record.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "board '{}' has no planning record for '{}' — regenerate the fleet \
+                         plan with `flexipipe plan --fleet`",
+                        p.id,
+                        tr.net
+                    )
+                })?;
+                hosted.push((p.id.clone(), rec.fps));
+            }
+        }
+        if hosted.is_empty() {
+            continue;
+        }
+        let total: f64 = hosted.iter().map(|(_, f)| f).sum();
+        tenants.push(TenantRoute {
+            net: tr.net.clone(),
+            routes: hosted
+                .into_iter()
+                .map(|(b, f)| Route {
+                    board: b,
+                    weight: f / total,
+                })
+                .collect(),
+        });
+    }
+    let plan = FleetPlan {
+        version: FLEET_VERSION,
+        boards: placements,
+        routing: RoutingTable { tenants },
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+// ---------------------------------------------------------------------------
+// Fleet simulation report
+// ---------------------------------------------------------------------------
+
+/// One route's DES measurement inside a [`FleetTenantSim`].
+#[derive(Debug, Clone)]
+pub struct FleetRouteSim {
+    /// Fleet board id.
+    pub board: String,
+    /// Simulated fps this board serves the tenant at.
+    pub fps: f64,
+    /// This board's simulated share of the tenant's total fps.
+    pub weight: f64,
+}
+
+/// One tenant's fleet-wide DES measurement: summed fps, worst analytic
+/// sojourn over its replicas, and the per-route breakdown.
+#[derive(Debug, Clone)]
+pub struct FleetTenantSim {
+    /// Tenant model name.
+    pub net: String,
+    /// Simulated fleet fps — the sum over the tenant's routes.
+    pub fps: f64,
+    /// Worst analytic sojourn bound over the tenant's replicas
+    /// (seconds); `None` when any hosting plan lacks the bound.
+    pub worst_sojourn_s: Option<f64>,
+    /// Per-route measurements, in routing order.
+    pub routes: Vec<FleetRouteSim>,
+}
+
+/// Fleet-wide DES measurements for one executed [`FleetPlan`]
+/// ([`crate::sim::Simulator::simulate_fleet`]): each board's pinned
+/// engine runs once, and per-tenant reports merge through the routing
+/// table.
+#[derive(Debug, Clone)]
+pub struct FleetSimReport {
+    /// One entry per routed tenant, in routing order.
+    pub tenants: Vec<FleetTenantSim>,
+}
+
+impl FleetSimReport {
+    /// Simulated fleet fps per tenant (routing order).
+    pub fn tenant_fps(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.fps).collect()
+    }
+
+    /// JSON document for `flexipipe simulate --fleet-plan`
+    /// (deterministic field order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![(
+            "tenants",
+            Value::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        obj(vec![
+                            ("net", Value::Str(t.net.clone())),
+                            ("fps", Value::Num(t.fps)),
+                            (
+                                "worst_sojourn_s",
+                                t.worst_sojourn_s.map_or(Value::Null, Value::Num),
+                            ),
+                            (
+                                "routes",
+                                Value::Arr(
+                                    t.routes
+                                        .iter()
+                                        .map(|r| {
+                                            obj(vec![
+                                                ("board", Value::Str(r.board.clone())),
+                                                ("fps", Value::Num(r.fps)),
+                                                ("weight", Value::Num(r.weight)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::{zc706, zedboard};
+    use crate::model::zoo;
+    use crate::quant::QuantMode;
+
+    fn tiny_fleet() -> FleetSpec {
+        FleetSpec::new().board("edge-a", zedboard(), 1.0)
+    }
+
+    fn tiny_set() -> FleetPlanSet {
+        let workload = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+        FleetPlanner::over(tiny_fleet()).steps(4).plan(&workload).unwrap()
+    }
+
+    #[test]
+    fn fleet_spec_round_trips_through_json() {
+        let spec = FleetSpec::new()
+            .board("dc-zc706", zc706(), 1.0)
+            .board("edge-a", zedboard(), 0.25);
+        let text = spec.to_json().to_pretty();
+        let back = FleetSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_pretty(), text);
+        assert_eq!(back.boards[1].board.dsps, zedboard().dsps);
+    }
+
+    #[test]
+    fn fleet_spec_accepts_board_names_and_defaults_cost() {
+        let v = json::parse(
+            r#"{"version": 1, "boards": [{"id": "a", "board": "zc706"}]}"#,
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&v).unwrap();
+        assert_eq!(spec.boards[0].board.dsps, zc706().dsps);
+        assert_eq!(spec.boards[0].cost, 1.0);
+    }
+
+    #[test]
+    fn fleet_spec_rejects_unknown_version_and_duplicate_ids() {
+        let v = json::parse(
+            r#"{"version": 99, "boards": [{"id": "a", "board": "zc706"}]}"#,
+        )
+        .unwrap();
+        let err = FleetSpec::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        assert!(err.contains("1..=1"), "{err}");
+
+        let dup = FleetSpec::new()
+            .board("a", zedboard(), 1.0)
+            .board("a", zc706(), 1.0);
+        let err = dup.validate().unwrap_err().to_string();
+        assert!(err.contains("duplicate fleet board id 'a'"), "{err}");
+    }
+
+    #[test]
+    fn fleet_plan_rejects_unknown_version() {
+        let set = tiny_set();
+        let mut v = set.plans[set.best].to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("version".to_string(), num(99));
+        }
+        let err = FleetPlan::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("fleet-plan version 99"), "{err}");
+    }
+
+    #[test]
+    fn fleet_plan_round_trips_and_validates() {
+        let set = tiny_set();
+        let best = &set.plans[set.best];
+        best.validate().unwrap();
+        let text = best.to_json().to_pretty();
+        let back = FleetPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_pretty(), text);
+        assert_eq!(back.cost(), 1.0);
+        assert_eq!(back.fps_vec().unwrap(), best.fps_vec().unwrap());
+    }
+
+    #[test]
+    fn fleet_plan_validate_catches_broken_routing() {
+        let set = tiny_set();
+        // Weight off by 2x: conservation fails.
+        let mut bad = set.plans[set.best].clone();
+        bad.routing.tenants[0].routes[0].weight = 0.5;
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("sum to 0.5"), "{err}");
+        // Route to a board that does not exist.
+        let mut bad = set.plans[set.best].clone();
+        bad.routing.tenants[0].routes[0].board = "ghost".to_string();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown board 'ghost'"), "{err}");
+        // Hosted tenant with no route back to its board.
+        let mut bad = set.plans[set.best].clone();
+        bad.routing.tenants.clear();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_tenant_models_are_rejected() {
+        let workload = Workload::new(QuantMode::W8A8)
+            .tenant(zoo::lenet())
+            .tenant(zoo::lenet());
+        let err = FleetPlanner::over(tiny_fleet())
+            .steps(4)
+            .plan(&workload)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate tenant model 'lenet'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_lost_board_is_rejected() {
+        let set = tiny_set();
+        let err = FleetPlanner::over(tiny_fleet())
+            .steps(4)
+            .replan(&set.plans[set.best], &crate::fault::FaultPlan::none(), "nope")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no board 'nope'"), "{err}");
+        assert!(err.contains("edge-a"), "{err}");
+    }
+
+    // Synthetic pin of the placement arithmetic, mirrored numerically in
+    // Python (see docs/ARCHITECTURE.md §fleet — the repo's no-toolchain
+    // cross-check convention): replication sums fps / maxes latency,
+    // routing weights are fps fractions, and the reference frontier
+    // keeps exactly the non-dominated cost/fps/latency tuples with ties
+    // deduplicated to the first representative.
+    #[test]
+    fn placement_arithmetic_matches_python_mirror() {
+        // Tenant replicated on boards A (8.0 fps, 0.04 s) and
+        // B (5.5 fps, 0.07 s).
+        let fps_a = 8.0f64;
+        let fps_b = 5.5f64;
+        let total = fps_a + fps_b;
+        assert_eq!(total, 13.5);
+        assert_eq!(fps_a / total, 0.5925925925925926);
+        assert_eq!(fps_b / total, 0.4074074074074074);
+        assert_eq!(0.04f64.max(0.07), 0.07);
+        // Identical replicas split exactly in half.
+        assert_eq!(fps_a / (fps_a + fps_a), 0.5);
+
+        // Candidates (ups = [fps], downs = [cost, latency]):
+        //   c0 solo-A, c1 solo-B, c2 replicated, c3 duplicate of c0.
+        let objs = vec![
+            (vec![12.5], vec![1.0, 0.05]),
+            (vec![7.25], vec![0.6, 0.08]),
+            (vec![13.5], vec![1.6, 0.07]),
+            (vec![12.5], vec![1.0, 0.05]),
+        ];
+        assert_eq!(reference_frontier(&objs), vec![0, 1, 2]);
+        // The incremental accumulator agrees, including tie dedup.
+        let mut merge = FrontierMerge::default();
+        for (i, (u, d)) in objs.iter().enumerate() {
+            merge.offer_vec(u, d, i);
+        }
+        assert_eq!(merge.into_indices(), vec![0, 1, 2]);
+        // A strictly dominated candidate is rejected and evicts nothing.
+        let mut merge = FrontierMerge::default();
+        assert!(merge.offer_vec(&[12.5], &[1.0, 0.05], 0));
+        assert!(!merge.offer_vec(&[12.0], &[1.0, 0.06], 1));
+        assert_eq!(merge.members(), &[0]);
+    }
+
+    #[test]
+    fn single_board_fleet_weight_is_exactly_one() {
+        let set = tiny_set();
+        let best = &set.plans[set.best];
+        for tr in &best.routing.tenants {
+            assert_eq!(tr.routes.len(), 1);
+            assert_eq!(tr.routes[0].weight, 1.0);
+        }
+        // Objectives come straight from the records.
+        let (ups, downs) = best.objectives().unwrap();
+        assert_eq!(ups, best.fps_vec().unwrap());
+        assert_eq!(downs[0], 1.0);
+    }
+}

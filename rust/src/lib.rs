@@ -46,6 +46,12 @@
 //!   injected into the DES ([`sim::Simulator::simulate_faulted`]) and
 //!   typed plan deltas ([`fault::PlanDiff`]) with drain-overlapped
 //!   reconfiguration costs.
+//! - [`fleet`] — fleet-scale planning: place N tenants across M
+//!   heterogeneous boards ([`fleet::FleetPlanner`]) with hot-tenant
+//!   replication, cold-tenant spill onto shared boards, a versioned
+//!   [`fleet::FleetPlan`] (per-board plans + routing table), a global
+//!   (fleet cost ↓, fps ↑, latency ↓) frontier, and cross-board failover
+//!   ([`fleet::FleetPlanner::replan`]).
 //! - [`ingest`] — traffic-driven serving: seeded open-loop workloads
 //!   ([`ingest::TraceSpec`]), deterministic trace replay against a plan's
 //!   timeline ([`ingest::serve_trace`] → measured latency tails vs. the
@@ -126,6 +132,7 @@ pub mod board;
 pub mod coordinator;
 pub mod engine;
 pub mod fault;
+pub mod fleet;
 pub mod ingest;
 pub mod model;
 pub mod plan;

@@ -15,6 +15,11 @@
 //!                    [--seed 1] [--duration 20s] [--queue-cap 0] [--out trace.json]
 //! flexipipe plan     --diff a.json b.json           # typed plan delta
 //! flexipipe replan   --plan plan.json --faults faults.json [--json out.json]
+//! flexipipe plan     --fleet fleet.json --models vgg16,alexnet,zf \
+//!                    [--max-replicas 2] [--json fleet_plan.json]
+//! flexipipe simulate --fleet-plan fleet_plan.json [--frames 4]
+//! flexipipe replan   --fleet-plan fleet_plan.json --faults faults.json \
+//!                    [--lost board-id] [--json degraded.json]
 //! flexipipe allocate --model vgg16 --board zc706 --bits 16 [--arch flex]
 //! flexipipe simulate --model vgg16 --board zc706 --frames 4
 //! flexipipe report   [--no-paper]          # regenerate Table I
@@ -30,6 +35,7 @@
 use flexipipe::alloc::{allocator_for, ArchKind};
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
 use flexipipe::fault::FaultPlan;
+use flexipipe::fleet::{FleetPlan, FleetPlanner, FleetSpec};
 use flexipipe::ingest::{self, TraceSpec};
 use flexipipe::model::{config, Network};
 use flexipipe::plan::{Constraint, DeploymentPlan, Objective, Planner, TenantSpec, Workload};
@@ -141,6 +147,30 @@ fn specs() -> Vec<Spec> {
             None,
         ),
         opt(
+            "fleet",
+            "fleet-spec JSON (named boards with costs): place the workload \
+             across the whole fleet instead of one board (plan)",
+            None,
+        ),
+        opt(
+            "fleet-plan",
+            "fleet-plan JSON produced by `flexipipe plan --fleet --json` \
+             (simulate/replan)",
+            None,
+        ),
+        opt(
+            "max-replicas",
+            "largest number of boards one tenant may be replicated across \
+             (plan --fleet)",
+            Some("2"),
+        ),
+        opt(
+            "lost",
+            "fleet board id the fault plan hits; defaults to the fleet plan's \
+             first board (replan --fleet-plan)",
+            None,
+        ),
+        opt(
             "faults",
             "fault-plan JSON: inject seeded faults into `simulate --plan` or \
              drive `replan` (see examples/faults/)",
@@ -240,7 +270,13 @@ fn print_help() {
          scenario through the DES; `plan --diff a.json b.json` emits the minimal\n\
          drain-overlapped reconfiguration sequence between two plans; `replan\n\
          --plan P --faults F` re-plans the workload onto the surviving capacity\n\
-         with an explicit shed report.\n\n{}",
+         with an explicit shed report.\n\n\
+         fleet scale: `plan --fleet fleet.json --models …` places N tenants\n\
+         across M named boards (replication + spill) and emits a fleet plan =\n\
+         per-board plans + routing table; `simulate --fleet-plan P` runs every\n\
+         board's pinned engine and merges tenants through the routing weights;\n\
+         `replan --fleet-plan P --faults F [--lost ID]` migrates tenants\n\
+         displaced by a board loss onto surviving peers.\n\n{}",
         usage(&specs())
     );
 }
@@ -299,6 +335,9 @@ fn cmd_allocate(args: &Args) -> flexipipe::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> flexipipe::Result<()> {
+    if let Some(path) = args.get("fleet-plan") {
+        return cmd_simulate_fleet(args, path);
+    }
     if let Some(path) = args.get("plan") {
         return cmd_simulate_plan(args, path);
     }
@@ -843,18 +882,12 @@ fn cmd_search_shards(
 /// more boards and emit the deployment-plan document — the frontier plus
 /// the objective picks — as JSON (stdout, or `--json FILE`, which
 /// `simulate --plan` / `serve --plan` consume directly).
-fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
-    if args.has("diff") {
-        return cmd_plan_diff(args);
-    }
+/// Shared workload assembly for `plan` and `plan --fleet`: model list,
+/// per-tenant weights, SLO/fps-floor constraints, and the objective.
+fn build_workload(args: &Args) -> flexipipe::Result<(Vec<String>, Workload)> {
     let models = split_list(args.get("models").unwrap_or(args.get_or("model", "vgg16")));
     anyhow::ensure!(!models.is_empty(), "--models needs at least one model");
-    let boards = split_list(args.get("boards").unwrap_or(args.get_or("board", "zc706")))
-        .iter()
-        .map(|b| board::by_name(b))
-        .collect::<flexipipe::Result<Vec<_>>>()?;
     let mode = QuantMode::from_bits(args.get_parse("bits", 16usize)?)?;
-    let steps: usize = args.get_parse("shard-steps", 16)?;
     let weights: Vec<f64> = match args.get("weights") {
         None => vec![1.0; models.len()],
         Some(w) => split_list(w)
@@ -871,8 +904,6 @@ fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
         weights.len(),
         models.len()
     );
-    let schedule = parse_schedule(args)?;
-
     let mut workload = Workload::new(mode)
         .objective(Objective::parse(args.get_or("objective", "min-fps"))?);
     for (m, &weight) in models.iter().zip(&weights) {
@@ -888,6 +919,24 @@ fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
             workload.constrain(&name, Constraint::MinFps(fps))?;
         }
     }
+    Ok((models, workload))
+}
+
+fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
+    if args.has("diff") {
+        return cmd_plan_diff(args);
+    }
+    if let Some(fpath) = args.get("fleet") {
+        return cmd_plan_fleet(args, fpath);
+    }
+    let boards = split_list(args.get("boards").unwrap_or(args.get_or("board", "zc706")))
+        .iter()
+        .map(|b| board::by_name(b))
+        .collect::<flexipipe::Result<Vec<_>>>()?;
+    let steps: usize = args.get_parse("shard-steps", 16)?;
+    let schedule = parse_schedule(args)?;
+    let (models, workload) = build_workload(args)?;
+    let mode = workload.mode;
 
     let planner = Planner::across(boards)
         .steps(steps)
@@ -1025,6 +1074,174 @@ fn cmd_plan(args: &Args) -> flexipipe::Result<()> {
     Ok(())
 }
 
+/// `plan --fleet fleet.json`: place the workload across the whole fleet
+/// and emit the fleet frontier — per-board deployment plans plus routing
+/// tables — with the objective pick inline (what `simulate --fleet-plan`
+/// and `replan --fleet-plan` load back).
+fn cmd_plan_fleet(args: &Args, fpath: &str) -> flexipipe::Result<()> {
+    let fleet = FleetSpec::load(fpath)?;
+    let nboards = fleet.boards.len();
+    let steps: usize = args.get_parse("shard-steps", 16)?;
+    let (models, workload) = build_workload(args)?;
+    let planner = FleetPlanner::over(fleet)
+        .steps(steps)
+        .schedule(parse_schedule(args)?)
+        .max_period(args.get_parse("max-period", 0.5f64)?)
+        .interleave(args.get_parse("interleave", 1usize)?)
+        .validate(args.get_parse("sim-frames", 0usize)?)
+        .prune(prune_requested(args))
+        .replicas(args.get_parse("max-replicas", 2usize)?);
+    let t0 = std::time::Instant::now();
+    let set = planner.plan(&workload)?;
+    let s = &set.stats;
+    println!(
+        "fleet plan: {} tenants across {nboards} boards ({}, 1/{steps} quanta): {} plans on \
+         the frontier ({:.2?}; {} assignments — {} infeasible, {} bound-skipped, {} solved; \
+         {} board solves, {} cache hits)",
+        models.len(),
+        workload.mode,
+        set.plans.len(),
+        t0.elapsed(),
+        s.assignments,
+        s.infeasible,
+        s.bound_skipped,
+        s.solved,
+        s.board_solves,
+        s.cache_hits
+    );
+    for (i, p) in set.plans.iter().enumerate() {
+        let mut marks = String::new();
+        if i == set.best_min {
+            marks.push_str("  [best min-fps]");
+        }
+        if i == set.best_weighted {
+            marks.push_str("  [best weighted-fps]");
+        }
+        let fps: Vec<String> = p
+            .fps_vec()
+            .unwrap_or_default()
+            .iter()
+            .map(|f| format!("{f:.1}"))
+            .collect();
+        let lat: Vec<String> = p
+            .latency_vec()
+            .unwrap_or_default()
+            .iter()
+            .map(|l| format!("{:.1}", l * 1e3))
+            .collect();
+        println!(
+            "  [{i}] cost {:.2}  fps {} | lat {} ms{marks}",
+            p.cost(),
+            fps.join(" / "),
+            lat.join(" / ")
+        );
+        for pl in &p.boards {
+            let hosted: Vec<String> = pl
+                .plan
+                .tenants
+                .iter()
+                .map(|t| {
+                    match &t.record {
+                        Some(r) => format!("{} {:.1} fps", t.net.name, r.fps),
+                        None => t.net.name.clone(),
+                    }
+                })
+                .collect();
+            println!(
+                "      {} ({}, {}): {}",
+                pl.id,
+                pl.plan.board.name,
+                pl.plan.regime.label(),
+                hosted.join(", ")
+            );
+        }
+        for tr in &p.routing.tenants {
+            if tr.routes.len() > 1 {
+                let split: Vec<String> = tr
+                    .routes
+                    .iter()
+                    .map(|r| format!("{} {:.0}%", r.board, r.weight * 100.0))
+                    .collect();
+                println!("      routing {}: {}", tr.net, split.join(" + "));
+            }
+        }
+    }
+    let json = set.to_json().to_pretty();
+    match args.get("json") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            println!("fleet plans (frontier + objective picks) written to {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+/// `simulate --fleet-plan plan.json`: execute every board's pinned engine
+/// and merge per-tenant reports through the routing weights. Emits ONLY
+/// the report JSON on stdout (byte-stable — CI diffs two runs verbatim);
+/// the human summary goes to stderr.
+fn cmd_simulate_fleet(args: &Args, path: &str) -> flexipipe::Result<()> {
+    let plan = FleetPlan::load(path)?;
+    let frames = args.get_parse("frames", 4usize)?;
+    let report = Simulator { frames }.simulate_fleet(&plan)?;
+    for t in &report.tenants {
+        let routes: Vec<String> = t
+            .routes
+            .iter()
+            .map(|r| format!("{} {:.1} fps ({:.0}%)", r.board, r.fps, r.weight * 100.0))
+            .collect();
+        let sojourn = t
+            .worst_sojourn_s
+            .map(|s| format!("{:.2} ms", s * 1e3))
+            .unwrap_or_else(|| "-".to_string());
+        eprintln!(
+            "{:<12} {:>9.1} fps  worst sojourn {sojourn}  via {}",
+            t.net,
+            t.fps,
+            routes.join(" + ")
+        );
+    }
+    println!("{}", report.to_json().to_pretty());
+    Ok(())
+}
+
+/// `replan --fleet-plan plan.json --faults faults.json [--lost ID]`:
+/// apply the fault plan to one fleet board and migrate whatever it can no
+/// longer serve onto surviving peers. Prints the outcome JSON (migrations,
+/// dropped replicas, shed report, degraded plan) and optionally writes the
+/// degraded fleet plan to `--json`.
+fn cmd_replan_fleet(args: &Args, ppath: &str) -> flexipipe::Result<()> {
+    let fpath = args
+        .get("faults")
+        .ok_or_else(|| anyhow::anyhow!("replan --fleet-plan needs --faults faults.json"))?;
+    let incumbent = FleetPlan::load(ppath)?;
+    let faults = FaultPlan::load(fpath)?;
+    let lost = match args.get("lost") {
+        Some(id) => id.to_string(),
+        None => incumbent.boards[0].id.clone(),
+    };
+    let planner = FleetPlanner::over(incumbent.spec())
+        .steps(args.get_parse("shard-steps", 16usize)?)
+        .schedule(parse_schedule(args)?)
+        .max_period(args.get_parse("max-period", 0.5f64)?)
+        .interleave(args.get_parse("interleave", 1usize)?)
+        .validate(args.get_parse("sim-frames", 0usize)?)
+        .prune(prune_requested(args));
+    let outcome = planner.replan(&incumbent, &faults, &lost)?;
+    println!("{}", outcome.to_json().to_pretty());
+    if let Some(path) = args.get("json") {
+        match &outcome.plan {
+            Some(plan) => {
+                plan.save(path)?;
+                eprintln!("degraded fleet plan written to {path}");
+            }
+            None => eprintln!("no surviving fleet capacity: {path} not written"),
+        }
+    }
+    Ok(())
+}
+
 /// `plan --diff a.json b.json`: load two deployment plans and print the
 /// typed delta — per-tenant keep/change/add/remove ops with drain-overlapped
 /// reconfiguration cost — as JSON.
@@ -1048,6 +1265,9 @@ fn cmd_plan_diff(args: &Args) -> flexipipe::Result<()> {
 /// shed report, plan delta, and (when feasible) the replacement plan — and
 /// optionally writes the new plan to `--json`.
 fn cmd_replan(args: &Args) -> flexipipe::Result<()> {
+    if let Some(path) = args.get("fleet-plan") {
+        return cmd_replan_fleet(args, path);
+    }
     let ppath = args
         .get("plan")
         .ok_or_else(|| anyhow::anyhow!("replan needs --plan plan.json"))?;

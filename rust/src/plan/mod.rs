@@ -542,6 +542,39 @@ pub struct ShedEntry {
     pub reason: String,
 }
 
+/// Which phase of [`Planner::replan`] decided the outcome. Phase 1b
+/// (delta admission) only applies to spatial incumbents — temporal and
+/// overlay schedules re-derive admission from scratch, so a failed warm
+/// start sends them straight to the full search. Recording the phase
+/// makes that fallback explicit: a consumer can always tell whether the
+/// delta probe ran, was skipped by regime, or was exhausted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanPhase {
+    /// Phase 1: the incumbent's θ/α vectors and schedule survived on the
+    /// degraded board unchanged.
+    WarmStart,
+    /// Phase 1b: a ±1-quantum θ/α neighbor of the spatial incumbent was
+    /// admitted (never reported for temporal/overlay incumbents, whose
+    /// regime skips the probe by design).
+    DeltaAdmission,
+    /// Phase 2: the full search ran on the surviving board — the warm
+    /// region was infeasible, or the incumbent's regime skips delta
+    /// admission. Also reported when every tenant was shed (the search
+    /// ran and found nothing).
+    FullSearch,
+}
+
+impl ReplanPhase {
+    /// Stable label used in the `replan` JSON document.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplanPhase::WarmStart => "warm-start",
+            ReplanPhase::DeltaAdmission => "delta-admission",
+            ReplanPhase::FullSearch => "full-search",
+        }
+    }
+}
+
 /// Outcome of [`Planner::replan`]: the failover deployment (if any
 /// tenant set was admissible on the surviving capacity), the explicit
 /// shed report, the surviving board the decision was made against, and
@@ -561,6 +594,10 @@ pub struct ReplanOutcome {
     /// via [`crate::coordinator::PlannedService::apply`]); `None` when
     /// `plan` is `None`.
     pub diff: Option<crate::fault::PlanDiff>,
+    /// Which phase produced this outcome (warm start, delta admission,
+    /// or the full search) — the regime-dependent fallback made
+    /// explicit.
+    pub phase: ReplanPhase,
 }
 
 impl ReplanOutcome {
@@ -568,6 +605,7 @@ impl ReplanOutcome {
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("replanned", Value::Bool(self.plan.is_some())),
+            ("phase", Value::Str(self.phase.label().to_string())),
             ("board", board_to_json(&self.board)),
             (
                 "shed",
@@ -710,7 +748,7 @@ fn quanta_neighborhood(plan: &DeploymentPlan) -> Vec<(Vec<usize>, Vec<usize>)> {
 }
 
 /// Tightest fps floor among a tenant's constraints.
-fn fps_floor(cs: &[Constraint]) -> Option<f64> {
+pub(crate) fn fps_floor(cs: &[Constraint]) -> Option<f64> {
     cs.iter()
         .filter_map(|c| match c {
             Constraint::MinFps(f) => Some(*f),
@@ -763,7 +801,9 @@ impl Planner {
     ///
     /// The outcome carries the reconfiguration delta from the incumbent
     /// ([`crate::fault::PlanDiff`]) so a live service can execute the
-    /// failover with drain-overlapped swaps.
+    /// failover with drain-overlapped swaps, and records which phase
+    /// decided it ([`ReplanOutcome::phase`]) — so the regime-dependent
+    /// skip of Phase 1b is explicit, never silent.
     pub fn replan(
         &self,
         incumbent: &DeploymentPlan,
@@ -789,6 +829,7 @@ impl Planner {
                 shed: Vec::new(),
                 board,
                 diff: Some(diff),
+                phase: ReplanPhase::WarmStart,
             });
         }
 
@@ -816,6 +857,7 @@ impl Planner {
                         shed: Vec::new(),
                         board,
                         diff: Some(diff),
+                        phase: ReplanPhase::DeltaAdmission,
                     });
                 }
             }
@@ -852,6 +894,7 @@ impl Planner {
                         shed,
                         board,
                         diff: Some(diff),
+                        phase: ReplanPhase::FullSearch,
                     });
                 }
                 Err(e) => {
@@ -877,6 +920,7 @@ impl Planner {
             shed,
             board,
             diff: None,
+            phase: ReplanPhase::FullSearch,
         })
     }
 }
@@ -1321,7 +1365,7 @@ pub(crate) fn board_to_json(b: &Board) -> Value {
     ])
 }
 
-fn board_from_json(v: &Value) -> crate::Result<Board> {
+pub(crate) fn board_from_json(v: &Value) -> crate::Result<Board> {
     Ok(Board {
         name: v.str_field("name")?.to_string(),
         dsps: v.usize_field("dsps")?,

@@ -1049,8 +1049,10 @@ pub(crate) fn vec_weakly_dominates(
     a_fps.iter().zip(b_fps).all(|(x, y)| x >= y) && a_lat.iter().zip(b_lat).all(|(x, y)| x <= y)
 }
 
-/// Incremental Pareto-frontier accumulator over per-tenant
-/// *(fps ↑, worst-case latency ↓)* vectors, replacing the old
+/// Incremental Pareto-frontier accumulator over objective vectors — a
+/// maximized `ups` vector and a minimized `downs` vector per candidate
+/// (per-tenant *(fps ↑, worst-case latency ↓)* for shard plans; the fleet
+/// planner prepends a cost axis to `downs`) — replacing the old
 /// collect-then-filter reduction. Offer every plan as it is born:
 /// a candidate weakly dominated by an incumbent is rejected (this
 /// subsumes exact-tie deduplication — the first representative wins),
@@ -1064,22 +1066,43 @@ pub(crate) fn vec_weakly_dominates(
 #[derive(Debug, Clone, Default)]
 pub(crate) struct FrontierMerge {
     members: Vec<usize>,
+    /// Objective vectors `(ups, downs)` parallel to `members`, cached so
+    /// dominance checks need no back-reference into the caller's plan
+    /// list (which lets heterogeneous callers — shard and fleet — share
+    /// one accumulator implementation).
+    keys: Vec<(Vec<f64>, Vec<f64>)>,
 }
 
 impl FrontierMerge {
-    /// Offer `plans[idx]`; returns whether it was admitted.
-    pub(crate) fn offer(&mut self, plans: &[ShardPlan], idx: usize) -> bool {
-        let p = &plans[idx];
-        if self.members.iter().any(|&m| {
-            vec_weakly_dominates(&plans[m].fps, &plans[m].latency_s, &p.fps, &p.latency_s)
-        }) {
+    /// Offer candidate `idx` with maximized vector `ups` and minimized
+    /// vector `downs`; returns whether it was admitted.
+    pub(crate) fn offer_vec(&mut self, ups: &[f64], downs: &[f64], idx: usize) -> bool {
+        if self
+            .keys
+            .iter()
+            .any(|(u, d)| vec_weakly_dominates(u, d, ups, downs))
+        {
             return false;
         }
-        self.members.retain(|&m| {
-            !vec_weakly_dominates(&p.fps, &p.latency_s, &plans[m].fps, &plans[m].latency_s)
-        });
+        let mut i = 0;
+        while i < self.members.len() {
+            if vec_weakly_dominates(ups, downs, &self.keys[i].0, &self.keys[i].1) {
+                self.members.remove(i);
+                self.keys.remove(i);
+            } else {
+                i += 1;
+            }
+        }
         self.members.push(idx);
+        self.keys.push((ups.to_vec(), downs.to_vec()));
         true
+    }
+
+    /// Offer `plans[idx]` under the shard objective (per-tenant fps ↑,
+    /// worst-case latency ↓); returns whether it was admitted.
+    pub(crate) fn offer(&mut self, plans: &[ShardPlan], idx: usize) -> bool {
+        let p = &plans[idx];
+        self.offer_vec(&p.fps, &p.latency_s, idx)
     }
 
     /// Current incumbent plan indices, ascending.

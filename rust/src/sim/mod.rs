@@ -1222,6 +1222,75 @@ impl Simulator {
             tenants,
         })
     }
+
+    /// Execute a whole [`crate::fleet::FleetPlan`]: run every board's
+    /// pinned engine once (the same [`Simulate::simulate`] path a
+    /// single-board plan takes, so each board re-simulates
+    /// bit-identically to its in-process search), then merge per-tenant
+    /// reports through the routing table — a tenant's fleet fps is the
+    /// **sum** of its replicas' simulated rates, each route's reported
+    /// weight is its simulated share of that sum, and the worst-case
+    /// sojourn is the **max** over replicas of the hosting plan's
+    /// analytic bound (`None` when any hosting plan lacks one).
+    pub fn simulate_fleet(
+        &self,
+        plan: &crate::fleet::FleetPlan,
+    ) -> crate::Result<crate::fleet::FleetSimReport> {
+        use crate::fleet::{FleetRouteSim, FleetSimReport, FleetTenantSim};
+        plan.validate()?;
+        let reports: Vec<PlanSimReport> = plan
+            .boards
+            .iter()
+            .map(|p| self.simulate(&p.plan))
+            .collect::<crate::Result<_>>()?;
+        let mut tenants = Vec::with_capacity(plan.routing.tenants.len());
+        for tr in &plan.routing.tenants {
+            let mut routes = Vec::with_capacity(tr.routes.len());
+            let mut total = 0.0f64;
+            let mut worst: Option<f64> = Some(0.0);
+            for r in &tr.routes {
+                let bi = plan
+                    .boards
+                    .iter()
+                    .position(|p| p.id == r.board)
+                    .expect("validate() pinned every route to a known board");
+                let pl = &plan.boards[bi].plan;
+                let ti = pl
+                    .tenants
+                    .iter()
+                    .position(|t| t.net.name == tr.net)
+                    .expect("validate() pinned every route to a hosting plan");
+                let fps = reports[bi].tenants[ti].fps;
+                total += fps;
+                worst = match (worst, pl.worst_sojourn_cycles()) {
+                    (Some(w), Some(cycles)) => {
+                        Some(w.max(cycles[ti] as f64 / pl.board.freq_hz))
+                    }
+                    _ => None,
+                };
+                routes.push(FleetRouteSim {
+                    board: r.board.clone(),
+                    fps,
+                    weight: 0.0,
+                });
+            }
+            anyhow::ensure!(
+                total > 0.0,
+                "tenant '{}': simulated fleet fps is zero across all routes",
+                tr.net
+            );
+            for r in &mut routes {
+                r.weight = r.fps / total;
+            }
+            tenants.push(FleetTenantSim {
+                net: tr.net.clone(),
+                fps: total,
+                worst_sojourn_s: worst,
+                routes,
+            });
+        }
+        Ok(FleetSimReport { tenants })
+    }
 }
 
 /// Raw DES engines behind [`simulate`] and [`Simulate`], re-exported

@@ -1,0 +1,171 @@
+//! Fleet-scale golden pins on the checked-in two-board example
+//! (`examples/fleets/zc706_pair.json`: a full zc706 plus a half-capacity
+//! sibling at 0.6× cost): vgg16 at W16A16 physically cannot fit the half
+//! board (its weight working set overflows the halved BRAM), so every
+//! frontier placement must route it — alone, weight exactly 1.0 — to the
+//! full board; the whole planning document is byte-deterministic across
+//! runs (the CI gate re-runs the CLI and diffs); the frontier survives
+//! the crate's own reference reduction; and board loss resolves every
+//! displaced tenant explicitly — migrated to a named peer, or shed with
+//! the per-board reasons — never silently.
+
+use flexipipe::board::zedboard;
+use flexipipe::fault::{BoardLoss, FaultPlan};
+use flexipipe::fleet::{frontier, FleetPlanner, FleetSpec};
+use flexipipe::model::zoo;
+use flexipipe::plan::{Planner, ReplanPhase, Workload};
+use flexipipe::quant::QuantMode;
+use flexipipe::sim::Simulator;
+
+fn pair_spec() -> FleetSpec {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/fleets/zc706_pair.json");
+    FleetSpec::load(path).unwrap()
+}
+
+fn pair_workload() -> Workload {
+    Workload::new(QuantMode::W16A16)
+        .tenant(zoo::vgg16())
+        .tenant(zoo::alexnet())
+        .tenant(zoo::zf())
+}
+
+fn board_loss(survive_frac: f64) -> FaultPlan {
+    FaultPlan {
+        board_loss: Some(BoardLoss {
+            at_s: 0.25,
+            survive_frac,
+        }),
+        ..FaultPlan::none()
+    }
+}
+
+#[test]
+fn zc706_pair_example_pins_placement_and_byte_determinism() {
+    let spec = pair_spec();
+    assert_eq!(spec.boards.len(), 2);
+    assert_eq!(spec.boards[0].id, "zc706-a");
+    assert_eq!(spec.boards[1].id, "zc706-half");
+    assert_eq!(spec.boards[1].cost, 0.6);
+
+    // The premise the placement pins rest on: vgg16 at W16A16 overflows
+    // the half board's BRAM even alone.
+    let solo = Planner::on(spec.boards[1].board.clone())
+        .steps(4)
+        .plan(&Workload::new(QuantMode::W16A16).tenant(zoo::vgg16()));
+    assert!(solo.is_err(), "vgg16 must be solo-infeasible on zc706-half");
+
+    let set = FleetPlanner::over(spec.clone()).steps(4).plan(&pair_workload()).unwrap();
+    assert!(!set.plans.is_empty());
+    for p in &set.plans {
+        p.validate().unwrap();
+        let vgg = p.routing.tenants.iter().find(|t| t.net == "vgg16").unwrap();
+        assert_eq!(vgg.routes.len(), 1, "vgg16 cannot replicate onto the half board");
+        assert_eq!(vgg.routes[0].board, "zc706-a");
+        assert_eq!(vgg.routes[0].weight, 1.0);
+    }
+    // The planner's incremental frontier survives the reference reducer.
+    assert_eq!(frontier(&set.plans).unwrap(), (0..set.plans.len()).collect::<Vec<_>>());
+    // An exact solo-infeasible skip fires for every assignment putting
+    // vgg16 on the half board — visible in the effort counters.
+    assert!(set.stats.infeasible > 0, "solo-infeasible assignments must be skipped");
+
+    // Byte-determinism, the property the CI cmp gate runs end to end:
+    // plan → simulate → replan twice each, identical documents.
+    let again = FleetPlanner::over(spec).steps(4).plan(&pair_workload()).unwrap();
+    assert_eq!(set.to_json().to_pretty(), again.to_json().to_pretty());
+    let sim = Simulator::default();
+    let best = &set.plans[set.best];
+    assert_eq!(
+        sim.simulate_fleet(best).unwrap().to_json().to_pretty(),
+        sim.simulate_fleet(&again.plans[again.best]).unwrap().to_json().to_pretty()
+    );
+}
+
+#[test]
+fn losing_the_full_board_accounts_for_every_displaced_tenant() {
+    let spec = pair_spec();
+    let planner = FleetPlanner::over(spec).steps(4);
+    let set = planner.plan(&pair_workload()).unwrap_or_else(|e| panic!("{e}"));
+    let incumbent = &set.plans[set.best];
+    let faults = board_loss(0.875);
+
+    let outcome = planner.replan(incumbent, &faults, "zc706-a").unwrap();
+    let replay = planner.replan(incumbent, &faults, "zc706-a").unwrap();
+    assert_eq!(
+        outcome.to_json().to_pretty(),
+        replay.to_json().to_pretty(),
+        "fleet failover must be byte-deterministic (the CI cmp gate)"
+    );
+    assert_eq!(outcome.lost, "zc706-a");
+
+    // Every tenant the lost board hosted is explicitly accounted for:
+    // still served on its surviving capacity, migrated to a named peer,
+    // a dropped replica, or shed with reasons — never silently gone.
+    let lost_plan = &incumbent.boards.iter().find(|b| b.id == "zc706-a").unwrap().plan;
+    for t in &lost_plan.tenants {
+        let name = &t.net.name;
+        let still_served = outcome.plan.as_ref().is_some_and(|p| {
+            p.routing.tenants.iter().any(|tr| tr.net == *name)
+        });
+        let migrated = outcome.migrated.iter().any(|m| m.net == *name);
+        let dropped = outcome.dropped_replicas.iter().any(|d| d.net == *name);
+        let shed = outcome.shed.iter().any(|s| s.net == *name);
+        assert!(
+            still_served || migrated || dropped || shed,
+            "tenant '{name}' vanished without an explicit outcome"
+        );
+    }
+    // vgg16 is solo-infeasible on the only peer, so whatever happens it
+    // never migrates there; if it could not be re-admitted on the
+    // surviving capacity it must appear in the shed report with the
+    // per-board reasons joined in.
+    assert!(outcome.migrated.iter().all(|m| m.net != "vgg16"));
+    for s in &outcome.shed {
+        assert!(!s.reason.is_empty(), "shed entries must carry reasons");
+    }
+    if let Some(p) = &outcome.plan {
+        p.validate().unwrap();
+    }
+}
+
+#[test]
+fn losing_a_twin_board_migrates_its_tenant_onto_the_peer() {
+    // Two identical boards, one tenant each (the cost-2 frontier member
+    // that maximizes both tenants' fps). Annihilate the board hosting
+    // tinycnn: the fleet failover must migrate it onto the surviving
+    // twin — peer re-planned with both tenants — shedding nothing.
+    let spec = FleetSpec::new()
+        .board("twin-a", zedboard(), 1.0)
+        .board("twin-b", zedboard(), 1.0);
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let planner = FleetPlanner::over(spec).steps(4);
+    let set = planner.plan(&workload).unwrap();
+    let split = set
+        .plans
+        .iter()
+        .find(|p| p.boards.len() == 2 && p.boards.iter().all(|b| b.plan.tenants.len() == 1))
+        .expect("the one-tenant-per-board split must be on the frontier");
+    let lost = &split.boards.iter().find(|b| b.plan.tenants[0].net.name == "tinycnn").unwrap().id;
+    let peer = &split.boards.iter().find(|b| b.id != *lost).unwrap().id;
+
+    let outcome = planner.replan(split, &board_loss(0.01), lost).unwrap();
+    assert_eq!(outcome.phase, ReplanPhase::FullSearch, "1% capacity defeats warm start");
+    assert!(outcome.shed.is_empty(), "the peer must admit the displaced tenant");
+    assert!(outcome.dropped_replicas.is_empty());
+    assert_eq!(outcome.migrated.len(), 1);
+    assert_eq!(outcome.migrated[0].net, "tinycnn");
+    assert_eq!(&outcome.migrated[0].from, lost);
+    assert_eq!(&outcome.migrated[0].to, peer);
+
+    let degraded = outcome.plan.expect("the surviving twin still serves");
+    degraded.validate().unwrap();
+    assert_eq!(degraded.boards.len(), 1, "the lost board leaves the plan");
+    assert_eq!(&degraded.boards[0].id, peer);
+    assert_eq!(degraded.boards[0].plan.tenants.len(), 2);
+    for tr in &degraded.routing.tenants {
+        assert_eq!(tr.routes.len(), 1);
+        assert_eq!(tr.routes[0].weight, 1.0);
+    }
+}

@@ -1,0 +1,362 @@
+//! Fleet-planning property pins: a single-board fleet reproduces the
+//! single-board `Planner` bit for bit; replication across two identical
+//! boards doubles a tenant's fps exactly (planned *and* DES-measured —
+//! `x + x == 2x` is exact in IEEE), splitting the routing weights exactly
+//! in half; routing tables conserve traffic (weights sum to 1, every
+//! route lands on a hosting board); the fleet frontier equals an
+//! independent exhaustive reference reduction built directly on the
+//! single-board `Planner`; branch-and-bound assignment pruning changes
+//! effort counters but not one byte of the result; and an fps floor
+//! above any single board's reach is met through replication — the
+//! per-board solve drops the floor, the fleet-level sum enforces it.
+
+use flexipipe::board::zedboard;
+use flexipipe::fleet::{frontier, FleetPlan, FleetPlanner, FleetSpec};
+use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, TenantSpec, Workload};
+use flexipipe::quant::QuantMode;
+use flexipipe::sim::{Simulate, Simulator};
+use flexipipe::util::json;
+
+fn one_board() -> FleetSpec {
+    FleetSpec::new().board("solo", zedboard(), 1.0)
+}
+
+fn twin_boards() -> FleetSpec {
+    FleetSpec::new()
+        .board("twin-a", zedboard(), 1.0)
+        .board("twin-b", zedboard(), 1.0)
+}
+
+#[test]
+fn single_board_fleet_reproduces_the_planner_bitwise() {
+    // The degenerate fleet is the exactness anchor: one board, no
+    // replication, no spill — the fleet frontier must be the Planner's
+    // frontier, each embedded per-board plan byte-identical, each tenant
+    // routed to the one board with weight exactly 1.0.
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let fset = FleetPlanner::over(one_board()).steps(4).plan(&workload).unwrap();
+    let pset = Planner::on(zedboard()).steps(4).plan(&workload).unwrap();
+
+    assert_eq!(fset.plans.len(), pset.frontier.len(), "one plan per Planner frontier member");
+    for (fp, &pi) in fset.plans.iter().zip(&pset.frontier) {
+        assert_eq!(fp.boards.len(), 1);
+        assert_eq!(fp.boards[0].id, "solo");
+        assert_eq!(
+            fp.boards[0].plan.to_json().to_pretty(),
+            pset.plans[pi].to_json().to_pretty(),
+            "the embedded per-board plan must be the Planner's, bit for bit"
+        );
+        for tr in &fp.routing.tenants {
+            assert_eq!(tr.routes.len(), 1);
+            assert_eq!(tr.routes[0].weight, 1.0, "solo routing is exact, not ≈1");
+        }
+        fp.validate().unwrap();
+    }
+    // Scalar objective picks agree in value. (The fleet set indexes its
+    // frontier-only listing, the PlanSet all feasible plans — indices
+    // differ; a tie-broken off-frontier pick is weakly dominated by a
+    // frontier member, so the objective *values* still coincide bitwise.)
+    assert_eq!(
+        fset.plans[fset.best_min].min_fps().unwrap(),
+        pset.plans[pset.best_min].min_fps().unwrap()
+    );
+    assert_eq!(
+        fset.plans[fset.best_weighted].weighted_fps().unwrap(),
+        pset.plans[pset.best_weighted].weighted_fps().unwrap()
+    );
+}
+
+#[test]
+fn replication_on_twin_boards_doubles_fps_bit_exactly() {
+    // Two identical boards, one tenant: the frontier must contain the
+    // replicated placement (it strictly improves fps over either solo
+    // placement, at strictly higher cost — non-dominated on the cost
+    // axis), and the combo pairing the *same* sub-plan on both twins has
+    // fleet fps exactly 2x the sub-plan's and weights exactly 0.5 each.
+    let workload = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+    let fset = FleetPlanner::over(twin_boards()).steps(4).plan(&workload).unwrap();
+
+    let rep: Vec<&FleetPlan> = fset.plans.iter().filter(|p| p.boards.len() == 2).collect();
+    assert!(!rep.is_empty(), "the replicated placement must be on the frontier");
+    let twin = rep
+        .iter()
+        .find(|p| {
+            p.boards[0].plan.to_json().to_pretty() == p.boards[1].plan.to_json().to_pretty()
+        })
+        .expect("identical boards expose the identical-sub-plan pairing");
+
+    let sub_fps = twin.boards[0].plan.fps_vec().unwrap()[0];
+    assert_eq!(
+        twin.fps_vec().unwrap()[0],
+        2.0 * sub_fps,
+        "planned fleet fps must be the exact IEEE sum of the replicas"
+    );
+    for r in &twin.routing.tenants[0].routes {
+        assert_eq!(r.weight, 0.5, "identical replicas split traffic exactly in half");
+    }
+
+    // DES-validated additivity: simulate_fleet runs each twin's pinned
+    // engine (bit-identical runs of the same plan) and sums.
+    let sim = Simulator::default();
+    let fleet_report = sim.simulate_fleet(twin).unwrap();
+    let solo_report = sim.simulate(&twin.boards[0].plan).unwrap();
+    assert_eq!(
+        fleet_report.tenants[0].fps,
+        2.0 * solo_report.tenants[0].fps,
+        "measured fleet fps must be the exact sum of two identical DES runs"
+    );
+    for r in &fleet_report.tenants[0].routes {
+        assert_eq!(r.fps, solo_report.tenants[0].fps);
+        assert_eq!(r.weight, 0.5);
+    }
+}
+
+#[test]
+fn routing_tables_conserve_traffic_on_every_frontier_plan() {
+    // Conservation across a real multi-tenant, multi-board search: every
+    // frontier plan validates (weights in (0,1], per-tenant sum within
+    // 1e-9 of 1, every route lands on a board whose plan hosts the
+    // tenant, every hosted tenant routed), and each weight is exactly the
+    // hosting record's fps share — the same division `plan()` routed with.
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let fset = FleetPlanner::over(twin_boards()).steps(4).plan(&workload).unwrap();
+    assert!(!fset.plans.is_empty());
+    for p in &fset.plans {
+        p.validate().unwrap();
+        for tr in &p.routing.tenants {
+            let total: f64 = tr
+                .routes
+                .iter()
+                .map(|r| {
+                    let pl = p.boards.iter().find(|b| b.id == r.board).unwrap();
+                    let t = pl.plan.tenants.iter().find(|t| t.net.name == tr.net).unwrap();
+                    t.record.as_ref().unwrap().fps
+                })
+                .sum();
+            for r in &tr.routes {
+                let pl = p.boards.iter().find(|b| b.id == r.board).unwrap();
+                let t = pl.plan.tenants.iter().find(|t| t.net.name == tr.net).unwrap();
+                assert_eq!(
+                    r.weight,
+                    t.record.as_ref().unwrap().fps / total,
+                    "weight must be the exact fps fraction ({}@{})",
+                    tr.net,
+                    r.board
+                );
+            }
+        }
+    }
+}
+
+/// Strict vector dominance, re-stated independently of the crate
+/// internals: a ≥ b on every fps axis, ≤ on every cost/latency axis, and
+/// strictly better somewhere.
+fn dominates(au: &[f64], ad: &[f64], bu: &[f64], bd: &[f64]) -> bool {
+    let ge = au.iter().zip(bu).all(|(a, b)| a >= b) && ad.iter().zip(bd).all(|(a, b)| a <= b);
+    let strict = au.iter().zip(bu).any(|(a, b)| a > b) || ad.iter().zip(bd).any(|(a, b)| a < b);
+    ge && strict
+}
+
+#[test]
+fn fleet_frontier_matches_an_exhaustive_reference_reduction() {
+    // Completeness and soundness against an independent oracle: enumerate
+    // every tenant→board-subset assignment by hand, solve each board's
+    // sub-workload with the single-board `Planner` directly, combine
+    // sub-plan frontiers with the documented arithmetic (fps sums,
+    // latency maxes, cost sums), reference-reduce, and demand the
+    // planner's frontier matches as a multiset of objective vectors —
+    // bit for bit.
+    let costs = [1.0, 1.0];
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let fset = FleetPlanner::over(twin_boards()).steps(4).plan(&workload).unwrap();
+
+    // Oracle. Subsets of 2 boards: {a}=0b01, {b}=0b10, {a,b}=0b11.
+    let solve = |tenant_idx: &[usize]| -> Option<Vec<(Vec<f64>, Vec<f64>)>> {
+        let mut w = Workload::new(QuantMode::W8A8);
+        for &t in tenant_idx {
+            w = w.tenant_spec(TenantSpec::new(match t {
+                0 => zoo::tinycnn(),
+                _ => zoo::lenet(),
+            }));
+        }
+        let set = Planner::on(zedboard()).steps(4).plan(&w).ok()?;
+        Some(
+            set.frontier
+                .iter()
+                .map(|&i| {
+                    let p: &DeploymentPlan = &set.plans[i];
+                    (p.fps_vec().unwrap(), p.latency_vec().unwrap())
+                })
+                .collect(),
+        )
+    };
+    let mut candidates: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    for m0 in [0b01u32, 0b10, 0b11] {
+        for m1 in [0b01u32, 0b10, 0b11] {
+            let masks = [m0, m1];
+            let used: Vec<usize> =
+                (0..2).filter(|&b| masks.iter().any(|m| m & (1 << b) != 0)).collect();
+            let cost: f64 = used.iter().map(|&b| costs[b]).sum();
+            let per_board: Option<Vec<(Vec<usize>, Vec<(Vec<f64>, Vec<f64>)>)>> = used
+                .iter()
+                .map(|&b| {
+                    let idx: Vec<usize> = (0..2).filter(|&t| masks[t] & (1 << b) != 0).collect();
+                    solve(&idx).map(|plans| (idx, plans))
+                })
+                .collect();
+            let Some(per_board) = per_board else { continue };
+            // Cross product, first used board outermost.
+            let sizes: Vec<usize> = per_board.iter().map(|(_, p)| p.len()).collect();
+            let combos: usize = sizes.iter().product();
+            for c in 0..combos {
+                let mut rem = c;
+                let mut choice = vec![0usize; sizes.len()];
+                for i in (0..sizes.len()).rev() {
+                    choice[i] = rem % sizes[i];
+                    rem /= sizes[i];
+                }
+                let mut fps = vec![0.0f64; 2];
+                let mut lat = vec![0.0f64; 2];
+                for (i, (idx, plans)) in per_board.iter().enumerate() {
+                    let (pf, pl) = &plans[choice[i]];
+                    for (pos, &t) in idx.iter().enumerate() {
+                        fps[t] += pf[pos];
+                        lat[t] = lat[t].max(pl[pos]);
+                    }
+                }
+                let mut downs = vec![cost];
+                downs.extend_from_slice(&lat);
+                candidates.push((fps, downs));
+            }
+        }
+    }
+    let mut reference: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+    for (i, (u, d)) in candidates.iter().enumerate() {
+        let beaten = candidates
+            .iter()
+            .enumerate()
+            .any(|(j, (ju, jd))| j != i && dominates(ju, jd, u, d));
+        let duplicate = candidates[..i].contains(&(u.clone(), d.clone()));
+        if !beaten && !duplicate {
+            reference.push((u.clone(), d.clone()));
+        }
+    }
+
+    let mut got: Vec<String> = fset
+        .plans
+        .iter()
+        .map(|p| format!("{:?}", p.objectives().unwrap()))
+        .collect();
+    let mut want: Vec<String> = reference.iter().map(|o| format!("{o:?}")).collect();
+    got.sort();
+    want.sort();
+    assert_eq!(got, want, "fleet frontier must equal the exhaustive reference reduction");
+
+    // And the crate's own reference reducer agrees the result is tight.
+    assert_eq!(frontier(&fset.plans).unwrap(), (0..fset.plans.len()).collect::<Vec<_>>());
+}
+
+#[test]
+fn pruned_fleet_search_is_bitwise_equal_to_exhaustive() {
+    // Branch-and-bound is an optimization, never an approximation: the
+    // whole result document — every plan, every route, every pick — must
+    // be byte-identical with and without pruning; only the effort
+    // counters move.
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let exhaustive = FleetPlanner::over(twin_boards()).steps(4).plan(&workload).unwrap();
+    let pruned = FleetPlanner::over(twin_boards())
+        .steps(4)
+        .prune(true)
+        .plan(&workload)
+        .unwrap();
+    let strip = |s: &flexipipe::fleet::FleetPlanSet| -> Vec<String> {
+        s.plans.iter().map(|p| p.to_json().to_pretty()).collect()
+    };
+    assert_eq!(strip(&exhaustive), strip(&pruned));
+    assert_eq!(exhaustive.best_min, pruned.best_min);
+    assert_eq!(exhaustive.best_weighted, pruned.best_weighted);
+    assert_eq!(exhaustive.best, pruned.best);
+    assert_eq!(exhaustive.stats.assignments, pruned.stats.assignments);
+    assert_eq!(
+        pruned.stats.bound_skipped + pruned.stats.solved + pruned.stats.infeasible,
+        pruned.stats.assignments,
+        "every assignment is accounted for: solved, infeasible, or bound-skipped"
+    );
+    assert_eq!(exhaustive.stats.bound_skipped, 0, "exhaustive mode never bound-skips");
+}
+
+#[test]
+fn floor_above_single_board_reach_is_met_through_replication() {
+    // Constraint semantics under replication, end to end: a MinFps floor
+    // 1.5x the best any single board achieves is infeasible per board —
+    // the sub-workload drops the floor for replicated tenants and the
+    // fleet-level sum enforces it — so every returned placement must
+    // replicate, and every returned placement must meet the floor.
+    let solo = Planner::on(zedboard())
+        .steps(4)
+        .plan(&Workload::new(QuantMode::W8A8).tenant(zoo::lenet()))
+        .unwrap();
+    let solo_max = solo
+        .plans
+        .iter()
+        .filter_map(|p| p.fps_vec().map(|v| v[0]))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let floor = 1.5 * solo_max;
+
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant_spec(TenantSpec::new(zoo::lenet()).min_fps(floor));
+    let fset = FleetPlanner::over(twin_boards()).steps(4).plan(&workload).unwrap();
+    assert!(!fset.plans.is_empty(), "replication must rescue the floor");
+    for p in &fset.plans {
+        assert_eq!(
+            p.boards.len(),
+            2,
+            "no single board reaches the floor — every kept placement replicates"
+        );
+        let fps = p.fps_vec().unwrap()[0];
+        assert!(fps >= floor, "fleet floor must hold ({fps} < {floor})");
+    }
+
+    // The same floor with replication capped at 1 board is an explicit
+    // error, not a silent empty frontier.
+    let err = FleetPlanner::over(twin_boards())
+        .steps(4)
+        .replicas(1)
+        .plan(&workload)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no feasible fleet placement"), "{err}");
+}
+
+#[test]
+fn unknown_fleet_plan_versions_are_rejected_end_to_end() {
+    // The versioned-format contract, fleet edition: a plan from the
+    // future is refused at load with the found version and the supported
+    // range — same idiom as plan/fault/trace formats.
+    let workload = Workload::new(QuantMode::W8A8).tenant(zoo::lenet());
+    let fset = FleetPlanner::over(one_board()).steps(4).plan(&workload).unwrap();
+    // Bump the *fleet* version key, not the embedded per-board plan's —
+    // both formats carry one, so edit the parsed document, not the text.
+    let mut doc = fset.plans[fset.best].to_json();
+    if let json::Value::Obj(m) = &mut doc {
+        m.insert("version".to_string(), json::num(99));
+    }
+    let dir = std::env::temp_dir().join("flexipipe_fleet_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("future_fleet_plan.json");
+    std::fs::write(&path, doc.to_pretty()).unwrap();
+    let err = FleetPlan::load(&path).unwrap_err().to_string();
+    assert!(err.contains("version 99"), "{err}");
+    assert!(err.contains("1..=1"), "{err}");
+    assert!(err.contains("future_fleet_plan.json"), "{err}");
+    std::fs::remove_file(&path).ok();
+}

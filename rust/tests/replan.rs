@@ -11,7 +11,7 @@ use flexipipe::alloc::Allocation;
 use flexipipe::board::zc706;
 use flexipipe::fault::{BoardLoss, FaultPlan};
 use flexipipe::model::zoo;
-use flexipipe::plan::{Constraint, DeploymentPlan, Planner, Workload};
+use flexipipe::plan::{Constraint, DeploymentPlan, Planner, ReplanPhase, Workload};
 use flexipipe::quant::QuantMode;
 use flexipipe::shard::{Regime, ScheduleMode};
 use flexipipe::sim;
@@ -36,6 +36,11 @@ fn ddr_brownout_warm_starts_the_incumbent() {
         ..FaultPlan::none()
     };
     let outcome = Planner::on(zc706()).steps(16).replan(&incumbent, &faults).unwrap();
+    assert_eq!(
+        outcome.phase,
+        ReplanPhase::WarmStart,
+        "an intact fabric must keep the incumbent's quanta"
+    );
     assert!(outcome.shed.is_empty(), "a brownout must not shed: {:?}", outcome.shed);
     let plan = outcome.plan.expect("brownout replan must produce a plan");
     assert_eq!(plan.tenants.len(), 2);
@@ -206,6 +211,12 @@ fn slo_forces_a_full_replan_and_des_confirms_sojourn_within_5pct() {
         ..FaultPlan::none()
     };
     let outcome = planner.replan(&constrained, &faults).unwrap();
+    assert_eq!(
+        outcome.phase,
+        ReplanPhase::FullSearch,
+        "a temporal incumbent skips delta admission: its schedule re-derives \
+         from scratch, so a failed warm start goes straight to the search"
+    );
     assert!(outcome.shed.is_empty(), "the SLO is achievable: {:?}", outcome.shed);
     let plan = outcome.plan.expect("phase 2 must find an admissible schedule");
     assert!(
@@ -254,6 +265,7 @@ fn unachievable_floors_shed_every_tenant_explicitly() {
         .steps(4)
         .replan(&incumbent, &FaultPlan::none())
         .unwrap();
+    assert_eq!(outcome.phase, ReplanPhase::FullSearch);
     assert!(outcome.plan.is_none());
     assert!(outcome.diff.is_none());
     let shed: Vec<&str> = outcome.shed.iter().map(|s| s.net.as_str()).collect();
@@ -265,4 +277,111 @@ fn unachievable_floors_shed_every_tenant_explicitly() {
             s.reason
         );
     }
+}
+
+#[test]
+fn spatial_floor_delta_admits_a_quantum_neighbor() {
+    // The delta-admission acceptance case: the incumbent's own quanta miss
+    // a new fps floor, but a ±1-quantum neighbor meets it — Phase 1b must
+    // take it (and say so), never falling through to the full search.
+    //
+    // Premises are derived at runtime with the same DES pass `replan`
+    // itself checks candidates with (spatial provisioned shares, 2 frames,
+    // β = Θ), so the floor is guaranteed to sit strictly between the
+    // incumbent's measured rate and an in-neighborhood candidate's.
+    let planner = Planner::on(zc706()).steps(4);
+    let workload = Workload::new(QuantMode::W16A16)
+        .tenant(zoo::vgg16())
+        .tenant(zoo::alexnet());
+    let set = planner.plan(&workload).unwrap();
+    let measured = |p: &DeploymentPlan| -> f64 {
+        let allocs = p.instantiate().unwrap();
+        let refs: Vec<&Allocation> = allocs.iter().collect();
+        let shares: Vec<f64> = p.tenants.iter().map(|t| t.ddr_share).collect();
+        sim::engines::simulate_multi_provisioned(&refs, &shares, &p.board, 2)[0].fps
+    };
+    let quanta_neighbors = |a: &DeploymentPlan, b: &DeploymentPlan| -> bool {
+        let mut moved = 0usize;
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            let dd = x.dsp_parts.abs_diff(y.dsp_parts);
+            let bd = x.bram_parts.abs_diff(y.bram_parts);
+            if dd > 1 || bd > 1 {
+                return false;
+            }
+            moved += dd + bd;
+        }
+        moved > 0
+    };
+    let mut pair = None;
+    'outer: for p in &set.plans {
+        for q in &set.plans {
+            if quanta_neighbors(p, q) {
+                let (fp, fq) = (measured(p), measured(q));
+                if fq > fp * 1.05 {
+                    pair = Some((p.clone(), fp, fq));
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let (incumbent, fp, fq) = pair.expect(
+        "fixture premise: the 1/4-quanta spatial lattice must contain a ±1 \
+         neighbor pair with measured fps spread for tenant 0",
+    );
+    let floor = 0.5 * (fp + fq);
+
+    let mut floored = incumbent;
+    floored.tenants[0].constraints = vec![Constraint::MinFps(floor)];
+    let outcome = planner.replan(&floored, &FaultPlan::none()).unwrap();
+    assert_eq!(
+        outcome.phase,
+        ReplanPhase::DeltaAdmission,
+        "a quantum shift absorbs the floor: the full search must not run"
+    );
+    assert!(outcome.shed.is_empty(), "delta admission sheds nothing: {:?}", outcome.shed);
+    let plan = outcome.plan.expect("the admitted neighbor is the new plan");
+    let rec = plan.tenants[0].record.as_ref().expect("admission re-records figures");
+    assert!(
+        rec.fps >= floor,
+        "the admitted neighbor must meet the floor ({} < {floor})",
+        rec.fps
+    );
+    assert!(
+        outcome
+            .to_json()
+            .to_pretty()
+            .contains("\"phase\": \"delta-admission\""),
+        "the outcome JSON must name the deciding phase"
+    );
+}
+
+#[test]
+fn overlay_incumbent_falls_back_to_full_search() {
+    // The third regime: an overlay incumbent's quanta neighborhood is
+    // meaningless (the superset datapath re-derives admission whole), so a
+    // failed warm start must go straight to the full search — explicitly,
+    // via the outcome's phase — and impossible floors still shed every
+    // tenant with reasons.
+    let planner = Planner::on(zc706()).steps(4).schedule(ScheduleMode::Overlay);
+    let workload = Workload::new(QuantMode::W8A8)
+        .tenant(zoo::tinycnn())
+        .tenant(zoo::lenet());
+    let set = planner.plan(&workload).unwrap();
+    let mut incumbent = set.plans[set.best].clone();
+    assert!(
+        matches!(incumbent.regime, Regime::Temporal(_)),
+        "overlay plans carry the schedule regime"
+    );
+    for t in &mut incumbent.tenants {
+        t.constraints = vec![Constraint::MinFps(1e18)];
+    }
+    let outcome = planner.replan(&incumbent, &FaultPlan::none()).unwrap();
+    assert_eq!(
+        outcome.phase,
+        ReplanPhase::FullSearch,
+        "non-spatial incumbents skip delta admission — and the skip is \
+         recorded, not silent"
+    );
+    assert!(outcome.plan.is_none());
+    assert_eq!(outcome.shed.len(), 2, "both impossible floors shed: {:?}", outcome.shed);
 }
