@@ -1,0 +1,1160 @@
+//! Operator control plane: a dependency-free HTTP/1.1 API over a live
+//! [`IngestService`].
+//!
+//! The module splits into two strictly separated layers:
+//!
+//! * **A socket-free handler core.** [`ControlPlane::handle`] maps an
+//!   [`HttpRequest`] to an [`HttpResponse`] with no I/O of any kind —
+//!   every route, status code, and response body is exercisable from a
+//!   plain unit test. All JSON is emitted through
+//!   [`crate::util::json`], whose object keys are sorted, so a response
+//!   body is a deterministic function of the service state.
+//! * **A thin TCP adapter.** [`serve`] runs a hand-rolled HTTP/1.1
+//!   server over [`std::net::TcpListener`] and a fixed pool of worker
+//!   threads — no external crates, in keeping with the repository's
+//!   zero-dependency policy. The adapter only parses bytes into
+//!   [`HttpRequest`]s and writes [`HttpResponse`]s back; it adds no
+//!   behaviour of its own.
+//!
+//! Routes (all request and response bodies are JSON):
+//!
+//! | Method   | Path              | Semantics                                           |
+//! |----------|-------------------|-----------------------------------------------------|
+//! | `GET`    | `/health`         | Per-tenant health label + coordinator counters      |
+//! | `GET`    | `/queues`         | Live per-tenant [`QueueStatus`] snapshot            |
+//! | `GET`    | `/plan`           | The active [`DeploymentPlan`] document              |
+//! | `GET`    | `/histograms[/T]` | Live latency quantiles (µs) from the log histogram  |
+//! | `POST`   | `/submit`         | Enqueue a frame (priority, relative deadline)       |
+//! | `GET`    | `/requests/{id}`  | Poll a submitted request (one-shot once finished)   |
+//! | `DELETE` | `/requests/{id}`  | Cancel a queued request                             |
+//! | `POST`   | `/plan/apply`     | Apply a [`PlanDiff`] (wire JSON) to the service     |
+//! | `POST`   | `/replan`         | Failover-replan around a [`FaultPlan`] and apply    |
+//! | `POST`   | `/replay`         | Deterministic [`serve_trace`] of a trace spec       |
+//! | `POST`   | `/shutdown`       | Drain and stop the service (final queue snapshot)   |
+//!
+//! Admission rejections map onto typed status codes: `429` for
+//! [`RejectReason::QueueFull`], `503` for shedding or a closed service,
+//! and `408` for [`RejectReason::DeadlineExpired`] — a dead-on-arrival
+//! deadline is refused before any other admission check, so the status
+//! is never a coincidental `429`.
+//!
+//! The determinism boundary runs between `/replay` (pure
+//! planned-timeline arithmetic: byte-identical responses for the same
+//! spec against the same plan, on any machine) and the live endpoints,
+//! whose *counters* depend on wall-clock dispatch timing. The response
+//! *encodings* are deterministic everywhere; only live counter values
+//! are timing-dependent.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::fault::{FaultPlan, PlanDiff};
+use crate::ingest::{serve_trace, IngestService, QueueStatus, RejectReason, TraceSpec};
+use crate::plan::{DeploymentPlan, Planner, ShedEntry};
+use crate::shard::ScheduleMode;
+use crate::util::json::{self, num, obj, Value};
+
+/// Worker threads the TCP adapter handles connections on.
+const CONTROL_WORKERS: usize = 4;
+
+/// Largest accepted request body (a full plan diff with tenant payloads
+/// is a few hundred KiB; 16 MiB leaves an order of magnitude of slack).
+const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Outstanding `/submit` receivers retained for `/requests/{id}`
+/// polling; the oldest entries are evicted beyond this.
+const MAX_PENDING: usize = 4096;
+
+/// Largest accepted relative deadline (about 31 years) — bounds the
+/// `Instant` arithmetic so no request body can panic the handler.
+const MAX_DEADLINE_MS: f64 = 1e12;
+
+/// Per-connection socket read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed HTTP request: the method, the raw path (query strings are
+/// ignored by the router), and the decoded UTF-8 body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    /// Request method, verbatim (`GET`, `POST`, `DELETE`, ...).
+    pub method: String,
+    /// Request path, verbatim (e.g. `/requests/7`).
+    pub path: String,
+    /// Request body (empty when the request carried none).
+    pub body: String,
+}
+
+/// One HTTP response: a status code and a JSON body. The TCP adapter
+/// adds the framing headers; the handler core never sees bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpResponse {
+    /// Status code (200, 400, 404, 405, 408, 409, 429, 503).
+    pub status: u16,
+    /// JSON response body (pretty-printed, sorted keys).
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Build a response with a pretty-printed JSON body.
+    pub fn json(status: u16, body: Value) -> HttpResponse {
+        HttpResponse {
+            status,
+            body: body.to_pretty(),
+        }
+    }
+
+    /// The standard reason phrase for the status code.
+    pub fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            409 => "Conflict",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// `{"error": msg}` — every non-2xx body carries the real cause.
+fn err_json(status: u16, msg: &str) -> HttpResponse {
+    HttpResponse::json(status, obj(vec![("error", Value::Str(msg.to_string()))]))
+}
+
+/// Counters are `u64`; JSON numbers are `f64` (exact to 2^53).
+fn u64v(x: u64) -> Value {
+    Value::Num(x as f64)
+}
+
+/// Response channel of one live request (the ingest dispatcher's end).
+type RespRx = Receiver<crate::Result<Vec<i8>>>;
+
+/// Mutable control-plane state: the live service (taken on shutdown)
+/// and the id → receiver map backing `/requests/{id}` polling.
+struct ControlState {
+    svc: Option<IngestService>,
+    pending: BTreeMap<u64, RespRx>,
+}
+
+/// The socket-free handler core: owns a live [`IngestService`] and maps
+/// [`HttpRequest`]s to [`HttpResponse`]s. Thread-safe — all handling
+/// runs behind one mutex (mutating endpoints such as `POST /plan/apply`
+/// need exclusive access anyway), so the TCP adapter's worker pool
+/// shares one instance by reference.
+pub struct ControlPlane {
+    state: Mutex<ControlState>,
+    down: AtomicBool,
+}
+
+impl ControlPlane {
+    /// Wrap a running service. The plane owns it from here on; `POST
+    /// /shutdown` drains and consumes it.
+    pub fn new(svc: IngestService) -> ControlPlane {
+        ControlPlane {
+            state: Mutex::new(ControlState {
+                svc: Some(svc),
+                pending: BTreeMap::new(),
+            }),
+            down: AtomicBool::new(false),
+        }
+    }
+
+    /// Has `POST /shutdown` been served? The TCP adapter's accept loop
+    /// exits once this reports `true`.
+    pub fn is_shut_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    /// Route one request. Pure with respect to I/O: no sockets, no
+    /// files — every endpoint is unit-testable in process.
+    pub fn handle(&self, req: &HttpRequest) -> HttpResponse {
+        let path = req.path.split('?').next().unwrap_or("");
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        let mut st = self.state.lock().unwrap();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["health"]) => health(&st),
+            ("GET", ["queues"]) => queues(&st),
+            ("GET", ["plan"]) => active_plan(&st),
+            ("GET", ["histograms"]) => histograms(&st, None),
+            ("GET", ["histograms", tenant]) => histograms(&st, Some(*tenant)),
+            ("GET", ["requests", id]) => poll_request(&mut st, id),
+            ("DELETE", ["requests", id]) => cancel_request(&mut st, id),
+            ("POST", ["submit"]) => submit(&mut st, &req.body),
+            ("POST", ["plan", "apply"]) => apply_diff(&mut st, &req.body),
+            ("POST", ["replan"]) => replan(&mut st, &req.body),
+            ("POST", ["replay"]) => replay(&st, &req.body),
+            ("POST", ["shutdown"]) => self.shutdown(&mut st),
+            _ if known_path(&segs) => {
+                err_json(405, &format!("method {} not allowed on {path}", req.method))
+            }
+            _ => err_json(404, &format!("no route for {} {path}", req.method)),
+        }
+    }
+
+    /// `POST /shutdown`: drain the service (every in-flight receiver
+    /// resolves) and report the final queue snapshot. Repeats after the
+    /// first get the same `503` as every other post-shutdown request.
+    fn shutdown(&self, st: &mut ControlState) -> HttpResponse {
+        let Some(svc) = st.svc.take() else {
+            return closed();
+        };
+        st.pending.clear();
+        let final_queues = svc.shutdown();
+        self.down.store(true, Ordering::SeqCst);
+        HttpResponse::json(
+            200,
+            obj(vec![
+                ("shut_down", Value::Bool(true)),
+                ("queues", Value::Arr(final_queues.iter().map(queue_to_json).collect())),
+            ]),
+        )
+    }
+}
+
+/// Does any endpoint live at this path? Routes a known path reached
+/// with the wrong verb to `405` instead of `404`.
+fn known_path(segs: &[&str]) -> bool {
+    matches!(
+        segs,
+        ["health"]
+            | ["queues"]
+            | ["plan"]
+            | ["plan", "apply"]
+            | ["histograms"]
+            | ["histograms", _]
+            | ["requests", _]
+            | ["submit"]
+            | ["replan"]
+            | ["replay"]
+            | ["shutdown"]
+    )
+}
+
+/// The uniform post-shutdown response.
+fn closed() -> HttpResponse {
+    err_json(503, "control plane is shut down")
+}
+
+fn queue_to_json(q: &QueueStatus) -> Value {
+    obj(vec![
+        ("tenant", Value::Str(q.tenant.clone())),
+        ("depth", num(q.depth)),
+        ("capacity", num(q.capacity)),
+        ("inflight", num(q.inflight)),
+        ("admitted", u64v(q.admitted)),
+        ("rejected_full", u64v(q.rejected_full)),
+        ("rejected_shed", u64v(q.rejected_shed)),
+        ("completed", u64v(q.completed)),
+        ("cancelled", u64v(q.cancelled)),
+        ("expired", u64v(q.expired)),
+    ])
+}
+
+fn shed_to_json(s: &ShedEntry) -> Value {
+    obj(vec![
+        ("net", Value::Str(s.net.clone())),
+        ("reason", Value::Str(s.reason.clone())),
+    ])
+}
+
+/// `GET /health`: per-tenant [`crate::coordinator::Health`] label plus
+/// the coordinator's serving counters and latency quantiles.
+fn health(st: &ControlState) -> HttpResponse {
+    let Some(svc) = st.svc.as_ref() else {
+        return closed();
+    };
+    let names = svc.names();
+    let tenants: Vec<Value> = (0..svc.len())
+        .map(|i| {
+            let s = svc.stats(i);
+            obj(vec![
+                ("tenant", Value::Str(names[i].clone())),
+                ("health", Value::Str(svc.health(i).label().to_string())),
+                ("requests", u64v(s.requests)),
+                ("batches", u64v(s.batches)),
+                ("padded_frames", u64v(s.padded_frames)),
+                ("p50_us", u64v(s.latency_us(50.0))),
+                ("p99_us", u64v(s.latency_us(99.0))),
+            ])
+        })
+        .collect();
+    HttpResponse::json(200, obj(vec![("tenants", Value::Arr(tenants))]))
+}
+
+/// `GET /queues`: the live [`QueueStatus`] snapshot, plan order.
+fn queues(st: &ControlState) -> HttpResponse {
+    let Some(svc) = st.svc.as_ref() else {
+        return closed();
+    };
+    let qs: Vec<Value> = svc.status().iter().map(queue_to_json).collect();
+    HttpResponse::json(200, obj(vec![("queues", Value::Arr(qs))]))
+}
+
+/// `GET /plan`: the active plan's canonical JSON document.
+fn active_plan(st: &ControlState) -> HttpResponse {
+    let Some(svc) = st.svc.as_ref() else {
+        return closed();
+    };
+    HttpResponse {
+        status: 200,
+        body: svc.plan().to_json().to_pretty(),
+    }
+}
+
+/// One tenant's live latency quantiles (µs) from the 252-bucket log
+/// histogram — bucket upper bounds except min/max, which are exact.
+fn tenant_histogram(svc: &IngestService, name: &str, idx: usize) -> Value {
+    let h = svc.histogram(idx);
+    obj(vec![
+        ("tenant", Value::Str(name.to_string())),
+        ("count", u64v(h.count())),
+        ("min_us", u64v(h.min())),
+        ("p50_us", u64v(h.quantile(50.0))),
+        ("p90_us", u64v(h.quantile(90.0))),
+        ("p99_us", u64v(h.quantile(99.0))),
+        ("p999_us", u64v(h.quantile(99.9))),
+        ("max_us", u64v(h.max())),
+    ])
+}
+
+/// `GET /histograms` (all tenants) and `GET /histograms/{tenant}`.
+fn histograms(st: &ControlState, tenant: Option<&str>) -> HttpResponse {
+    let Some(svc) = st.svc.as_ref() else {
+        return closed();
+    };
+    let names = svc.names();
+    match tenant {
+        Some(t) => match names.iter().position(|n| n == t) {
+            Some(i) => HttpResponse::json(200, tenant_histogram(svc, t, i)),
+            None => err_json(404, &format!("unknown tenant '{t}'")),
+        },
+        None => {
+            let all: Vec<Value> = names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| tenant_histogram(svc, n, i))
+                .collect();
+            HttpResponse::json(200, obj(vec![("tenants", Value::Arr(all))]))
+        }
+    }
+}
+
+/// Map a typed admission rejection onto its status code and body.
+fn reject(r: &RejectReason) -> HttpResponse {
+    let status = match r {
+        RejectReason::QueueFull { .. } => 429,
+        RejectReason::Shedding | RejectReason::Closed => 503,
+        RejectReason::DeadlineExpired { .. } => 408,
+    };
+    HttpResponse::json(
+        status,
+        obj(vec![
+            ("error", Value::Str(r.to_string())),
+            ("reason", Value::Str(r.label().to_string())),
+        ]),
+    )
+}
+
+/// `POST /submit`: body `{"tenant": name-or-index, "priority"?: 0..=255,
+/// "deadline_ms"?: relative-ms, "frame"?: [i8...]}`. An omitted frame
+/// submits all zeros of the tenant's input shape; the relative deadline
+/// is resolved to an absolute instant here, at admission.
+fn submit(st: &mut ControlState, body: &str) -> HttpResponse {
+    let ControlState { svc, pending } = st;
+    let Some(svc) = svc.as_mut() else {
+        return closed();
+    };
+    let v = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return err_json(400, &format!("bad JSON body: {e}")),
+    };
+    let names = svc.names();
+    let idx = match v.get("tenant") {
+        Some(Value::Str(name)) => match names.iter().position(|n| n == name) {
+            Some(i) => i,
+            None => return err_json(404, &format!("unknown tenant '{name}'")),
+        },
+        Some(other) => match other.as_usize().filter(|i| *i < names.len()) {
+            Some(i) => i,
+            None => return err_json(404, "tenant index out of range"),
+        },
+        None => return err_json(400, "body needs a 'tenant' (name or index)"),
+    };
+    let priority = match v.get("priority") {
+        None => 0u8,
+        Some(p) => match p.as_usize().filter(|p| *p <= u8::MAX as usize) {
+            Some(p) => p as u8,
+            None => return err_json(400, "'priority' must be an integer in 0..=255"),
+        },
+    };
+    let deadline = match v.get("deadline_ms") {
+        None => None,
+        Some(d) => match d.as_f64().filter(|ms| (0.0..=MAX_DEADLINE_MS).contains(ms)) {
+            Some(ms) => Some(Instant::now() + Duration::from_secs_f64(ms / 1e3)),
+            None => return err_json(400, "'deadline_ms' must be a number of ms in 0..=1e12"),
+        },
+    };
+    let (c, h, w) = svc.plan().tenants[idx].net.input;
+    let expected = c * h * w;
+    let frame: Vec<i8> = match v.get("frame") {
+        None => vec![0i8; expected],
+        Some(f) => {
+            let Some(arr) = f.as_arr() else {
+                return err_json(400, "'frame' must be an array of integers");
+            };
+            if arr.len() != expected {
+                return err_json(
+                    400,
+                    &format!(
+                        "frame for '{}' must hold {expected} values, got {}",
+                        names[idx],
+                        arr.len()
+                    ),
+                );
+            }
+            let mut out = Vec::with_capacity(arr.len());
+            for x in arr {
+                match x.as_f64().filter(|n| n.fract() == 0.0 && (-128.0..=127.0).contains(n)) {
+                    Some(n) => out.push(n as i8),
+                    None => return err_json(400, "frame values must be integers in -128..=127"),
+                }
+            }
+            out
+        }
+    };
+    match svc.submit_with(idx, frame, priority, deadline) {
+        Ok((id, rx)) => {
+            while pending.len() >= MAX_PENDING {
+                pending.pop_first();
+            }
+            pending.insert(id, rx);
+            HttpResponse::json(
+                200,
+                obj(vec![
+                    ("id", u64v(id)),
+                    ("tenant", Value::Str(names[idx].clone())),
+                    ("state", Value::Str("queued".to_string())),
+                ]),
+            )
+        }
+        Err(r) => reject(&r),
+    }
+}
+
+/// `{"id": .., "state": .., <extra>}` — the `/requests/{id}` document.
+fn request_state(id: u64, state: &str, extra: Option<(&str, Value)>) -> HttpResponse {
+    let mut pairs = vec![("id", u64v(id)), ("state", Value::Str(state.to_string()))];
+    if let Some(p) = extra {
+        pairs.push(p);
+    }
+    HttpResponse::json(200, obj(pairs))
+}
+
+/// `GET /requests/{id}`: poll a submitted request. Finished requests
+/// are one-shot — the first poll that observes completion consumes the
+/// result, and later polls get `404`.
+fn poll_request(st: &mut ControlState, id: &str) -> HttpResponse {
+    if st.svc.is_none() {
+        return closed();
+    }
+    let Ok(id) = id.parse::<u64>() else {
+        return err_json(400, &format!("request id '{id}' is not an integer"));
+    };
+    let outcome = st.pending.get(&id).map(|rx| rx.try_recv());
+    match outcome {
+        None => err_json(404, &format!("unknown or already-consumed request id {id}")),
+        Some(Err(TryRecvError::Empty)) => request_state(id, "pending", None),
+        Some(Ok(Ok(out))) => {
+            st.pending.remove(&id);
+            request_state(id, "done", Some(("output_len", num(out.len()))))
+        }
+        Some(Ok(Err(e))) => {
+            st.pending.remove(&id);
+            request_state(id, "failed", Some(("error", Value::Str(e.to_string()))))
+        }
+        Some(Err(TryRecvError::Disconnected)) => {
+            st.pending.remove(&id);
+            let cause = Value::Str("response channel dropped".to_string());
+            request_state(id, "failed", Some(("error", cause)))
+        }
+    }
+}
+
+/// `DELETE /requests/{id}`: purge a queued request. Only requests still
+/// waiting in a queue can be cancelled — dispatched, finished, and
+/// unknown ids report `404`.
+fn cancel_request(st: &mut ControlState, id: &str) -> HttpResponse {
+    let ControlState { svc, pending } = st;
+    let Some(svc) = svc.as_ref() else {
+        return closed();
+    };
+    let Ok(id) = id.parse::<u64>() else {
+        return err_json(400, &format!("request id '{id}' is not an integer"));
+    };
+    if svc.cancel(id) {
+        pending.remove(&id);
+        let body = obj(vec![("id", u64v(id)), ("cancelled", Value::Bool(true))]);
+        HttpResponse::json(200, body)
+    } else {
+        let cause = format!("request {id} is not queued (unknown, dispatched, or finished)");
+        err_json(404, &cause)
+    }
+}
+
+/// `POST /plan/apply`: body is a [`PlanDiff`] wire document. Decode
+/// errors are `400`; a diff the live service refuses (semantic apply
+/// failure) is `409` and leaves the service untouched. The success body
+/// is exactly [`crate::coordinator::ApplyReport::to_json`] — bitwise
+/// identical to a direct in-process [`IngestService::apply`] call.
+fn apply_diff(st: &mut ControlState, body: &str) -> HttpResponse {
+    let Some(svc) = st.svc.as_mut() else {
+        return closed();
+    };
+    let v = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return err_json(400, &format!("bad JSON body: {e}")),
+    };
+    let diff = match PlanDiff::from_wire_json(&v) {
+        Ok(d) => d,
+        Err(e) => return err_json(400, &e.to_string()),
+    };
+    match svc.apply(&diff) {
+        Ok(report) => HttpResponse {
+            status: 200,
+            body: report.to_json().to_pretty(),
+        },
+        Err(e) => err_json(409, &e.to_string()),
+    }
+}
+
+/// `POST /replan`: body is a [`FaultPlan`]. The planner re-plans the
+/// incumbent on the fault's surviving board (every regime enumerated,
+/// same split granularity) and the resulting diff is applied live. The
+/// response carries the shed report, the replan phase, and the same
+/// [`crate::coordinator::ApplyReport`] document `POST /plan/apply`
+/// returns; an infeasible failover (every tenant shed) is `409`.
+fn replan(st: &mut ControlState, body: &str) -> HttpResponse {
+    let Some(svc) = st.svc.as_mut() else {
+        return closed();
+    };
+    let v = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return err_json(400, &format!("bad JSON body: {e}")),
+    };
+    let fault = match FaultPlan::from_json(&v) {
+        Ok(f) => f,
+        Err(e) => return err_json(400, &e.to_string()),
+    };
+    let incumbent: DeploymentPlan = svc.plan().clone();
+    let outcome = match Planner::on(incumbent.board.clone())
+        .steps(incumbent.steps)
+        .schedule(ScheduleMode::Auto)
+        .replan(&incumbent, &fault)
+    {
+        Ok(o) => o,
+        Err(e) => return err_json(409, &e.to_string()),
+    };
+    let shed: Vec<Value> = outcome.shed.iter().map(shed_to_json).collect();
+    let phase = Value::Str(outcome.phase.label().to_string());
+    let Some(diff) = outcome.diff else {
+        let cause = "no feasible failover plan on the surviving board — every tenant shed";
+        return HttpResponse::json(
+            409,
+            obj(vec![
+                ("error", Value::Str(cause.to_string())),
+                ("phase", phase),
+                ("shed", Value::Arr(shed)),
+            ]),
+        );
+    };
+    match svc.apply(&diff) {
+        Ok(report) => HttpResponse::json(
+            200,
+            obj(vec![
+                ("replanned", Value::Bool(true)),
+                ("phase", phase),
+                ("shed", Value::Arr(shed)),
+                ("applied", report.to_json()),
+            ]),
+        ),
+        Err(e) => err_json(409, &e.to_string()),
+    }
+}
+
+/// `POST /replay`: body is a [`TraceSpec`]. Runs the deterministic
+/// planned-timeline replay ([`serve_trace`]) against the active plan —
+/// pure seeded arithmetic, so the response is byte-identical for the
+/// same spec on any machine — and returns the serve report. Live
+/// queues and histograms are not touched.
+fn replay(st: &ControlState, body: &str) -> HttpResponse {
+    let Some(svc) = st.svc.as_ref() else {
+        return closed();
+    };
+    let v = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return err_json(400, &format!("bad JSON body: {e}")),
+    };
+    let spec = match TraceSpec::from_json(&v) {
+        Ok(s) => s,
+        Err(e) => return err_json(400, &e.to_string()),
+    };
+    match serve_trace(svc.plan(), &spec) {
+        Ok(report) => HttpResponse {
+            status: 200,
+            body: report.to_json().to_pretty(),
+        },
+        Err(e) => err_json(400, &e.to_string()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP/1.1 framing: the only code that touches bytes
+// ---------------------------------------------------------------------------
+
+/// Parse one HTTP/1.x request from a buffered reader: request line,
+/// headers (only `Content-Length` is interpreted), then exactly that
+/// many body bytes. Rejects non-HTTP preambles, oversized bodies, and
+/// non-UTF-8 payloads with the real cause.
+pub fn read_request<R: BufRead>(r: &mut R) -> crate::Result<HttpRequest> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    anyhow::ensure!(n > 0, "empty request");
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("malformed request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line names no path"))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line names no protocol version"))?;
+    anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported protocol '{version}'");
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        let n = r.read_line(&mut header)?;
+        anyhow::ensure!(n > 0, "request ended inside headers");
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((key, value)) = header.split_once(':') {
+            if key.eq_ignore_ascii_case("content-length") {
+                content_len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad Content-Length '{}'", value.trim()))?;
+            }
+        }
+    }
+    anyhow::ensure!(
+        content_len <= MAX_BODY_BYTES,
+        "request body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+    );
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Write one response with the minimal framing headers (JSON content
+/// type, explicit length, `Connection: close` — one request per
+/// connection keeps the adapter stateless).
+pub fn write_response<W: Write>(w: &mut W, resp: &HttpResponse) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.body.len()
+    )?;
+    w.write_all(resp.body.as_bytes())?;
+    w.flush()
+}
+
+/// Handle one accepted connection: parse, route through the plane,
+/// write the response, close. A parse failure answers `400` rather
+/// than dropping the connection. After serving the request that shut
+/// the plane down, pokes the listener once so the accept loop observes
+/// the flag and exits.
+fn handle_connection(plane: &ControlPlane, mut stream: TcpStream, wake: SocketAddr) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let resp = match read_request(&mut reader) {
+        Ok(req) => plane.handle(&req),
+        Err(e) => err_json(400, &format!("bad request: {e}")),
+    };
+    let _ = write_response(&mut stream, &resp);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    if plane.is_shut_down() {
+        let _ = TcpStream::connect(wake);
+    }
+}
+
+/// Run the TCP adapter until the plane shuts down: a fixed pool of
+/// scoped worker threads drains an accept queue, and every connection
+/// serves exactly one request. Returns after `POST /shutdown` has been
+/// served and all in-flight handlers finished (dropping the queue
+/// joins the pool — graceful drain, no connection is abandoned
+/// mid-response).
+pub fn serve(plane: &ControlPlane, listener: TcpListener) -> crate::Result<()> {
+    let wake = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Mutex::new(rx);
+    std::thread::scope(|s| {
+        for _ in 0..CONTROL_WORKERS {
+            let rx = &rx;
+            s.spawn(move || loop {
+                let next = rx.lock().unwrap().recv();
+                match next {
+                    Ok(stream) => handle_connection(plane, stream, wake),
+                    Err(_) => break,
+                }
+            });
+        }
+        for stream in listener.incoming() {
+            if plane.is_shut_down() {
+                break;
+            }
+            if let Ok(st) = stream {
+                let _ = tx.send(st);
+            }
+        }
+        drop(tx);
+    });
+    Ok(())
+}
+
+/// Minimal HTTP client for the `flexipipe ctl` subcommand: one request
+/// per connection, returns `(status, body)`. Depends only on
+/// [`TcpStream`] — the same zero-crate policy as the server side.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> crate::Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    let mut reader = BufReader::new(stream);
+    reader.read_to_end(&mut raw)?;
+    let text = String::from_utf8(raw)
+        .map_err(|_| anyhow::anyhow!("response from {addr} is not UTF-8"))?;
+    let (head, payload) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed response from {addr} (no header end)"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line in response from {addr}"))?;
+    Ok((status, payload.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zedboard;
+    use crate::coordinator::BatchPolicy;
+    use crate::ingest::{ArrivalProcess, IngestPolicy, TenantTrace};
+    use crate::model::zoo;
+    use crate::plan::Workload;
+    use crate::quant::QuantMode;
+
+    fn test_plan() -> DeploymentPlan {
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn()).tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        set.plans[set.best].clone()
+    }
+
+    fn ingest(plan: &DeploymentPlan) -> IngestService {
+        IngestService::start(plan, BatchPolicy::default(), IngestPolicy::default()).unwrap()
+    }
+
+    fn plane() -> ControlPlane {
+        ControlPlane::new(ingest(&test_plan()))
+    }
+
+    fn call(p: &ControlPlane, method: &str, path: &str, body: &str) -> HttpResponse {
+        p.handle(&HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.to_string(),
+        })
+    }
+
+    fn get(p: &ControlPlane, path: &str) -> HttpResponse {
+        call(p, "GET", path, "")
+    }
+
+    fn post(p: &ControlPlane, path: &str, body: &str) -> HttpResponse {
+        call(p, "POST", path, body)
+    }
+
+    #[test]
+    fn http_requests_parse_and_reject_garbage() {
+        use std::io::Cursor;
+        let raw = b"POST /plan/apply HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\n{\"a\"";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/plan/apply");
+        assert_eq!(req.body, "{\"a\"");
+
+        // No Content-Length means no body.
+        let raw = b"GET /health HTTP/1.1\r\nHost: x\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+
+        // Non-HTTP preambles are refused, not misrouted.
+        assert!(read_request(&mut Cursor::new(&b"nonsense\r\n\r\n"[..])).is_err());
+        assert!(read_request(&mut Cursor::new(&b""[..])).is_err());
+        let raw = b"GET /x SMTP/1.0\r\n\r\n";
+        let err = read_request(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert!(err.to_string().contains("SMTP/1.0"), "{err}");
+
+        // The writer frames status, length, and the exact body bytes.
+        let mut out = Vec::new();
+        let resp = HttpResponse {
+            status: 200,
+            body: "{}".to_string(),
+        };
+        write_response(&mut out, &resp).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+
+    #[test]
+    fn router_distinguishes_unknown_routes_from_wrong_methods() {
+        let p = plane();
+        let missing = get(&p, "/nope");
+        assert_eq!(missing.status, 404);
+        assert!(missing.body.contains("error"), "{}", missing.body);
+        // A real path with the wrong verb is 405, not 404.
+        assert_eq!(get(&p, "/plan/apply").status, 405);
+        assert_eq!(call(&p, "DELETE", "/health", "").status, 405);
+        assert_eq!(post(&p, "/queues", "").status, 405);
+        // Query strings are ignored by the router.
+        assert_eq!(get(&p, "/health?verbose=1").status, 200);
+    }
+
+    #[test]
+    fn health_reports_every_tenant() {
+        let p = plane();
+        let resp = get(&p, "/health");
+        assert_eq!(resp.status, 200);
+        let v = json::parse(&resp.body).unwrap();
+        let tenants = v.req("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].str_field("tenant").unwrap(), "tinycnn");
+        assert_eq!(tenants[1].str_field("tenant").unwrap(), "lenet");
+        for t in tenants {
+            assert_eq!(t.str_field("health").unwrap(), "healthy");
+            assert_eq!(t.usize_field("requests").unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn queue_snapshots_are_byte_identical_across_fresh_services() {
+        // The encoding side of the determinism story: two services on
+        // the same plan answer /queues with the same bytes before any
+        // wall-clock-dependent traffic has run.
+        let (a, b) = (plane(), plane());
+        let (qa, qb) = (get(&a, "/queues"), get(&b, "/queues"));
+        assert_eq!(qa.status, 200);
+        assert_eq!(qa.body, qb.body);
+        let v = json::parse(&qa.body).unwrap();
+        let queues = v.req("queues").unwrap().as_arr().unwrap();
+        assert_eq!(queues.len(), 2);
+        for q in queues {
+            assert_eq!(q.usize_field("depth").unwrap(), 0);
+            assert_eq!(q.usize_field("admitted").unwrap(), 0);
+            assert!(q.usize_field("capacity").unwrap() >= 1);
+        }
+    }
+
+    #[test]
+    fn plan_endpoint_round_trips_the_active_plan() {
+        let plan = test_plan();
+        let p = ControlPlane::new(ingest(&plan));
+        let resp = get(&p, "/plan");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, plan.to_json().to_pretty());
+    }
+
+    #[test]
+    fn submit_poll_and_consume_a_request() {
+        let p = plane();
+        let resp = post(&p, "/submit", r#"{"tenant": "tinycnn"}"#);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let v = json::parse(&resp.body).unwrap();
+        assert_eq!(v.str_field("state").unwrap(), "queued");
+        let id = v.usize_field("id").unwrap();
+        let mut done = false;
+        for _ in 0..2000 {
+            let r = get(&p, &format!("/requests/{id}"));
+            assert_eq!(r.status, 200, "{}", r.body);
+            let v = json::parse(&r.body).unwrap();
+            match v.str_field("state").unwrap() {
+                "done" => {
+                    assert!(v.usize_field("output_len").unwrap() > 0);
+                    done = true;
+                    break;
+                }
+                "failed" => panic!("request failed: {}", r.body),
+                _ => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert!(done, "request never completed");
+        // The result was consumed by the poll above: one-shot.
+        assert_eq!(get(&p, &format!("/requests/{id}")).status, 404);
+        assert_eq!(get(&p, "/requests/notanumber").status, 400);
+    }
+
+    #[test]
+    fn zero_relative_deadlines_always_expire() {
+        // The acceptance property, through the HTTP surface: a deadline
+        // that resolves at-or-before the admission instant is rejected
+        // 408/DeadlineExpired every time — never served, never queued,
+        // and never misreported as queue-full.
+        let p = plane();
+        for _ in 0..20 {
+            let r = post(&p, "/submit", r#"{"tenant": 0, "deadline_ms": 0}"#);
+            assert_eq!(r.status, 408, "{}", r.body);
+            let v = json::parse(&r.body).unwrap();
+            assert_eq!(v.str_field("reason").unwrap(), "deadline-expired");
+        }
+        let q = json::parse(&get(&p, "/queues").body).unwrap();
+        let t0 = &q.req("queues").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t0.usize_field("expired").unwrap(), 20);
+        assert_eq!(t0.usize_field("admitted").unwrap(), 0);
+        assert_eq!(t0.usize_field("completed").unwrap(), 0);
+    }
+
+    #[test]
+    fn submit_validates_tenants_frames_and_knobs() {
+        let p = plane();
+        assert_eq!(post(&p, "/submit", r#"{"tenant": "nope"}"#).status, 404);
+        assert_eq!(post(&p, "/submit", r#"{"tenant": 9}"#).status, 404);
+        assert_eq!(post(&p, "/submit", "not json").status, 400);
+        assert_eq!(post(&p, "/submit", r#"{}"#).status, 400);
+        let r = post(&p, "/submit", r#"{"tenant": "tinycnn", "frame": [1, 2]}"#);
+        assert_eq!(r.status, 400);
+        assert!(r.body.contains("must hold"), "{}", r.body);
+        let pr = r#"{"tenant": "tinycnn", "priority": 900}"#;
+        assert_eq!(post(&p, "/submit", pr).status, 400);
+        let dl = r#"{"tenant": "tinycnn", "deadline_ms": -1}"#;
+        assert_eq!(post(&p, "/submit", dl).status, 400);
+    }
+
+    #[test]
+    fn cancel_purges_queued_requests_only() {
+        // A long link latency pins the first request in flight, so the
+        // second is deterministically still queued when the DELETE lands.
+        let plan = test_plan();
+        let batch = BatchPolicy {
+            link_latency: Duration::from_millis(200),
+            ..BatchPolicy::default()
+        };
+        let policy = IngestPolicy {
+            queue_capacity: 4,
+            ..IngestPolicy::default()
+        };
+        let p = ControlPlane::new(IngestService::start(&plan, batch, policy).unwrap());
+        let r1 = post(&p, "/submit", r#"{"tenant": "tinycnn"}"#);
+        let r2 = post(&p, "/submit", r#"{"tenant": "tinycnn"}"#);
+        let id1 = json::parse(&r1.body).unwrap().usize_field("id").unwrap();
+        let id2 = json::parse(&r2.body).unwrap().usize_field("id").unwrap();
+        let del = call(&p, "DELETE", &format!("/requests/{id2}"), "");
+        assert_eq!(del.status, 200, "{}", del.body);
+        let v = json::parse(&del.body).unwrap();
+        assert_eq!(v.req("cancelled").unwrap().as_bool(), Some(true));
+        // The receiver map entry went with it.
+        assert_eq!(get(&p, &format!("/requests/{id2}")).status, 404);
+        assert_eq!(call(&p, "DELETE", "/requests/999999", "").status, 404);
+        let q = json::parse(&get(&p, "/queues").body).unwrap();
+        let t0 = &q.req("queues").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t0.usize_field("cancelled").unwrap(), 1);
+        // The survivor still completes.
+        let mut done = false;
+        for _ in 0..3000 {
+            let r = get(&p, &format!("/requests/{id1}"));
+            let v = json::parse(&r.body).unwrap();
+            match v.get("state").and_then(|s| s.as_str()) {
+                Some("done") => {
+                    done = true;
+                    break;
+                }
+                Some("failed") => panic!("survivor failed: {}", r.body),
+                _ => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert!(done, "surviving request never completed");
+    }
+
+    #[test]
+    fn apply_over_the_wire_matches_the_direct_call() {
+        // The acceptance criterion: POST /plan/apply returns an
+        // ApplyReport bitwise identical to a direct in-process apply of
+        // the same diff, and the active plan lands on the target bytes.
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn()).tenant(zoo::lenet());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        let a = set.plans[set.best].clone();
+        let b = set
+            .plans
+            .iter()
+            .find(|p| p.tenants[0].dsp_parts != a.tenants[0].dsp_parts)
+            .expect("an 8-step spatial search holds more than one split")
+            .clone();
+        let diff = a.diff(&b).unwrap();
+
+        let mut direct = ingest(&a);
+        let direct_report = direct.apply(&diff).unwrap().to_json().to_pretty();
+        let _ = direct.shutdown();
+
+        let p = ControlPlane::new(ingest(&a));
+        let resp = post(&p, "/plan/apply", &diff.to_wire_json().to_pretty());
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(resp.body, direct_report);
+        assert_eq!(get(&p, "/plan").body, b.to_json().to_pretty());
+
+        // Decode failures are 400 and leave the plan untouched.
+        assert_eq!(post(&p, "/plan/apply", "{}").status, 400);
+        assert_eq!(post(&p, "/plan/apply", "junk").status, 400);
+        assert_eq!(get(&p, "/plan").body, b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn replan_with_no_faults_keeps_every_tenant() {
+        let p = plane();
+        let body = FaultPlan::none().to_json().to_pretty();
+        let resp = post(&p, "/replan", &body);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let v = json::parse(&resp.body).unwrap();
+        assert_eq!(v.req("replanned").unwrap().as_bool(), Some(true));
+        assert_eq!(v.str_field("phase").unwrap(), "warm-start");
+        assert!(v.req("shed").unwrap().as_arr().unwrap().is_empty());
+        let applied = v.req("applied").unwrap();
+        let survivors = applied.req("kept").unwrap().as_arr().unwrap().len()
+            + applied.req("restarted").unwrap().as_arr().unwrap().len();
+        assert_eq!(survivors, 2);
+        assert!(applied.req("removed").unwrap().as_arr().unwrap().is_empty());
+        // The service still answers for both tenants.
+        let h = json::parse(&get(&p, "/health").body).unwrap();
+        assert_eq!(h.req("tenants").unwrap().as_arr().unwrap().len(), 2);
+        // A bad fault document is a 400 with the real cause.
+        let bad = post(&p, "/replan", r#"{"version": 9, "seed": 0}"#);
+        assert_eq!(bad.status, 400);
+        assert!(bad.body.contains("version 9"), "{}", bad.body);
+    }
+
+    #[test]
+    fn replay_reports_are_deterministic_and_leave_live_state_alone() {
+        let (p1, p2) = (plane(), plane());
+        let spec = TraceSpec {
+            seed: 7,
+            duration_s: 1.0,
+            queue_capacity: 0,
+            tenants: vec![
+                TenantTrace {
+                    tenant: "tinycnn".to_string(),
+                    process: ArrivalProcess::Poisson { rate_fps: 40.0 },
+                },
+                TenantTrace {
+                    tenant: "lenet".to_string(),
+                    process: ArrivalProcess::ClosedLoop {
+                        clients: 2,
+                        think_time_s: 0.05,
+                    },
+                },
+            ],
+        };
+        let spec = spec.to_json().to_pretty();
+        let (r1, r2) = (post(&p1, "/replay", &spec), post(&p2, "/replay", &spec));
+        assert_eq!(r1.status, 200, "{}", r1.body);
+        assert_eq!(r1.body, r2.body, "replay must be byte-deterministic");
+        // The replay is model-side only: live introspection still reads
+        // as two untouched services, byte for byte.
+        assert_eq!(get(&p1, "/queues").body, get(&p2, "/queues").body);
+        assert_eq!(get(&p1, "/histograms").body, get(&p2, "/histograms").body);
+        // Unknown tenants in the spec are a 400.
+        let bad = spec.replace("tinycnn", "ghost");
+        assert_eq!(post(&p1, "/replay", &bad).status, 400);
+    }
+
+    #[test]
+    fn histograms_cover_tenants_and_reject_unknown_names() {
+        let p = plane();
+        let resp = post(&p, "/submit", r#"{"tenant": "tinycnn"}"#);
+        let id = json::parse(&resp.body).unwrap().usize_field("id").unwrap();
+        for _ in 0..2000 {
+            let r = get(&p, &format!("/requests/{id}"));
+            if r.status == 404 || r.body.contains("\"done\"") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let resp = get(&p, "/histograms/tinycnn");
+        assert_eq!(resp.status, 200);
+        let v = json::parse(&resp.body).unwrap();
+        assert!(v.usize_field("count").unwrap() >= 1);
+        let p50 = v.usize_field("p50_us").unwrap();
+        let p99 = v.usize_field("p99_us").unwrap();
+        assert!(p50 <= p99 && p99 <= v.usize_field("max_us").unwrap());
+        assert_eq!(get(&p, "/histograms/ghost").status, 404);
+        let all = json::parse(&get(&p, "/histograms").body).unwrap();
+        assert_eq!(all.req("tenants").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn shutdown_drains_and_closes_every_endpoint() {
+        let p = plane();
+        assert!(!p.is_shut_down());
+        let resp = post(&p, "/shutdown", "");
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert!(p.is_shut_down());
+        let v = json::parse(&resp.body).unwrap();
+        assert_eq!(v.req("shut_down").unwrap().as_bool(), Some(true));
+        assert_eq!(v.req("queues").unwrap().as_arr().unwrap().len(), 2);
+        for (method, path) in [
+            ("GET", "/health"),
+            ("GET", "/queues"),
+            ("GET", "/plan"),
+            ("GET", "/histograms"),
+            ("POST", "/submit"),
+            ("POST", "/replan"),
+            ("POST", "/shutdown"),
+        ] {
+            assert_eq!(call(&p, method, path, "").status, 503, "{method} {path}");
+        }
+    }
+}

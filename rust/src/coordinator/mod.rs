@@ -427,6 +427,23 @@ pub struct ApplyReport {
     pub removed: Vec<String>,
 }
 
+impl ApplyReport {
+    /// Serialize (deterministic field order). The control plane returns
+    /// this document from `POST /plan/apply` and `POST /replan`, and the
+    /// acceptance tests compare it bitwise against direct
+    /// [`PlannedService::apply`] calls.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        let list = |v: &[String]| Value::Arr(v.iter().map(|s| Value::Str(s.clone())).collect());
+        obj(vec![
+            ("kept", list(&self.kept)),
+            ("restarted", list(&self.restarted)),
+            ("added", list(&self.added)),
+            ("removed", list(&self.removed)),
+        ])
+    }
+}
+
 impl PlannedService {
     /// The deployment plan this service is currently executing.
     pub fn plan(&self) -> &crate::plan::DeploymentPlan {

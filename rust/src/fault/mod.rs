@@ -586,6 +586,224 @@ impl PlanDiff {
             ),
         ])
     }
+
+    /// Full wire codec, the `POST /plan/apply` body format: unlike the
+    /// summary [`PlanDiff::to_json`], this carries the complete tenant
+    /// payloads and plan-level overrides, so a receiving service can
+    /// execute the diff with [`DeploymentPlan::apply`] (or live with
+    /// [`crate::coordinator::PlannedService::apply`]) without ever
+    /// seeing the target plan file. Versioned like the other formats;
+    /// [`PlanDiff::from_wire_json`] rejects anything but
+    /// [`DIFF_WIRE_VERSION`]. Deterministic field order: encoding the
+    /// same diff twice is byte-identical, and optional overrides are
+    /// omitted (not nulled) when unchanged.
+    pub fn to_wire_json(&self) -> Value {
+        let ops: Vec<Value> = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                TenantOp::Keep { from } => obj(vec![
+                    ("op", Value::Str("keep".to_string())),
+                    ("from", num(*from)),
+                ]),
+                TenantOp::Change {
+                    from,
+                    tenant,
+                    reconfig,
+                } => obj(vec![
+                    ("op", Value::Str("change".to_string())),
+                    ("from", num(*from)),
+                    ("tenant", crate::plan::tenant_to_json(tenant)),
+                    ("reconfig", reconfig_step_to_json(reconfig)),
+                ]),
+                TenantOp::Add { tenant, reconfig } => obj(vec![
+                    ("op", Value::Str("add".to_string())),
+                    ("tenant", crate::plan::tenant_to_json(tenant)),
+                    ("reconfig", reconfig_step_to_json(reconfig)),
+                ]),
+            })
+            .collect();
+        let removed: Vec<Value> = self
+            .removed
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("from", num(r.from)),
+                    ("net", Value::Str(r.net.clone())),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("version", num(DIFF_WIRE_VERSION)),
+            ("ops", Value::Arr(ops)),
+            ("removed", Value::Arr(removed)),
+        ];
+        if let Some(b) = &self.board {
+            pairs.push(("board", crate::plan::board_to_json(b)));
+        }
+        if let Some(m) = &self.mode {
+            pairs.push(("bits", num(m.bits())));
+        }
+        if let Some(s) = self.steps {
+            pairs.push(("steps", num(s)));
+        }
+        if let Some(r) = &self.regime {
+            pairs.push(("regime", Value::Str(r.label().to_string())));
+            if let crate::shard::Regime::Temporal(info) = r {
+                pairs.push(("temporal", crate::plan::temporal_to_json(info)));
+            }
+        }
+        if let Some(m) = &self.reconfig_model {
+            pairs.push(("reconfig_model", crate::plan::reconfig_to_json(m)));
+        }
+        obj(pairs)
+    }
+
+    /// Decode a diff from its wire format (see
+    /// [`PlanDiff::to_wire_json`]). Structural validation happens here
+    /// (known ops, integer indices, overlap ≤ full); *semantic*
+    /// validation — source indices in range, each claimed once —
+    /// happens in [`DeploymentPlan::apply`], exactly as for a
+    /// locally-computed diff.
+    pub fn from_wire_json(v: &Value) -> crate::Result<PlanDiff> {
+        let version = v.usize_field("version")?;
+        anyhow::ensure!(
+            version == DIFF_WIRE_VERSION,
+            "unsupported plan-diff wire version {version}: this build reads versions \
+             {DIFF_WIRE_VERSION}..={DIFF_WIRE_VERSION}"
+        );
+        let ops = v
+            .req("ops")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'ops' must be an array"))?
+            .iter()
+            .map(|o| -> crate::Result<TenantOp> {
+                Ok(match o.str_field("op")? {
+                    "keep" => TenantOp::Keep {
+                        from: o.usize_field("from")?,
+                    },
+                    "change" => TenantOp::Change {
+                        from: o.usize_field("from")?,
+                        tenant: crate::plan::tenant_from_json(o.req("tenant")?)?,
+                        reconfig: reconfig_step_from_json(o.req("reconfig")?)?,
+                    },
+                    "add" => TenantOp::Add {
+                        tenant: crate::plan::tenant_from_json(o.req("tenant")?)?,
+                        reconfig: reconfig_step_from_json(o.req("reconfig")?)?,
+                    },
+                    other => anyhow::bail!("unknown diff op '{other}' (keep change add)"),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let removed = v
+            .req("removed")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'removed' must be an array"))?
+            .iter()
+            .map(|r| -> crate::Result<RemovedTenant> {
+                Ok(RemovedTenant {
+                    from: r.usize_field("from")?,
+                    net: r.str_field("net")?.to_string(),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let board = match v.get("board") {
+            None => None,
+            Some(b) => Some(crate::plan::board_from_json(b)?),
+        };
+        let mode = match v.get("bits") {
+            None => None,
+            Some(b) => Some(crate::quant::QuantMode::from_bits(
+                b.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("'bits' must be an integer"))?,
+            )?),
+        };
+        let steps = match v.get("steps") {
+            None => None,
+            Some(s) => Some(
+                s.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("'steps' must be an integer"))?,
+            ),
+        };
+        let regime = match v.get("regime") {
+            None => {
+                anyhow::ensure!(
+                    v.get("temporal").is_none(),
+                    "diff carries a 'temporal' section without a 'regime'"
+                );
+                None
+            }
+            Some(r) => {
+                let label = r
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("'regime' must be a string"))?;
+                Some(match label {
+                    "spatial" => {
+                        anyhow::ensure!(
+                            v.get("temporal").is_none(),
+                            "spatial diff regime carries a 'temporal' section"
+                        );
+                        crate::shard::Regime::Spatial
+                    }
+                    "temporal" | "overlay" => {
+                        let info = crate::plan::temporal_from_json(v.req("temporal")?)?;
+                        anyhow::ensure!(
+                            (label == "overlay") == info.overlay,
+                            "regime label '{label}' contradicts the schedule's overlay flag"
+                        );
+                        crate::shard::Regime::Temporal(info)
+                    }
+                    other => anyhow::bail!("unknown regime '{other}' (spatial temporal overlay)"),
+                })
+            }
+        };
+        let reconfig_model = match v.get("reconfig_model") {
+            None => None,
+            Some(m) => Some(crate::plan::reconfig_from_json(m)?),
+        };
+        Ok(PlanDiff {
+            ops,
+            removed,
+            board,
+            mode,
+            steps,
+            regime,
+            reconfig_model,
+        })
+    }
+}
+
+/// Wire-format version written by [`PlanDiff::to_wire_json`];
+/// [`PlanDiff::from_wire_json`] rejects anything else.
+pub const DIFF_WIRE_VERSION: usize = 1;
+
+fn reconfig_step_to_json(r: &ReconfigStep) -> Value {
+    obj(vec![
+        ("net", Value::Str(r.net.clone())),
+        ("full_cycles", Value::Num(r.full_cycles as f64)),
+        ("overlap_cycles", Value::Num(r.overlap_cycles as f64)),
+    ])
+}
+
+fn reconfig_step_from_json(v: &Value) -> crate::Result<ReconfigStep> {
+    let cycles = |key: &str| -> crate::Result<u64> {
+        v.req(key)?
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as u64)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer"))
+    };
+    let full_cycles = cycles("full_cycles")?;
+    let overlap_cycles = cycles("overlap_cycles")?;
+    anyhow::ensure!(
+        overlap_cycles <= full_cycles,
+        "reconfig overlap_cycles {overlap_cycles} exceeds full_cycles {full_cycles}"
+    );
+    Ok(ReconfigStep {
+        net: v.str_field("net")?.to_string(),
+        full_cycles,
+        overlap_cycles,
+    })
 }
 
 /// Frames of the short solo DES run that measures an outgoing pipeline's

@@ -259,9 +259,9 @@ fn parse_arrivals_accepts_all_three_processes() {
 fn parse_arrivals_requires_duration_suffixes() {
     // The same unit rigor as --slo: a bare number is not a duration.
     let err = parse_arrivals("a=diurnal:1:4:5").unwrap_err().to_string();
-    assert!(err.contains("s, ms, or us"), "{err}");
+    assert!(err.contains("s, ms, us, m, or h"), "{err}");
     let err = parse_arrivals("a=bursty:3:10:7").unwrap_err().to_string();
-    assert!(err.contains("s, ms, or us"), "{err}");
+    assert!(err.contains("s, ms, us, m, or h"), "{err}");
 }
 
 #[test]
@@ -392,6 +392,174 @@ fn solo_plan_replay_stays_within_the_fill_plus_beat_bound() {
     // Determinism: byte-identical on a second run.
     let again = serve_trace(&plan, &spec).unwrap();
     assert_eq!(report.to_json().to_pretty(), again.to_json().to_pretty());
+}
+
+// -- Closed-loop clients ----------------------------------------------------
+
+#[test]
+fn closed_loop_process_labels_validates_and_roundtrips() {
+    let p = ArrivalProcess::ClosedLoop {
+        clients: 8,
+        think_time_s: 0.005,
+    };
+    assert_eq!(p.label(), "closed");
+    // Zero-service-time ceiling: 8 clients / 5 ms think.
+    assert!((p.mean_fps() - 1600.0).abs() < 1e-9);
+    let spec = TraceSpec {
+        seed: 5,
+        duration_s: 1.0,
+        queue_capacity: 0,
+        tenants: vec![TenantTrace {
+            tenant: "lenet".into(),
+            process: p,
+        }],
+    };
+    let back = TraceSpec::from_json(&spec.to_json()).unwrap();
+    assert_eq!(spec, back);
+
+    let mut bad = spec.clone();
+    bad.tenants[0].process = ArrivalProcess::ClosedLoop {
+        clients: 0,
+        think_time_s: 0.005,
+    };
+    assert!(bad.validate().is_err(), "zero clients is not a loop");
+    let mut bad = spec.clone();
+    bad.tenants[0].process = ArrivalProcess::ClosedLoop {
+        clients: 2,
+        think_time_s: 0.0,
+    };
+    assert!(bad.validate().is_err(), "think time must be positive");
+}
+
+#[test]
+fn closed_loop_tenants_have_empty_open_loop_streams() {
+    // arrivals() yields nothing for a closed tenant (its arrivals are
+    // completion-coupled), and — substream independence — swapping a
+    // co-tenant's process never perturbs another tenant's stream.
+    let mk = |p0: ArrivalProcess| TraceSpec {
+        seed: 21,
+        duration_s: 5.0,
+        queue_capacity: 0,
+        tenants: vec![
+            TenantTrace {
+                tenant: "a".into(),
+                process: p0,
+            },
+            TenantTrace {
+                tenant: "b".into(),
+                process: ArrivalProcess::Poisson { rate_fps: 20.0 },
+            },
+        ],
+    };
+    let with_closed = mk(ArrivalProcess::ClosedLoop {
+        clients: 4,
+        think_time_s: 0.01,
+    })
+    .arrivals(200e6)
+    .unwrap();
+    assert!(with_closed[0].is_empty(), "closed tenants pre-generate nothing");
+    assert!(!with_closed[1].is_empty());
+    let with_open = mk(ArrivalProcess::Poisson { rate_fps: 1.0 }).arrivals(200e6).unwrap();
+    assert_eq!(with_closed[1], with_open[1], "tenant substreams are independent");
+}
+
+#[test]
+fn closed_loop_replay_is_deterministic_and_stays_in_bound() {
+    let plan = lenet_plan();
+    let spec = TraceSpec {
+        seed: 11,
+        duration_s: 2.0,
+        queue_capacity: 0,
+        tenants: vec![TenantTrace {
+            tenant: "lenet".into(),
+            process: ArrivalProcess::ClosedLoop {
+                clients: 4,
+                think_time_s: 0.01,
+            },
+        }],
+    };
+    let report = serve_trace(&plan, &spec).unwrap();
+    let t = &report.tenants[0];
+    assert!(t.offered > 0, "clients must generate traffic");
+    assert_eq!(t.offered, t.admitted + t.rejected_full);
+    assert!(t.admitted > 0);
+    assert_eq!(t.within_bound, Some(true), "admitted work keeps the analytic bound");
+    // Self-limiting: offered load cannot exceed the zero-service-time
+    // ceiling (clients/think × duration) by more than the seeded draws'
+    // slack — 2× is far outside any plausible exponential-sum excursion.
+    let ceiling = spec.tenants[0].process.mean_fps() * spec.duration_s;
+    assert!(
+        (t.offered as f64) < 2.0 * ceiling,
+        "offered {} vs closed-loop ceiling {ceiling}",
+        t.offered
+    );
+    // Byte-determinism, and seeds actually matter.
+    let again = serve_trace(&plan, &spec).unwrap();
+    assert_eq!(report.to_json().to_pretty(), again.to_json().to_pretty());
+    let mut other = spec.clone();
+    other.seed = 12;
+    let diverged = serve_trace(&plan, &other).unwrap();
+    assert_ne!(
+        report.to_json().to_pretty(),
+        diverged.to_json().to_pretty(),
+        "different seeds must draw different think times"
+    );
+}
+
+#[test]
+fn single_closed_client_never_trips_queue_full() {
+    // The defining closed-loop property: one client's next arrival is
+    // gated on its previous completion, so it can never race itself into
+    // a full queue — unlike any open-loop process at the same mean rate.
+    let plan = lenet_plan();
+    let spec = TraceSpec {
+        seed: 3,
+        duration_s: 2.0,
+        queue_capacity: 0,
+        tenants: vec![TenantTrace {
+            tenant: "lenet".into(),
+            process: ArrivalProcess::ClosedLoop {
+                clients: 1,
+                think_time_s: 0.001,
+            },
+        }],
+    };
+    let report = serve_trace(&plan, &spec).unwrap();
+    let t = &report.tenants[0];
+    assert!(t.offered > 0);
+    assert_eq!(t.rejected_full, 0, "a lone closed client is completion-gated");
+    assert_eq!(t.offered, t.admitted);
+}
+
+#[test]
+fn parse_arrivals_accepts_closed_loops() {
+    let got = parse_arrivals("lenet=closed:8:5ms").unwrap();
+    assert_eq!(
+        got[0].process,
+        ArrivalProcess::ClosedLoop {
+            clients: 8,
+            think_time_s: 0.005,
+        }
+    );
+    assert!(parse_arrivals("a=closed:x:5ms").is_err());
+    assert!(parse_arrivals("a=closed:3").is_err());
+    assert!(parse_arrivals("a=closed:3:junk").is_err());
+    // Think times carry the same unit rigor as every other duration.
+    let err = parse_arrivals("a=closed:3:5").unwrap_err().to_string();
+    assert!(err.contains("s, ms, us, m, or h"), "{err}");
+}
+
+// -- Deadlines ---------------------------------------------------------------
+
+#[test]
+fn deadline_expired_rejections_are_typed_and_labeled() {
+    let r = RejectReason::DeadlineExpired {
+        missed_by_cycles: 1234,
+    };
+    assert_eq!(r.label(), "deadline-expired");
+    let msg = r.to_string();
+    assert!(msg.contains("1234 cycles"), "{msg}");
+    assert!(msg.contains("dropped"), "{msg}");
 }
 
 #[test]

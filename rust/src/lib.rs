@@ -73,6 +73,10 @@
 //! - [`coordinator`] — tokio frame server: the Fig. 4 host↔accelerator
 //!   loop, including the plan-driven multi-tenant service
 //!   ([`coordinator::Coordinator::start_planned`]).
+//! - [`control`] — operator control plane: a dependency-free HTTP/1.1
+//!   API over a live [`ingest::IngestService`] (health, queues, plan
+//!   apply/replan, submit with deadlines, deterministic replay), with a
+//!   socket-free handler core ([`control::ControlPlane::handle`]).
 //! - [`report`] — Table I regeneration and paper-vs-measured comparison.
 //!
 //! A map of how the subsystems fit together — and the invariants the
@@ -129,6 +133,7 @@
 
 pub mod alloc;
 pub mod board;
+pub mod control;
 pub mod coordinator;
 pub mod engine;
 pub mod fault;

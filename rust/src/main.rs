@@ -11,6 +11,12 @@
 //! flexipipe simulate --plan plan.json [--frames 4] [--faults faults.json]
 //! flexipipe serve    --plan plan.json [--frames 256]
 //! flexipipe serve    --plan plan.json --trace trace.json   # seeded replay
+//! flexipipe serve    --plan plan.json --listen 127.0.0.1:0 # operator API
+//! flexipipe ctl      health|queues|plan|histograms [T] --addr HOST:PORT
+//! flexipipe ctl      submit --tenant vgg16 [--priority 5] [--deadline 33ms] \
+//!                    --addr HOST:PORT    (then: ctl poll|cancel --id N)
+//! flexipipe ctl      apply target.json | replan faults.json | \
+//!                    replay trace.json | shutdown   --addr HOST:PORT
 //! flexipipe trace    gen --arrivals vgg16=poisson:2,alexnet=diurnal:0.5:2:5s \
 //!                    [--seed 1] [--duration 20s] [--queue-cap 0] [--out trace.json]
 //! flexipipe plan     --diff a.json b.json           # typed plan delta
@@ -33,10 +39,11 @@
 //! ```
 
 use flexipipe::alloc::{allocator_for, ArchKind};
+use flexipipe::control;
 use flexipipe::coordinator::{BatchPolicy, Coordinator};
 use flexipipe::fault::FaultPlan;
 use flexipipe::fleet::{FleetPlan, FleetPlanner, FleetSpec};
-use flexipipe::ingest::{self, TraceSpec};
+use flexipipe::ingest::{self, IngestPolicy, IngestService, TraceSpec};
 use flexipipe::model::{config, Network};
 use flexipipe::plan::{Constraint, DeploymentPlan, Objective, Planner, TenantSpec, Workload};
 use flexipipe::power::PowerModel;
@@ -46,7 +53,7 @@ use flexipipe::search::{self, DesignSpace};
 use flexipipe::shard::{self, Regime, ScheduleMode};
 use flexipipe::sim::{Simulate, Simulator};
 use flexipipe::util::cli::{flag, opt, parse_duration_s, split_list, usage, Args, Spec};
-use flexipipe::util::json::Value;
+use flexipipe::util::json::{obj, Value};
 use flexipipe::{board, report, sim};
 
 fn main() {
@@ -147,6 +154,22 @@ fn specs() -> Vec<Spec> {
             None,
         ),
         opt(
+            "listen",
+            "bind the operator control plane on this host:port (serve --plan); \
+             port 0 picks a free port, announced as `listening on …` on stdout",
+            None,
+        ),
+        opt("addr", "control-plane address host:port (ctl)", None),
+        opt("tenant", "tenant name or index to submit to (ctl submit)", None),
+        opt("priority", "admission priority 0..=255, higher first (ctl submit)", Some("0")),
+        opt(
+            "deadline",
+            "relative request deadline: 0 (already expired) or a duration with \
+             s/ms/us suffix (ctl submit)",
+            None,
+        ),
+        opt("id", "request id printed by ctl submit (ctl poll / ctl cancel)", None),
+        opt(
             "fleet",
             "fleet-spec JSON (named boards with costs): place the workload \
              across the whole fleet instead of one board (plan)",
@@ -235,6 +258,7 @@ fn run(argv: &[String]) -> flexipipe::Result<()> {
         "plan" => cmd_plan(&args),
         "replan" => cmd_replan(&args),
         "trace" => cmd_trace(&args),
+        "ctl" => cmd_ctl(&args),
         "shard" => {
             // Thin deprecated alias: same flags, same output, one spine.
             eprintln!(
@@ -255,7 +279,8 @@ fn print_help() {
     println!(
         "flexipipe — FPGA layer-wise pipeline CNN accelerator framework\n\
          (reproduction of Yi/Sun/Fujita 2021)\n\n\
-         commands: plan replan simulate serve trace allocate report e2e sweep search help\n\
+         commands: plan replan simulate serve ctl trace allocate report e2e sweep search \
+         help\n\
          (shard is a deprecated alias of plan)\n\n\
          the plan-centric flow: `flexipipe plan … --json plan.json` emits a\n\
          deployment plan; `flexipipe simulate --plan plan.json` executes it in\n\
@@ -271,6 +296,11 @@ fn print_help() {
          drain-overlapped reconfiguration sequence between two plans; `replan\n\
          --plan P --faults F` re-plans the workload onto the surviving capacity\n\
          with an explicit shed report.\n\n\
+         operator API: `serve --plan P --listen HOST:PORT` exposes the running\n\
+         service over a dependency-free HTTP control plane (health, queues,\n\
+         histograms, submit with priorities + relative deadlines, plan\n\
+         apply/replan, deterministic replay); `ctl SUB --addr HOST:PORT` is the\n\
+         matching client — see docs/ARCHITECTURE.md for the endpoint table.\n\n\
          fleet scale: `plan --fleet fleet.json --models …` places N tenants\n\
          across M named boards (replication + spill) and emits a fleet plan =\n\
          per-board plans + routing table; `simulate --fleet-plan P` runs every\n\
@@ -445,6 +475,14 @@ fn cmd_report(args: &Args) -> flexipipe::Result<()> {
 
 fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
     if let Some(path) = args.get("plan") {
+        if let Some(addr) = args.get("listen") {
+            anyhow::ensure!(
+                args.get("trace").is_none(),
+                "serve --listen and --trace are mutually exclusive (use `flexipipe ctl \
+                 replay` for deterministic replay against a live control plane)"
+            );
+            return cmd_serve_http(path, addr);
+        }
         if let Some(tpath) = args.get("trace") {
             return cmd_serve_trace(path, tpath);
         }
@@ -454,6 +492,10 @@ fn cmd_serve(args: &Args) -> flexipipe::Result<()> {
         args.get("trace").is_none(),
         "serve --trace needs --plan plan.json (deterministic trace replay runs \
          against a deployment plan)"
+    );
+    anyhow::ensure!(
+        args.get("listen").is_none(),
+        "serve --listen needs --plan plan.json (the control plane fronts a deployment plan)"
     );
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let frames: usize = args.get_parse("frames", 256)?;
@@ -582,6 +624,115 @@ fn cmd_serve_trace(path: &str, tpath: &str) -> flexipipe::Result<()> {
     let report = ingest::serve_trace(&plan, &spec)?;
     eprintln!("{}", report::render_serve(&report));
     println!("{}", report.to_json().to_pretty());
+    Ok(())
+}
+
+/// `serve --plan plan.json --listen ADDR`: run the ingestion service
+/// behind the operator control plane until `POST /shutdown` (e.g.
+/// `flexipipe ctl shutdown --addr …`) stops it. The first stdout line is
+/// `listening on HOST:PORT` — with port 0 the kernel picks a free port,
+/// so scripts parse that line to find the live address.
+fn cmd_serve_http(path: &str, addr: &str) -> flexipipe::Result<()> {
+    use std::io::Write as _;
+    let plan = DeploymentPlan::load(path)?;
+    let svc = IngestService::start(&plan, BatchPolicy::default(), IngestPolicy::default())?;
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+    let local = listener.local_addr()?;
+    println!("listening on {local}");
+    std::io::stdout().flush()?;
+    eprintln!(
+        "control plane for {path}: {} tenants on {} — stop with \
+         `flexipipe ctl shutdown --addr {local}`",
+        plan.tenants.len(),
+        plan.board.name
+    );
+    let plane = control::ControlPlane::new(svc);
+    control::serve(&plane, listener)?;
+    eprintln!("control plane shut down: queues drained");
+    Ok(())
+}
+
+/// `ctl SUB [FILE] --addr HOST:PORT`: operator client for a control
+/// plane started with `serve --plan P --listen A`. Prints the JSON
+/// response body on success; a non-2xx response is an error carrying the
+/// status and body. Subcommands: `health` / `queues` / `plan` /
+/// `histograms [TENANT]` / `submit` / `poll` / `cancel` /
+/// `apply TARGET.json` (diffs the live plan against the target locally,
+/// then posts the wire diff) / `replan FAULTS.json` /
+/// `replay TRACE.json` / `shutdown`.
+fn cmd_ctl(args: &Args) -> flexipipe::Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("ctl needs --addr host:port"))?;
+    let pos = args.positional();
+    let sub = pos.first().map(String::as_str).unwrap_or("");
+    let file_body = |what: &str| -> flexipipe::Result<String> {
+        let p = pos
+            .get(1)
+            .ok_or_else(|| anyhow::anyhow!("ctl {sub} needs a {what} file"))?;
+        Ok(std::fs::read_to_string(p)?)
+    };
+    let (method, path, body) = match sub {
+        "health" => ("GET", "/health".to_string(), None),
+        "queues" => ("GET", "/queues".to_string(), None),
+        "plan" => ("GET", "/plan".to_string(), None),
+        "histograms" => match pos.get(1) {
+            Some(t) => ("GET", format!("/histograms/{t}"), None),
+            None => ("GET", "/histograms".to_string(), None),
+        },
+        "submit" => {
+            let tenant = args
+                .get("tenant")
+                .ok_or_else(|| anyhow::anyhow!("ctl submit needs --tenant name-or-index"))?;
+            let tenant = match tenant.parse::<usize>() {
+                Ok(i) => Value::Num(i as f64),
+                Err(_) => Value::Str(tenant.to_string()),
+            };
+            let mut pairs = vec![("tenant", tenant)];
+            let priority: usize = args.get_parse("priority", 0)?;
+            if priority > 0 {
+                pairs.push(("priority", Value::Num(priority as f64)));
+            }
+            if let Some(d) = args.get("deadline") {
+                let seconds = if d.trim() == "0" {
+                    0.0
+                } else {
+                    parse_duration_s(d).map_err(|e| anyhow::anyhow!("--deadline: {e}"))?
+                };
+                pairs.push(("deadline_ms", Value::Num(seconds * 1e3)));
+            }
+            ("POST", "/submit".to_string(), Some(obj(pairs).to_pretty()))
+        }
+        "poll" | "cancel" => {
+            let id = args
+                .get("id")
+                .ok_or_else(|| anyhow::anyhow!("ctl {sub} needs --id N"))?;
+            let method = if sub == "poll" { "GET" } else { "DELETE" };
+            (method, format!("/requests/{id}"), None)
+        }
+        "apply" => {
+            let target = DeploymentPlan::load(
+                pos.get(1)
+                    .ok_or_else(|| anyhow::anyhow!("ctl apply needs a target plan file"))?,
+            )?;
+            let (status, live) = control::http_request(addr, "GET", "/plan", None)?;
+            anyhow::ensure!(status == 200, "GET /plan failed ({status}): {live}");
+            let live = DeploymentPlan::from_json(&flexipipe::util::json::parse(&live)?)?;
+            let diff = live.diff(&target)?;
+            ("POST", "/plan/apply".to_string(), Some(diff.to_wire_json().to_pretty()))
+        }
+        "replan" => ("POST", "/replan".to_string(), Some(file_body("fault-plan")?)),
+        "replay" => ("POST", "/replay".to_string(), Some(file_body("trace-spec")?)),
+        "shutdown" => ("POST", "/shutdown".to_string(), None),
+        other => anyhow::bail!(
+            "unknown ctl subcommand '{other}' — one of: health queues plan histograms \
+             submit poll cancel apply replan replay shutdown"
+        ),
+    };
+    let (status, resp) = control::http_request(addr, method, &path, body.as_deref())?;
+    anyhow::ensure!((200..300).contains(&status), "{method} {path} → {status}: {resp}");
+    println!("{resp}");
     Ok(())
 }
 

@@ -1388,7 +1388,7 @@ pub(crate) fn reconfig_to_json(m: &ReconfigModel) -> Value {
     ])
 }
 
-fn reconfig_from_json(v: &Value) -> crate::Result<ReconfigModel> {
+pub(crate) fn reconfig_from_json(v: &Value) -> crate::Result<ReconfigModel> {
     Ok(ReconfigModel {
         bytes_per_lut: v.f64_field("bytes_per_lut")?,
         bytes_per_dsp: v.f64_field("bytes_per_dsp")?,
@@ -1460,7 +1460,7 @@ pub(crate) fn tenant_to_json(t: &PlanTenant) -> Value {
     obj(pairs)
 }
 
-fn tenant_from_json(v: &Value) -> crate::Result<PlanTenant> {
+pub(crate) fn tenant_from_json(v: &Value) -> crate::Result<PlanTenant> {
     let net = config::from_json(v.req("model")?)?;
     let constraints = v
         .req("constraints")?
@@ -1571,7 +1571,7 @@ fn u64_list(v: &Value, key: &str) -> crate::Result<Vec<u64>> {
     Ok(usize_list(v, key)?.into_iter().map(|x| x as u64).collect())
 }
 
-fn temporal_from_json(v: &Value) -> crate::Result<TemporalInfo> {
+pub(crate) fn temporal_from_json(v: &Value) -> crate::Result<TemporalInfo> {
     let slices = v
         .req("slices")?
         .as_arr()

@@ -1461,7 +1461,7 @@ mod tests {
         // 33 seconds was a 1000× footgun — and the error names the
         // accepted suffixes.
         let err = parse_slos("x=0.25").unwrap_err().to_string();
-        assert!(err.contains("s, ms, or us"), "{err}");
+        assert!(err.contains("s, ms, us, m, or h"), "{err}");
         assert!(parse_slos("vgg16=33").is_err());
         assert!(parse_slos("vgg16").is_err());
         assert!(parse_slos("vgg16=-3ms").is_err());

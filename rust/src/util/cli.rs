@@ -126,12 +126,15 @@ pub fn split_list(s: &str) -> Vec<String> {
         .collect()
 }
 
-/// Parse a duration with a **required** unit suffix (`s`, `ms`, or `us`)
-/// into seconds — `"33ms"` → `0.033`. Bare numbers are rejected: a
-/// unitless `33` silently read as seconds when the author meant
-/// milliseconds is a 1000× error, so the unit must be spelled. Shared by
-/// every duration-valued surface of the `flexipipe` CLI (`--slo`,
-/// `serve --trace` durations, `trace gen` flags).
+/// Parse a duration with a **required** unit suffix (`s`, `ms`, `us`,
+/// `m` for minutes, or `h` for hours) into seconds — `"33ms"` → `0.033`,
+/// `"5m"` → `300`. Bare numbers are rejected: a unitless `33` silently
+/// read as seconds when the author meant milliseconds is a 1000× error,
+/// so the unit must be spelled. The long suffixes `ms`/`us` are matched
+/// before the single-letter ones so `33ms` never parses as minutes.
+/// Shared by every duration-valued surface of the `flexipipe` CLI
+/// (`--slo`, `serve --trace` durations, `trace gen` flags, control-plane
+/// request deadlines).
 pub fn parse_duration_s(s: &str) -> crate::Result<f64> {
     let s = s.trim();
     let (num, scale) = if let Some(v) = s.strip_suffix("ms") {
@@ -140,9 +143,13 @@ pub fn parse_duration_s(s: &str) -> crate::Result<f64> {
         (v, 1e-6)
     } else if let Some(v) = s.strip_suffix('s') {
         (v, 1.0)
+    } else if let Some(v) = s.strip_suffix('m') {
+        (v, 60.0)
+    } else if let Some(v) = s.strip_suffix('h') {
+        (v, 3600.0)
     } else {
         anyhow::bail!(
-            "duration '{s}' has no unit — write an explicit suffix: s, ms, or us (e.g. 33ms)"
+            "duration '{s}' has no unit — write an explicit suffix: s, ms, us, m, or h (e.g. 33ms)"
         );
     };
     let v: f64 = num
@@ -233,7 +240,7 @@ mod tests {
         let err = parse_duration_s("33").unwrap_err().to_string();
         assert!(err.contains("no unit"), "{err}");
         assert!(
-            err.contains("s, ms, or us"),
+            err.contains("s, ms, us, m, or h"),
             "error must name the accepted suffixes: {err}"
         );
     }
@@ -245,5 +252,23 @@ mod tests {
         assert!(parse_duration_s("infs").is_err());
         assert!(parse_duration_s("abcms").is_err());
         assert!(parse_duration_s("ms").is_err());
+    }
+
+    #[test]
+    fn minute_and_hour_suffixes_scale_to_seconds() {
+        assert!((parse_duration_s("5m").unwrap() - 300.0).abs() < 1e-9);
+        assert!((parse_duration_s("0.5h").unwrap() - 1800.0).abs() < 1e-9);
+        assert!((parse_duration_s("2h").unwrap() - 7200.0).abs() < 1e-9);
+        // `ms` keeps winning over a trailing `s` or `m` read.
+        assert!((parse_duration_s("90ms").unwrap() - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_minute_hour_durations_carry_the_offending_string() {
+        for bad in ["-5m", "infh", "nanm", "0h", "h", "m"] {
+            let err = parse_duration_s(bad).unwrap_err().to_string();
+            let core = bad.trim();
+            assert!(err.contains(core), "error for '{bad}' must quote it: {err}");
+        }
     }
 }

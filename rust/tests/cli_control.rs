@@ -1,0 +1,247 @@
+//! End-to-end operator control plane through the real binary:
+//! `serve --plan … --listen 127.0.0.1:0` runs in the background, the
+//! kernel-assigned port is parsed from the announced `listening on …`
+//! stdout line, and the `ctl` subcommands are driven against it — the
+//! wire apply report must match a direct in-process apply, zero
+//! relative deadlines must be rejected as expired, replay must be
+//! byte-deterministic, and `ctl shutdown` must drain to a clean exit.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output, Stdio};
+
+use flexipipe::board::zedboard;
+use flexipipe::coordinator::BatchPolicy;
+use flexipipe::fault::FaultPlan;
+use flexipipe::ingest::{ArrivalProcess, IngestPolicy, IngestService, TenantTrace, TraceSpec};
+use flexipipe::model::zoo;
+use flexipipe::plan::{DeploymentPlan, Planner, Workload};
+use flexipipe::quant::QuantMode;
+use flexipipe::util::json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_flexipipe")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("flexipipe_cli_control").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Two feasible plans for the same workload with different θ splits —
+/// the same pair the plan-diff suite uses, here driven over the wire.
+fn plan_pair() -> (DeploymentPlan, DeploymentPlan) {
+    let set = Planner::on(zedboard())
+        .steps(8)
+        .plan(
+            &Workload::new(QuantMode::W8A8)
+                .tenant(zoo::tinycnn())
+                .tenant(zoo::lenet()),
+        )
+        .unwrap();
+    let a = set.plans[set.best].clone();
+    let b = set
+        .plans
+        .iter()
+        .find(|p| p.tenants[0].dsp_parts != a.tenants[0].dsp_parts)
+        .expect("an 8-step spatial search holds more than one split")
+        .clone();
+    (a, b)
+}
+
+/// A live `serve --listen` process and the address it announced.
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Server {
+    /// Drain via `ctl shutdown`, require a clean process exit, and
+    /// return the shutdown response body.
+    fn stop(mut self) -> String {
+        let body = ctl_ok(&self.addr, &["shutdown"]);
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "serve exited with {status}");
+        body
+    }
+}
+
+/// Spawn `serve --plan … --listen 127.0.0.1:0` and parse the announced
+/// address from the first stdout line.
+fn start_server(plan_path: &Path) -> Server {
+    let mut child = Command::new(bin())
+        .args(["serve", "--plan", plan_path.to_str().unwrap()])
+        .args(["--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = match line.trim().strip_prefix("listening on ") {
+        Some(a) => a.to_string(),
+        None => panic!("serve announced {line:?}, not a listening line"),
+    };
+    Server { child, addr }
+}
+
+/// Run `flexipipe ctl <args> --addr <addr>` and return the raw output.
+fn ctl(addr: &str, args: &[&str]) -> Output {
+    let mut cmd = Command::new(bin());
+    cmd.arg("ctl").args(args).args(["--addr", addr]);
+    cmd.output().unwrap()
+}
+
+/// `ctl` that must succeed; returns stdout (the JSON response body).
+fn ctl_ok(addr: &str, args: &[&str]) -> String {
+    let out = ctl(addr, args);
+    assert!(
+        out.status.success(),
+        "ctl {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn control_plane_serves_polls_and_expires_deadlines_end_to_end() {
+    let dir = tmp_dir("end_to_end");
+    let (a, _) = plan_pair();
+    let plan_path = dir.join("live.json");
+    a.save(&plan_path).unwrap();
+    let server = start_server(&plan_path);
+    let addr = server.addr.clone();
+
+    // Introspection: both tenants show up healthy with empty queues.
+    let health = json::parse(ctl_ok(&addr, &["health"]).trim()).unwrap();
+    assert_eq!(health.req("tenants").unwrap().as_arr().unwrap().len(), 2);
+    let queues = json::parse(ctl_ok(&addr, &["queues"]).trim()).unwrap();
+    let qs = queues.req("queues").unwrap().as_arr().unwrap();
+    assert_eq!(qs.len(), 2);
+    assert_eq!(qs[0].str_field("tenant").unwrap(), "tinycnn");
+
+    // GET /plan round-trips the served plan byte for byte.
+    let live = ctl_ok(&addr, &["plan"]);
+    assert_eq!(live.trim_end(), a.to_json().to_pretty());
+
+    // Submit one frame and poll it to completion.
+    let resp = ctl_ok(&addr, &["submit", "--tenant", "tinycnn"]);
+    let v = json::parse(resp.trim()).unwrap();
+    assert_eq!(v.str_field("state").unwrap(), "queued");
+    let id = v.usize_field("id").unwrap().to_string();
+    let mut last = String::new();
+    for _ in 0..1000 {
+        last = ctl_ok(&addr, &["poll", "--id", &id]);
+        let state = json::parse(last.trim()).unwrap();
+        match state.str_field("state").unwrap() {
+            "done" => break,
+            "failed" => panic!("request failed: {last}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    }
+    let done = json::parse(last.trim()).unwrap();
+    assert_eq!(done.str_field("state").unwrap(), "done");
+    assert!(done.usize_field("output_len").unwrap() > 0);
+    // The result was consumed: a second poll is a 404, so ctl fails.
+    assert!(!ctl(&addr, &["poll", "--id", &id]).status.success());
+
+    // The acceptance property over the wire: a zero relative deadline
+    // is dead on arrival — rejected 408/deadline-expired, never served.
+    let dl = ctl(&addr, &["submit", "--tenant", "0", "--deadline", "0"]);
+    assert!(!dl.status.success());
+    let err = String::from_utf8_lossy(&dl.stderr).into_owned();
+    assert!(err.contains("408"), "{err}");
+    assert!(err.contains("deadline-expired"), "{err}");
+
+    let final_body = server.stop();
+    let v = json::parse(final_body.trim()).unwrap();
+    assert_eq!(v.req("shut_down").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn ctl_apply_report_matches_the_direct_in_process_apply() {
+    let dir = tmp_dir("apply");
+    let (a, b) = plan_pair();
+    let live_path = dir.join("live.json");
+    let target_path = dir.join("target.json");
+    a.save(&live_path).unwrap();
+    b.save(&target_path).unwrap();
+
+    // The oracle: the same diff applied to an in-process service.
+    let diff = a.diff(&b).unwrap();
+    let mut direct =
+        IngestService::start(&a, BatchPolicy::default(), IngestPolicy::default()).unwrap();
+    let direct_report = direct.apply(&diff).unwrap().to_json().to_pretty();
+    let _ = direct.shutdown();
+
+    let server = start_server(&live_path);
+    let addr = server.addr.clone();
+    let wire_report = ctl_ok(&addr, &["apply", target_path.to_str().unwrap()]);
+    assert_eq!(
+        wire_report.trim_end(),
+        direct_report,
+        "wire apply report diverged from the direct in-process apply"
+    );
+    // The live plan landed on the target bytes.
+    let live = ctl_ok(&addr, &["plan"]);
+    assert_eq!(live.trim_end(), b.to_json().to_pretty());
+    server.stop();
+}
+
+#[test]
+fn ctl_replay_is_deterministic_and_replan_keeps_tenants() {
+    let dir = tmp_dir("replay_replan");
+    let (a, _) = plan_pair();
+    let plan_path = dir.join("live.json");
+    a.save(&plan_path).unwrap();
+    let spec = TraceSpec {
+        seed: 7,
+        duration_s: 1.0,
+        queue_capacity: 0,
+        tenants: vec![
+            TenantTrace {
+                tenant: "tinycnn".to_string(),
+                process: ArrivalProcess::Poisson { rate_fps: 40.0 },
+            },
+            TenantTrace {
+                tenant: "lenet".to_string(),
+                process: ArrivalProcess::ClosedLoop {
+                    clients: 2,
+                    think_time_s: 0.05,
+                },
+            },
+        ],
+    };
+    let trace_path = dir.join("trace.json");
+    spec.save(&trace_path).unwrap();
+    let faults_path = dir.join("faults.json");
+    FaultPlan::none().save(&faults_path).unwrap();
+
+    let server = start_server(&plan_path);
+    let addr = server.addr.clone();
+    let trace = trace_path.to_str().unwrap();
+
+    // Replay is pure seeded arithmetic: two wire runs, identical bytes.
+    let r1 = ctl_ok(&addr, &["replay", trace]);
+    let r2 = ctl_ok(&addr, &["replay", trace]);
+    assert_eq!(r1, r2, "wire replay must be byte-deterministic");
+    let report = json::parse(r1.trim()).unwrap();
+    assert_eq!(report.req("tenants").unwrap().as_arr().unwrap().len(), 2);
+
+    // A no-fault replan keeps both tenants and applies cleanly.
+    let out = ctl_ok(&addr, &["replan", faults_path.to_str().unwrap()]);
+    let v = json::parse(out.trim()).unwrap();
+    assert_eq!(v.req("replanned").unwrap().as_bool(), Some(true));
+    assert!(v.req("shed").unwrap().as_arr().unwrap().is_empty());
+    server.stop();
+}

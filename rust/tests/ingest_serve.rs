@@ -215,7 +215,7 @@ fn trace_gen_cli_authors_loadable_specs() {
         .unwrap();
     assert!(!bad.status.success());
     let err = String::from_utf8_lossy(&bad.stderr).into_owned();
-    assert!(err.contains("s, ms, or us"), "{err}");
+    assert!(err.contains("s, ms, us, m, or h"), "{err}");
 }
 
 #[test]
@@ -280,6 +280,220 @@ fn live_ingest_service_applies_backpressure_end_to_end() {
     let final_status = svc.shutdown();
     assert_eq!(final_status.len(), 2);
     assert_eq!(final_status[0].depth, 0, "shutdown drains the queue");
+}
+
+/// An 8-bit two-tenant plan the live `SimBackend` can serve — shared by
+/// the deadline/cancel/apply tests below.
+fn eight_bit_plan() -> DeploymentPlan {
+    use flexipipe::board::zedboard;
+    use flexipipe::model::zoo;
+    use flexipipe::plan::{Planner, Workload};
+    use flexipipe::quant::QuantMode;
+    let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn()).tenant(zoo::lenet());
+    let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+    set.plans[set.best].clone()
+}
+
+fn frame_for(plan: &DeploymentPlan, idx: usize) -> Vec<i8> {
+    let (c, h, w) = plan.tenants[idx].net.input;
+    vec![0i8; c * h * w]
+}
+
+#[test]
+fn expired_deadlines_are_never_dispatched() {
+    use std::time::Instant;
+    // The acceptance property: a deadline at or before submission time
+    // means served count 0 and every rejection typed DeadlineExpired —
+    // checked before queue-full/shedding so the reason is never
+    // coincidental.
+    let plan = eight_bit_plan();
+    let svc = IngestService::start(&plan, BatchPolicy::default(), IngestPolicy::default()).unwrap();
+    let frame = frame_for(&plan, 0);
+    let now = Instant::now();
+    let past = now.checked_sub(Duration::from_millis(5)).unwrap_or(now);
+    let n = 20;
+    for i in 0..n {
+        match svc.submit_with(0, frame.clone(), (i % 3) as u8, Some(past)) {
+            Err(RejectReason::DeadlineExpired { .. }) => {}
+            other => panic!("dead-on-arrival request {i} must report DeadlineExpired: {other:?}"),
+        }
+    }
+    let status = svc.status();
+    assert_eq!(status[0].expired, n, "every expiry is counted");
+    assert_eq!(status[0].admitted, 0, "expired work is never queued");
+    let final_status = svc.shutdown();
+    assert_eq!(final_status[0].completed, 0, "expired work is never served");
+}
+
+#[test]
+fn deadlines_expiring_in_queue_are_dropped_at_dispatch() {
+    use std::time::Instant;
+    // A deadline that is still in the future at admission but passes
+    // while the request waits behind a slow in-flight frame is enforced
+    // by the dispatcher at pop time.
+    let plan = eight_bit_plan();
+    let batch = BatchPolicy {
+        link_latency: Duration::from_millis(500),
+        ..BatchPolicy::default()
+    };
+    let policy = IngestPolicy {
+        queue_capacity: 4,
+        max_inflight: 1,
+        ..IngestPolicy::default()
+    };
+    let svc = IngestService::start(&plan, batch, policy).unwrap();
+    let frame = frame_for(&plan, 0);
+    // Occupy the single in-flight slot for ≥500 ms…
+    let rx_a = svc.submit(0, frame.clone(), 0).unwrap();
+    // …then queue a request whose deadline (50 ms) expires long before
+    // the slot frees.
+    let deadline = Instant::now() + Duration::from_millis(50);
+    let (_, rx_b) = svc.submit_with(0, frame, 0, Some(deadline)).unwrap();
+    assert!(rx_a.recv().unwrap().is_ok(), "the occupying frame is served");
+    let err = rx_b
+        .recv()
+        .expect("dispatcher resolves the expired request's channel")
+        .expect_err("an expired request must not be served");
+    assert!(err.to_string().contains("deadline expired"), "{err}");
+    let status = svc.shutdown();
+    assert_eq!(status[0].expired, 1);
+    assert_eq!(status[0].completed, 1);
+}
+
+#[test]
+fn cancelled_requests_are_purged_from_the_queue() {
+    let plan = eight_bit_plan();
+    let batch = BatchPolicy {
+        link_latency: Duration::from_millis(200),
+        ..BatchPolicy::default()
+    };
+    let policy = IngestPolicy {
+        queue_capacity: 4,
+        max_inflight: 1,
+        ..IngestPolicy::default()
+    };
+    let svc = IngestService::start(&plan, batch, policy).unwrap();
+    let frame = frame_for(&plan, 0);
+    let rx_a = svc.submit(0, frame.clone(), 0).unwrap();
+    let (id, rx_b) = svc.submit_with(0, frame, 0, None).unwrap();
+    assert!(svc.cancel(id), "a still-queued request is cancellable");
+    assert!(!svc.cancel(id), "cancellation is idempotent-false");
+    assert!(!svc.cancel(u64::MAX), "unknown ids are not cancellable");
+    let err = rx_b
+        .recv()
+        .expect("cancellation resolves the response channel")
+        .expect_err("a cancelled request is never served");
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(rx_a.recv().unwrap().is_ok(), "the in-flight frame is unaffected");
+    let status = svc.shutdown();
+    assert_eq!(status[0].cancelled, 1);
+    assert_eq!(status[0].admitted, 2);
+    assert_eq!(status[0].completed, 1);
+}
+
+#[test]
+fn shutdown_under_load_resolves_every_receiver() {
+    // Shutdown joins the dispatcher before draining and snapshotting, so
+    // every admitted request's channel resolves (served or Closed), the
+    // final depth is zero, and the counters are coherent — the ordering
+    // contract pinned by `IngestService::shutdown`.
+    let plan = eight_bit_plan();
+    let batch = BatchPolicy {
+        link_latency: Duration::from_millis(50),
+        ..BatchPolicy::default()
+    };
+    let policy = IngestPolicy {
+        queue_capacity: 8,
+        max_inflight: 1,
+        ..IngestPolicy::default()
+    };
+    let svc = IngestService::start(&plan, batch, policy).unwrap();
+    let frame = frame_for(&plan, 0);
+    let receivers: Vec<_> = (0..6).map(|_| svc.submit(0, frame.clone(), 0).unwrap()).collect();
+    let status = svc.shutdown();
+    let mut served = 0u64;
+    for rx in receivers {
+        // The channel must hold a result even though the service is gone.
+        match rx.recv().expect("shutdown resolves every admitted request") {
+            Ok(out) => {
+                assert!(!out.is_empty());
+                served += 1;
+            }
+            Err(e) => assert!(e.to_string().contains("shut down"), "{e}"),
+        }
+    }
+    assert_eq!(status[0].depth, 0, "no request is left queued");
+    assert_eq!(status[0].admitted, 6);
+    assert_eq!(status[0].completed, served, "counters match delivered results");
+}
+
+#[test]
+fn live_apply_keeps_kept_tenants_and_fails_removed_queues() {
+    let plan = eight_bit_plan();
+    let batch = BatchPolicy {
+        link_latency: Duration::from_millis(100),
+        ..BatchPolicy::default()
+    };
+    let policy = IngestPolicy {
+        queue_capacity: 4,
+        max_inflight: 1,
+        ..IngestPolicy::default()
+    };
+    let mut svc = IngestService::start(&plan, batch, policy).unwrap();
+    let frame0 = frame_for(&plan, 0);
+    let rx = svc.submit(0, frame0.clone(), 0).unwrap();
+    assert!(rx.recv().unwrap().is_ok());
+
+    // A no-op diff keeps every tenant: counters, queues, and names
+    // survive the apply.
+    let noop = plan.diff(&plan).unwrap();
+    let report = svc.apply(&noop).unwrap();
+    assert_eq!(report.kept, vec!["tinycnn".to_string(), "lenet".to_string()]);
+    assert!(report.restarted.is_empty() && report.added.is_empty() && report.removed.is_empty());
+    assert_eq!(svc.names(), vec!["tinycnn".to_string(), "lenet".to_string()]);
+    assert_eq!(svc.status()[0].admitted, 1, "kept lanes retain their counters");
+
+    // The service keeps serving after the swap.
+    let rx = svc.submit(0, frame0, 0).unwrap();
+    assert!(rx.recv().unwrap().is_ok());
+    assert_eq!(svc.status()[0].admitted, 2);
+
+    // Shrink to a solo-tinycnn plan: lenet's lane closes, and a request
+    // still queued for it fails typed rather than hanging.
+    let rx1 = svc.submit(1, frame_for(&plan, 1), 0).unwrap();
+    let rx2 = svc.submit(1, frame_for(&plan, 1), 0).unwrap();
+    // Wait until rx1 is actually in flight: the apply below pauses the
+    // dispatcher, and an undispatched rx1 would drain as Closed instead
+    // of being served.
+    for _ in 0..500 {
+        if svc.status()[1].inflight >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(svc.status()[1].inflight, 1, "rx1 must be in flight before the apply");
+    let solo = {
+        use flexipipe::board::zedboard;
+        use flexipipe::model::zoo;
+        use flexipipe::plan::{Planner, Workload};
+        use flexipipe::quant::QuantMode;
+        let w = Workload::new(QuantMode::W8A8).tenant(zoo::tinycnn());
+        let set = Planner::on(zedboard()).steps(8).plan(&w).unwrap();
+        set.plans[set.best].clone()
+    };
+    let shrink = svc.plan().diff(&solo).unwrap();
+    let report = svc.apply(&shrink).unwrap();
+    assert_eq!(report.removed, vec!["lenet".to_string()]);
+    assert_eq!(svc.len(), 1);
+    assert_eq!(svc.names(), vec!["tinycnn".to_string()]);
+    // rx1 was in flight when the apply paused the dispatcher (which
+    // joins only after in-flight work completes), so it was served; rx2
+    // was still queued and fails with the typed closed reason.
+    assert!(rx1.recv().unwrap().is_ok());
+    let err = rx2.recv().unwrap().expect_err("queued work for a removed tenant fails");
+    assert!(err.to_string().contains("shut down"), "{err}");
+    let final_status = svc.shutdown();
+    assert_eq!(final_status.len(), 1);
 }
 
 #[test]

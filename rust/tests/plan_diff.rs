@@ -175,6 +175,99 @@ fn plan_level_changes_are_detected_and_applied() {
 }
 
 #[test]
+fn wire_codec_round_trips_and_applies_identically() {
+    // The control plane ships diffs as JSON (`POST /plan/apply`); a
+    // decoded diff must be indistinguishable from the locally-computed
+    // one — same wire bytes, and apply() reconstructs the same target
+    // plan byte for byte.
+    let (a, b) = plan_pair();
+    let d = a.diff(&b).unwrap();
+    assert!(!d.is_empty());
+    let text = d.to_wire_json().to_pretty();
+    let decoded = PlanDiff::from_wire_json(&flexipipe::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(
+        text,
+        decoded.to_wire_json().to_pretty(),
+        "wire encoding must be stable through a decode/encode cycle"
+    );
+    assert_eq!(
+        a.apply(&d).unwrap().to_json().to_pretty(),
+        a.apply(&decoded).unwrap().to_json().to_pretty(),
+        "a decoded diff must apply exactly like the original"
+    );
+}
+
+#[test]
+fn wire_codec_carries_full_16_bit_tenant_payloads() {
+    // The checked-in 16-bit plan exercises the codec's data path: an Add
+    // op ships the complete W16A16 tenant payload over the wire, and the
+    // receiving side reconstructs the two-tenant plan byte-identically
+    // without ever seeing the target plan file.
+    let fixture = DeploymentPlan::load(fixture_path()).unwrap();
+    let mut solo = fixture.clone();
+    solo.tenants.truncate(1);
+    let d = solo.diff(&fixture).unwrap();
+    assert!(
+        d.ops.iter().any(|op| matches!(op, TenantOp::Add { .. })),
+        "re-admitting the second tenant must be an add"
+    );
+    let text = d.to_wire_json().to_pretty();
+    let decoded = PlanDiff::from_wire_json(&flexipipe::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(
+        solo.apply(&decoded).unwrap().to_json().to_pretty(),
+        fixture.to_json().to_pretty(),
+        "wire-shipped 16-bit payloads must reconstruct the fixture exactly"
+    );
+}
+
+#[test]
+fn wire_codec_rejects_bad_versions_ops_and_shapes() {
+    use flexipipe::util::json::{parse, Value};
+    let (a, b) = plan_pair();
+    let text = a.diff(&b).unwrap().to_wire_json().to_pretty();
+
+    let bumped = text.replacen("\"version\": 1", "\"version\": 9", 1);
+    assert_ne!(text, bumped);
+    let err = PlanDiff::from_wire_json(&parse(&bumped).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("wire version 9"), "{err}");
+
+    let noop = a.diff(&a).unwrap().to_wire_json().to_pretty();
+    let mangled = noop.replacen("\"keep\"", "\"merge\"", 1);
+    assert_ne!(noop, mangled);
+    let err = PlanDiff::from_wire_json(&parse(&mangled).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("unknown diff op 'merge'"), "{err}");
+
+    // A temporal section without a regime label is structurally invalid.
+    let mut v = parse(&noop).unwrap();
+    if let Value::Obj(m) = &mut v {
+        m.insert("temporal".into(), Value::Num(1.0));
+    }
+    let err = PlanDiff::from_wire_json(&v).unwrap_err();
+    assert!(err.to_string().contains("without a 'regime'"), "{err}");
+
+    // Overlap credit larger than the swap it hides under is rejected at
+    // decode time — before apply() could mis-price the transition.
+    let bad = PlanDiff {
+        ops: vec![TenantOp::Add {
+            tenant: a.tenants[0].clone(),
+            reconfig: flexipipe::fault::ReconfigStep {
+                net: a.tenants[0].net.name.clone(),
+                full_cycles: 5,
+                overlap_cycles: 9,
+            },
+        }],
+        removed: Vec::new(),
+        board: None,
+        mode: None,
+        steps: None,
+        regime: None,
+        reconfig_model: None,
+    };
+    let err = PlanDiff::from_wire_json(&bad.to_wire_json()).unwrap_err();
+    assert!(err.to_string().contains("exceeds full_cycles"), "{err}");
+}
+
+#[test]
 fn apply_rejects_corrupt_diffs() {
     let (a, _) = plan_pair();
     let empty_diff = |ops: Vec<TenantOp>| PlanDiff {
